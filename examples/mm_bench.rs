@@ -1,0 +1,39 @@
+//! Matmul shape-sweep microbenchmark (§Perf tooling): measures the two
+//! tensor contractions that dominate every FF step — `x̂·W` and the
+//! gradient `x̂ᵀ·dz` — at the reduced and paper shapes.
+//!
+//! ```bash
+//! cargo run --release --example mm_bench
+//! ```
+
+use pff::tensor::{ops, Matrix, Rng};
+use std::time::Instant;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    for (b, k, n) in [(128usize, 784usize, 256usize), (128, 2000, 2000), (128, 784, 2000)] {
+        let a = Matrix::rand_uniform(b, k, 0.0, 1.0, &mut rng);
+        let w = Matrix::rand_uniform(k, n, -0.1, 0.1, &mut rng);
+        let dz = Matrix::rand_uniform(b, n, -0.1, 0.1, &mut rng);
+        let gf = |t: f64, fl: f64| fl / t / 1e9;
+        let reps = 10;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(ops::matmul(&a, &w));
+        }
+        let t_mm = t0.elapsed().as_secs_f64() / f64::from(reps);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(ops::matmul_at_b(&a, &dz));
+        }
+        let t_at = t0.elapsed().as_secs_f64() / f64::from(reps);
+        let fl = 2.0 * b as f64 * k as f64 * n as f64;
+        println!(
+            "{b}x{k}x{n}: matmul {:.2}ms ({:.1} GF/s)  at_b {:.2}ms ({:.1} GF/s)",
+            t_mm * 1e3,
+            gf(t_mm, fl),
+            t_at * 1e3,
+            gf(t_at, fl)
+        );
+    }
+}

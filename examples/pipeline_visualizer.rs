@@ -1,0 +1,42 @@
+//! Pipeline visualizer: renders the paper's Figures 1/2/4/5/6 as ASCII
+//! Gantt charts from the discrete-event simulator, then sweeps node count
+//! to show where All-Layers PFF's speedup saturates.
+//!
+//! ```bash
+//! cargo run --release --example pipeline_visualizer
+//! ```
+
+use pff::config::ExperimentConfig;
+use pff::ff::NegStrategy;
+use pff::harness::figures;
+use pff::sim::schedules::{SimParams, SimVariant};
+use pff::sim::{build_schedule, simulate, CostModel};
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", figures::all_schedule_figures());
+
+    println!("\n===== node-count sweep (All-Layers, AdaptiveNEG, paper scale) =====");
+    let cfg = ExperimentConfig::paper_mnist();
+    let cm = CostModel::paper_testbed(&cfg);
+    let seq = simulate(&build_schedule(
+        SimVariant::SequentialFF,
+        &cm,
+        &SimParams { nodes: 1, neg: NegStrategy::Adaptive, softmax_head: false, perfopt: false },
+    ));
+    println!("sequential baseline: {:.0}s (paper: 11,190s)", seq.makespan);
+    for nodes in [2, 4, 5, 10, 20] {
+        if cfg.splits as usize % nodes != 0 {
+            continue;
+        }
+        let p = SimParams { nodes, neg: NegStrategy::Adaptive, softmax_head: false, perfopt: false };
+        let r = simulate(&build_schedule(SimVariant::AllLayersPFF, &cm, &p));
+        println!(
+            "  N = {nodes:<3} makespan {:>8.0}s  speedup {:>5.2}x  utilization {:>5.1}%",
+            r.makespan,
+            seq.makespan / r.makespan,
+            r.utilization() * 100.0
+        );
+    }
+    println!("\n(paper: 3.75x speedup / 94% utilization at N = 4)");
+    Ok(())
+}

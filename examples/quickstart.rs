@@ -1,0 +1,43 @@
+//! Quickstart: train a small FF network with the All-Layers PFF scheduler
+//! on synthetic MNIST-geometry data and print the report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pff::config::{ExperimentConfig, Scheduler};
+use pff::coordinator::run_experiment;
+use pff::ff::NegStrategy;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::reduced_mnist();
+    cfg.name = "quickstart".into();
+    cfg.scheduler = Scheduler::AllLayers;
+    cfg.nodes = 4;
+    cfg.neg = NegStrategy::Random;
+    cfg.dims = vec![784, 128, 128, 128, 128];
+    cfg.train_n = 1024;
+    cfg.test_n = 512;
+    cfg.epochs = 64;
+    cfg.splits = 8;
+    cfg.verbose = true;
+
+    println!(
+        "Training a {:?} FF net with {} ({} nodes, {} chapters of {} epoch(s))...",
+        cfg.dims,
+        cfg.scheduler,
+        cfg.nodes,
+        cfg.splits,
+        cfg.epochs_per_chapter()
+    );
+    let report = run_experiment(&cfg)?;
+    println!("\n{}", report.summary());
+    println!("\ntraining curve:\n{}", report.curve.render(10));
+    println!(
+        "pipeline model: makespan {:.2}s over {} nodes, utilization {:.1}%",
+        report.modeled.modeled_makespan,
+        report.node_reports.len(),
+        report.modeled.utilization * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,188 @@
+"""AOT exporter: lower the L2 step functions to HLO **text** artifacts.
+
+Interchange is HLO text, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out ../artifacts [--profile quick,reduced]
+
+Profiles pick the (dims, batch) grid the Rust engine will request; each
+(op, din, dout, batch, norm) combination becomes one ``*.hlo.txt`` plus a
+line in ``manifest.txt``.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side always unpacks a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    """f32 ShapeDtypeStruct helper."""
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def lower_layer_fwd(din, dout, b, norm):
+    fn = functools.partial(model.layer_fwd.__wrapped__, normalize=norm)
+    return jax.jit(fn).lower(spec(din, dout), spec(dout), spec(b, din))
+
+
+def lower_head_logits(din, classes, b):
+    return jax.jit(model.head_logits.__wrapped__).lower(
+        spec(din, classes), spec(classes), spec(b, din)
+    )
+
+
+def lower_ff_step(din, dout, b, norm):
+    fn = functools.partial(model.ff_step.__wrapped__, normalize=norm)
+    return jax.jit(fn).lower(
+        spec(din, dout), spec(dout),                  # w, b
+        spec(din, dout), spec(din, dout),             # m_w, v_w
+        spec(dout), spec(dout),                       # m_b, v_b
+        spec(),                                       # t
+        spec(b, din), spec(b, din),                   # x_pos, x_neg
+        spec(b),                                      # mask
+        spec(), spec(),                               # theta, lr
+    )
+
+
+def lower_head_step(din, classes, b):
+    return jax.jit(model.head_step.__wrapped__).lower(
+        spec(din, classes), spec(classes),
+        spec(din, classes), spec(din, classes),
+        spec(classes), spec(classes),
+        spec(),
+        spec(b, din), spec(b, classes), spec(b),
+        spec(),
+    )
+
+
+def lower_perfopt_step(din, dout, classes, b, norm):
+    fn = functools.partial(model.perfopt_step.__wrapped__, normalize=norm)
+    return jax.jit(fn).lower(
+        spec(din, dout), spec(dout),                  # lw, lb
+        spec(dout, classes), spec(classes),           # hw, hb
+        spec(din, dout), spec(din, dout), spec(dout), spec(dout),          # layer opt
+        spec(dout, classes), spec(dout, classes), spec(classes), spec(classes),  # head opt
+        spec(),
+        spec(b, din), spec(b, classes), spec(b),
+        spec(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Profiles: the (dims, batch, eval-batch) grids the rust configs use.
+# ---------------------------------------------------------------------------
+
+PROFILES = {
+    # tiny dims for fast integration tests (rust/tests/xla_vs_native.rs)
+    "test": {"dims": [784, 32, 32, 32], "batch": 16, "classes": 10},
+    # harness Scale::quick()
+    "quick": {"dims": [784, 64, 64, 64, 64], "batch": 64, "classes": 10},
+    # harness Scale::reduced() / ExperimentConfig::default()
+    "reduced": {"dims": [784, 256, 256, 256, 256], "batch": 64, "classes": 10},
+    # the paper's full architecture (§5.1)
+    "paper": {"dims": [784, 2000, 2000, 2000, 2000], "batch": 64, "classes": 10},
+}
+
+
+def profile_modules(prof):
+    """Yield (op, din, dout, batch, norm, lower_fn) for one profile."""
+    dims, batch, classes = prof["dims"], prof["batch"], prof["classes"]
+    seen = set()
+    for i in range(len(dims) - 1):
+        din, dout, norm = dims[i], dims[i + 1], i > 0
+        key = (din, dout, norm)
+        if key in seen:
+            continue
+        seen.add(key)
+        yield ("layer_fwd", din, dout, batch, norm,
+               lambda a=din, o=dout, n=norm: lower_layer_fwd(a, o, batch, n))
+        yield ("ff_step", din, dout, batch, norm,
+               lambda a=din, o=dout, n=norm: lower_ff_step(a, o, batch, n))
+        yield ("perfopt_step", din, dout, batch, norm,
+               lambda a=din, o=dout, n=norm: lower_perfopt_step(a, o, classes, batch, n))
+        # per-layer head (PerfOpt prediction path)
+        hkey = ("hl", dout)
+        if hkey not in seen:
+            seen.add(hkey)
+            yield ("head_logits", dout, classes, batch, False,
+                   lambda a=dout: lower_head_logits(a, classes, batch))
+    # full-network softmax head: features = all-but-first activations
+    head_din = sum(dims[2:])
+    yield ("head_logits", head_din, classes, batch, False,
+           lambda: lower_head_logits(head_din, classes, batch))
+    yield ("head_step", head_din, classes, batch, False,
+           lambda: lower_head_step(head_din, classes, batch))
+
+
+def build(out_dir: str, profiles) -> list:
+    """Lower every module of the given profiles into ``out_dir``;
+    returns manifest lines."""
+    os.makedirs(out_dir, exist_ok=True)
+    lines = []
+    done = set()
+    for name in profiles:
+        prof = PROFILES[name]
+        for op, din, dout, batch, norm, lower in profile_modules(prof):
+            key = (op, din, dout, batch, norm)
+            if key in done:
+                continue
+            done.add(key)
+            tag = "norm" if norm else "raw"
+            fname = f"{op}_{din}x{dout}_b{batch}_{tag}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text = to_hlo_text(lower())
+            with open(path, "w") as f:
+                f.write(text)
+            lines.append(
+                f"op={op} din={din} dout={dout} b={batch} norm={int(norm)} file={fname}"
+            )
+            print(f"  wrote {fname} ({len(text) // 1024} KiB)")
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument(
+        "--profile",
+        default="test,quick,reduced",
+        help=f"comma-separated profiles from {sorted(PROFILES)}",
+    )
+    args = ap.parse_args()
+    profiles = [p.strip() for p in args.profile.split(",") if p.strip()]
+    for p in profiles:
+        if p not in PROFILES:
+            raise SystemExit(f"unknown profile '{p}' (have {sorted(PROFILES)})")
+    print(f"lowering profiles {profiles} -> {args.out}")
+    lines = build(args.out, profiles)
+    manifest = os.path.join(args.out, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# generated by python -m compile.aot — do not edit\n")
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {manifest} ({len(lines)} modules)")
+
+
+if __name__ == "__main__":
+    main()

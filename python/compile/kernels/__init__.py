@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (``ff_layer``) and their pure-jnp oracle (``ref``)."""

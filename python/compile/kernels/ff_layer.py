@@ -1,0 +1,214 @@
+"""L1 — Pallas kernels for the FF compute hot-spot.
+
+Six kernels cover everything the train/predict steps need:
+
+=================  =========================================================
+``normalize``      row-wise length normalization (Hinton's inter-layer rule)
+``linear_fwd``     fused x @ W + b (+ optional ReLU) — the MXU workhorse
+``rowsumsq``       per-row goodness reduction, fused over column tiles
+``matmul_at_b``    gradient contraction dW = xᵀ·dz
+``colsum``         bias gradient
+``adam``           fused elementwise Adam update
+=================  =========================================================
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): ``linear_fwd`` tiles
+(B_tile × dout_tile) output panes with the full K dimension resident —
+W panes stream HBM→VMEM once per grid column and x row-panes once per
+grid row; goodness is fused per-pane so ``y`` never round-trips. On this
+CPU image every ``pallas_call`` uses ``interpret=True`` (real-TPU lowering
+emits Mosaic custom-calls the CPU PJRT client cannot execute); the
+lowered HLO is therefore plain XLA ops and runs anywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import ADAM_B1, ADAM_B2, ADAM_EPS, EPS
+
+# Preferred tile edges (MXU-friendly); shrunk to fit small dims.
+PREF_ROW_TILE = 64
+PREF_COL_TILE = 256
+
+
+def _tile(n: int, pref: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``pref`` (grids need exact
+    tiling; favors the MXU-sized tile when dims allow)."""
+    if n <= pref:
+        return n
+    for cand in range(pref, 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+def normalize(x):
+    """Row-normalize ``x`` with a row-tiled Pallas kernel."""
+    bsz, din = x.shape
+    bt = _tile(bsz, PREF_ROW_TILE)
+
+    def kernel(x_ref, o_ref):
+        xv = x_ref[...]
+        norm = jnp.sqrt(jnp.sum(xv * xv, axis=1, keepdims=True))
+        o_ref[...] = xv / (norm + EPS)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // bt,),
+        in_specs=[pl.BlockSpec((bt, din), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, din), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, din), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def linear_fwd(w, b, x, relu: bool):
+    """Fused ``x @ w + b`` (+ ReLU) over (row, col)-tiled output panes.
+
+    The K dimension stays whole per pane: on TPU that makes W's
+    (din × col_tile) pane the VMEM-resident operand while x rows stream —
+    the schedule the paper's one-layer-per-node placement implies.
+    """
+    bsz, din = x.shape
+    dout = w.shape[1]
+    bt = _tile(bsz, PREF_ROW_TILE)
+    nt = _tile(dout, PREF_COL_TILE)
+
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        z = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...]
+        o_ref[...] = jnp.maximum(z, 0.0) if relu else z
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // bt, dout // nt),
+        in_specs=[
+            pl.BlockSpec((bt, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((din, nt), lambda i, j: (0, j)),
+            pl.BlockSpec((nt,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bt, nt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dout), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def rowsumsq(y):
+    """Goodness reduction: per-row sum of squares, accumulated across
+    column tiles (keeps each pane in VMEM once)."""
+    bsz, dout = y.shape
+    bt = _tile(bsz, PREF_ROW_TILE)
+    nt = _tile(dout, PREF_COL_TILE)
+    ncols = dout // nt
+
+    def kernel(y_ref, o_ref):
+        j = pl.program_id(1)
+        part = jnp.sum(y_ref[...] * y_ref[...], axis=1)
+
+        @pl.when(j == 0)
+        def _init():
+            o_ref[...] = part
+
+        @pl.when(j != 0)
+        def _acc():
+            o_ref[...] += part
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // bt, ncols),
+        in_specs=[pl.BlockSpec((bt, nt), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bt,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), y.dtype),
+        interpret=True,
+    )(y)
+
+
+def matmul_at_b(a, dz):
+    """Gradient contraction ``dW = aᵀ @ dz`` over (din, dout) tiles."""
+    bsz, din = a.shape
+    dout = dz.shape[1]
+    it = _tile(din, PREF_COL_TILE)
+    jt = _tile(dout, PREF_COL_TILE)
+
+    def kernel(a_ref, dz_ref, o_ref):
+        o_ref[...] = jnp.dot(a_ref[...].T, dz_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(din // it, dout // jt),
+        in_specs=[
+            pl.BlockSpec((bsz, it), lambda i, j: (0, i)),
+            pl.BlockSpec((bsz, jt), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((it, jt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((din, dout), a.dtype),
+        interpret=True,
+    )(a, dz)
+
+
+def colsum(dz):
+    """Bias gradient: column sums over column tiles."""
+    bsz, dout = dz.shape
+    jt = _tile(dout, PREF_COL_TILE)
+
+    def kernel(dz_ref, o_ref):
+        o_ref[...] = jnp.sum(dz_ref[...], axis=0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(dout // jt,),
+        in_specs=[pl.BlockSpec((bsz, jt), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((jt,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((dout,), dz.dtype),
+        interpret=True,
+    )(dz)
+
+
+def adam(p, m, v, g, t, lr):
+    """Fused elementwise Adam update; works on any-rank params by
+    flattening to 1-D tiles (the VPU-side kernel)."""
+    shape = p.shape
+    flat = int(jnp.size(p))
+    pt = _tile(flat, 4096)
+    p1, m1, v1, g1 = (a.reshape((flat,)) for a in (p, m, v, g))
+
+    def kernel(p_ref, m_ref, v_ref, g_ref, t_ref, lr_ref, po_ref, mo_ref, vo_ref):
+        gv = g_ref[...]
+        m2 = ADAM_B1 * m_ref[...] + (1.0 - ADAM_B1) * gv
+        v2 = ADAM_B2 * v_ref[...] + (1.0 - ADAM_B2) * gv * gv
+        tv = t_ref[0]
+        alpha = lr_ref[0] * jnp.sqrt(1.0 - ADAM_B2**tv) / (1.0 - ADAM_B1**tv)
+        po_ref[...] = p_ref[...] - alpha * m2 / (jnp.sqrt(v2) + ADAM_EPS)
+        mo_ref[...] = m2
+        vo_ref[...] = v2
+
+    t1 = jnp.reshape(t, (1,)).astype(p.dtype)
+    lr1 = jnp.reshape(lr, (1,)).astype(p.dtype)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(flat // pt,),
+        in_specs=[
+            pl.BlockSpec((pt,), lambda i: (i,)),
+            pl.BlockSpec((pt,), lambda i: (i,)),
+            pl.BlockSpec((pt,), lambda i: (i,)),
+            pl.BlockSpec((pt,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((pt,), lambda i: (i,)),
+            pl.BlockSpec((pt,), lambda i: (i,)),
+            pl.BlockSpec((pt,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((flat,), p.dtype)] * 3,
+        interpret=True,
+    )(p1, m1, v1, g1, t1, lr1)
+    return tuple(o.reshape(shape) for o in outs)
+
+
+@functools.partial(jax.jit, static_argnames=("normalize_input", "relu"))
+def layer_fwd(w, b, x, normalize_input: bool, relu: bool = True):
+    """Composite forward built from the kernels (normalize → linear)."""
+    xn = normalize(x) if normalize_input else x
+    return linear_fwd(w, b, xn, relu=relu)

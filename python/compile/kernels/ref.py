@@ -1,0 +1,151 @@
+"""Pure-jnp oracle for the Pallas kernels and the L2 step functions.
+
+Every kernel in ``ff_layer.py`` has a reference twin here; pytest pins the
+two against each other (``python/tests/test_kernel.py``), and the Rust
+NativeEngine implements exactly the same math — so all three layers of the
+stack agree numerically.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-8  # length-normalization fuzz — keep in sync with rust NORM_EPS
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def normalize_rows(x):
+    """Row-wise length normalization x / (||x||_2 + EPS)."""
+    norm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+    return x / (norm + EPS)
+
+
+def linear_fwd(w, b, x, relu):
+    """z = x @ w + b, optionally ReLU'd."""
+    z = x @ w + b
+    return jnp.maximum(z, 0.0) if relu else z
+
+
+def layer_fwd(w, b, x, normalize):
+    """FF layer forward: relu((normalize(x)) @ w + b)."""
+    xn = normalize_rows(x) if normalize else x
+    return linear_fwd(w, b, xn, relu=True)
+
+
+def rowsumsq(y):
+    """Per-row goodness g_i = sum_j y_ij^2 (paper Eq. 1's inner sum)."""
+    return jnp.sum(y * y, axis=1)
+
+
+def matmul_at_b(a, dz):
+    """Gradient contraction dW = a^T @ dz."""
+    return a.T @ dz
+
+
+def colsum(dz):
+    """Bias gradient db = sum over rows."""
+    return jnp.sum(dz, axis=0)
+
+
+def adam_update(p, m, v, g, t, lr):
+    """One fused Adam step (bias corrections folded into the step size)."""
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    alpha = lr * jnp.sqrt(1.0 - ADAM_B2**t) / (1.0 - ADAM_B1**t)
+    p2 = p - alpha * m2 / (jnp.sqrt(v2) + ADAM_EPS)
+    return p2, m2, v2
+
+
+def softplus(x):
+    """Numerically-stable ln(1 + e^x)."""
+    return jnp.logaddexp(x, 0.0)
+
+
+def sigmoid(x):
+    """Logistic function."""
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+# ---------------------------------------------------------------------------
+# Whole-step references (mirror python/compile/model.py, used by
+# tests/test_model.py to validate the jitted/AOT'd step functions).
+# ---------------------------------------------------------------------------
+
+
+def ff_step_ref(w, b, m_w, v_w, m_b, v_b, t, x_pos, x_neg, mask, theta, lr, normalize):
+    """Reference FF train step. Returns the same 10-tuple as the artifact."""
+    xp = normalize_rows(x_pos) if normalize else x_pos
+    xn = normalize_rows(x_neg) if normalize else x_neg
+    x = jnp.concatenate([xp, xn], axis=0)
+    y = linear_fwd(w, b, x, relu=True)
+    d_out = y.shape[1]
+    g = rowsumsq(y) / d_out  # MEAN of squares — see rust engine::native
+    bsz = x_pos.shape[0]
+    g_pos, g_neg = g[:bsz], g[bsz:]
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    loss_pos = jnp.sum(mask * softplus(theta - g_pos)) / count
+    loss_neg = jnp.sum(mask * softplus(g_neg - theta)) / count
+    gm_pos = jnp.sum(mask * g_pos) / count
+    gm_neg = jnp.sum(mask * g_neg) / count
+    coef_pos = -sigmoid(theta - g_pos) * mask
+    coef_neg = sigmoid(g_neg - theta) * mask
+    coef = jnp.concatenate([coef_pos, coef_neg], axis=0)
+    dz = coef[:, None] * 2.0 * y / (2.0 * count * d_out)
+    dw = matmul_at_b(x, dz)
+    db = colsum(dz)
+    w2, m_w2, v_w2 = adam_update(w, m_w, v_w, dw, t, lr)
+    b2, m_b2, v_b2 = adam_update(b, m_b, v_b, db, t, lr)
+    return w2, b2, m_w2, v_w2, m_b2, v_b2, loss_pos, loss_neg, gm_pos, gm_neg
+
+
+def head_step_ref(w, b, m_w, v_w, m_b, v_b, t, x, onehot, mask, lr):
+    """Reference softmax-head CE step. Returns the same 7-tuple."""
+    logits = linear_fwd(w, b, x, relu=False)
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    ez = jnp.exp(logits - zmax)
+    p = ez / jnp.sum(ez, axis=1, keepdims=True)
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    logp = jnp.log(jnp.maximum(jnp.sum(p * onehot, axis=1), 1e-12))
+    loss = -jnp.sum(mask * logp) / count
+    dlogits = (p - onehot) * (mask / count)[:, None]
+    dw = matmul_at_b(x, dlogits)
+    db = colsum(dlogits)
+    w2, m_w2, v_w2 = adam_update(w, m_w, v_w, dw, t, lr)
+    b2, m_b2, v_b2 = adam_update(b, m_b, v_b, db, t, lr)
+    return w2, b2, m_w2, v_w2, m_b2, v_b2, loss
+
+
+def perfopt_step_ref(
+    lw, lb, hw, hb,
+    lm_w, lv_w, lm_b, lv_b,
+    hm_w, hv_w, hm_b, hv_b,
+    t, x, onehot, mask, lr, normalize,
+):
+    """Reference Performance-Optimized (layer+head local BP) step."""
+    xn = normalize_rows(x) if normalize else x
+    y = linear_fwd(lw, lb, xn, relu=True)
+    logits = linear_fwd(hw, hb, y, relu=False)
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    ez = jnp.exp(logits - zmax)
+    p = ez / jnp.sum(ez, axis=1, keepdims=True)
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    logp = jnp.log(jnp.maximum(jnp.sum(p * onehot, axis=1), 1e-12))
+    loss = -jnp.sum(mask * logp) / count
+    dlogits = (p - onehot) * (mask / count)[:, None]
+    dhw = matmul_at_b(y, dlogits)
+    dhb = colsum(dlogits)
+    dy = dlogits @ hw.T
+    dz = jnp.where(y > 0.0, dy, 0.0)
+    dlw = matmul_at_b(xn, dz)
+    dlb = colsum(dz)
+    lw2, lm_w2, lv_w2 = adam_update(lw, lm_w, lv_w, dlw, t, lr)
+    lb2, lm_b2, lv_b2 = adam_update(lb, lm_b, lv_b, dlb, t, lr)
+    hw2, hm_w2, hv_w2 = adam_update(hw, hm_w, hv_w, dhw, t, lr)
+    hb2, hm_b2, hv_b2 = adam_update(hb, hm_b, hv_b, dhb, t, lr)
+    return (
+        lw2, lb2, hw2, hb2,
+        lm_w2, lv_w2, lm_b2, lv_b2,
+        hm_w2, hv_w2, hm_b2, hv_b2,
+        loss,
+    )

@@ -1,0 +1,129 @@
+"""L2 — the paper's per-layer train/predict steps as JAX functions.
+
+Each function composes the L1 Pallas kernels (``kernels.ff_layer``) into
+one fused computation, is ``jax.jit``-lowered ONCE by ``aot.py``, and runs
+from Rust as a single PJRT execution per call — no Python on the training
+path.
+
+Masking contract (shared with ``rust/src/engine/xla.rs``): HLO modules are
+shape-static, so the Rust engine pads short batches with zero rows and
+passes a 0/1 ``mask``; masked-out rows contribute nothing to losses or
+gradients.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ff_layer as k
+from compile.kernels.ref import sigmoid, softplus
+
+
+@functools.partial(jax.jit, static_argnames=("normalize",))
+def layer_fwd(w, b, x, normalize: bool):
+    """FF layer forward: relu((normalize?)(x) @ w + b)."""
+    return k.layer_fwd(w, b, x, normalize_input=normalize, relu=True)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def head_logits(w, b, x):
+    """Linear head logits (no activation)."""
+    return k.linear_fwd(w, b, x, relu=False)
+
+
+@functools.partial(jax.jit, static_argnames=("normalize",))
+def ff_step(w, b, m_w, v_w, m_b, v_b, t, x_pos, x_neg, mask, theta, lr, normalize: bool):
+    """One FF minibatch update (§3): goodness-logistic loss on a fused
+    pos+neg batch, single Adam step.
+
+    Returns ``(w', b', m_w', v_w', m_b', v_b', loss_pos, loss_neg,
+    goodness_pos, goodness_neg)``.
+    """
+    xp = k.normalize(x_pos) if normalize else x_pos
+    xn = k.normalize(x_neg) if normalize else x_neg
+    x = jnp.concatenate([xp, xn], axis=0)
+    y = k.linear_fwd(w, b, x, relu=True)
+    d_out = y.shape[1]
+    # Goodness = MEAN of squares (paper Eq. 1 with the 1/D threshold
+    # coefficient folded in) — keeps a fresh layer below θ so the positive
+    # pass dominates early; sums start above θ and collapse the layer.
+    g = k.rowsumsq(y) / d_out
+    bsz = x_pos.shape[0]
+    g_pos, g_neg = g[:bsz], g[bsz:]
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    loss_pos = jnp.sum(mask * softplus(theta - g_pos)) / count
+    loss_neg = jnp.sum(mask * softplus(g_neg - theta)) / count
+    gm_pos = jnp.sum(mask * g_pos) / count
+    gm_neg = jnp.sum(mask * g_neg) / count
+    # dL/dg with the ReLU chain factor 2y and batch mean folded into dz.
+    coef = jnp.concatenate(
+        [-sigmoid(theta - g_pos) * mask, sigmoid(g_neg - theta) * mask], axis=0
+    )
+    dz = coef[:, None] * 2.0 * y / (2.0 * count * d_out)
+    dw = k.matmul_at_b(x, dz)
+    db = k.colsum(dz)
+    w2, m_w2, v_w2 = k.adam(w, m_w, v_w, dw, t, lr)
+    b2, m_b2, v_b2 = k.adam(b, m_b, v_b, db, t, lr)
+    return w2, b2, m_w2, v_w2, m_b2, v_b2, loss_pos, loss_neg, gm_pos, gm_neg
+
+
+def _softmax_ce(logits, onehot, mask):
+    """Masked mean softmax cross-entropy + dlogits."""
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    ez = jnp.exp(logits - zmax)
+    p = ez / jnp.sum(ez, axis=1, keepdims=True)
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    logp = jnp.log(jnp.maximum(jnp.sum(p * onehot, axis=1), 1e-12))
+    loss = -jnp.sum(mask * logp) / count
+    dlogits = (p - onehot) * (mask / count)[:, None]
+    return loss, dlogits
+
+
+@jax.jit
+def head_step(w, b, m_w, v_w, m_b, v_b, t, x, onehot, mask, lr):
+    """Softmax-head CE step (§3 Softmax prediction, trained by BP).
+
+    Returns ``(w', b', m_w', v_w', m_b', v_b', loss)``.
+    """
+    logits = k.linear_fwd(w, b, x, relu=False)
+    loss, dlogits = _softmax_ce(logits, onehot, mask)
+    dw = k.matmul_at_b(x, dlogits)
+    db = k.colsum(dlogits)
+    w2, m_w2, v_w2 = k.adam(w, m_w, v_w, dw, t, lr)
+    b2, m_b2, v_b2 = k.adam(b, m_b, v_b, db, t, lr)
+    return w2, b2, m_w2, v_w2, m_b2, v_b2, loss
+
+
+@functools.partial(jax.jit, static_argnames=("normalize",))
+def perfopt_step(
+    lw, lb, hw, hb,
+    lm_w, lv_w, lm_b, lv_b,
+    hm_w, hv_w, hm_b, hv_b,
+    t, x, onehot, mask, lr, normalize: bool,
+):
+    """Performance-Optimized step (§4.4): CE through (layer, head) with
+    gradients stopped at the layer input; two Adam updates.
+
+    Returns ``(lw', lb', hw', hb', 8×moments, loss)`` — 13 outputs.
+    """
+    xn = k.normalize(x) if normalize else x
+    y = k.linear_fwd(lw, lb, xn, relu=True)
+    logits = k.linear_fwd(hw, hb, y, relu=False)
+    loss, dlogits = _softmax_ce(logits, onehot, mask)
+    dhw = k.matmul_at_b(y, dlogits)
+    dhb = k.colsum(dlogits)
+    dy = dlogits @ hw.T
+    dz = jnp.where(y > 0.0, dy, 0.0)
+    dlw = k.matmul_at_b(xn, dz)
+    dlb = k.colsum(dz)
+    lw2, lm_w2, lv_w2 = k.adam(lw, lm_w, lv_w, dlw, t, lr)
+    lb2, lm_b2, lv_b2 = k.adam(lb, lm_b, lv_b, dlb, t, lr)
+    hw2, hm_w2, hv_w2 = k.adam(hw, hm_w, hv_w, dhw, t, lr)
+    hb2, hm_b2, hv_b2 = k.adam(hb, hm_b, hv_b, dhb, t, lr)
+    return (
+        lw2, lb2, hw2, hb2,
+        lm_w2, lv_w2, lm_b2, lv_b2,
+        hm_w2, hv_w2, hm_b2, hv_b2,
+        loss,
+    )

@@ -1,0 +1,112 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the normalize/relu flags); assert_allclose
+against ``kernels.ref``. This is the CORE numeric signal of the stack —
+the Rust NativeEngine and the AOT artifacts both chain back to these
+kernels.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ff_layer as k
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_mat(rng, r, c, lo=-1.0, hi=1.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=(r, c)), dtype=jnp.float32)
+
+
+dims = st.sampled_from([1, 2, 3, 5, 8, 16, 48, 64])
+batches = st.sampled_from([1, 2, 4, 16, 64])
+
+
+@settings(**SETTINGS)
+@given(b=batches, din=dims, seed=st.integers(0, 2**31 - 1))
+def test_normalize_matches_ref(b, din, seed):
+    rng = np.random.default_rng(seed)
+    x = rng_mat(rng, b, din)
+    assert_allclose(k.normalize(x), ref.normalize_rows(x), rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(b=batches, din=dims, dout=dims, relu=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_linear_fwd_matches_ref(b, din, dout, relu, seed):
+    rng = np.random.default_rng(seed)
+    w, bb, x = rng_mat(rng, din, dout), rng_mat(rng, 1, dout)[0], rng_mat(rng, b, din)
+    assert_allclose(
+        k.linear_fwd(w, bb, x, relu=relu),
+        ref.linear_fwd(w, bb, x, relu=relu),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+@settings(**SETTINGS)
+@given(b=batches, dout=dims, seed=st.integers(0, 2**31 - 1))
+def test_rowsumsq_matches_ref(b, dout, seed):
+    rng = np.random.default_rng(seed)
+    y = rng_mat(rng, b, dout)
+    assert_allclose(k.rowsumsq(y), ref.rowsumsq(y), rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(b=batches, din=dims, dout=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_at_b_matches_ref(b, din, dout, seed):
+    rng = np.random.default_rng(seed)
+    a, dz = rng_mat(rng, b, din), rng_mat(rng, b, dout)
+    assert_allclose(k.matmul_at_b(a, dz), ref.matmul_at_b(a, dz), rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(b=batches, dout=dims, seed=st.integers(0, 2**31 - 1))
+def test_colsum_matches_ref(b, dout, seed):
+    rng = np.random.default_rng(seed)
+    dz = rng_mat(rng, b, dout)
+    assert_allclose(k.colsum(dz), ref.colsum(dz), rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    din=dims,
+    dout=dims,
+    t=st.integers(1, 1000),
+    lr=st.sampled_from([1e-4, 1e-3, 1e-2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adam_matches_ref(din, dout, t, lr, seed):
+    rng = np.random.default_rng(seed)
+    p, m, v, g = (rng_mat(rng, din, dout) for _ in range(4))
+    v = jnp.abs(v)  # second moment is nonneg
+    tf = jnp.float32(t)
+    got = k.adam(p, m, v, g, tf, jnp.float32(lr))
+    want = ref.adam_update(p, m, v, g, tf, jnp.float32(lr))
+    for gg, ww in zip(got, want):
+        assert_allclose(gg, ww, rtol=1e-4, atol=1e-6)
+
+
+def test_normalize_zero_row_finite():
+    x = jnp.zeros((2, 8), dtype=jnp.float32)
+    out = k.normalize(x)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_layer_fwd_composite_matches_ref():
+    rng = np.random.default_rng(7)
+    w, b, x = rng_mat(rng, 48, 64), rng_mat(rng, 1, 64)[0], rng_mat(rng, 16, 48, 0.0, 1.0)
+    got = k.layer_fwd(w, b, x, normalize_input=True)
+    want = ref.layer_fwd(w, b, x, normalize=True)
+    assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    assert bool(jnp.all(got >= 0.0))
+
+
+@pytest.mark.parametrize("n,pref,expect_div", [(2000, 256, True), (64, 256, True), (48, 64, True), (7, 4, True)])
+def test_tile_divides(n, pref, expect_div):
+    t = k._tile(n, pref)
+    assert 1 <= t <= max(n, pref)
+    assert n % t == 0

@@ -1,0 +1,133 @@
+"""L2 correctness: the jitted step functions vs the pure-jnp references,
+including the masking contract the Rust engine relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def mats(seed, b, din, dout, classes=10):
+    rng = np.random.default_rng(seed)
+    f = lambda *s: jnp.asarray(rng.uniform(-0.5, 0.5, size=s), dtype=jnp.float32)
+    w, bb = f(din, dout) / np.sqrt(din), jnp.zeros((dout,), jnp.float32)
+    zeros2, zeros1 = jnp.zeros((din, dout), jnp.float32), jnp.zeros((dout,), jnp.float32)
+    x = jnp.asarray(rng.uniform(0.0, 1.0, size=(b, din)), dtype=jnp.float32)
+    labels = rng.integers(0, classes, size=b)
+    onehot = jnp.asarray(np.eye(classes, dtype=np.float32)[labels])
+    return rng, w, bb, zeros2, zeros1, x, onehot
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([2, 8, 16]),
+    din=st.sampled_from([8, 32]),
+    dout=st.sampled_from([8, 32]),
+    norm=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ff_step_matches_ref(b, din, dout, norm, seed):
+    rng, w, bb, z2, z1, x_pos, _ = mats(seed, b, din, dout)
+    x_neg = jnp.asarray(rng.uniform(0.0, 1.0, size=(b, din)), dtype=jnp.float32)
+    mask = jnp.ones((b,), jnp.float32)
+    args = (w, bb, z2, z2, z1, z1, jnp.float32(1.0), x_pos, x_neg, mask,
+            jnp.float32(2.0), jnp.float32(0.01))
+    got = model.ff_step(*args, normalize=norm)
+    want = ref.ff_step_ref(*args, normalize=norm)
+    for g, w_ in zip(got, want):
+        assert_allclose(g, w_, rtol=2e-4, atol=1e-5)
+
+
+def test_ff_step_mask_ignores_padded_rows():
+    # 4 real rows padded to 8 must equal the unpadded 4-row step.
+    _, w, bb, z2, z1, x_pos, _ = mats(3, 8, 16, 12)
+    rng = np.random.default_rng(4)
+    x_neg = jnp.asarray(rng.uniform(0, 1, size=(8, 16)), dtype=jnp.float32)
+    mask_full = jnp.ones((4,), jnp.float32)
+    small = model.ff_step(
+        w, bb, z2, z2, z1, z1, jnp.float32(1.0),
+        x_pos[:4], x_neg[:4], mask_full, jnp.float32(2.0), jnp.float32(0.01),
+        normalize=False,
+    )
+    xp_pad = jnp.concatenate([x_pos[:4], jnp.zeros((4, 16), jnp.float32)])
+    xn_pad = jnp.concatenate([x_neg[:4], jnp.zeros((4, 16), jnp.float32)])
+    mask_pad = jnp.concatenate([jnp.ones((4,)), jnp.zeros((4,))]).astype(jnp.float32)
+    padded = model.ff_step(
+        w, bb, z2, z2, z1, z1, jnp.float32(1.0),
+        xp_pad, xn_pad, mask_pad, jnp.float32(2.0), jnp.float32(0.01),
+        normalize=False,
+    )
+    for s, p in zip(small, padded):
+        assert_allclose(s, p, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([2, 8]),
+    din=st.sampled_from([8, 24]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_head_step_matches_ref(b, din, seed):
+    _, w, bb, _, _, x, onehot = mats(seed, b, din, 10)
+    z2 = jnp.zeros((din, 10), jnp.float32)
+    z1 = jnp.zeros((10,), jnp.float32)
+    w = w[:, :10] if w.shape[1] >= 10 else jnp.zeros((din, 10), jnp.float32)
+    mask = jnp.ones((b,), jnp.float32)
+    args = (w, z1, z2, z2, z1, z1, jnp.float32(1.0), x, onehot, mask, jnp.float32(1e-3))
+    got = model.head_step(*args)
+    want = ref.head_step_ref(*args)
+    for g, w_ in zip(got, want):
+        assert_allclose(g, w_, rtol=2e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(norm=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_perfopt_step_matches_ref(norm, seed):
+    b, din, dout, classes = 8, 16, 12, 10
+    rng, lw, lb, z2, z1, x, onehot = mats(seed, b, din, dout, classes)
+    hw = jnp.asarray(rng.uniform(-0.3, 0.3, size=(dout, classes)), jnp.float32)
+    hb = jnp.zeros((classes,), jnp.float32)
+    hz2 = jnp.zeros((dout, classes), jnp.float32)
+    hz1 = jnp.zeros((classes,), jnp.float32)
+    mask = jnp.ones((b,), jnp.float32)
+    args = (lw, lb, hw, hb, z2, z2, z1, z1, hz2, hz2, hz1, hz1,
+            jnp.float32(1.0), x, onehot, mask, jnp.float32(0.01))
+    got = model.perfopt_step(*args, normalize=norm)
+    want = ref.perfopt_step_ref(*args, normalize=norm)
+    assert len(got) == 13
+    for g, w_ in zip(got, want):
+        assert_allclose(g, w_, rtol=2e-4, atol=1e-5)
+
+
+def test_ff_training_separates_goodness():
+    """Behavioral: repeated steps must grow the pos/neg goodness margin."""
+    _, w, bb, z2, z1, x_pos, _ = mats(11, 16, 20, 24)
+    rng = np.random.default_rng(12)
+    # pos: energy in first half; neg: second half.
+    x_pos = x_pos.at[:, :10].add(1.0)
+    x_neg = jnp.asarray(rng.uniform(0, 0.1, size=(16, 20)), jnp.float32).at[:, 10:].add(1.0)
+    mask = jnp.ones((16,), jnp.float32)
+    m_w, v_w, m_b, v_b = z2, z2, z1, z1
+    first_margin = None
+    for t in range(1, 151):
+        out = model.ff_step(
+            w, bb, m_w, v_w, m_b, v_b, jnp.float32(t), x_pos, x_neg, mask,
+            jnp.float32(2.0), jnp.float32(0.01), normalize=False,
+        )
+        w, bb, m_w, v_w, m_b, v_b = out[:6]
+        margin = float(out[8] - out[9])
+        if first_margin is None:
+            first_margin = margin
+    assert margin > first_margin + 1.0, f"margin {first_margin} -> {margin}"
+
+
+def test_layer_fwd_shapes_and_nonneg():
+    _, w, bb, _, _, x, _ = mats(5, 8, 16, 12)
+    y = model.layer_fwd(w, bb, x, normalize=True)
+    assert y.shape == (8, 12)
+    assert bool(jnp.all(y >= 0.0))

@@ -1,0 +1,44 @@
+//! Bench: regenerate the paper's schedule figures (1, 2, 4, 5, 6) as
+//! ASCII Gantt charts, plus the Figure 3 split study and the DES speedup
+//! summary every figure's caption implies.
+//!
+//! `cargo bench --bench figures_schedules`
+
+use pff::config::{EngineKind, ExperimentConfig};
+use pff::ff::NegStrategy;
+use pff::harness::{figures, Scale};
+use pff::sim::schedules::{SimParams, SimVariant};
+use pff::sim::{build_schedule, gantt, simulate, CostModel};
+
+fn main() {
+    println!("{}", figures::all_schedule_figures());
+
+    // Figure 3 (measured): split granularity vs accuracy.
+    let mut scale = Scale::quick();
+    scale.train_n = 384;
+    scale.test_n = 192;
+    scale.epochs = 4;
+    let pts = figures::figure3_measured(&scale, EngineKind::Native, 42, &[1, 2, 4])
+        .expect("figure 3 runs");
+    println!("── Figure 3: accuracy vs split count (measured, reduced scale) ──");
+    for (s, acc) in pts {
+        println!("  S = {s:<3} accuracy = {:.2}%", acc * 100.0);
+    }
+
+    // Paper-scale DES summary for all variants (the figures' captions).
+    println!("\n── DES summary @ paper scale (N=4, AdaptiveNEG) ──");
+    let cfg = ExperimentConfig::paper_mnist();
+    let cm = CostModel::paper_testbed(&cfg);
+    let p = SimParams { nodes: 4, neg: NegStrategy::Adaptive, softmax_head: false, perfopt: false };
+    for v in [
+        SimVariant::SequentialFF,
+        SimVariant::SingleLayerPFF,
+        SimVariant::AllLayersPFF,
+        SimVariant::FederatedPFF,
+        SimVariant::BackpropPipeline,
+        SimVariant::Dff,
+    ] {
+        let r = simulate(&build_schedule(v, &cm, &p));
+        println!("  {}", gantt::summary_line(&v.to_string(), &r));
+    }
+}

@@ -1,0 +1,100 @@
+//! Micro-benchmarks of the compute engine hot paths (the §Perf L3/L2
+//! working set): FF step, forward, head step, perfopt step, adaptive
+//! neg-label generation — native engine, plus XLA when artifacts exist.
+//!
+//! `cargo bench --bench micro_engine`
+
+use pff::bench_util::{bench, fmt_s};
+use pff::engine::{Engine, NativeEngine, XlaEngine};
+use pff::ff::{negative, FFLayer, FFNetwork, LinearHead};
+use pff::tensor::{AdamState, Matrix, Rng};
+
+fn bench_engine(eng: &mut dyn Engine, dims: &[usize], batch: usize) {
+    let mut rng = Rng::new(42);
+    let (din, dout) = (dims[0], dims[1]);
+    let mut layer = FFLayer::new(din, dout, false, &mut rng);
+    let mut opt = AdamState::new(din, dout);
+    let x_pos = Matrix::rand_uniform(batch, din, 0.0, 1.0, &mut rng);
+    let x_neg = Matrix::rand_uniform(batch, din, 0.0, 1.0, &mut rng);
+
+    let s = bench(3, 20, || {
+        eng.ff_train_step(&mut layer, &mut opt, &x_pos, &x_neg, 2.0, 0.01).unwrap();
+    });
+    let flops = 4.0 * (2 * batch) as f64 * din as f64 * dout as f64;
+    println!(
+        "{}",
+        s.line(&format!(
+            "[{}] ff_step {din}x{dout} b{batch}  ({:.2} GFLOP/s)",
+            eng.name(),
+            flops / s.min_s / 1e9
+        ))
+    );
+
+    let s = bench(3, 20, || {
+        eng.layer_forward(&layer, &x_pos).unwrap();
+    });
+    println!("{}", s.line(&format!("[{}] layer_forward {din}x{dout} b{batch}", eng.name())));
+
+    let head_din: usize = dims[2..].iter().sum::<usize>().max(dout);
+    let mut head = LinearHead::new(head_din, 10, &mut rng);
+    let mut hopt = AdamState::new(head_din, 10);
+    let hx = Matrix::rand_uniform(batch, head_din, 0.0, 1.0, &mut rng);
+    let labels: Vec<u8> = (0..batch).map(|i| (i % 10) as u8).collect();
+    let s = bench(3, 20, || {
+        eng.head_train_step(&mut head, &mut hopt, &hx, &labels, 1e-3).unwrap();
+    });
+    println!("{}", s.line(&format!("[{}] head_step {head_din}x10 b{batch}", eng.name())));
+
+    let mut po_head = LinearHead::new(dout, 10, &mut rng);
+    let (mut po_l, mut po_h) = (AdamState::new(din, dout), AdamState::new(dout, 10));
+    let s = bench(3, 20, || {
+        eng.perfopt_train_step(&mut layer, &mut po_head, &mut po_l, &mut po_h, &x_pos, &labels, 0.01)
+            .unwrap();
+    });
+    println!("{}", s.line(&format!("[{}] perfopt_step {din}x{dout} b{batch}", eng.name())));
+}
+
+fn main() {
+    println!("── micro: native engine (reduced dims 784→256→…) ──");
+    let mut native = NativeEngine::new();
+    bench_engine(&mut native, &[784, 256, 256, 256, 256], 64);
+
+    println!("\n── micro: AdaptiveNEG sweep (the most expensive coordinator stage) ──");
+    let mut rng = Rng::new(7);
+    let net = FFNetwork::new(&[784, 256, 256, 256, 256], 10, &mut rng);
+    let x = Matrix::rand_uniform(512, 784, 0.0, 1.0, &mut rng);
+    let truth: Vec<u8> = (0..512).map(|i| (i % 10) as u8).collect();
+    let s = bench(1, 5, || {
+        negative::adaptive_neg_labels(&mut native, &net, &x, &truth, 256).unwrap();
+    });
+    println!("{}", s.line("[native] adaptive_neg_labels n=512 (10-way sweep)"));
+    println!(
+        "        per-sample cost {} — vs one ff_step costing ~the same per 128 samples",
+        fmt_s(s.min_s / 512.0)
+    );
+
+    // XLA engine, when artifacts are present (test profile dims).
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        println!("\n── micro: XLA engine (test profile 784→32, b16) ──");
+        match XlaEngine::new("artifacts") {
+            Ok(mut xla) => {
+                let mut rng = Rng::new(42);
+                let mut layer = FFLayer::new(784, 32, false, &mut rng);
+                let mut opt = AdamState::new(784, 32);
+                let xp = Matrix::rand_uniform(16, 784, 0.0, 1.0, &mut rng);
+                let xn = Matrix::rand_uniform(16, 784, 0.0, 1.0, &mut rng);
+                let s = bench(3, 20, || {
+                    xla.ff_train_step(&mut layer, &mut opt, &xp, &xn, 2.0, 0.01).unwrap();
+                });
+                println!("{}", s.line("[xla] ff_step 784x32 b16 (incl. PJRT transfer)"));
+                let s = bench(3, 20, || {
+                    xla.layer_forward(&layer, &xp).unwrap();
+                });
+                println!("{}", s.line("[xla] layer_forward 784x32 b16"));
+            }
+            Err(e) => println!("  (skipping XLA micro-bench: {e})"),
+        }
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` to include XLA micro-benches)");
+    }
+}

@@ -1,0 +1,70 @@
+//! Micro-benchmarks of the parameter store and TCP transport: publish/
+//! fetch latency and throughput for paper-scale layer payloads — the
+//! coordinator-side §Perf working set.
+//!
+//! `cargo bench --bench micro_transport`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pff::bench_util::bench;
+use pff::coordinator::store::{LayerParams, MemStore, ParamStore};
+use pff::tensor::{Matrix, Rng};
+use pff::transport::tcp::{StoreServer, TcpStoreClient};
+
+fn params(din: usize, dout: usize) -> LayerParams {
+    let mut rng = Rng::new(1);
+    LayerParams {
+        w: Matrix::randn_scaled(din, dout, &mut rng),
+        b: vec![0.0; dout],
+        normalize_input: true,
+        opt: None,
+    }
+}
+
+fn main() {
+    for (din, dout, label) in [
+        (256usize, 256usize, "reduced layer (256x256, 256 KB)"),
+        (2000, 2000, "paper layer (2000x2000, 16 MB)"),
+    ] {
+        let p = params(din, dout);
+        let mb = p.wire_bytes() as f64 / 1e6;
+
+        // in-proc store
+        let store = MemStore::new();
+        let s = bench(2, 20, || {
+            store.put_layer(0, 0, p.clone()).unwrap();
+            store.get_layer(0, 0, Duration::from_secs(1)).unwrap();
+        });
+        println!(
+            "{}",
+            s.line(&format!("[inproc] put+get {label}  ({:.0} MB/s)", 2.0 * mb / s.min_s))
+        );
+
+        // tcp store
+        let mem = Arc::new(MemStore::new());
+        let server = StoreServer::start(mem, 0).unwrap();
+        let client = TcpStoreClient::connect(server.addr).unwrap();
+        let s = bench(2, 10, || {
+            client.put_layer(0, 0, p.clone()).unwrap();
+            client.get_layer(0, 0, Duration::from_secs(5)).unwrap();
+        });
+        println!(
+            "{}",
+            s.line(&format!("[tcp]    put+get {label}  ({:.0} MB/s)", 2.0 * mb / s.min_s))
+        );
+        server.shutdown();
+    }
+
+    // codec throughput in isolation
+    let p = params(2000, 2000);
+    let s = bench(2, 20, || {
+        let mut e = pff::transport::codec::Enc::new();
+        e.layer_params(&p);
+        let buf = e.finish();
+        let got = pff::transport::codec::Dec::new(&buf).layer_params().unwrap();
+        std::hint::black_box(got);
+    });
+    let mb = p.wire_bytes() as f64 / 1e6;
+    println!("{}", s.line(&format!("[codec]  enc+dec paper layer ({:.0} MB/s)", 2.0 * mb / s.min_s)));
+}

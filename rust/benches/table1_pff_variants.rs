@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Table 1 (FF / DFF / PFF comparison, Goodness
+//! classifier) — measured at reduced scale + DES at paper scale.
+//!
+//! `cargo bench --bench table1_pff_variants`
+//! Env: PFF_SCALE=quick|reduced (default quick), PFF_SEED.
+
+use pff::config::EngineKind;
+use pff::harness::{table1, Scale};
+
+fn main() {
+    let scale = match std::env::var("PFF_SCALE").as_deref() {
+        Ok("reduced") => Scale::reduced(),
+        _ => Scale::quick(),
+    };
+    let seed = std::env::var("PFF_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let t0 = std::time::Instant::now();
+    table1::run(&scale, EngineKind::Native, seed).expect("table1 harness");
+    println!("\n[bench] table1 total: {:.1}s", t0.elapsed().as_secs_f64());
+}

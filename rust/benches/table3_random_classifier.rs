@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Table 3 (RandomNEG: Goodness vs Softmax).
+//!
+//! `cargo bench --bench table3_random_classifier`
+
+use pff::config::EngineKind;
+use pff::harness::{table3, Scale};
+
+fn main() {
+    let scale = match std::env::var("PFF_SCALE").as_deref() {
+        Ok("reduced") => Scale::reduced(),
+        _ => Scale::quick(),
+    };
+    let seed = std::env::var("PFF_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let t0 = std::time::Instant::now();
+    table3::run(&scale, EngineKind::Native, seed).expect("table3 harness");
+    println!("\n[bench] table3 total: {:.1}s", t0.elapsed().as_secs_f64());
+}

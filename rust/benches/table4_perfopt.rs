@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Table 4 (Performance-Optimized model, MNIST).
+//!
+//! `cargo bench --bench table4_perfopt`
+
+use pff::config::EngineKind;
+use pff::harness::{table4, Scale};
+
+fn main() {
+    let scale = match std::env::var("PFF_SCALE").as_deref() {
+        Ok("reduced") => Scale::reduced(),
+        _ => Scale::quick(),
+    };
+    let seed = std::env::var("PFF_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let t0 = std::time::Instant::now();
+    table4::run(&scale, EngineKind::Native, seed).expect("table4 harness");
+    println!("\n[bench] table4 total: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Table 5 (CIFAR-10 grid on synthetic
+//! CIFAR-geometry data).
+//!
+//! `cargo bench --bench table5_cifar`
+
+use pff::config::EngineKind;
+use pff::harness::{table5, Scale};
+
+fn main() {
+    let scale = match std::env::var("PFF_SCALE").as_deref() {
+        Ok("reduced") => Scale::reduced(),
+        _ => Scale::quick(),
+    };
+    let seed = std::env::var("PFF_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let t0 = std::time::Instant::now();
+    table5::run(&scale, EngineKind::Native, seed).expect("table5 harness");
+    println!("\n[bench] table5 total: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,157 @@
+//! Plain backpropagation trainer on the same MLP architecture — the
+//! reference point of Figure 1 (what PFF competes with) and a sanity
+//! ceiling for accuracy at reduced scale.
+//!
+//! Implemented directly on the tensor substrate (no Engine indirection:
+//! BP's whole point is the *global* backward pass the Engine contract
+//! deliberately does not expose).
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::lr::cooldown;
+use crate::data::DataBundle;
+use crate::tensor::{ops, AdamState, Matrix, Rng};
+
+/// A BP-trained MLP: ReLU hidden layers + linear softmax output.
+#[derive(Clone, Debug)]
+pub struct BpNet {
+    /// Hidden + output weight matrices.
+    pub ws: Vec<Matrix>,
+    /// Biases.
+    pub bs: Vec<Vec<f32>>,
+}
+
+impl BpNet {
+    /// Random init for `dims` + a `classes`-way output layer.
+    pub fn new(dims: &[usize], classes: usize, rng: &mut Rng) -> Self {
+        let mut full: Vec<usize> = dims.to_vec();
+        full.push(classes);
+        let ws = full.windows(2).map(|w| Matrix::randn_scaled(w[0], w[1], rng)).collect();
+        let bs = full[1..].iter().map(|&d| vec![0.0; d]).collect();
+        BpNet { ws, bs }
+    }
+
+    /// Forward pass returning all post-activation tensors (logits last).
+    pub fn forward(&self, x: &Matrix) -> Vec<Matrix> {
+        let mut acts = Vec::with_capacity(self.ws.len());
+        let mut h = x.clone();
+        for (i, (w, b)) in self.ws.iter().zip(&self.bs).enumerate() {
+            let mut z = ops::matmul(&h, w);
+            ops::add_bias(&mut z, b);
+            if i + 1 < self.ws.len() {
+                ops::relu_inplace(&mut z);
+            }
+            acts.push(z.clone());
+            h = z;
+        }
+        acts
+    }
+
+    /// Predictions (argmax of logits).
+    pub fn predict(&self, x: &Matrix) -> Vec<u8> {
+        ops::argmax_rows(self.forward(x).last().unwrap())
+    }
+}
+
+/// Report from a BP training run.
+#[derive(Clone, Debug)]
+pub struct BpReport {
+    /// Test accuracy.
+    pub test_accuracy: f64,
+    /// Wall seconds.
+    pub wall_s: f64,
+    /// Final model.
+    pub net: BpNet,
+}
+
+/// Train with minibatch Adam BP for `cfg.epochs` epochs.
+pub fn run_backprop(cfg: &ExperimentConfig, bundle: &DataBundle) -> Result<BpReport> {
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::derive(cfg.seed, 0x4250_0000); // "BP"
+    let mut net = BpNet::new(&cfg.dims, cfg.classes, &mut rng);
+    let mut opts: Vec<AdamState> =
+        net.ws.iter().map(|w| AdamState::new(w.rows, w.cols)).collect();
+
+    let train = &bundle.train;
+    for epoch in 0..cfg.epochs {
+        let lr = cooldown(cfg.lr_head.max(1e-4), epoch, cfg.epochs);
+        let mut order: Vec<usize> = (0..train.len()).collect();
+        let mut srng = Rng::derive(cfg.seed, 0x4250_5348 ^ u64::from(epoch));
+        srng.shuffle(&mut order);
+        for idx in order.chunks(cfg.batch) {
+            let x = train.x.gather_rows(idx);
+            let y: Vec<u8> = idx.iter().map(|&r| train.y[r]).collect();
+            step(&mut net, &mut opts, &x, &y, lr);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let preds = net.predict(&bundle.test.x);
+    let test_accuracy = crate::ff::classifier::accuracy(&preds, &bundle.test.y);
+    Ok(BpReport { test_accuracy, wall_s, net })
+}
+
+/// One minibatch BP step (softmax CE, full backward, Adam).
+fn step(net: &mut BpNet, opts: &mut [AdamState], x: &Matrix, y: &[u8], lr: f32) {
+    let acts = net.forward(x);
+    let n_layers = net.ws.len();
+    let inv_b = 1.0 / x.rows as f32;
+    // dlogits = (softmax - onehot)/B
+    let mut delta = ops::softmax_rows(acts.last().unwrap());
+    for (r, &l) in y.iter().enumerate() {
+        delta.row_mut(r)[l as usize] -= 1.0;
+    }
+    for v in &mut delta.data {
+        *v *= inv_b;
+    }
+    // Backward through layers.
+    for l in (0..n_layers).rev() {
+        let input = if l == 0 { x } else { &acts[l - 1] };
+        let dw = ops::matmul_at_b(input, &delta);
+        let db = ops::col_sum(&delta);
+        if l > 0 {
+            let mut dprev = ops::matmul_a_bt(&delta, &net.ws[l]);
+            // ReLU mask of the previous activation
+            for (dv, av) in dprev.data.iter_mut().zip(&acts[l - 1].data) {
+                if *av <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            delta = dprev;
+        }
+        opts[l].step(&mut net.ws[l], &mut net.bs[l], &dw, &db, lr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::synth_mnist;
+
+    #[test]
+    fn backprop_learns_synth_mnist() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.dims = vec![784, 48, 48];
+        cfg.epochs = 3;
+        cfg.lr_head = 0.002;
+        let bundle = synth_mnist(256, 128, 7);
+        let rep = run_backprop(&cfg, &bundle).unwrap();
+        assert!(
+            rep.test_accuracy > 0.5,
+            "BP should learn synth-mnist well, got {:.1}%",
+            rep.test_accuracy * 100.0
+        );
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let net = BpNet::new(&[10, 8, 6], 4, &mut rng);
+        let x = Matrix::rand_uniform(3, 10, 0.0, 1.0, &mut rng);
+        let acts = net.forward(&x);
+        assert_eq!(acts.len(), 3);
+        assert_eq!((acts[2].rows, acts[2].cols), (3, 4));
+        // hidden activations ReLU'd, logits not necessarily positive
+        assert!(acts[0].data.iter().all(|&v| v >= 0.0));
+    }
+}

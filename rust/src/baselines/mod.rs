@@ -1,0 +1,13 @@
+//! Comparator systems the paper evaluates against.
+//!
+//! * [`dff`] — a faithful reimplementation of DFF [11]'s *design points*
+//!   (full-batch training, fixed negatives, activation-shipping topology,
+//!   no classifier head): Table 1's 93.15% row. The paper attributes
+//!   DFF's accuracy gap exactly to these choices (§6); reproducing the gap
+//!   means reproducing the choices, not the bugs.
+//! * [`backprop`] — a plain backpropagation trainer for the same
+//!   architecture: the reference point of Figure 1 and the implicit
+//!   accuracy ceiling.
+
+pub mod backprop;
+pub mod dff;

@@ -1,0 +1,134 @@
+//! Benchmark utilities for the `harness = false` bench targets (criterion
+//! is unavailable offline — DESIGN.md substitution table).
+//!
+//! [`bench`] runs warmup + timed iterations and reports min/mean/p50
+//! wall-clock; table-reproduction benches print paper-style rows via
+//! [`Row`]/[`print_table`].
+
+use std::time::Instant;
+
+/// Timing statistics from [`bench`].
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    /// Iterations measured.
+    pub iters: u32,
+    /// Minimum seconds per iteration.
+    pub min_s: f64,
+    /// Mean seconds.
+    pub mean_s: f64,
+    /// Median seconds.
+    pub p50_s: f64,
+}
+
+impl BenchStats {
+    /// `name: mean ± spread` display line.
+    pub fn line(&self, name: &str) -> String {
+        format!(
+            "{:<44} {:>10}  min {:>10}  p50 {:>10}  ({} iters)",
+            name,
+            fmt_s(self.mean_s),
+            fmt_s(self.min_s),
+            fmt_s(self.p50_s),
+            self.iters
+        )
+    }
+}
+
+/// Human-format seconds.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench(warmup: u32, iters: u32, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min_s = times[0];
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    let p50_s = times[times.len() / 2];
+    BenchStats { iters: times.len() as u32, min_s, mean_s, p50_s }
+}
+
+/// A row of a paper-style results table.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// Cells, column order matching the header.
+    pub cells: Vec<String>,
+}
+
+/// Print a fixed-width table with header and rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Row]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.cells.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  | ")
+    };
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    println!("{}", fmt_row(&head));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 5 * widths.len()));
+    for r in rows {
+        println!("{}", fmt_row(&r.cells));
+    }
+}
+
+/// Convenience: build a row from display items.
+#[macro_export]
+macro_rules! row {
+    ($($cell:expr),* $(,)?) => {
+        $crate::bench_util::Row { cells: vec![$(format!("{}", $cell)),*] }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let stats = bench(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(stats.iters, 5);
+        assert!(stats.min_s >= 0.0);
+        assert!(stats.mean_s >= stats.min_s);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_s(2.5).contains('s'));
+        assert!(fmt_s(0.002).contains("ms"));
+        assert!(fmt_s(2e-6).contains("µs"));
+    }
+
+    #[test]
+    fn row_macro_formats() {
+        let r = row!["a", 42, format!("{:.1}", 1.25)];
+        assert_eq!(r.cells, vec!["a", "42", "1.2"]);
+    }
+}

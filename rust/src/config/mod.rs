@@ -1,0 +1,468 @@
+//! Experiment configuration: typed struct + file/CLI parsing.
+//!
+//! The offline environment has no clap/serde, so this is a small
+//! hand-rolled config system: a `key = value` file format
+//! ([`ExperimentConfig::from_file`]) and `--key value` / `--key=value` CLI
+//! overrides ([`ExperimentConfig::apply_cli`]), both funneling through
+//! [`ExperimentConfig::set`] so every knob is settable from either place.
+
+mod parse;
+
+pub use parse::parse_kv_file;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::DatasetKind;
+use crate::ff::perfopt::PerfOptReadout;
+use crate::ff::{ClassifierMode, NegStrategy};
+
+/// Which PFF scheduler runs the experiment (paper §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheduler {
+    /// N=1, layers in sequence — equivalent to original FF (§5.2 baseline).
+    Sequential,
+    /// One node per layer (§4.1).
+    SingleLayer,
+    /// Every node trains all layers in a rotating pipeline (§4.2).
+    AllLayers,
+    /// All-Layers over per-node private data shards (§4.3).
+    Federated,
+}
+
+impl std::fmt::Display for Scheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Scheduler::Sequential => write!(f, "Sequential"),
+            Scheduler::SingleLayer => write!(f, "Single-Layer"),
+            Scheduler::AllLayers => write!(f, "All-Layers"),
+            Scheduler::Federated => write!(f, "Federated"),
+        }
+    }
+}
+
+impl std::str::FromStr for Scheduler {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => Ok(Scheduler::Sequential),
+            "single-layer" | "single_layer" | "single" => Ok(Scheduler::SingleLayer),
+            "all-layers" | "all_layers" | "all" => Ok(Scheduler::AllLayers),
+            "federated" | "fed" => Ok(Scheduler::Federated),
+            other => bail!("unknown scheduler '{other}'"),
+        }
+    }
+}
+
+/// Compute backend selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust reference engine.
+    Native,
+    /// AOT HLO artifacts executed via PJRT (`artifacts/`).
+    Xla,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(EngineKind::Native),
+            "xla" | "pjrt" => Ok(EngineKind::Xla),
+            other => bail!("unknown engine '{other}'"),
+        }
+    }
+}
+
+/// How nodes talk to the parameter store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Shared-memory store (threads in one process).
+    InProc,
+    /// TCP to a leader-hosted store server (the paper's socket setup).
+    Tcp,
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "inproc" | "in-proc" | "mem" => Ok(TransportKind::InProc),
+            "tcp" | "socket" => Ok(TransportKind::Tcp),
+            other => bail!("unknown transport '{other}'"),
+        }
+    }
+}
+
+/// Full experiment description. One of these drives
+/// [`crate::coordinator::run_experiment`] end to end.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Label used in reports/CSV.
+    pub name: String,
+    /// Dataset selector.
+    pub dataset: DatasetKind,
+    /// Max train examples (0 = dataset default).
+    pub train_n: usize,
+    /// Max test examples (0 = dataset default).
+    pub test_n: usize,
+    /// Layer widths including input, e.g. `[784, 2000, 2000, 2000, 2000]`.
+    pub dims: Vec<usize>,
+    /// Label classes.
+    pub classes: usize,
+    /// Total training epochs `E`.
+    pub epochs: u32,
+    /// Number of splits/chapters `S`; each chapter is `E/S` epochs.
+    pub splits: u32,
+    /// Minibatch size.
+    pub batch: usize,
+    /// Compute nodes `N`.
+    pub nodes: usize,
+    /// Pipeline scheduler.
+    pub scheduler: Scheduler,
+    /// Negative-data strategy.
+    pub neg: NegStrategy,
+    /// Classifier mode.
+    pub classifier: ClassifierMode,
+    /// Performance-Optimized variant (§4.4): per-layer CE heads, no
+    /// negative data. Overrides `neg`/`classifier` semantics.
+    pub perfopt: bool,
+    /// PerfOpt readout (Table 4's two rows).
+    pub perfopt_readout: PerfOptReadout,
+    /// Goodness threshold θ.
+    pub theta: f32,
+    /// FF-layer Adam learning rate (paper: 0.01).
+    pub lr_ff: f32,
+    /// Softmax-head Adam learning rate (paper: 1e-4... see §5.1; the head
+    /// converges far faster with ~1e-3 at reduced scale).
+    pub lr_head: f32,
+    /// Master seed (data, init, shuffles, negatives all derive from it).
+    pub seed: u64,
+    /// Compute backend.
+    pub engine: EngineKind,
+    /// Artifact directory for [`EngineKind::Xla`].
+    pub artifact_dir: PathBuf,
+    /// Ship Adam moments along with published layers (ablation; the paper
+    /// ships only weights+biases).
+    pub ship_opt_state: bool,
+    /// Train the softmax head inside the pipeline (vs post-hoc).
+    pub head_inline: bool,
+    /// Chunk rows for AdaptiveNEG/goodness evaluation sweeps.
+    pub eval_chunk: usize,
+    /// Subsample size for AdaptiveNEG label refresh (0 = full train set).
+    pub neg_subsample: usize,
+    /// Store transport.
+    pub transport: TransportKind,
+    /// TCP port when `transport == Tcp` (leader binds 127.0.0.1:port).
+    pub tcp_port: u16,
+    /// Blocking-get timeout (seconds) — deadlock tripwire.
+    pub store_timeout_s: u64,
+    /// Print per-chapter progress lines.
+    pub verbose: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "pff".into(),
+            dataset: DatasetKind::SynthMnist,
+            train_n: 2000,
+            test_n: 500,
+            dims: vec![784, 256, 256, 256, 256],
+            classes: 10,
+            epochs: 40,
+            splits: 8,
+            batch: 64,
+            nodes: 4,
+            scheduler: Scheduler::AllLayers,
+            neg: NegStrategy::Adaptive,
+            classifier: ClassifierMode::Goodness,
+            perfopt: false,
+            perfopt_readout: PerfOptReadout::AllLayers,
+            theta: 2.0,
+            lr_ff: 0.01,
+            lr_head: 0.001,
+            seed: 42,
+            engine: EngineKind::Native,
+            artifact_dir: PathBuf::from("artifacts"),
+            ship_opt_state: false,
+            head_inline: true,
+            eval_chunk: 256,
+            neg_subsample: 0,
+            transport: TransportKind::InProc,
+            tcp_port: 0,
+            store_timeout_s: 300,
+            verbose: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Reduced-scale MNIST-geometry preset sized for this testbed: all code
+    /// paths of the paper's §5.1 setup, smaller extents.
+    pub fn reduced_mnist() -> Self {
+        ExperimentConfig::default()
+    }
+
+    /// Tiny preset for unit/integration tests (~2 s per run on one core).
+    /// FF is epoch-hungry: anything below ~80 epochs at this scale leaves
+    /// the upper layers' goodness margins under the per-class score bias
+    /// and accuracy collapses (see EXPERIMENTS.md §Stability).
+    pub fn tiny() -> Self {
+        ExperimentConfig {
+            train_n: 512,
+            test_n: 256,
+            dims: vec![784, 64, 64, 64],
+            epochs: 80,
+            splits: 8,
+            nodes: 1,
+            scheduler: Scheduler::Sequential,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    /// The paper's full §5.1 configuration (MNIST, [784,2000×4], E=100,
+    /// S=100, B=64, N=4). Costly on one CPU — used by the DES at full
+    /// scale and available for real runs.
+    pub fn paper_mnist() -> Self {
+        ExperimentConfig {
+            name: "paper-mnist".into(),
+            dataset: DatasetKind::SynthMnist,
+            train_n: 60_000,
+            test_n: 10_000,
+            dims: vec![784, 2000, 2000, 2000, 2000],
+            epochs: 100,
+            splits: 100,
+            batch: 64,
+            nodes: 4,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    /// Epochs per chapter `C = E/S`.
+    pub fn epochs_per_chapter(&self) -> u32 {
+        self.epochs / self.splits
+    }
+
+    /// Number of FF layers `L = dims.len() - 1`.
+    pub fn num_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Validate cross-field invariants; returns a normalized copy.
+    pub fn validated(mut self) -> Result<Self> {
+        if self.dims.len() < 3 {
+            bail!("need ≥2 layers (≥3 dims) — goodness prediction skips the first layer");
+        }
+        if self.splits == 0 || self.epochs == 0 {
+            bail!("epochs and splits must be ≥1");
+        }
+        if self.epochs % self.splits != 0 {
+            bail!("epochs ({}) must be divisible by splits ({})", self.epochs, self.splits);
+        }
+        match self.scheduler {
+            Scheduler::Sequential => {
+                self.nodes = 1;
+            }
+            Scheduler::SingleLayer => {
+                if self.nodes != self.num_layers() {
+                    bail!(
+                        "Single-Layer PFF needs nodes == layers ({} != {})",
+                        self.nodes,
+                        self.num_layers()
+                    );
+                }
+            }
+            Scheduler::AllLayers | Scheduler::Federated => {
+                if self.nodes == 0 {
+                    bail!("nodes must be ≥1");
+                }
+                if self.splits as usize % self.nodes != 0 {
+                    bail!(
+                        "All-Layers/Federated PFF needs splits % nodes == 0 ({} % {})",
+                        self.splits,
+                        self.nodes
+                    );
+                }
+            }
+        }
+        if self.batch == 0 {
+            bail!("batch must be ≥1");
+        }
+        Ok(self)
+    }
+
+    /// Set one knob by key (the single source of truth for file + CLI).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key {
+            "name" => self.name = v.into(),
+            "dataset" => self.dataset = v.parse()?,
+            "train_n" => self.train_n = v.parse()?,
+            "test_n" => self.test_n = v.parse()?,
+            "dims" => {
+                self.dims = v
+                    .split(|c| c == ',' || c == 'x')
+                    .map(|d| d.trim().parse::<usize>().context("dims"))
+                    .collect::<Result<_>>()?;
+            }
+            "classes" => self.classes = v.parse()?,
+            "epochs" => self.epochs = v.parse()?,
+            "splits" => self.splits = v.parse()?,
+            "batch" => self.batch = v.parse()?,
+            "nodes" => self.nodes = v.parse()?,
+            "scheduler" => self.scheduler = v.parse()?,
+            "neg" => {
+                self.neg = match v.to_ascii_lowercase().as_str() {
+                    "adaptive" | "adaptiveneg" => NegStrategy::Adaptive,
+                    "random" | "randomneg" => NegStrategy::Random,
+                    "fixed" | "fixedneg" => NegStrategy::Fixed,
+                    other => bail!("unknown neg strategy '{other}'"),
+                }
+            }
+            "classifier" => {
+                self.classifier = match v.to_ascii_lowercase().as_str() {
+                    "goodness" => ClassifierMode::Goodness,
+                    "softmax" => ClassifierMode::Softmax,
+                    other => bail!("unknown classifier '{other}'"),
+                }
+            }
+            "perfopt" => self.perfopt = parse_bool(v)?,
+            "perfopt_readout" => {
+                self.perfopt_readout = match v.to_ascii_lowercase().as_str() {
+                    "last" | "last-layer" => PerfOptReadout::LastLayer,
+                    "all" | "all-layers" => PerfOptReadout::AllLayers,
+                    other => bail!("unknown readout '{other}'"),
+                }
+            }
+            "theta" => self.theta = v.parse()?,
+            "lr_ff" => self.lr_ff = v.parse()?,
+            "lr_head" => self.lr_head = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "engine" => self.engine = v.parse()?,
+            "artifact_dir" => self.artifact_dir = PathBuf::from(v),
+            "ship_opt_state" => self.ship_opt_state = parse_bool(v)?,
+            "head_inline" => self.head_inline = parse_bool(v)?,
+            "eval_chunk" => self.eval_chunk = v.parse()?,
+            "neg_subsample" => self.neg_subsample = v.parse()?,
+            "transport" => self.transport = v.parse()?,
+            "tcp_port" => self.tcp_port = v.parse()?,
+            "store_timeout_s" => self.store_timeout_s = v.parse()?,
+            "verbose" => self.verbose = parse_bool(v)?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load a `key = value` config file over the defaults.
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        for (k, v) in parse_kv_file(path)? {
+            cfg.set(&k, &v).with_context(|| format!("config key '{k}'"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply `--key value` / `--key=value` CLI pairs over `self`.
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("expected --key, got '{a}'");
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                self.set(k, v)?;
+                i += 1;
+            } else {
+                let v = args.get(i + 1).with_context(|| format!("--{key} needs a value"))?;
+                self.set(key, v)?;
+                i += 2;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => bail!("expected bool, got '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validated().unwrap();
+        ExperimentConfig::tiny().validated().unwrap();
+        ExperimentConfig::paper_mnist().validated().unwrap();
+    }
+
+    #[test]
+    fn single_layer_node_constraint() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheduler = Scheduler::SingleLayer;
+        cfg.nodes = 2; // dims has 4 layers
+        assert!(cfg.clone().validated().is_err());
+        cfg.nodes = 4;
+        cfg.validated().unwrap();
+    }
+
+    #[test]
+    fn all_layers_divisibility() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheduler = Scheduler::AllLayers;
+        cfg.splits = 5;
+        cfg.epochs = 5;
+        cfg.nodes = 4;
+        assert!(cfg.clone().validated().is_err());
+        cfg.nodes = 5;
+        cfg.validated().unwrap();
+    }
+
+    #[test]
+    fn sequential_forces_one_node() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheduler = Scheduler::Sequential;
+        cfg.nodes = 8;
+        assert_eq!(cfg.validated().unwrap().nodes, 1);
+    }
+
+    #[test]
+    fn set_and_cli_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        let args: Vec<String> = [
+            "--scheduler", "single-layer", "--neg=random", "--dims", "784,128,128,128,128",
+            "--epochs=8", "--splits", "8", "--nodes=4", "--classifier", "softmax",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        cfg.apply_cli(&args).unwrap();
+        assert_eq!(cfg.scheduler, Scheduler::SingleLayer);
+        assert_eq!(cfg.neg, NegStrategy::Random);
+        assert_eq!(cfg.dims, vec![784, 128, 128, 128, 128]);
+        assert_eq!(cfg.classifier, ClassifierMode::Softmax);
+        cfg.validated().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn epochs_per_chapter() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.epochs = 100;
+        cfg.splits = 25;
+        assert_eq!(cfg.epochs_per_chapter(), 4);
+    }
+}

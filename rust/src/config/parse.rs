@@ -1,0 +1,63 @@
+//! Minimal `key = value` config-file parser (comments with `#`, blank
+//! lines ignored, last write wins).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Parse a config file into ordered `(key, value)` pairs.
+pub fn parse_kv_file(path: impl AsRef<Path>) -> Result<Vec<(String, String)>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+    parse_kv_str(&text)
+}
+
+/// Parse config text (see [`parse_kv_file`]).
+pub fn parse_kv_str(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("config line {}: expected 'key = value', got '{raw}'", lineno + 1);
+        };
+        let key = k.trim();
+        let val = v.trim().trim_matches('"');
+        if key.is_empty() {
+            bail!("config line {}: empty key", lineno + 1);
+        }
+        out.push((key.to_string(), val.to_string()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pairs_comments_quotes() {
+        let text = "\n# comment\nscheduler = all-layers\nname = \"run 1\"  # inline\n\nepochs=8\n";
+        let kv = parse_kv_str(text).unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("scheduler".into(), "all-layers".into()),
+                ("name".into(), "run 1".into()),
+                ("epochs".into(), "8".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_kv_str("not a pair\n").is_err());
+        assert!(parse_kv_str("= value\n").is_err());
+    }
+}

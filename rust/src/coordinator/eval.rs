@@ -1,0 +1,129 @@
+//! Model assembly from the store and test-set evaluation.
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::schedulers::head_slot;
+use crate::coordinator::store::ParamStore;
+use crate::data::Dataset;
+use crate::engine::Engine;
+use crate::ff::classifier::{accuracy, predict_goodness, predict_softmax};
+use crate::ff::perfopt::{predict as perfopt_predict, PerfOptReadout};
+use crate::ff::{ClassifierMode, FFNetwork, LinearHead};
+use crate::tensor::{AdamState, Rng};
+
+/// The assembled output of a PFF run: whatever is needed to predict.
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    /// The FF network (latest published version of every layer).
+    pub net: FFNetwork,
+    /// Full-network softmax head (Softmax classifier mode).
+    pub head: Option<LinearHead>,
+    /// Per-layer heads (PerfOpt mode).
+    pub layer_heads: Vec<LinearHead>,
+}
+
+/// Assemble the final model from the latest store versions.
+pub fn assemble(store: &dyn ParamStore, cfg: &ExperimentConfig) -> Result<TrainedModel> {
+    let n_layers = cfg.num_layers();
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let (_, params) = store
+            .latest_layer(l)?
+            .with_context(|| format!("no published version of layer {l}"))?;
+        let (layer, _) = params.into_layer();
+        layers.push(layer);
+    }
+    let net = FFNetwork { layers, classes: cfg.classes };
+
+    let head = store.latest_head()?.map(|(_, p)| p.into_head().0);
+
+    let mut layer_heads = Vec::new();
+    if cfg.perfopt {
+        for l in 0..n_layers {
+            let (_, params) = store
+                .latest_layer(head_slot(l))?
+                .with_context(|| format!("no published PerfOpt head for layer {l}"))?;
+            let (hl, _) = params.into_layer();
+            layer_heads.push(LinearHead { w: hl.w, b: hl.b });
+        }
+    }
+    Ok(TrainedModel { net, head, layer_heads })
+}
+
+/// Train the full-network softmax head post-hoc (when `head_inline` is
+/// off, §3: "trained using backpropagation … at the end of the training").
+/// Returns the trained head and the time spent, in seconds.
+pub fn train_head_posthoc(
+    eng: &mut dyn Engine,
+    model: &TrainedModel,
+    train: &Dataset,
+    cfg: &ExperimentConfig,
+) -> Result<(LinearHead, f64)> {
+    use crate::coordinator::lr::cooldown;
+    use crate::ff::classifier::head_features;
+
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::derive(cfg.seed, 0x504F_5354); // "POST"
+    let mut head = model.net.new_head(&mut rng);
+    let mut opt = AdamState::new(head.w.rows, head.w.cols);
+    let feats = head_features(eng, &model.net, &train.x)?;
+    for epoch in 0..cfg.epochs {
+        let lr = cooldown(cfg.lr_head, epoch, cfg.epochs);
+        let mut order: Vec<usize> = (0..train.len()).collect();
+        let mut shuffle_rng = Rng::derive(cfg.seed, 0x5053_4846 ^ u64::from(epoch));
+        shuffle_rng.shuffle(&mut order);
+        for idx in order.chunks(cfg.batch) {
+            let bx = feats.gather_rows(idx);
+            let by: Vec<u8> = idx.iter().map(|&r| train.y[r]).collect();
+            eng.head_train_step(&mut head, &mut opt, &bx, &by, lr)?;
+        }
+    }
+    Ok((head, t0.elapsed().as_secs_f64()))
+}
+
+/// Evaluate the model on `data` (chunked), per the configured classifier.
+pub fn evaluate(
+    eng: &mut dyn Engine,
+    model: &TrainedModel,
+    data: &Dataset,
+    cfg: &ExperimentConfig,
+) -> Result<f64> {
+    let chunk = cfg.eval_chunk.max(1);
+    let mut preds: Vec<u8> = Vec::with_capacity(data.len());
+    let mut r0 = 0;
+    while r0 < data.len() {
+        let r1 = (r0 + chunk).min(data.len());
+        let rows: Vec<usize> = (r0..r1).collect();
+        let xb = data.x.gather_rows(&rows);
+        let mut p = if cfg.perfopt {
+            perfopt_predict(eng, &model.net, &model.layer_heads, &xb, cfg.perfopt_readout)?
+        } else {
+            match cfg.classifier {
+                ClassifierMode::Goodness => predict_goodness(eng, &model.net, &xb)?,
+                ClassifierMode::Softmax => {
+                    let head = model.head.as_ref().context("softmax mode but no head trained")?;
+                    predict_softmax(eng, &model.net, head, &xb)?
+                }
+            }
+        };
+        preds.append(&mut p);
+        r0 = r1;
+    }
+    Ok(accuracy(&preds, &data.y))
+}
+
+/// Evaluate with an explicit readout override (Table 4 reports both
+/// PerfOpt readouts from the same trained model).
+pub fn evaluate_perfopt_readout(
+    eng: &mut dyn Engine,
+    model: &TrainedModel,
+    data: &Dataset,
+    cfg: &ExperimentConfig,
+    readout: PerfOptReadout,
+) -> Result<f64> {
+    let mut c = cfg.clone();
+    c.perfopt = true;
+    c.perfopt_readout = readout;
+    evaluate(eng, model, data, &c)
+}

@@ -1,0 +1,60 @@
+//! Learning-rate cooldown schedule (§5.1: "cooldowns after the 50th
+//! epoch" of 100).
+//!
+//! Matches the reference FF implementations: constant for the first half
+//! of training, then linear decay to ~0 at the final epoch:
+//!
+//! `lr(e) = lr                          e ≤ E/2`
+//! `lr(e) = lr · 2(1 + E − e)/E         e > E/2`
+
+/// Learning rate at (0-based) global epoch `epoch` of `total_epochs`.
+pub fn cooldown(base_lr: f32, epoch: u32, total_epochs: u32) -> f32 {
+    let e = epoch + 1; // 1-based epoch, as in the reference schedule
+    let half = total_epochs / 2;
+    if e <= half || total_epochs == 0 {
+        base_lr
+    } else {
+        base_lr * 2.0 * (1 + total_epochs - e) as f32 / total_epochs as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_first_half() {
+        for e in 0..50 {
+            assert_eq!(cooldown(0.01, e, 100), 0.01);
+        }
+    }
+
+    #[test]
+    fn decays_second_half_monotonically() {
+        let mut prev = cooldown(0.01, 50, 100);
+        for e in 51..100 {
+            let lr = cooldown(0.01, e, 100);
+            assert!(lr < prev, "epoch {e}: {lr} !< {prev}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn near_continuous_at_half() {
+        let before = cooldown(0.01, 49, 100); // epoch 50 (1-based)
+        let after = cooldown(0.01, 50, 100); // epoch 51
+        assert!((before - after).abs() < 0.01 * 0.05, "{before} vs {after}");
+    }
+
+    #[test]
+    fn final_epoch_small_but_positive() {
+        let last = cooldown(0.01, 99, 100);
+        assert!(last > 0.0 && last < 0.001);
+    }
+
+    #[test]
+    fn short_runs_work() {
+        assert_eq!(cooldown(0.5, 0, 2), 0.5);
+        assert!(cooldown(0.5, 1, 2) <= 0.5);
+    }
+}

@@ -1,0 +1,303 @@
+//! Layer-3 coordinator: the paper's contribution.
+//!
+//! [`run_experiment`] is the single entry point: it loads data, builds the
+//! parameter store (in-process or TCP), spawns one worker thread per node
+//! running the configured scheduler, assembles the final model from the
+//! store, trains the post-hoc head if needed, evaluates, and returns a
+//! full [`ExperimentReport`] (accuracy, wall time, modeled multi-node
+//! makespan, utilization, communication volume, loss curve).
+
+pub mod eval;
+pub mod lr;
+pub mod node;
+pub mod schedulers;
+pub mod store;
+
+pub use eval::TrainedModel;
+pub use node::NodeCtx;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{EngineKind, ExperimentConfig, Scheduler, TransportKind};
+use crate::coordinator::store::{MemStore, ParamStore};
+use crate::data::{load_dataset, DataBundle};
+use crate::engine::{native_factory, xla_factory, Engine, EngineFactory};
+use crate::ff::ClassifierMode;
+use crate::metrics::{makespan, CommStats, LossCurve, MakespanModel, NodeReport, SpanRecorder};
+use crate::transport::tcp::{StoreServer, TcpStoreClient};
+
+/// Everything a finished experiment reports (EXPERIMENTS.md rows are
+/// printed from these).
+#[derive(Clone, Debug)]
+pub struct ExperimentReport {
+    /// Experiment label.
+    pub name: String,
+    /// Scheduler used.
+    pub scheduler: Scheduler,
+    /// Test-set accuracy in `[0, 1]`.
+    pub test_accuracy: f64,
+    /// Real wall-clock seconds of the distributed training phase.
+    pub wall_s: f64,
+    /// Post-hoc head training seconds (0 when head is inline/absent).
+    pub head_posthoc_s: f64,
+    /// Evaluation seconds (excluded from training time, like the paper).
+    pub eval_s: f64,
+    /// Modeled multi-node timing (per-node busy, makespan, utilization) —
+    /// see `metrics::makespan` for why this exists on a 1-core testbed.
+    pub modeled: MakespanModel,
+    /// Store communication counters.
+    pub comm: CommStats,
+    /// Per-node span reports.
+    pub node_reports: Vec<NodeReport>,
+    /// Merged training curve.
+    pub curve: LossCurve,
+    /// The assembled model.
+    pub model: TrainedModel,
+}
+
+impl ExperimentReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<28} acc {:>6.2}%  busy {:>8.2}s  makespan {:>8.2}s  util {:>5.1}%  comm {:.1} MB",
+            self.name,
+            self.test_accuracy * 100.0,
+            self.modeled.total_busy,
+            self.modeled.modeled_makespan,
+            self.modeled.utilization * 100.0,
+            self.comm.bytes_put as f64 / 1e6,
+        )
+    }
+}
+
+fn engine_factory(cfg: &ExperimentConfig) -> EngineFactory {
+    match cfg.engine {
+        EngineKind::Native => native_factory(),
+        EngineKind::Xla => xla_factory(cfg.artifact_dir.clone()),
+    }
+}
+
+/// Run a full PFF experiment per `cfg`. See module docs.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
+    let cfg = cfg.clone().validated()?;
+    let bundle = load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+    run_experiment_with_data(&cfg, &bundle)
+}
+
+/// Run with pre-loaded data (benches reuse one bundle across many runs).
+pub fn run_experiment_with_data(
+    cfg: &ExperimentConfig,
+    bundle: &DataBundle,
+) -> Result<ExperimentReport> {
+    let cfg = cfg.clone().validated()?;
+    let factory = engine_factory(&cfg);
+
+    // --- store + transport ---------------------------------------------------
+    let mem = Arc::new(MemStore::new());
+    let server = match cfg.transport {
+        TransportKind::InProc => None,
+        TransportKind::Tcp => Some(StoreServer::start(mem.clone(), cfg.tcp_port)?),
+    };
+    let node_store = |_: usize| -> Result<Arc<dyn ParamStore>> {
+        match (&cfg.transport, &server) {
+            (TransportKind::InProc, _) => Ok(mem.clone()),
+            (TransportKind::Tcp, Some(srv)) => {
+                Ok(Arc::new(TcpStoreClient::connect(srv.addr)?) as Arc<dyn ParamStore>)
+            }
+            _ => unreachable!(),
+        }
+    };
+
+    // --- data placement -------------------------------------------------------
+    let shards: Vec<crate::data::Dataset> = if cfg.scheduler == Scheduler::Federated {
+        bundle.train.shard(cfg.nodes)
+    } else {
+        vec![bundle.train.clone(); cfg.nodes]
+    };
+
+    // --- spawn nodes -----------------------------------------------------------
+    let origin = Instant::now();
+    let mut handles = Vec::with_capacity(cfg.nodes);
+    for (node_id, data) in shards.into_iter().enumerate() {
+        let cfg_n = cfg.clone();
+        let store = node_store(node_id)?;
+        let factory = factory.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("pff-node-{node_id}"))
+                .spawn(move || -> Result<(NodeReport, LossCurve)> {
+                    let engine = factory().context("constructing node engine")?;
+                    let mut ctx = NodeCtx {
+                        node_id,
+                        cfg: cfg_n,
+                        store,
+                        engine,
+                        data,
+                        rec: SpanRecorder::new(origin, node_id),
+                        curve: LossCurve::default(),
+                        opt_cache: HashMap::new(),
+                        head_opt: None,
+                    };
+                    schedulers::run_node(&mut ctx)?;
+                    Ok((ctx.rec.finish(), ctx.curve))
+                })?,
+        );
+    }
+
+    let mut node_reports = Vec::with_capacity(cfg.nodes);
+    let mut curve = LossCurve::default();
+    for (i, h) in handles.into_iter().enumerate() {
+        let (rep, c) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("node {i} panicked"))?
+            .with_context(|| format!("node {i} failed"))?;
+        node_reports.push(rep);
+        curve.merge(&c);
+    }
+    let wall_s = origin.elapsed().as_secs_f64();
+
+    // --- assemble + post-hoc head + evaluate -----------------------------------
+    // Read through the mem store directly (same data the clients wrote).
+    let mut model = eval::assemble(mem.as_ref(), &cfg)?;
+    let comm = mem.comm_stats();
+    if let Some(srv) = server {
+        srv.shutdown();
+    }
+
+    let mut leader_engine: Box<dyn Engine> = factory()?;
+    let mut head_posthoc_s = 0.0;
+    if cfg.classifier == ClassifierMode::Softmax && !cfg.perfopt && model.head.is_none() {
+        let (head, secs) =
+            eval::train_head_posthoc(leader_engine.as_mut(), &model, &bundle.train, &cfg)?;
+        model.head = Some(head);
+        head_posthoc_s = secs;
+    }
+
+    let eval_t0 = Instant::now();
+    let test_accuracy = eval::evaluate(leader_engine.as_mut(), &model, &bundle.test, &cfg)?;
+    let eval_s = eval_t0.elapsed().as_secs_f64();
+
+    let modeled = makespan(&node_reports);
+    Ok(ExperimentReport {
+        name: cfg.name.clone(),
+        scheduler: cfg.scheduler,
+        test_accuracy,
+        wall_s,
+        head_posthoc_s,
+        eval_s,
+        modeled,
+        comm,
+        node_reports,
+        curve,
+        model,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheduler;
+    use crate::ff::NegStrategy;
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.neg = NegStrategy::Random;
+        cfg
+    }
+
+    #[test]
+    fn sequential_beats_chance() {
+        let mut cfg = quick_cfg();
+        cfg.scheduler = Scheduler::Sequential;
+        let rep = run_experiment(&cfg).unwrap();
+        assert!(
+            rep.test_accuracy > 0.25,
+            "sequential FF should beat 10% chance clearly, got {:.1}%",
+            rep.test_accuracy * 100.0
+        );
+        assert!(rep.modeled.total_busy > 0.0);
+        assert_eq!(rep.node_reports.len(), 1);
+    }
+
+    #[test]
+    fn all_layers_matches_sequential_model_bitwise() {
+        // With N nodes the pipeline executes the SAME chapter sequence as
+        // sequential (same seeds, same order of updates per layer) when
+        // opt state is shipped — the trained weights must agree.
+        let mut cfg = quick_cfg();
+        cfg.ship_opt_state = true;
+        cfg.scheduler = Scheduler::Sequential;
+        let seq = run_experiment(&cfg).unwrap();
+        cfg.scheduler = Scheduler::AllLayers;
+        cfg.nodes = 2;
+        let pff = run_experiment(&cfg).unwrap();
+        for (a, b) in seq.model.net.layers.iter().zip(&pff.model.net.layers) {
+            assert!(
+                a.w.max_abs_diff(&b.w) < 1e-5,
+                "All-Layers must reproduce sequential weights (diff {})",
+                a.w.max_abs_diff(&b.w)
+            );
+        }
+        assert!((seq.test_accuracy - pff.test_accuracy).abs() < 0.02);
+    }
+
+    #[test]
+    fn single_layer_runs_and_learns() {
+        let mut cfg = quick_cfg();
+        cfg.scheduler = Scheduler::SingleLayer;
+        cfg.nodes = 3; // 3 layers
+        let rep = run_experiment(&cfg).unwrap();
+        assert!(rep.test_accuracy > 0.25, "got {:.1}%", rep.test_accuracy * 100.0);
+        assert_eq!(rep.node_reports.len(), 3);
+        // every node published its layer each chapter (3 nodes × 8 chapters)
+        assert!(rep.comm.puts >= 24);
+    }
+
+    #[test]
+    fn federated_runs_on_shards() {
+        let mut cfg = quick_cfg();
+        cfg.scheduler = Scheduler::Federated;
+        cfg.nodes = 2;
+        cfg.train_n = 768; // 384 per shard — enough to beat chance
+        let rep = run_experiment(&cfg).unwrap();
+        assert!(rep.test_accuracy > 0.15, "got {:.1}%", rep.test_accuracy * 100.0);
+    }
+
+    #[test]
+    fn perfopt_runs() {
+        let mut cfg = quick_cfg();
+        cfg.perfopt = true;
+        cfg.scheduler = Scheduler::AllLayers;
+        cfg.nodes = 2;
+        let rep = run_experiment(&cfg).unwrap();
+        assert!(rep.test_accuracy > 0.3, "got {:.1}%", rep.test_accuracy * 100.0);
+        assert_eq!(rep.model.layer_heads.len(), 3);
+    }
+
+    #[test]
+    fn softmax_classifier_inline() {
+        let mut cfg = quick_cfg();
+        cfg.classifier = ClassifierMode::Softmax;
+        cfg.scheduler = Scheduler::AllLayers;
+        cfg.nodes = 2;
+        let rep = run_experiment(&cfg).unwrap();
+        assert!(rep.model.head.is_some());
+        assert!(rep.test_accuracy > 0.25, "got {:.1}%", rep.test_accuracy * 100.0);
+        assert_eq!(rep.head_posthoc_s, 0.0);
+    }
+
+    #[test]
+    fn tcp_transport_end_to_end() {
+        let mut cfg = quick_cfg();
+        cfg.transport = TransportKind::Tcp;
+        cfg.scheduler = Scheduler::AllLayers;
+        cfg.nodes = 2;
+        let rep = run_experiment(&cfg).unwrap();
+        assert!(rep.test_accuracy > 0.25, "got {:.1}%", rep.test_accuracy * 100.0);
+        assert!(rep.comm.bytes_put > 0);
+    }
+}

@@ -1,0 +1,461 @@
+//! Per-node execution context and the chapter-training primitives shared
+//! by every scheduler.
+//!
+//! A *node* is one worker in the distributed system (a thread here; a
+//! machine in the paper's testbed). All schedulers compose the same four
+//! primitives, so their only differences are *which* layer/chapter pairs a
+//! node handles and *where* its negative labels come from — exactly the
+//! deltas the paper describes.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::lr::cooldown;
+use crate::coordinator::store::{LayerParams, ParamStore};
+use crate::data::Dataset;
+use crate::engine::Engine;
+use crate::ff::negative::{adaptive_neg_labels, random_wrong_labels};
+use crate::ff::overlay::{overlay_labels, overlay_neutral};
+use crate::ff::{FFLayer, FFNetwork, LinearHead, NegStrategy};
+use crate::metrics::{LossCurve, SpanKind, SpanRecorder};
+use crate::tensor::{AdamState, Matrix, Rng};
+
+/// RNG stream tags for deterministic, scheduler-independent derivations.
+mod stream {
+    pub const LAYER_INIT: u64 = 0x4C41_5945; // "LAYE"
+    pub const HEAD_INIT: u64 = 0x4845_4144; // "HEAD"
+    pub const SHUFFLE: u64 = 0x5348_5546; // "SHUF"
+}
+
+/// Everything one node needs to run its part of an experiment.
+pub struct NodeCtx {
+    /// Node index in `[0, N)`.
+    pub node_id: usize,
+    /// Experiment configuration (validated).
+    pub cfg: ExperimentConfig,
+    /// Parameter store handle (shared or TCP).
+    pub store: Arc<dyn ParamStore>,
+    /// Compute backend (owned; never crosses threads).
+    pub engine: Box<dyn Engine>,
+    /// This node's training data (full set, or its shard for Federated).
+    pub data: Dataset,
+    /// Span recorder for utilization accounting.
+    pub rec: SpanRecorder,
+    /// Training curve (merged by the leader afterwards).
+    pub curve: LossCurve,
+    /// Node-local Adam states per layer index (the paper ships only
+    /// weights+biases, so moments stay with the node — see DESIGN.md).
+    pub opt_cache: HashMap<usize, AdamState>,
+    /// Node-local Adam state for the softmax head.
+    pub head_opt: Option<AdamState>,
+}
+
+impl NodeCtx {
+    /// Blocking-get timeout from config.
+    pub fn timeout(&self) -> Duration {
+        Duration::from_secs(self.cfg.store_timeout_s)
+    }
+
+    /// Deterministic fresh layer `l` — *identical across nodes and
+    /// schedulers* for a given experiment seed, so Sequential vs pipelined
+    /// runs start from the same model.
+    pub fn fresh_layer(&self, l: usize) -> FFLayer {
+        let mut rng = Rng::derive(self.cfg.seed, stream::LAYER_INIT ^ l as u64);
+        FFLayer::new(self.cfg.dims[l], self.cfg.dims[l + 1], l > 0, &mut rng)
+    }
+
+    /// Deterministic fresh softmax head for the full network features.
+    pub fn fresh_full_head(&self) -> LinearHead {
+        let d: usize = self.cfg.dims[2..].iter().sum();
+        let mut rng = Rng::derive(self.cfg.seed, stream::HEAD_INIT);
+        LinearHead::new(d, self.cfg.classes, &mut rng)
+    }
+
+    /// Deterministic fresh per-layer head (PerfOpt).
+    pub fn fresh_layer_head(&self, l: usize) -> LinearHead {
+        let mut rng = Rng::derive(self.cfg.seed, stream::HEAD_INIT ^ (l as u64) << 8);
+        LinearHead::new(self.cfg.dims[l + 1], self.cfg.classes, &mut rng)
+    }
+
+    /// Positive inputs: data with true labels overlaid.
+    pub fn positive_inputs(&self) -> Matrix {
+        overlay_labels(&self.data.x, &self.data.y, self.cfg.classes)
+    }
+
+    /// Negative inputs for given wrong labels.
+    pub fn negative_inputs(&self, neg_labels: &[u8]) -> Matrix {
+        overlay_labels(&self.data.x, neg_labels, self.cfg.classes)
+    }
+
+    /// Neutral-overlay inputs (PerfOpt / Softmax-head features).
+    pub fn neutral_inputs(&self) -> Matrix {
+        overlay_neutral(&self.data.x, self.cfg.classes)
+    }
+
+    /// Derived wrong labels for `chapter` (RandomNEG; FixedNEG passes 0).
+    /// Identical on every node — no communication needed.
+    pub fn derived_neg_labels(&self, chapter: u32) -> Vec<u8> {
+        random_wrong_labels(self.cfg.seed, chapter, &self.data.y, self.cfg.classes)
+    }
+
+    /// Negative labels to *use* for `chapter` under the configured
+    /// strategy, when the node can evaluate the network locally
+    /// (Sequential / All-Layers / Federated).
+    ///
+    /// AdaptiveNEG: chapters before the node has a trained network fall
+    /// back to the random derivation; afterwards the caller supplies the
+    /// current network via `net` and labels are the most-predicted
+    /// incorrect class (§5), computed locally.
+    pub fn local_neg_labels(&mut self, chapter: u32, net: Option<&FFNetwork>) -> Result<Vec<u8>> {
+        match self.cfg.neg {
+            NegStrategy::Fixed => Ok(self.derived_neg_labels(0)),
+            NegStrategy::Random => Ok(self.derived_neg_labels(chapter)),
+            NegStrategy::Adaptive => match net {
+                None => Ok(self.derived_neg_labels(0)),
+                Some(net) => {
+                    let chunk = self.cfg.eval_chunk;
+                    let sub = self.cfg.neg_subsample;
+                    let eng = self.engine.as_mut();
+                    let rec = &mut self.rec;
+                    let data = &self.data;
+                    rec.time(SpanKind::NegGen, usize::MAX, chapter, || {
+                        if sub == 0 || sub >= data.len() {
+                            adaptive_neg_labels(eng, net, &data.x, &data.y, chunk)
+                        } else {
+                            // Refresh a deterministic subsample; reuse the
+                            // random derivation elsewhere (cheap hybrid).
+                            let mut labels = random_wrong_labels(
+                                self.cfg.seed,
+                                chapter,
+                                &data.y,
+                                self.cfg.classes,
+                            );
+                            let rows: Vec<usize> = (0..sub).map(|i| i * data.len() / sub).collect();
+                            let xs = data.x.gather_rows(&rows);
+                            let ys: Vec<u8> = rows.iter().map(|&r| data.y[r]).collect();
+                            let adap = adaptive_neg_labels(eng, net, &xs, &ys, chunk)?;
+                            for (ri, &r) in rows.iter().enumerate() {
+                                labels[r] = adap[ri];
+                            }
+                            Ok(labels)
+                        }
+                    })
+                }
+            },
+        }
+    }
+
+    /// Train one FF layer for one chapter (`C = E/S` mini-epochs) on
+    /// already-transformed positive/negative inputs. Returns mean loss.
+    ///
+    /// `chapter` positions the LR cooldown: by chapter `c` the layer has
+    /// already seen `c·C` epochs.
+    pub fn train_ff_layer_chapter(
+        &mut self,
+        layer: &mut FFLayer,
+        opt: &mut AdamState,
+        layer_idx: usize,
+        chapter: u32,
+        x_pos: &Matrix,
+        x_neg: &Matrix,
+    ) -> Result<f32> {
+        let c_epochs = self.cfg.epochs_per_chapter();
+        let base_lr = self.cfg.lr_ff;
+        let total = self.cfg.epochs;
+        let batch = self.cfg.batch;
+        let seed = self.cfg.seed;
+        let eng = self.engine.as_mut();
+        let rec = &mut self.rec;
+        let n = x_pos.rows;
+        let mut mean_loss = 0.0f32;
+        let mut steps = 0u32;
+        rec.time(SpanKind::Train, layer_idx, chapter, || -> Result<()> {
+            for me in 0..c_epochs {
+                let epoch = chapter * c_epochs + me;
+                let lr = cooldown(base_lr, epoch, total);
+                let mut rng = Rng::derive(
+                    seed,
+                    stream::SHUFFLE ^ (u64::from(epoch) << 16) ^ (layer_idx as u64),
+                );
+                let mut order: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut order);
+                for idx in order.chunks(batch) {
+                    let bp = x_pos.gather_rows(idx);
+                    let bn = x_neg.gather_rows(idx);
+                    let stats = eng.ff_train_step(layer, opt, &bp, &bn, self.cfg.theta, lr)?;
+                    mean_loss += stats.loss();
+                    steps += 1;
+                }
+            }
+            Ok(())
+        })?;
+        let loss = if steps > 0 { mean_loss / steps as f32 } else { 0.0 };
+        let epoch_f = (chapter + 1) as f32 * c_epochs as f32;
+        self.curve.push_loss(epoch_f, loss);
+        Ok(loss)
+    }
+
+    /// Train one PerfOpt (layer, head) pair for one chapter. Returns mean
+    /// CE loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_perfopt_layer_chapter(
+        &mut self,
+        layer: &mut FFLayer,
+        head: &mut LinearHead,
+        opt_layer: &mut AdamState,
+        opt_head: &mut AdamState,
+        layer_idx: usize,
+        chapter: u32,
+        x: &Matrix,
+        labels: &[u8],
+    ) -> Result<f32> {
+        let c_epochs = self.cfg.epochs_per_chapter();
+        let base_lr = self.cfg.lr_ff;
+        let total = self.cfg.epochs;
+        let batch = self.cfg.batch;
+        let seed = self.cfg.seed;
+        let eng = self.engine.as_mut();
+        let rec = &mut self.rec;
+        let n = x.rows;
+        let mut mean_loss = 0.0f32;
+        let mut steps = 0u32;
+        rec.time(SpanKind::Train, layer_idx, chapter, || -> Result<()> {
+            for me in 0..c_epochs {
+                let epoch = chapter * c_epochs + me;
+                let lr = cooldown(base_lr, epoch, total);
+                let mut rng = Rng::derive(
+                    seed,
+                    stream::SHUFFLE ^ (u64::from(epoch) << 16) ^ (layer_idx as u64),
+                );
+                let mut order: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut order);
+                for idx in order.chunks(batch) {
+                    let bx = x.gather_rows(idx);
+                    let by: Vec<u8> = idx.iter().map(|&r| labels[r]).collect();
+                    let loss =
+                        eng.perfopt_train_step(layer, head, opt_layer, opt_head, &bx, &by, lr)?;
+                    mean_loss += loss;
+                    steps += 1;
+                }
+            }
+            Ok(())
+        })?;
+        let loss = if steps > 0 { mean_loss / steps as f32 } else { 0.0 };
+        self.curve.push_loss((chapter + 1) as f32 * c_epochs as f32, loss);
+        Ok(loss)
+    }
+
+    /// Train the full-network softmax head for one chapter on precomputed
+    /// features. Head LR follows its own cooldown from `cfg.lr_head`.
+    pub fn train_head_chapter(
+        &mut self,
+        head: &mut LinearHead,
+        opt: &mut AdamState,
+        chapter: u32,
+        feats: &Matrix,
+        labels: &[u8],
+    ) -> Result<f32> {
+        let c_epochs = self.cfg.epochs_per_chapter();
+        let base_lr = self.cfg.lr_head;
+        let total = self.cfg.epochs;
+        let batch = self.cfg.batch;
+        let seed = self.cfg.seed;
+        let eng = self.engine.as_mut();
+        let rec = &mut self.rec;
+        let n = feats.rows;
+        let mut mean_loss = 0.0f32;
+        let mut steps = 0u32;
+        rec.time(SpanKind::HeadTrain, usize::MAX, chapter, || -> Result<()> {
+            for me in 0..c_epochs {
+                let epoch = chapter * c_epochs + me;
+                let lr = cooldown(base_lr, epoch, total);
+                let mut rng = Rng::derive(seed, stream::SHUFFLE ^ (u64::from(epoch) << 32));
+                let mut order: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut order);
+                for idx in order.chunks(batch) {
+                    let bx = feats.gather_rows(idx);
+                    let by: Vec<u8> = idx.iter().map(|&r| labels[r]).collect();
+                    mean_loss += eng.head_train_step(head, opt, &bx, &by, lr)?;
+                    steps += 1;
+                }
+            }
+            Ok(())
+        })?;
+        Ok(if steps > 0 { mean_loss / steps as f32 } else { 0.0 })
+    }
+
+    /// Forward both pos/neg tensors through `layer` (timed as Forward).
+    pub fn forward_pair(
+        &mut self,
+        layer: &FFLayer,
+        layer_idx: usize,
+        chapter: u32,
+        x_pos: Matrix,
+        x_neg: Matrix,
+    ) -> Result<(Matrix, Matrix)> {
+        let eng = self.engine.as_mut();
+        self.rec.time(SpanKind::Forward, layer_idx, chapter, || {
+            Ok((eng.layer_forward(layer, &x_pos)?, eng.layer_forward(layer, &x_neg)?))
+        })
+    }
+
+    /// Fetch `(layer, chapter)` from the store (timed as WaitLayer — the
+    /// blocking read is the pipeline dependency).
+    pub fn fetch_layer(&mut self, layer: usize, chapter: u32) -> Result<LayerParams> {
+        let store = self.store.clone();
+        let to = self.timeout();
+        self.rec
+            .time(SpanKind::WaitLayer, layer, chapter, || store.get_layer(layer, chapter, to))
+    }
+
+    /// Publish a layer (timed as Publish).
+    pub fn publish_layer(
+        &mut self,
+        layer_idx: usize,
+        chapter: u32,
+        layer: &FFLayer,
+        opt: Option<&AdamState>,
+    ) -> Result<()> {
+        let params = LayerParams::from_layer(layer, if self.cfg.ship_opt_state { opt } else { None });
+        let store = self.store.clone();
+        self.rec
+            .time(SpanKind::Publish, layer_idx, chapter, || store.put_layer(layer_idx, chapter, params))
+    }
+
+    /// Take (or create) the node-local Adam state for store slot `slot`
+    /// (a layer index, or a PerfOpt head slot), preferring a shipped
+    /// snapshot when `ship_opt_state` is on. `(d_in, d_out)` sizes a fresh
+    /// state when neither exists.
+    pub fn take_opt_sized(
+        &mut self,
+        slot: usize,
+        shipped: Option<AdamState>,
+        d_in: usize,
+        d_out: usize,
+    ) -> AdamState {
+        if self.cfg.ship_opt_state {
+            if let Some(s) = shipped {
+                return s;
+            }
+        }
+        self.opt_cache.remove(&slot).unwrap_or_else(|| AdamState::new(d_in, d_out))
+    }
+
+    /// [`NodeCtx::take_opt_sized`] for a plain FF layer index.
+    pub fn take_opt(&mut self, layer_idx: usize, shipped: Option<AdamState>) -> AdamState {
+        let (d_in, d_out) = (self.cfg.dims[layer_idx], self.cfg.dims[layer_idx + 1]);
+        self.take_opt_sized(layer_idx, shipped, d_in, d_out)
+    }
+
+    /// Return the Adam state to the node-local cache.
+    pub fn put_opt(&mut self, layer_idx: usize, opt: AdamState) {
+        self.opt_cache.insert(layer_idx, opt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::store::MemStore;
+    use crate::data::synth::synth_mnist;
+    use crate::engine::NativeEngine;
+    use std::time::Instant;
+
+    fn ctx(nodes: usize) -> NodeCtx {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.nodes = nodes;
+        let mut bundle = synth_mnist(64, 16, cfg.seed);
+        bundle.train.center_rows();
+        NodeCtx {
+            node_id: 0,
+            cfg,
+            store: Arc::new(MemStore::new()),
+            engine: Box::new(NativeEngine::new()),
+            data: bundle.train,
+            rec: SpanRecorder::new(Instant::now(), 0),
+            curve: LossCurve::default(),
+            opt_cache: HashMap::new(),
+            head_opt: None,
+        }
+    }
+
+    #[test]
+    fn fresh_layer_deterministic_across_nodes() {
+        let a = ctx(1);
+        let mut b = ctx(4);
+        b.node_id = 3;
+        assert_eq!(a.fresh_layer(1).w, b.fresh_layer(1).w);
+        assert_ne!(a.fresh_layer(0).w.data, a.fresh_layer(1).w.data);
+    }
+
+    #[test]
+    fn overlay_inputs_shapes() {
+        let c = ctx(1);
+        let pos = c.positive_inputs();
+        assert_eq!((pos.rows, pos.cols), (64, 784));
+        let neg = c.negative_inputs(&c.derived_neg_labels(0));
+        assert_eq!(neg.rows, 64);
+        // pos and neg differ only in the overlay region
+        for r in 0..pos.rows {
+            assert_eq!(pos.row(r)[10..], neg.row(r)[10..]);
+        }
+    }
+
+    #[test]
+    fn train_chapter_reduces_loss_and_records_span() {
+        let mut c = ctx(1);
+        c.cfg.epochs = 32;
+        c.cfg.splits = 4; // 8 epochs per chapter
+        let mut layer = c.fresh_layer(0);
+        let mut opt = AdamState::new(784, 64);
+        let x_pos = c.positive_inputs();
+        let x_neg = c.negative_inputs(&c.derived_neg_labels(0));
+        let mut losses = Vec::new();
+        for ch in 0..4 {
+            losses.push(
+                c.train_ff_layer_chapter(&mut layer, &mut opt, 0, ch, &x_pos, &x_neg)
+                    .unwrap(),
+            );
+        }
+        assert!(
+            losses[3] < losses[0],
+            "loss should fall over chapters: {losses:?}"
+        );
+        let rep = c.rec.finish();
+        assert!(rep.in_kind(SpanKind::Train) > 0.0);
+        assert_eq!(c.curve.points.len(), 4);
+    }
+
+    #[test]
+    fn opt_cache_roundtrip() {
+        let mut c = ctx(1);
+        let mut opt = c.take_opt(2, None);
+        assert_eq!(opt.t, 0);
+        opt.t = 9;
+        c.put_opt(2, opt);
+        assert_eq!(c.take_opt(2, None).t, 9);
+        // shipped state wins when enabled
+        c.cfg.ship_opt_state = true;
+        let mut shipped = AdamState::new(c.cfg.dims[2], c.cfg.dims[3]);
+        shipped.t = 77;
+        assert_eq!(c.take_opt(2, Some(shipped)).t, 77);
+    }
+
+    #[test]
+    fn local_neg_labels_respects_strategy() {
+        let mut c = ctx(1);
+        c.cfg.neg = NegStrategy::Fixed;
+        let f0 = c.local_neg_labels(0, None).unwrap();
+        let f5 = c.local_neg_labels(5, None).unwrap();
+        assert_eq!(f0, f5, "FixedNEG must not re-roll");
+        c.cfg.neg = NegStrategy::Random;
+        let r0 = c.local_neg_labels(0, None).unwrap();
+        let r5 = c.local_neg_labels(5, None).unwrap();
+        assert_ne!(r0, r5, "RandomNEG must re-roll per chapter");
+        assert!(r0.iter().zip(&c.data.y).all(|(n, t)| n != t));
+    }
+}

@@ -1,0 +1,193 @@
+//! All-Layers PFF (§4.2, Algorithm 2, Figure 5) — also Sequential (N=1)
+//! and Federated (sharded data).
+//!
+//! Node *i* executes chapters `i, i+N, 2N+i, …`. Within a chapter it
+//! trains every layer in order: fetch the layer as published at the
+//! *previous* chapter (blocking on the pipeline predecessor), train it for
+//! `C = E/S` epochs, publish, transform the data forward, move on. After
+//! the chapter it refreshes its own negative labels (AdaptiveNEG computes
+//! them locally with the just-trained network — the paper's §5.2 note on
+//! why All-Layers beats Single-Layer for AdaptiveNEG).
+
+use anyhow::Result;
+
+use crate::coordinator::node::NodeCtx;
+use crate::coordinator::schedulers::head_slot;
+use crate::coordinator::store::{HeadParams, LayerParams};
+use crate::ff::classifier::head_features;
+use crate::ff::{ClassifierMode, FFNetwork, NegStrategy};
+use crate::metrics::SpanKind;
+use crate::tensor::AdamState;
+
+/// Run one All-Layers node to completion.
+pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
+    let n_nodes = ctx.cfg.nodes as u32;
+    let splits = ctx.cfg.splits;
+    let n_layers = ctx.cfg.num_layers();
+    let my_chapters: Vec<u32> =
+        (ctx.node_id as u32..splits).step_by(n_nodes as usize).collect();
+
+    // AdaptiveNEG labels for the node's next chapter, computed after each
+    // finished chapter with the then-current network.
+    let mut pending_adaptive: Option<Vec<u8>> = None;
+
+    for &chapter in &my_chapters {
+        if ctx.cfg.perfopt {
+            run_chapter_perfopt(ctx, chapter, n_layers)?;
+        } else {
+            run_chapter_ff(ctx, chapter, n_layers, &mut pending_adaptive)?;
+        }
+        if ctx.cfg.verbose {
+            eprintln!(
+                "[node {}] finished chapter {chapter}/{} ({})",
+                ctx.node_id,
+                splits,
+                ctx.cfg.scheduler
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_chapter_ff(
+    ctx: &mut NodeCtx,
+    chapter: u32,
+    n_layers: usize,
+    pending_adaptive: &mut Option<Vec<u8>>,
+) -> Result<()> {
+    // --- negative labels for this chapter ---------------------------------
+    let neg_labels = match ctx.cfg.neg {
+        NegStrategy::Adaptive => {
+            pending_adaptive.take().unwrap_or_else(|| ctx.derived_neg_labels(0))
+        }
+        _ => ctx.local_neg_labels(chapter, None)?,
+    };
+
+    let mut x_pos = ctx.positive_inputs();
+    let mut x_neg = ctx.negative_inputs(&neg_labels);
+    let mut trained: Vec<crate::ff::FFLayer> = Vec::with_capacity(n_layers);
+
+    for l in 0..n_layers {
+        // Fetch the pipeline predecessor's version (or fresh at chapter 0).
+        let (mut layer, shipped) = if chapter == 0 {
+            (ctx.fresh_layer(l), None)
+        } else {
+            let params = ctx.fetch_layer(l, chapter - 1)?;
+            let (layer, opt) = params.into_layer();
+            (layer, opt)
+        };
+        let mut opt = ctx.take_opt(l, shipped);
+        ctx.train_ff_layer_chapter(&mut layer, &mut opt, l, chapter, &x_pos, &x_neg)?;
+        ctx.publish_layer(l, chapter, &layer, Some(&opt))?;
+        let (np, nn) = ctx.forward_pair(&layer, l, chapter, x_pos, x_neg)?;
+        x_pos = np;
+        x_neg = nn;
+        ctx.put_opt(l, opt);
+        trained.push(layer);
+    }
+
+    let net = FFNetwork { layers: trained, classes: ctx.cfg.classes };
+
+    // --- inline softmax-head stage (§5.3/§5.4 timing analysis) ------------
+    if ctx.cfg.head_inline && ctx.cfg.classifier == ClassifierMode::Softmax {
+        train_and_publish_head(ctx, chapter, &net)?;
+    }
+
+    // --- UpdateXNEG: labels for this node's next chapter -------------------
+    if ctx.cfg.neg == NegStrategy::Adaptive {
+        let next = chapter + ctx.cfg.nodes as u32;
+        if next < ctx.cfg.splits {
+            *pending_adaptive = Some(ctx.local_neg_labels(next, Some(&net))?);
+        }
+    }
+    Ok(())
+}
+
+fn run_chapter_perfopt(ctx: &mut NodeCtx, chapter: u32, n_layers: usize) -> Result<()> {
+    // PerfOpt (§4.4): neutral overlay, no negatives; each layer trains
+    // jointly with its private head by local backprop.
+    let mut x = ctx.neutral_inputs();
+    let labels = ctx.data.y.clone();
+
+    for l in 0..n_layers {
+        let (mut layer, shipped) = if chapter == 0 {
+            (ctx.fresh_layer(l), None)
+        } else {
+            let params = ctx.fetch_layer(l, chapter - 1)?;
+            let (layer, opt) = params.into_layer();
+            (layer, opt)
+        };
+        let (mut head, head_shipped) = if chapter == 0 {
+            (ctx.fresh_layer_head(l), None)
+        } else {
+            let params = ctx.fetch_layer(head_slot(l), chapter - 1)?;
+            let (hl, opt) = params.into_layer();
+            (crate::ff::LinearHead { w: hl.w, b: hl.b }, opt)
+        };
+        let mut opt_layer = ctx.take_opt(l, shipped);
+        let mut opt_head = ctx.take_opt_sized(
+            head_slot(l),
+            head_shipped,
+            head.w.rows,
+            head.w.cols,
+        );
+        ctx.train_perfopt_layer_chapter(
+            &mut layer, &mut head, &mut opt_layer, &mut opt_head, l, chapter, &x, &labels,
+        )?;
+        ctx.publish_layer(l, chapter, &layer, Some(&opt_layer))?;
+        // Publish the head through the layer namespace (normalize=false).
+        let head_as_layer = crate::ff::FFLayer {
+            w: head.w.clone(),
+            b: head.b.clone(),
+            normalize_input: false,
+        };
+        let params = LayerParams::from_layer(
+            &head_as_layer,
+            if ctx.cfg.ship_opt_state { Some(&opt_head) } else { None },
+        );
+        let store = ctx.store.clone();
+        ctx.rec.time(SpanKind::Publish, head_slot(l), chapter, || {
+            store.put_layer(head_slot(l), chapter, params)
+        })?;
+        let eng = ctx.engine.as_mut();
+        x = ctx.rec.time(SpanKind::Forward, l, chapter, || eng.layer_forward(&layer, &x))?;
+        ctx.put_opt(l, opt_layer);
+        ctx.put_opt(head_slot(l), opt_head);
+    }
+    Ok(())
+}
+
+/// Train the full-network softmax head for one chapter and publish it.
+fn train_and_publish_head(ctx: &mut NodeCtx, chapter: u32, net: &FFNetwork) -> Result<()> {
+    let (mut head, shipped_opt) = if chapter == 0 {
+        (ctx.fresh_full_head(), None)
+    } else {
+        let to = ctx.timeout();
+        let store = ctx.store.clone();
+        let params = ctx
+            .rec
+            .time(SpanKind::WaitLayer, usize::MAX, chapter, || store.get_head(chapter - 1, to))?;
+        params.into_head()
+    };
+    let mut opt = if ctx.cfg.ship_opt_state {
+        shipped_opt.unwrap_or_else(|| AdamState::new(head.w.rows, head.w.cols))
+    } else {
+        ctx.head_opt.take().unwrap_or_else(|| AdamState::new(head.w.rows, head.w.cols))
+    };
+
+    // Features on this node's data under the current network.
+    let eng = ctx.engine.as_mut();
+    let data_x = ctx.data.x.clone();
+    let feats = ctx
+        .rec
+        .time(SpanKind::Forward, usize::MAX, chapter, || head_features(eng, net, &data_x))?;
+    let labels = ctx.data.y.clone();
+    ctx.train_head_chapter(&mut head, &mut opt, chapter, &feats, &labels)?;
+
+    let params = HeadParams::from_head(&head, if ctx.cfg.ship_opt_state { Some(&opt) } else { None });
+    let store = ctx.store.clone();
+    ctx.rec
+        .time(SpanKind::Publish, usize::MAX, chapter, || store.put_head(chapter, params))?;
+    ctx.head_opt = Some(opt);
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! The PFF schedulers (§4): what each node does, in terms of the
+//! primitives in [`crate::coordinator::node`].
+//!
+//! | Scheduler | node→work mapping | neg-label flow |
+//! |---|---|---|
+//! | Sequential | 1 node runs every chapter (≡ original FF) | local |
+//! | Single-Layer (§4.1) | node *i* owns layer *i*, every chapter | last node publishes (AdaptiveNEG) |
+//! | All-Layers (§4.2) | node *i* runs chapters `i, i+N, …` whole-network | each node computes its own |
+//! | Federated (§4.3) | All-Layers over private data shards | local (per shard) |
+//!
+//! PerfOpt (§4.4) is orthogonal: the same mappings, with the FF two-pass
+//! step replaced by the local-BP (layer, head) CE step and no negatives.
+
+pub mod all_layers;
+pub mod single_layer;
+
+use anyhow::Result;
+
+use crate::config::Scheduler;
+use crate::coordinator::node::NodeCtx;
+
+/// Store "layer index" namespace for PerfOpt per-layer heads: head of FF
+/// layer `l` is published under slot `HEAD_SLOT_BASE + l`. Keeps the store
+/// API minimal while giving per-(layer, chapter) head versioning.
+pub const HEAD_SLOT_BASE: usize = 1_000_000;
+
+/// Store slot for the PerfOpt head of layer `l`.
+pub fn head_slot(l: usize) -> usize {
+    HEAD_SLOT_BASE + l
+}
+
+/// Run one node's script for the configured scheduler. Blocks until the
+/// node has finished all its chapters.
+pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
+    match ctx.cfg.scheduler {
+        // Sequential is All-Layers with N = 1 — identical dependency
+        // structure, no pipeline partner. Federated differs from
+        // All-Layers only in the data each ctx carries (leader shards it).
+        Scheduler::Sequential | Scheduler::AllLayers | Scheduler::Federated => {
+            all_layers::run_node(ctx)
+        }
+        Scheduler::SingleLayer => single_layer::run_node(ctx),
+    }
+}

@@ -1,0 +1,192 @@
+//! Single-Layer PFF (§4.1, Algorithm 1, Figure 4).
+//!
+//! Node *i* permanently owns layer *i*. Every chapter it re-fetches layers
+//! `0..i` as published *this chapter* by its predecessors, forwards the
+//! dataset through them, trains its own layer for `C` epochs and
+//! publishes. The last node additionally produces the AdaptiveNEG labels
+//! for the next chapter ("the last node generates and publishes the
+//! generated labels", §5.2) and — in Softmax mode — trains the classifier
+//! head as an extra pipeline stage (§5.4's "only adds a small delay").
+
+use anyhow::Result;
+
+use crate::coordinator::node::NodeCtx;
+use crate::coordinator::schedulers::head_slot;
+use crate::coordinator::store::{HeadParams, LayerParams};
+use crate::ff::classifier::head_features;
+use crate::ff::{ClassifierMode, FFLayer, FFNetwork, LinearHead, NegStrategy};
+use crate::metrics::SpanKind;
+use crate::tensor::AdamState;
+
+/// Run one Single-Layer node (owning layer `ctx.node_id`) to completion.
+pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
+    let my_layer = ctx.node_id;
+    let n_layers = ctx.cfg.num_layers();
+    let is_last = my_layer == n_layers - 1;
+    let splits = ctx.cfg.splits;
+
+    let mut layer = ctx.fresh_layer(my_layer);
+    let mut opt = AdamState::new(ctx.cfg.dims[my_layer], ctx.cfg.dims[my_layer + 1]);
+
+    // PerfOpt: this node also owns layer my_layer's head.
+    let mut po_head = if ctx.cfg.perfopt { Some(ctx.fresh_layer_head(my_layer)) } else { None };
+    let mut po_head_opt = po_head
+        .as_ref()
+        .map(|h| AdamState::new(h.w.rows, h.w.cols));
+
+    // Last node in Softmax mode owns the classifier head.
+    let mut cls_head: Option<LinearHead> = None;
+    let mut cls_opt: Option<AdamState> = None;
+
+    for chapter in 0..splits {
+        if ctx.cfg.perfopt {
+            run_chapter_perfopt(
+                ctx,
+                chapter,
+                my_layer,
+                &mut layer,
+                &mut opt,
+                po_head.as_mut().unwrap(),
+                po_head_opt.as_mut().unwrap(),
+            )?;
+        } else {
+            run_chapter_ff(
+                ctx,
+                chapter,
+                my_layer,
+                is_last,
+                &mut layer,
+                &mut opt,
+                &mut cls_head,
+                &mut cls_opt,
+            )?;
+        }
+        if ctx.cfg.verbose {
+            eprintln!("[node {}] finished chapter {chapter}/{splits} (Single-Layer)", ctx.node_id);
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_chapter_ff(
+    ctx: &mut NodeCtx,
+    chapter: u32,
+    my_layer: usize,
+    is_last: bool,
+    layer: &mut FFLayer,
+    opt: &mut AdamState,
+    cls_head: &mut Option<LinearHead>,
+    cls_opt: &mut Option<AdamState>,
+) -> Result<()> {
+    // --- negative labels ---------------------------------------------------
+    // AdaptiveNEG: published by the last node with a TWO-chapter lag
+    // (labels for chapter c are generated after chapter c-2 finishes).
+    // Waiting on chapter c-1's labels would serialize the entire
+    // wavefront — the §5.2 bottleneck; the lag keeps the pipeline full at
+    // the cost of one chapter of staleness. Chapters 0-1 fall back to the
+    // derived random labels (every node derives identically).
+    let neg_labels = match ctx.cfg.neg {
+        NegStrategy::Adaptive if chapter > 1 => {
+            let store = ctx.store.clone();
+            let to = ctx.timeout();
+            ctx.rec
+                .time(SpanKind::WaitNeg, usize::MAX, chapter, || store.get_neg(chapter, to))?
+        }
+        NegStrategy::Adaptive => ctx.derived_neg_labels(0),
+        _ => ctx.local_neg_labels(chapter, None)?,
+    };
+
+    let mut x_pos = ctx.positive_inputs();
+    let mut x_neg = ctx.negative_inputs(&neg_labels);
+
+    // --- fetch predecessors at THIS chapter and forward --------------------
+    let mut fetched: Vec<FFLayer> = Vec::with_capacity(my_layer);
+    for l in 0..my_layer {
+        let params = ctx.fetch_layer(l, chapter)?;
+        let (pl, _) = params.into_layer();
+        let (np, nn) = ctx.forward_pair(&pl, l, chapter, x_pos, x_neg)?;
+        x_pos = np;
+        x_neg = nn;
+        fetched.push(pl);
+    }
+
+    // --- train + publish own layer -----------------------------------------
+    ctx.train_ff_layer_chapter(layer, opt, my_layer, chapter, &x_pos, &x_neg)?;
+    ctx.publish_layer(my_layer, chapter, layer, Some(opt))?;
+
+    // --- last-node duties ----------------------------------------------------
+    if is_last {
+        let mut layers = fetched;
+        layers.push(layer.clone());
+        let net = FFNetwork { layers, classes: ctx.cfg.classes };
+
+        if ctx.cfg.neg == NegStrategy::Adaptive && chapter + 2 < ctx.cfg.splits {
+            let labels = ctx.local_neg_labels(chapter + 2, Some(&net))?;
+            let store = ctx.store.clone();
+            ctx.rec.time(SpanKind::Publish, usize::MAX, chapter, || {
+                store.put_neg(chapter + 2, labels)
+            })?;
+        }
+
+        if ctx.cfg.head_inline && ctx.cfg.classifier == ClassifierMode::Softmax {
+            let head = cls_head.get_or_insert_with(|| ctx.fresh_full_head());
+            let opt_h = cls_opt
+                .get_or_insert_with(|| AdamState::new(head.w.rows, head.w.cols));
+            let eng = ctx.engine.as_mut();
+            let data_x = ctx.data.x.clone();
+            let feats = ctx.rec.time(SpanKind::Forward, usize::MAX, chapter, || {
+                head_features(eng, &net, &data_x)
+            })?;
+            let labels = ctx.data.y.clone();
+            // NOTE: can't call ctx.train_head_chapter with head borrowed
+            // from cls_head (both need ctx fields) — take/put instead.
+            let mut head_owned = head.clone();
+            let mut opt_owned = opt_h.clone();
+            ctx.train_head_chapter(&mut head_owned, &mut opt_owned, chapter, &feats, &labels)?;
+            let params = HeadParams::from_head(
+                &head_owned,
+                if ctx.cfg.ship_opt_state { Some(&opt_owned) } else { None },
+            );
+            let store = ctx.store.clone();
+            ctx.rec
+                .time(SpanKind::Publish, usize::MAX, chapter, || store.put_head(chapter, params))?;
+            *cls_head = Some(head_owned);
+            *cls_opt = Some(opt_owned);
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_chapter_perfopt(
+    ctx: &mut NodeCtx,
+    chapter: u32,
+    my_layer: usize,
+    layer: &mut FFLayer,
+    opt: &mut AdamState,
+    head: &mut LinearHead,
+    head_opt: &mut AdamState,
+) -> Result<()> {
+    let mut x = ctx.neutral_inputs();
+    for l in 0..my_layer {
+        let params = ctx.fetch_layer(l, chapter)?;
+        let (pl, _) = params.into_layer();
+        let eng = ctx.engine.as_mut();
+        x = ctx.rec.time(SpanKind::Forward, l, chapter, || eng.layer_forward(&pl, &x))?;
+    }
+    let labels = ctx.data.y.clone();
+    ctx.train_perfopt_layer_chapter(layer, head, opt, head_opt, my_layer, chapter, &x, &labels)?;
+    ctx.publish_layer(my_layer, chapter, layer, Some(opt))?;
+    let head_as_layer =
+        FFLayer { w: head.w.clone(), b: head.b.clone(), normalize_input: false };
+    let params = LayerParams::from_layer(
+        &head_as_layer,
+        if ctx.cfg.ship_opt_state { Some(head_opt) } else { None },
+    );
+    let store = ctx.store.clone();
+    ctx.rec.time(SpanKind::Publish, head_slot(my_layer), chapter, || {
+        store.put_layer(head_slot(my_layer), chapter, params)
+    })?;
+    Ok(())
+}

@@ -1,0 +1,366 @@
+//! Chapter-versioned parameter store — the synchronization backbone of all
+//! PFF schedulers.
+//!
+//! The paper's pseudo-code talks in `PublishLayer(chapter, layer)` /
+//! `getLayer(layer, chapter)` pairs. This module gives those operations a
+//! concrete home: an append-only map from `(layer, chapter)` to parameters
+//! with *blocking* reads — `get_layer(l, c)` parks until some node has
+//! published that exact version. The blocking read IS the pipeline
+//! dependency: Single-Layer PFF's node `i` blocking on `(i−1, c)` is
+//! precisely the arrow in the paper's Figure 4.
+//!
+//! Two deployments (selected by [`crate::config::TransportKind`]):
+//! in-process ([`MemStore`], threads share one instance) and remote
+//! (leader hosts a [`MemStore`] behind the TCP server in
+//! [`crate::transport::tcp`], workers use `TcpStoreClient`).
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::ff::{FFLayer, LinearHead};
+use crate::metrics::CommStats;
+use crate::tensor::{AdamState, Matrix};
+
+/// Published form of one FF layer: weights + bias, optionally with Adam
+/// moments (`ship_opt_state` ablation — the paper ships only w/b).
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    /// Weight matrix `(d_in, d_out)`.
+    pub w: Matrix,
+    /// Bias.
+    pub b: Vec<f32>,
+    /// Whether the layer normalizes its input (carried so a fetched layer
+    /// reconstructs identically on any node).
+    pub normalize_input: bool,
+    /// Optional optimizer snapshot.
+    pub opt: Option<OptSnapshot>,
+}
+
+/// Adam moments snapshot for shipping with a layer.
+#[derive(Clone, Debug)]
+pub struct OptSnapshot {
+    /// First moment (weights).
+    pub m_w: Matrix,
+    /// Second moment (weights).
+    pub v_w: Matrix,
+    /// First moment (bias).
+    pub m_b: Vec<f32>,
+    /// Second moment (bias).
+    pub v_b: Vec<f32>,
+    /// Adam step counter.
+    pub t: u32,
+}
+
+impl OptSnapshot {
+    /// Capture from an [`AdamState`].
+    pub fn from_state(s: &AdamState) -> Self {
+        OptSnapshot { m_w: s.m_w.clone(), v_w: s.v_w.clone(), m_b: s.m_b.clone(), v_b: s.v_b.clone(), t: s.t }
+    }
+
+    /// Restore into an [`AdamState`].
+    pub fn restore(&self) -> AdamState {
+        let mut st = AdamState::new(self.m_w.rows, self.m_w.cols);
+        st.m_w = self.m_w.clone();
+        st.v_w = self.v_w.clone();
+        st.m_b = self.m_b.clone();
+        st.v_b = self.v_b.clone();
+        st.t = self.t;
+        st
+    }
+}
+
+impl LayerParams {
+    /// Snapshot a live layer (and optionally its optimizer).
+    pub fn from_layer(layer: &FFLayer, opt: Option<&AdamState>) -> Self {
+        LayerParams {
+            w: layer.w.clone(),
+            b: layer.b.clone(),
+            normalize_input: layer.normalize_input,
+            opt: opt.map(OptSnapshot::from_state),
+        }
+    }
+
+    /// Materialize as a live layer.
+    pub fn into_layer(self) -> (FFLayer, Option<AdamState>) {
+        let opt = self.opt.as_ref().map(OptSnapshot::restore);
+        (FFLayer { w: self.w, b: self.b, normalize_input: self.normalize_input }, opt)
+    }
+
+    /// Approximate wire size (the communication-volume metric of §6).
+    pub fn wire_bytes(&self) -> u64 {
+        let base = (self.w.data.len() + self.b.len()) * 4 + 24;
+        let opt = self.opt.as_ref().map_or(0, |o| {
+            (o.m_w.data.len() + o.v_w.data.len() + o.m_b.len() + o.v_b.len()) * 4 + 8
+        });
+        (base + opt) as u64
+    }
+}
+
+/// Published softmax head.
+#[derive(Clone, Debug)]
+pub struct HeadParams {
+    /// Weights `(d_in, classes)`.
+    pub w: Matrix,
+    /// Bias.
+    pub b: Vec<f32>,
+    /// Optional optimizer snapshot.
+    pub opt: Option<OptSnapshot>,
+}
+
+impl HeadParams {
+    /// Snapshot a live head.
+    pub fn from_head(h: &LinearHead, opt: Option<&AdamState>) -> Self {
+        HeadParams { w: h.w.clone(), b: h.b.clone(), opt: opt.map(OptSnapshot::from_state) }
+    }
+
+    /// Materialize as a live head.
+    pub fn into_head(self) -> (LinearHead, Option<AdamState>) {
+        let opt = self.opt.as_ref().map(OptSnapshot::restore);
+        (LinearHead { w: self.w, b: self.b }, opt)
+    }
+
+    /// Approximate wire size.
+    pub fn wire_bytes(&self) -> u64 {
+        ((self.w.data.len() + self.b.len()) * 4 + 16) as u64
+    }
+}
+
+/// The store interface the schedulers program against.
+pub trait ParamStore: Send + Sync {
+    /// Publish layer `l` as of `chapter`.
+    fn put_layer(&self, layer: usize, chapter: u32, params: LayerParams) -> Result<()>;
+    /// Block until `(layer, chapter)` is available (or `timeout`).
+    fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<LayerParams>;
+    /// Publish the softmax head as of `chapter`.
+    fn put_head(&self, chapter: u32, params: HeadParams) -> Result<()>;
+    /// Block until the head at `chapter` is available.
+    fn get_head(&self, chapter: u32, timeout: Duration) -> Result<HeadParams>;
+    /// Publish negative labels computed after `chapter`.
+    fn put_neg(&self, chapter: u32, labels: Vec<u8>) -> Result<()>;
+    /// Block until negative labels for `chapter` are available.
+    fn get_neg(&self, chapter: u32, timeout: Duration) -> Result<Vec<u8>>;
+    /// Most recent chapter of `layer`, if any (final model assembly).
+    fn latest_layer(&self, layer: usize) -> Result<Option<(u32, LayerParams)>>;
+    /// Most recent head, if any.
+    fn latest_head(&self) -> Result<Option<(u32, HeadParams)>>;
+    /// Communication counters.
+    fn comm_stats(&self) -> CommStats;
+}
+
+#[derive(Default)]
+struct MemInner {
+    layers: HashMap<(usize, u32), LayerParams>,
+    heads: HashMap<u32, HeadParams>,
+    negs: HashMap<u32, Vec<u8>>,
+    stats: CommStats,
+}
+
+/// In-process [`ParamStore`] (Mutex + Condvar).
+#[derive(Default)]
+pub struct MemStore {
+    inner: Mutex<MemInner>,
+    cv: Condvar,
+}
+
+impl MemStore {
+    /// Fresh empty store.
+    pub fn new() -> Self {
+        MemStore::default()
+    }
+
+    fn wait_for<T>(
+        &self,
+        timeout: Duration,
+        what: &str,
+        mut probe: impl FnMut(&mut MemInner) -> Option<T>,
+    ) -> Result<T> {
+        let mut guard = self.inner.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(v) = probe(&mut guard) {
+                return Ok(v);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                bail!("store: timed out after {timeout:?} waiting for {what}");
+            }
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+    }
+}
+
+impl ParamStore for MemStore {
+    fn put_layer(&self, layer: usize, chapter: u32, params: LayerParams) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        g.stats.puts += 1;
+        g.stats.bytes_put += params.wire_bytes();
+        g.layers.insert((layer, chapter), params);
+        drop(g);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<LayerParams> {
+        let p = self.wait_for(timeout, &format!("layer {layer} @ chapter {chapter}"), |g| {
+            g.layers.get(&(layer, chapter)).cloned()
+        })?;
+        let mut g = self.inner.lock().unwrap();
+        g.stats.gets += 1;
+        g.stats.bytes_get += p.wire_bytes();
+        Ok(p)
+    }
+
+    fn put_head(&self, chapter: u32, params: HeadParams) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        g.stats.puts += 1;
+        g.stats.bytes_put += params.wire_bytes();
+        g.heads.insert(chapter, params);
+        drop(g);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn get_head(&self, chapter: u32, timeout: Duration) -> Result<HeadParams> {
+        let p = self.wait_for(timeout, &format!("head @ chapter {chapter}"), |g| {
+            g.heads.get(&chapter).cloned()
+        })?;
+        let mut g = self.inner.lock().unwrap();
+        g.stats.gets += 1;
+        g.stats.bytes_get += p.wire_bytes();
+        Ok(p)
+    }
+
+    fn put_neg(&self, chapter: u32, labels: Vec<u8>) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        g.stats.puts += 1;
+        g.stats.bytes_put += labels.len() as u64;
+        g.negs.insert(chapter, labels);
+        drop(g);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn get_neg(&self, chapter: u32, timeout: Duration) -> Result<Vec<u8>> {
+        let p = self.wait_for(timeout, &format!("neg labels @ chapter {chapter}"), |g| {
+            g.negs.get(&chapter).cloned()
+        })?;
+        let mut g = self.inner.lock().unwrap();
+        g.stats.gets += 1;
+        g.stats.bytes_get += p.len() as u64;
+        Ok(p)
+    }
+
+    fn latest_layer(&self, layer: usize) -> Result<Option<(u32, LayerParams)>> {
+        let g = self.inner.lock().unwrap();
+        Ok(g.layers
+            .iter()
+            .filter(|((l, _), _)| *l == layer)
+            .max_by_key(|((_, c), _)| *c)
+            .map(|((_, c), p)| (*c, p.clone())))
+    }
+
+    fn latest_head(&self) -> Result<Option<(u32, HeadParams)>> {
+        let g = self.inner.lock().unwrap();
+        Ok(g.heads.iter().max_by_key(|(c, _)| **c).map(|(c, p)| (*c, p.clone())))
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+    use std::sync::Arc;
+
+    fn params(seed: u64) -> LayerParams {
+        let mut rng = Rng::new(seed);
+        LayerParams {
+            w: Matrix::randn_scaled(4, 3, &mut rng),
+            b: vec![0.0; 3],
+            normalize_input: true,
+            opt: None,
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = MemStore::new();
+        let p = params(1);
+        s.put_layer(2, 5, p.clone()).unwrap();
+        let got = s.get_layer(2, 5, Duration::from_millis(10)).unwrap();
+        assert_eq!(got.w, p.w);
+        assert!(got.normalize_input);
+    }
+
+    #[test]
+    fn get_times_out_when_missing() {
+        let s = MemStore::new();
+        let err = s.get_layer(0, 0, Duration::from_millis(20)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn blocking_get_wakes_on_put() {
+        let s = Arc::new(MemStore::new());
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.get_layer(1, 7, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(30));
+        s.put_layer(1, 7, params(2)).unwrap();
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got.w.rows, 4);
+    }
+
+    #[test]
+    fn latest_layer_picks_max_chapter() {
+        let s = MemStore::new();
+        s.put_layer(0, 1, params(1)).unwrap();
+        s.put_layer(0, 3, params(2)).unwrap();
+        s.put_layer(0, 2, params(3)).unwrap();
+        let (c, _) = s.latest_layer(0).unwrap().unwrap();
+        assert_eq!(c, 3);
+        assert!(s.latest_layer(9).unwrap().is_none());
+    }
+
+    #[test]
+    fn neg_labels_roundtrip() {
+        let s = MemStore::new();
+        s.put_neg(0, vec![1, 2, 3]).unwrap();
+        assert_eq!(s.get_neg(0, Duration::from_millis(10)).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn comm_stats_accumulate() {
+        let s = MemStore::new();
+        let p = params(1);
+        let bytes = p.wire_bytes();
+        s.put_layer(0, 0, p).unwrap();
+        s.get_layer(0, 0, Duration::from_millis(10)).unwrap();
+        let st = s.comm_stats();
+        assert_eq!(st.puts, 1);
+        assert_eq!(st.gets, 1);
+        assert_eq!(st.bytes_put, bytes);
+        assert_eq!(st.bytes_get, bytes);
+    }
+
+    #[test]
+    fn opt_snapshot_roundtrip() {
+        let mut rng = Rng::new(3);
+        let layer = FFLayer::new(3, 2, false, &mut rng);
+        let mut st = AdamState::new(3, 2);
+        st.t = 17;
+        st.m_w.data[0] = 0.5;
+        let p = LayerParams::from_layer(&layer, Some(&st));
+        let (l2, opt2) = p.into_layer();
+        assert_eq!(l2.w, layer.w);
+        let opt2 = opt2.unwrap();
+        assert_eq!(opt2.t, 17);
+        assert_eq!(opt2.m_w.data[0], 0.5);
+    }
+}

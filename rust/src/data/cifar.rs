@@ -1,0 +1,109 @@
+//! CIFAR-10 binary-version loader (`data_batch_{1..5}.bin`, `test_batch.bin`).
+//!
+//! Each record is 1 label byte + 3072 pixel bytes (R, G, B planes).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::dataset::{DataBundle, Dataset};
+use crate::tensor::Matrix;
+
+/// Bytes per record in the binary format.
+pub const RECORD: usize = 1 + 3072;
+
+/// Parse one CIFAR binary batch buffer into `(x, y)`, scaled to `[0,1]`.
+pub fn parse_batch(buf: &[u8], limit: usize) -> Result<(Matrix, Vec<u8>)> {
+    if buf.len() % RECORD != 0 {
+        bail!("cifar: file size {} not a multiple of {RECORD}", buf.len());
+    }
+    let mut n = buf.len() / RECORD;
+    if limit > 0 {
+        n = n.min(limit);
+    }
+    let mut x = Matrix::zeros(n, 3072);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let rec = &buf[i * RECORD..(i + 1) * RECORD];
+        let label = rec[0];
+        if label > 9 {
+            bail!("cifar: label {label} out of range");
+        }
+        y.push(label);
+        for (j, &px) in rec[1..].iter().enumerate() {
+            x.row_mut(i)[j] = f32::from(px) / 255.0;
+        }
+    }
+    Ok((x, y))
+}
+
+/// Load CIFAR-10 from `dir`, concatenating the five training batches.
+pub fn load(dir: impl AsRef<Path>, train_n: usize, test_n: usize) -> Result<DataBundle> {
+    let dir = dir.as_ref();
+    let mut xs: Option<Matrix> = None;
+    let mut ys: Vec<u8> = Vec::new();
+    for i in 1..=5 {
+        if train_n > 0 && ys.len() >= train_n {
+            break;
+        }
+        let remaining = if train_n > 0 { train_n - ys.len() } else { 0 };
+        let path = dir.join(format!("data_batch_{i}.bin"));
+        let buf = fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let (x, mut y) = parse_batch(&buf, remaining)?;
+        xs = Some(match xs {
+            None => x,
+            Some(prev) => prev.vcat(&x),
+        });
+        ys.append(&mut y);
+    }
+    let train_x = xs.context("cifar: no training batches found")?;
+    let buf = fs::read(dir.join("test_batch.bin")).context("reading test_batch.bin")?;
+    let (test_x, test_y) = parse_batch(&buf, test_n)?;
+    Ok(DataBundle {
+        train: Dataset { x: train_x, y: ys, classes: 10 },
+        test: Dataset { x: test_x, y: test_y, classes: 10 },
+        name: "cifar10".into(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(label: u8, fill: u8) -> Vec<u8> {
+        let mut r = vec![label];
+        r.extend(std::iter::repeat(fill).take(3072));
+        r
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let mut buf = record(3, 255);
+        buf.extend(record(9, 0));
+        let (x, y) = parse_batch(&buf, 0).unwrap();
+        assert_eq!(y, vec![3, 9]);
+        assert_eq!((x.rows, x.cols), (2, 3072));
+        assert!((x.at(0, 0) - 1.0).abs() < 1e-6);
+        assert_eq!(x.at(1, 100), 0.0);
+    }
+
+    #[test]
+    fn parse_limit() {
+        let mut buf = record(1, 1);
+        buf.extend(record(2, 2));
+        let (x, y) = parse_batch(&buf, 1).unwrap();
+        assert_eq!((x.rows, y.len()), (1, 1));
+    }
+
+    #[test]
+    fn bad_size_rejected() {
+        assert!(parse_batch(&[0u8; 100], 0).is_err());
+    }
+
+    #[test]
+    fn bad_label_rejected() {
+        let buf = record(11, 0);
+        assert!(parse_batch(&buf, 0).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! MNIST IDX loader (uncompressed `train-images-idx3-ubyte` et al.).
+//!
+//! Drop the four uncompressed IDX files into `data/mnist/` to run the
+//! paper's experiments on real MNIST; otherwise use
+//! [`crate::data::DatasetKind::SynthMnist`]. Gzip is not handled — `gunzip`
+//! the canonical downloads first (offline environment, no flate2 dep).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::dataset::{DataBundle, Dataset};
+use crate::tensor::Matrix;
+
+/// Parse an IDX3 (images) byte buffer into a `(n, rows*cols)` matrix
+/// scaled to `[0, 1]`.
+pub fn parse_idx3_images(buf: &[u8], limit: usize) -> Result<Matrix> {
+    if buf.len() < 16 {
+        bail!("idx3: truncated header");
+    }
+    let magic = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if magic != 0x0000_0803 {
+        bail!("idx3: bad magic {magic:#x}");
+    }
+    let n = u32::from_be_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    let rows = u32::from_be_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    let cols = u32::from_be_bytes([buf[12], buf[13], buf[14], buf[15]]) as usize;
+    let n = if limit > 0 { n.min(limit) } else { n };
+    let need = 16 + n * rows * cols;
+    if buf.len() < need {
+        bail!("idx3: want {need} bytes, have {}", buf.len());
+    }
+    let data = buf[16..need].iter().map(|&b| f32::from(b) / 255.0).collect();
+    Ok(Matrix::from_vec(n, rows * cols, data))
+}
+
+/// Parse an IDX1 (labels) byte buffer.
+pub fn parse_idx1_labels(buf: &[u8], limit: usize) -> Result<Vec<u8>> {
+    if buf.len() < 8 {
+        bail!("idx1: truncated header");
+    }
+    let magic = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if magic != 0x0000_0801 {
+        bail!("idx1: bad magic {magic:#x}");
+    }
+    let n = u32::from_be_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    let n = if limit > 0 { n.min(limit) } else { n };
+    if buf.len() < 8 + n {
+        bail!("idx1: want {} bytes, have {}", 8 + n, buf.len());
+    }
+    Ok(buf[8..8 + n].to_vec())
+}
+
+/// Load real MNIST from `dir` (expects the 4 canonical uncompressed files).
+pub fn load(dir: impl AsRef<Path>, train_n: usize, test_n: usize) -> Result<DataBundle> {
+    let dir = dir.as_ref();
+    let read = |name: &str| -> Result<Vec<u8>> {
+        fs::read(dir.join(name)).with_context(|| format!("reading {}/{name}", dir.display()))
+    };
+    let train_x = parse_idx3_images(&read("train-images-idx3-ubyte")?, train_n)?;
+    let train_y = parse_idx1_labels(&read("train-labels-idx1-ubyte")?, train_n)?;
+    let test_x = parse_idx3_images(&read("t10k-images-idx3-ubyte")?, test_n)?;
+    let test_y = parse_idx1_labels(&read("t10k-labels-idx1-ubyte")?, test_n)?;
+    if train_x.rows != train_y.len() || test_x.rows != test_y.len() {
+        bail!("mnist: image/label count mismatch");
+    }
+    Ok(DataBundle {
+        train: Dataset { x: train_x, y: train_y, classes: 10 },
+        test: Dataset { x: test_x, y: test_y, classes: 10 },
+        name: "mnist".into(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx3(n: u32, r: u32, c: u32, pixels: &[u8]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        b.extend_from_slice(&n.to_be_bytes());
+        b.extend_from_slice(&r.to_be_bytes());
+        b.extend_from_slice(&c.to_be_bytes());
+        b.extend_from_slice(pixels);
+        b
+    }
+
+    #[test]
+    fn parse_images_scales_to_unit() {
+        let buf = idx3(2, 2, 2, &[0, 128, 255, 64, 0, 0, 0, 255]);
+        let m = parse_idx3_images(&buf, 0).unwrap();
+        assert_eq!((m.rows, m.cols), (2, 4));
+        assert!((m.at(0, 2) - 1.0).abs() < 1e-6);
+        assert!((m.at(0, 1) - 128.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_images_limit() {
+        let buf = idx3(2, 1, 2, &[1, 2, 3, 4]);
+        let m = parse_idx3_images(&buf, 1).unwrap();
+        assert_eq!(m.rows, 1);
+    }
+
+    #[test]
+    fn parse_labels() {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        b.extend_from_slice(&3u32.to_be_bytes());
+        b.extend_from_slice(&[7, 1, 9]);
+        assert_eq!(parse_idx1_labels(&b, 0).unwrap(), vec![7, 1, 9]);
+        assert_eq!(parse_idx1_labels(&b, 2).unwrap(), vec![7, 1]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let b = vec![0u8; 16];
+        assert!(parse_idx3_images(&b, 0).is_err());
+        assert!(parse_idx1_labels(&b, 0).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let buf = idx3(10, 28, 28, &[0u8; 10]); // claims 10 images, has 10 bytes
+        assert!(parse_idx3_images(&buf, 0).is_err());
+    }
+}

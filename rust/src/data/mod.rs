@@ -1,0 +1,85 @@
+//! Datasets: real loaders (MNIST IDX, CIFAR-10 binary) and deterministic
+//! synthetic stand-ins sized/shaped like the originals.
+//!
+//! The paper evaluates on MNIST and CIFAR-10. This environment has no
+//! network access, so by default experiments use [`synth`] — deterministic
+//! class-conditional generators with MNIST/CIFAR geometry (black border for
+//! the label overlay, structured intra-class variation, inter-class
+//! confusability). If real files are present under `data/mnist/` /
+//! `data/cifar-10-batches-bin/` they are used instead (see
+//! [`load_dataset`]). The substitution is documented in DESIGN.md.
+
+pub mod cifar;
+pub mod dataset;
+pub mod mnist;
+pub mod synth;
+
+pub use dataset::{BatchIter, DataBundle, Dataset};
+
+use anyhow::Result;
+
+/// Which dataset an experiment runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Real MNIST if present under `data/mnist/`, else panics.
+    Mnist,
+    /// Real CIFAR-10 if present under `data/cifar-10-batches-bin/`.
+    Cifar10,
+    /// Synthetic MNIST-geometry data (784-dim, 10 classes).
+    SynthMnist,
+    /// Synthetic CIFAR-geometry data (3072-dim, 10 classes, harder).
+    SynthCifar,
+}
+
+impl std::fmt::Display for DatasetKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DatasetKind::Mnist => write!(f, "mnist"),
+            DatasetKind::Cifar10 => write!(f, "cifar10"),
+            DatasetKind::SynthMnist => write!(f, "synth-mnist"),
+            DatasetKind::SynthCifar => write!(f, "synth-cifar"),
+        }
+    }
+}
+
+impl std::str::FromStr for DatasetKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "mnist" => Ok(DatasetKind::Mnist),
+            "cifar10" | "cifar" => Ok(DatasetKind::Cifar10),
+            "synth-mnist" => Ok(DatasetKind::SynthMnist),
+            "synth-cifar" => Ok(DatasetKind::SynthCifar),
+            other => anyhow::bail!("unknown dataset '{other}'"),
+        }
+    }
+}
+
+/// Load `kind` with at most `train_n`/`test_n` examples (0 = all), with
+/// per-sample centering applied (see
+/// [`dataset::Dataset::center_rows`] for why FF requires it).
+/// Synthetic sets are generated deterministically from `seed`.
+pub fn load_dataset(kind: DatasetKind, train_n: usize, test_n: usize, seed: u64) -> Result<DataBundle> {
+    let mut bundle = load_dataset_raw(kind, train_n, test_n, seed)?;
+    bundle.train.center_rows();
+    bundle.test.center_rows();
+    Ok(bundle)
+}
+
+/// [`load_dataset`] without the standardization pass (loaders/tests).
+pub fn load_dataset_raw(kind: DatasetKind, train_n: usize, test_n: usize, seed: u64) -> Result<DataBundle> {
+    match kind {
+        DatasetKind::Mnist => mnist::load("data/mnist", train_n, test_n),
+        DatasetKind::Cifar10 => cifar::load("data/cifar-10-batches-bin", train_n, test_n),
+        DatasetKind::SynthMnist => {
+            let tn = if train_n == 0 { 60_000 } else { train_n };
+            let en = if test_n == 0 { 10_000 } else { test_n };
+            Ok(synth::synth_mnist(tn, en, seed))
+        }
+        DatasetKind::SynthCifar => {
+            let tn = if train_n == 0 { 50_000 } else { train_n };
+            let en = if test_n == 0 { 10_000 } else { test_n };
+            Ok(synth::synth_cifar(tn, en, seed))
+        }
+    }
+}

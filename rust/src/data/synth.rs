@@ -1,0 +1,236 @@
+//! Deterministic synthetic datasets with MNIST/CIFAR geometry.
+//!
+//! Design goals (what FF actually needs from the data — DESIGN.md
+//! substitution table):
+//!
+//! 1. **Black border** around the image so the label overlay occupies dead
+//!    pixels (Hinton's trick requires the first 10 dims to carry no signal).
+//! 2. **Class structure**: each class is a smooth prototype (sum of
+//!    Gaussian bumps on the image grid) so a 1-hidden-layer net is far from
+//!    trivial 100% but multi-layer FF can climb well past chance.
+//! 3. **Confusability**: each sample mixes in a second "distractor" class
+//!    prototype at low weight, so AdaptiveNEG's "most-predicted incorrect
+//!    label" is meaningfully non-uniform (the property Table 1 exercises).
+//! 4. **Determinism**: everything derives from one seed, so distributed
+//!    nodes and repeated runs agree bit-for-bit.
+//!
+//! The CIFAR variant uses 3 channels, more bumps, heavier noise and
+//! stronger distractor mixing — making it markedly harder, mirroring the
+//! paper's MNIST ≫ CIFAR accuracy gap (Table 5).
+
+use crate::data::dataset::{DataBundle, Dataset};
+use crate::tensor::{Matrix, Rng};
+
+/// Geometry + noise knobs for a synthetic set.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    /// Image side (square images).
+    pub side: usize,
+    /// Channels (1 = MNIST-like, 3 = CIFAR-like).
+    pub channels: usize,
+    /// Zero border width in pixels (label overlay lives here).
+    pub border: usize,
+    /// Gaussian bumps per class prototype.
+    pub bumps: usize,
+    /// Additive pixel noise σ.
+    pub noise: f32,
+    /// Weight of the distractor class prototype mixed into each sample.
+    pub distractor: f32,
+    /// Number of classes.
+    pub classes: usize,
+}
+
+impl SynthSpec {
+    /// MNIST-geometry spec: 28×28×1, 2-px border.
+    pub fn mnist() -> Self {
+        SynthSpec { side: 28, channels: 1, border: 2, bumps: 5, noise: 0.18, distractor: 0.25, classes: 10 }
+    }
+
+    /// CIFAR-geometry spec: 32×32×3 — noisier and far more confusable.
+    pub fn cifar() -> Self {
+        SynthSpec { side: 32, channels: 3, border: 2, bumps: 7, noise: 0.42, distractor: 0.55, classes: 10 }
+    }
+
+    /// Flat feature dimension.
+    pub fn dim(&self) -> usize {
+        self.side * self.side * self.channels
+    }
+}
+
+/// Per-class prototype images in `[0,1]`, deterministic in `seed`.
+fn prototypes(spec: &SynthSpec, seed: u64) -> Vec<Vec<f32>> {
+    let mut protos = Vec::with_capacity(spec.classes);
+    for c in 0..spec.classes {
+        let mut rng = Rng::derive(seed, 0x5052_4F54 ^ c as u64); // "PROT"
+        let mut img = vec![0.0f32; spec.dim()];
+        for _ in 0..spec.bumps {
+            // Bump center inside the non-border region.
+            let lo = spec.border as f32 + 2.0;
+            let hi = (spec.side - spec.border) as f32 - 3.0;
+            let cx = lo + (hi - lo) * rng.f32();
+            let cy = lo + (hi - lo) * rng.f32();
+            let sig = 1.5 + 2.5 * rng.f32();
+            let amp = 0.5 + 0.5 * rng.f32();
+            let ch = rng.below(spec.channels);
+            for y in 0..spec.side {
+                for x in 0..spec.side {
+                    let d2 = (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2);
+                    let v = amp * (-d2 / (2.0 * sig * sig)).exp();
+                    img[ch * spec.side * spec.side + y * spec.side + x] += v;
+                }
+            }
+        }
+        for v in &mut img {
+            *v = v.min(1.0);
+        }
+        protos.push(img);
+    }
+    protos
+}
+
+/// Zero out the border band of every channel (keeps the overlay area dead).
+fn apply_border(img: &mut [f32], spec: &SynthSpec) {
+    let s = spec.side;
+    for ch in 0..spec.channels {
+        let base = ch * s * s;
+        for y in 0..s {
+            for x in 0..s {
+                if y < spec.border || y >= s - spec.border || x < spec.border || x >= s - spec.border {
+                    img[base + y * s + x] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Generate `n` samples from `spec`; stream tag distinguishes train/test.
+fn generate(spec: &SynthSpec, n: usize, seed: u64, stream: u64) -> Dataset {
+    let protos = prototypes(spec, seed);
+    let dim = spec.dim();
+    let mut x = Matrix::zeros(n, dim);
+    let mut y = Vec::with_capacity(n);
+    let mut rng = Rng::derive(seed, stream);
+    for i in 0..n {
+        let class = rng.below(spec.classes);
+        let distractor = rng.wrong_label(class as u8, spec.classes) as usize;
+        let intensity = 0.65 + 0.35 * rng.f32();
+        let dw = spec.distractor * rng.f32();
+        let row = x.row_mut(i);
+        let (p, q) = (&protos[class], &protos[distractor]);
+        for j in 0..dim {
+            let v = intensity * p[j] + dw * q[j] + spec.noise * rng.normal();
+            row[j] = v.clamp(0.0, 1.0);
+        }
+        apply_border(row, spec);
+        y.push(class as u8);
+    }
+    Dataset { x, y, classes: spec.classes }
+}
+
+/// Synthetic MNIST-like bundle (784-dim, 10 classes).
+pub fn synth_mnist(train_n: usize, test_n: usize, seed: u64) -> DataBundle {
+    let spec = SynthSpec::mnist();
+    DataBundle {
+        train: generate(&spec, train_n, seed, 0x7452_4E00), // "tRN"
+        test: generate(&spec, test_n, seed, 0x7445_5300),   // "tES"
+        name: "synth-mnist".into(),
+    }
+}
+
+/// Synthetic CIFAR-like bundle (3072-dim, 10 classes, harder).
+pub fn synth_cifar(train_n: usize, test_n: usize, seed: u64) -> DataBundle {
+    let spec = SynthSpec::cifar();
+    DataBundle {
+        train: generate(&spec, train_n, seed, 0x7452_4E01),
+        test: generate(&spec, test_n, seed, 0x7445_5301),
+        name: "synth-cifar".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_geometry() {
+        let b = synth_mnist(50, 20, 1);
+        assert_eq!(b.train.dim(), 784);
+        assert_eq!(b.train.len(), 50);
+        assert_eq!(b.test.len(), 20);
+        assert!(b.train.x.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn border_pixels_are_zero() {
+        let b = synth_mnist(10, 1, 2);
+        for r in 0..10 {
+            let row = b.train.x.row(r);
+            // first 10 pixels live in the 2-px top border of a 28-wide image
+            assert!(row[..28 * 2].iter().all(|&v| v == 0.0), "top border must be black");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = synth_mnist(20, 5, 42);
+        let b = synth_mnist(20, 5, 42);
+        assert_eq!(a.train.x.data, b.train.x.data);
+        assert_eq!(a.train.y, b.train.y);
+        let c = synth_mnist(20, 5, 43);
+        assert_ne!(a.train.x.data, c.train.x.data);
+    }
+
+    #[test]
+    fn train_test_streams_differ() {
+        let b = synth_mnist(20, 20, 7);
+        assert_ne!(b.train.x.data, b.test.x.data);
+    }
+
+    #[test]
+    fn classes_all_present() {
+        let b = synth_mnist(500, 10, 3);
+        assert!(b.train.class_histogram().iter().all(|&c| c > 10));
+    }
+
+    #[test]
+    fn cifar_geometry_and_difficulty_knobs() {
+        let spec_m = SynthSpec::mnist();
+        let spec_c = SynthSpec::cifar();
+        assert_eq!(spec_c.dim(), 3072);
+        assert!(spec_c.noise > spec_m.noise);
+        assert!(spec_c.distractor > spec_m.distractor);
+        let b = synth_cifar(30, 10, 1);
+        assert_eq!(b.train.dim(), 3072);
+    }
+
+    /// Same-class samples must be closer to their prototype than to other
+    /// classes' prototypes on average — the separability FF relies on.
+    #[test]
+    fn class_structure_is_learnable() {
+        let spec = SynthSpec::mnist();
+        let protos = prototypes(&spec, 5);
+        let d = generate(&spec, 200, 5, 99);
+        let mut own = 0.0f64;
+        let mut other = 0.0f64;
+        let mut n_other = 0usize;
+        for i in 0..d.len() {
+            let row = d.x.row(i);
+            let l = d.y[i] as usize;
+            for (c, p) in protos.iter().enumerate() {
+                let dot: f32 = row.iter().zip(p).map(|(a, b)| a * b).sum();
+                if c == l {
+                    own += f64::from(dot);
+                } else {
+                    other += f64::from(dot);
+                    n_other += 1;
+                }
+            }
+        }
+        let own_mean = own / d.len() as f64;
+        let other_mean = other / n_other as f64;
+        assert!(
+            own_mean > 1.3 * other_mean,
+            "class signal too weak: own {own_mean:.3} vs other {other_mean:.3}"
+        );
+    }
+}

@@ -1,0 +1,96 @@
+//! The compute contract between the coordinator (L3) and the math (L2/L1).
+//!
+//! Every numeric operation the schedulers need is behind [`Engine`]:
+//!
+//! * [`NativeEngine`] — pure-Rust reference implementation. Used as the
+//!   numeric oracle for the XLA path, as the substrate for coordinator unit
+//!   and property tests, and for artifact-free benches.
+//! * [`XlaEngine`] — loads the AOT artifacts (`artifacts/*.hlo.txt`
+//!   produced by `python/compile/aot.py` from the JAX/Pallas sources) and
+//!   executes them on the PJRT CPU client. This is the production path —
+//!   Python is never involved at run time.
+//!
+//! Engines are deliberately `&mut self`: the XLA engine caches compiled
+//! executables and scratch buffers keyed by shape.
+
+pub mod native;
+pub mod xla;
+
+pub use native::NativeEngine;
+pub use xla::XlaEngine;
+
+use anyhow::Result;
+
+use crate::ff::layer::{FFLayer, FFStepStats, LinearHead};
+use crate::tensor::{AdamState, Matrix};
+
+/// Compute backend used by every scheduler, classifier and baseline.
+///
+/// All methods take the layer/head *parameter containers* by reference and
+/// mutate them in place for the training steps, so the coordinator's
+/// publish/fetch logic is byte-identical across backends.
+pub trait Engine: Send {
+    /// Human-readable backend name (for logs/reports).
+    fn name(&self) -> &'static str;
+
+    /// FF layer forward: `y = relu(x̂ · W + b)` where `x̂` is the row-wise
+    /// length-normalized input iff `layer.normalize_input`.
+    fn layer_forward(&mut self, layer: &FFLayer, x: &Matrix) -> Result<Matrix>;
+
+    /// One FF minibatch update (§3): positive batch pushes goodness above
+    /// `theta`, negative batch below; a single fused Adam step on `(W, b)`.
+    ///
+    /// `x_pos` and `x_neg` must have equal shape.
+    fn ff_train_step(
+        &mut self,
+        layer: &mut FFLayer,
+        opt: &mut AdamState,
+        x_pos: &Matrix,
+        x_neg: &Matrix,
+        theta: f32,
+        lr: f32,
+    ) -> Result<FFStepStats>;
+
+    /// Head logits: `x · W + b` (no softmax).
+    fn head_logits(&mut self, head: &LinearHead, x: &Matrix) -> Result<Matrix>;
+
+    /// Softmax-cross-entropy step on a linear head; returns mean CE loss.
+    fn head_train_step(
+        &mut self,
+        head: &mut LinearHead,
+        opt: &mut AdamState,
+        x: &Matrix,
+        labels: &[u8],
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Performance-Optimized step (§4.4): joint CE update of
+    /// `(layer, head)` with gradients stopped at the layer input; returns
+    /// mean CE loss.
+    #[allow(clippy::too_many_arguments)]
+    fn perfopt_train_step(
+        &mut self,
+        layer: &mut FFLayer,
+        head: &mut LinearHead,
+        opt_layer: &mut AdamState,
+        opt_head: &mut AdamState,
+        x: &Matrix,
+        labels: &[u8],
+        lr: f32,
+    ) -> Result<f32>;
+}
+
+/// How an experiment constructs its per-node engine. Each node thread calls
+/// the factory exactly once, so non-`Send` backend internals (PJRT buffers)
+/// never cross threads.
+pub type EngineFactory = std::sync::Arc<dyn Fn() -> Result<Box<dyn Engine>> + Send + Sync>;
+
+/// Factory for [`NativeEngine`]s.
+pub fn native_factory() -> EngineFactory {
+    std::sync::Arc::new(|| Ok(Box::new(NativeEngine::new()) as Box<dyn Engine>))
+}
+
+/// Factory for [`XlaEngine`]s reading from `artifact_dir`.
+pub fn xla_factory(artifact_dir: std::path::PathBuf) -> EngineFactory {
+    std::sync::Arc::new(move || Ok(Box::new(XlaEngine::new(&artifact_dir)?) as Box<dyn Engine>))
+}

@@ -1,0 +1,359 @@
+//! Pure-Rust reference engine.
+//!
+//! Implements exactly the math of the L1 Pallas kernels / L2 JAX model
+//! (`python/compile/`): the integration test `rust/tests/xla_vs_native.rs`
+//! pins the two against each other through the AOT artifacts, and
+//! `python/tests/test_kernel.py` pins the Pallas kernels against the jnp
+//! oracle — so all three implementations agree.
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::ff::layer::{FFLayer, FFStepStats, LinearHead};
+use crate::tensor::{ops, AdamState, Matrix};
+
+/// Epsilon for length normalization — matches `kernels/ref.py::EPS`.
+pub const NORM_EPS: f32 = 1e-8;
+
+/// Pure-Rust [`Engine`].
+#[derive(Default, Debug, Clone)]
+pub struct NativeEngine {
+    _private: (),
+}
+
+impl NativeEngine {
+    /// Construct (stateless; cheap).
+    pub fn new() -> Self {
+        NativeEngine { _private: () }
+    }
+}
+
+/// Forward pass returning both the (possibly normalized) input actually fed
+/// to the matmul and the ReLU output — the train step needs `x̂` for the
+/// weight gradient.
+fn forward_parts(layer: &FFLayer, x: &Matrix) -> (Matrix, Matrix) {
+    let xn = if layer.normalize_input { ops::normalize_rows(x, NORM_EPS) } else { x.clone() };
+    let mut z = ops::matmul(&xn, &layer.w);
+    ops::add_bias(&mut z, &layer.b);
+    ops::relu_inplace(&mut z);
+    (xn, z)
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn layer_forward(&mut self, layer: &FFLayer, x: &Matrix) -> Result<Matrix> {
+        Ok(forward_parts(layer, x).1)
+    }
+
+    fn ff_train_step(
+        &mut self,
+        layer: &mut FFLayer,
+        opt: &mut AdamState,
+        x_pos: &Matrix,
+        x_neg: &Matrix,
+        theta: f32,
+        lr: f32,
+    ) -> Result<FFStepStats> {
+        assert_eq!((x_pos.rows, x_pos.cols), (x_neg.rows, x_neg.cols));
+        let b = x_pos.rows as f32;
+        // One fused batch: rows [0, B) positive, [B, 2B) negative — same
+        // layout the L1 kernel uses so a single matmul covers both passes.
+        let x = x_pos.vcat(x_neg);
+        let (xn, y) = forward_parts(layer, &x);
+        // Goodness = MEAN of squared activations (paper Eq. 1 with the
+        // 1/D "threshold coefficient" folded in). Mean — not sum — so a
+        // fresh layer starts with g ≪ θ and the positive pass dominates
+        // early training; with sums, g(init) > θ puts every unit under
+        // uniform down-pressure and the all-positive inputs then kill the
+        // whole layer (dead-ReLU collapse). Matches the reference FF
+        // implementations.
+        let d_out = layer.d_out() as f32;
+        let g: Vec<f32> = ops::row_sumsq(&y).into_iter().map(|v| v / d_out).collect();
+
+        let mut stats = FFStepStats::default();
+        // dL/dg per row, with the 1/(2B) batch-mean and the dg/dy = 2y/D
+        // chain factor folded in below.
+        let n_rows = x.rows;
+        let mut coef = vec![0.0f32; n_rows];
+        for (i, &gi) in g.iter().enumerate() {
+            if i < x_pos.rows {
+                // positive: L = softplus(θ - g), dL/dg = -σ(θ - g)
+                stats.loss_pos += ops::softplus(theta - gi);
+                stats.goodness_pos += gi;
+                coef[i] = -ops::sigmoid(theta - gi);
+            } else {
+                // negative: L = softplus(g - θ), dL/dg = σ(g - θ)
+                stats.loss_neg += ops::softplus(gi - theta);
+                stats.goodness_neg += gi;
+                coef[i] = ops::sigmoid(gi - theta);
+            }
+        }
+        stats.loss_pos /= b;
+        stats.loss_neg /= b;
+        stats.goodness_pos /= b;
+        stats.goodness_neg /= b;
+
+        // dz = coef ⊙ 2y / (2B·D)  (ReLU mask implicit: y == 0 ⇒ dz == 0)
+        let mut dz = y;
+        let scale = 1.0 / (2.0 * b * d_out);
+        for r in 0..n_rows {
+            let c = coef[r] * 2.0 * scale;
+            for v in dz.row_mut(r) {
+                *v *= c;
+            }
+        }
+        let dw = ops::matmul_at_b(&xn, &dz);
+        let db = ops::col_sum(&dz);
+        opt.step(&mut layer.w, &mut layer.b, &dw, &db, lr);
+        Ok(stats)
+    }
+
+    fn head_logits(&mut self, head: &LinearHead, x: &Matrix) -> Result<Matrix> {
+        let mut z = ops::matmul(x, &head.w);
+        ops::add_bias(&mut z, &head.b);
+        Ok(z)
+    }
+
+    fn head_train_step(
+        &mut self,
+        head: &mut LinearHead,
+        opt: &mut AdamState,
+        x: &Matrix,
+        labels: &[u8],
+        lr: f32,
+    ) -> Result<f32> {
+        assert_eq!(x.rows, labels.len());
+        let logits = self.head_logits(head, x)?;
+        let p = ops::softmax_rows(&logits);
+        let loss = ops::cross_entropy(&p, labels);
+        // dlogits = (p - onehot) / B
+        let mut dlogits = p;
+        let inv_b = 1.0 / x.rows as f32;
+        for (r, &l) in labels.iter().enumerate() {
+            let row = dlogits.row_mut(r);
+            row[l as usize] -= 1.0;
+            for v in row {
+                *v *= inv_b;
+            }
+        }
+        let dw = ops::matmul_at_b(x, &dlogits);
+        let db = ops::col_sum(&dlogits);
+        opt.step(&mut head.w, &mut head.b, &dw, &db, lr);
+        Ok(loss)
+    }
+
+    fn perfopt_train_step(
+        &mut self,
+        layer: &mut FFLayer,
+        head: &mut LinearHead,
+        opt_layer: &mut AdamState,
+        opt_head: &mut AdamState,
+        x: &Matrix,
+        labels: &[u8],
+        lr: f32,
+    ) -> Result<f32> {
+        assert_eq!(x.rows, labels.len());
+        let (xn, y) = forward_parts(layer, x);
+        let mut logits = ops::matmul(&y, &head.w);
+        ops::add_bias(&mut logits, &head.b);
+        let p = ops::softmax_rows(&logits);
+        let loss = ops::cross_entropy(&p, labels);
+
+        let mut dlogits = p;
+        let inv_b = 1.0 / x.rows as f32;
+        for (r, &l) in labels.iter().enumerate() {
+            let row = dlogits.row_mut(r);
+            row[l as usize] -= 1.0;
+            for v in row {
+                *v *= inv_b;
+            }
+        }
+        // Head gradients.
+        let dwh = ops::matmul_at_b(&y, &dlogits);
+        let dbh = ops::col_sum(&dlogits);
+        // Layer gradients through ReLU: dz = (dlogits · Wᵀ) ⊙ [y > 0].
+        let mut dz = ops::matmul_a_bt(&dlogits, &head.w);
+        for (dv, yv) in dz.data.iter_mut().zip(&y.data) {
+            if *yv <= 0.0 {
+                *dv = 0.0;
+            }
+        }
+        let dwl = ops::matmul_at_b(&xn, &dz);
+        let dbl = ops::col_sum(&dz);
+        // Gradients stop here — x̂'s producer is never touched (§4.4).
+        opt_head.step(&mut head.w, &mut head.b, &dwh, &dbh, lr);
+        opt_layer.step(&mut layer.w, &mut layer.b, &dwl, &dbl, lr);
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn setup(d_in: usize, d_out: usize, norm: bool, seed: u64) -> (FFLayer, AdamState, Rng) {
+        let mut rng = Rng::new(seed);
+        let layer = FFLayer::new(d_in, d_out, norm, &mut rng);
+        let opt = AdamState::new(d_in, d_out);
+        (layer, opt, rng)
+    }
+
+    #[test]
+    fn forward_nonnegative_and_shape() {
+        let (layer, _, mut rng) = setup(10, 7, true, 1);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(4, 10, -1.0, 1.0, &mut rng);
+        let y = eng.layer_forward(&layer, &x).unwrap();
+        assert_eq!((y.rows, y.cols), (4, 7));
+        assert!(y.data.iter().all(|&v| v >= 0.0));
+    }
+
+    /// The FF objective must grow the pos/neg goodness margin when the
+    /// positive and negative inputs are actually distinguishable.
+    #[test]
+    fn ff_training_separates_goodness() {
+        let (mut layer, mut opt, mut rng) = setup(20, 32, false, 2);
+        let mut eng = NativeEngine::new();
+        // pos: energy in first half of dims; neg: second half.
+        let mut x_pos = Matrix::rand_uniform(32, 20, 0.0, 0.1, &mut rng);
+        let mut x_neg = Matrix::rand_uniform(32, 20, 0.0, 0.1, &mut rng);
+        for r in 0..32 {
+            for c in 0..10 {
+                x_pos.row_mut(r)[c] += 1.0;
+                x_neg.row_mut(r)[10 + c] += 1.0;
+            }
+        }
+        let first = eng.ff_train_step(&mut layer, &mut opt, &x_pos, &x_neg, 2.0, 0.01).unwrap();
+        let mut last = first;
+        for _ in 0..200 {
+            last = eng.ff_train_step(&mut layer, &mut opt, &x_pos, &x_neg, 2.0, 0.01).unwrap();
+        }
+        assert!(
+            last.margin() > first.margin() + 1.0,
+            "margin should grow: first {} last {}",
+            first.margin(),
+            last.margin()
+        );
+        assert!(last.loss() < first.loss(), "loss should fall");
+    }
+
+    /// Without normalization a layer could pass goodness straight through;
+    /// with it, the input magnitude is erased.
+    #[test]
+    fn normalization_erases_magnitude() {
+        let (layer, _, mut rng) = setup(12, 8, true, 3);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(3, 12, 0.1, 1.0, &mut rng);
+        let mut x_scaled = x.clone();
+        for v in &mut x_scaled.data {
+            *v *= 37.0;
+        }
+        let y1 = eng.layer_forward(&layer, &x).unwrap();
+        let y2 = eng.layer_forward(&layer, &x_scaled).unwrap();
+        assert!(y1.max_abs_diff(&y2) < 1e-4);
+    }
+
+    #[test]
+    fn head_train_reduces_ce() {
+        let mut rng = Rng::new(4);
+        let mut head = LinearHead::new(16, 10, &mut rng);
+        let mut opt = AdamState::new(16, 10);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(64, 16, 0.0, 1.0, &mut rng);
+        let labels: Vec<u8> = (0..64).map(|i| (i % 10) as u8).collect();
+        let first = eng.head_train_step(&mut head, &mut opt, &x, &labels, 0.05).unwrap();
+        let mut last = first;
+        for _ in 0..100 {
+            last = eng.head_train_step(&mut head, &mut opt, &x, &labels, 0.05).unwrap();
+        }
+        assert!(last < first * 0.8, "CE should fall: {first} -> {last}");
+    }
+
+    #[test]
+    fn perfopt_learns_separable_classes() {
+        let mut rng = Rng::new(5);
+        let mut layer = FFLayer::new(20, 24, false, &mut rng);
+        let mut head = LinearHead::new(24, 4, &mut rng);
+        let (mut ol, mut oh) = (AdamState::new(20, 24), AdamState::new(24, 4));
+        let mut eng = NativeEngine::new();
+        // 4 classes, each a distinct 5-dim block lit up.
+        let n = 64;
+        let mut x = Matrix::rand_uniform(n, 20, 0.0, 0.1, &mut rng);
+        let labels: Vec<u8> = (0..n).map(|i| (i % 4) as u8).collect();
+        for (r, &l) in labels.iter().enumerate() {
+            for c in 0..5 {
+                x.row_mut(r)[l as usize * 5 + c] += 1.0;
+            }
+        }
+        let first =
+            eng.perfopt_train_step(&mut layer, &mut head, &mut ol, &mut oh, &x, &labels, 0.01)
+                .unwrap();
+        let mut last = first;
+        for _ in 0..200 {
+            last = eng
+                .perfopt_train_step(&mut layer, &mut head, &mut ol, &mut oh, &x, &labels, 0.01)
+                .unwrap();
+        }
+        assert!(last < 0.1, "perfopt CE should converge, got {last} (from {first})");
+    }
+
+    /// Numerical gradient check of the FF layer loss wrt one weight.
+    #[test]
+    fn ff_gradient_matches_finite_difference() {
+        let mut rng = Rng::new(6);
+        let layer = FFLayer::new(6, 5, true, &mut rng);
+        let x_pos = Matrix::rand_uniform(4, 6, 0.0, 1.0, &mut rng);
+        let x_neg = Matrix::rand_uniform(4, 6, 0.0, 1.0, &mut rng);
+        let theta = 1.5f32;
+
+        let d_out = 5.0f32;
+        let loss_of = |l: &FFLayer| -> f64 {
+            let (_, y) = forward_parts(l, &x_pos.vcat(&x_neg));
+            let g: Vec<f32> = ops::row_sumsq(&y).iter().map(|v| v / d_out).collect();
+            let b = x_pos.rows as f64;
+            let mut loss = 0.0f64;
+            for (i, &gi) in g.iter().enumerate() {
+                let t = if i < x_pos.rows { theta - gi } else { gi - theta };
+                loss += f64::from(ops::softplus(t));
+            }
+            loss / (2.0 * b) * 2.0 // mean over 2B of (pos+neg), matches step scaling
+        };
+
+        // Analytic gradient via the same code path the engine uses.
+        let (xn, y) = forward_parts(&layer, &x_pos.vcat(&x_neg));
+        let g: Vec<f32> = ops::row_sumsq(&y).iter().map(|v| v / d_out).collect();
+        let mut dz = y.clone();
+        let scale = 1.0 / (2.0 * x_pos.rows as f32 * d_out);
+        for (i, &gi) in g.iter().enumerate() {
+            let c = if i < x_pos.rows {
+                -ops::sigmoid(theta - gi)
+            } else {
+                ops::sigmoid(gi - theta)
+            } * 2.0
+                * scale;
+            for v in dz.row_mut(i) {
+                *v *= c;
+            }
+        }
+        let dw = ops::matmul_at_b(&xn, &dz);
+
+        // Finite differences on a handful of entries.
+        let h = 1e-3f32;
+        for &(r, c) in &[(0usize, 0usize), (2, 3), (5, 4), (3, 1)] {
+            let mut lp = layer.clone();
+            lp.w.data[r * 5 + c] += h;
+            let mut lm = layer.clone();
+            lm.w.data[r * 5 + c] -= h;
+            let num = (loss_of(&lp) - loss_of(&lm)) / (2.0 * f64::from(h));
+            let ana = f64::from(dw.data[r * 5 + c]) * 2.0; // loss_of uses mean·2 scaling
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + ana.abs()),
+                "grad mismatch at ({r},{c}): numeric {num}, analytic {ana}"
+            );
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! PJRT-backed [`Engine`]: every training/prediction step is one AOT
+//! XLA module execution (the L2 JAX function, with the L1 Pallas kernels
+//! fused inside). Python never runs here — only the HLO text it left in
+//! `artifacts/`.
+//!
+//! Batch handling: HLO modules are shape-static. Each op is lowered for
+//! one batch size `B`; this engine pads smaller batches with zero rows and
+//! passes a 0/1 `mask` so padded rows contribute nothing to losses or
+//! gradients, and loops row-chunks of `B` for larger inputs (evaluation
+//! sweeps).
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::engine::Engine;
+use crate::ff::layer::{FFLayer, FFStepStats, LinearHead};
+use crate::runtime::{
+    literal_matrix, literal_scalar, literal_vec, matrix_literal, scalar_literal, vec_literal,
+    ManifestEntry, Runtime,
+};
+use crate::tensor::{AdamState, Matrix};
+
+/// [`Engine`] backed by AOT HLO artifacts on the PJRT CPU client.
+pub struct XlaEngine {
+    rt: Runtime,
+}
+
+// SAFETY: the PJRT wrapper types hold raw pointers without Send, but an
+// `XlaEngine` is owned by exactly one node thread for its whole life (the
+// EngineFactory constructs it on the worker thread; nothing is shared).
+// `Send` is only needed to move the freshly-built Box into that thread /
+// out at join. PJRT's CPU client itself is thread-safe for compile/execute.
+unsafe impl Send for XlaEngine {}
+
+impl XlaEngine {
+    /// Open `artifact_dir` (must contain `manifest.txt`; see `make
+    /// artifacts`).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<XlaEngine> {
+        Ok(XlaEngine { rt: Runtime::open(artifact_dir)? })
+    }
+
+    /// Access the underlying runtime (tests/benches).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Pad `m` to exactly `rows` rows with zeros (no-op when equal).
+    fn pad_rows(m: &Matrix, rows: usize) -> Matrix {
+        if m.rows == rows {
+            return m.clone();
+        }
+        let mut out = Matrix::zeros(rows, m.cols);
+        out.data[..m.rows * m.cols].copy_from_slice(&m.data);
+        out
+    }
+
+    /// 0/1 mask marking the first `real` of `total` rows.
+    fn mask(real: usize, total: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; total];
+        v[..real].fill(1.0);
+        v
+    }
+
+    /// One-hot matrix for labels (padded rows stay all-zero).
+    fn onehot(labels: &[u8], classes: usize, rows: usize) -> Matrix {
+        let mut m = Matrix::zeros(rows, classes);
+        for (r, &l) in labels.iter().enumerate() {
+            m.data[r * classes + l as usize] = 1.0;
+        }
+        m
+    }
+
+    fn opt_literals(opt: &AdamState) -> Result<Vec<xla::Literal>> {
+        Ok(vec![
+            matrix_literal(&opt.m_w)?,
+            matrix_literal(&opt.v_w)?,
+            vec_literal(&opt.m_b),
+            vec_literal(&opt.v_b),
+        ])
+    }
+
+    /// Chunked forward through a shape-static module: pads the tail chunk.
+    fn forward_chunks(
+        &mut self,
+        entry: &ManifestEntry,
+        w: &Matrix,
+        b: &[f32],
+        x: &Matrix,
+    ) -> Result<Matrix> {
+        let bsz = entry.batch;
+        let mut out = Matrix::zeros(x.rows, entry.dout);
+        let mut r0 = 0;
+        while r0 < x.rows {
+            let r1 = (r0 + bsz).min(x.rows);
+            let rows: Vec<usize> = (r0..r1).collect();
+            let chunk = Self::pad_rows(&x.gather_rows(&rows), bsz);
+            let outs = self.rt.run(
+                entry,
+                &[matrix_literal(w)?, vec_literal(b), matrix_literal(&chunk)?],
+            )?;
+            ensure!(outs.len() == 1, "{}: expected 1 output, got {}", entry.op, outs.len());
+            let y = literal_matrix(&outs[0], bsz, entry.dout)?;
+            out.data[r0 * entry.dout..r1 * entry.dout]
+                .copy_from_slice(&y.data[..(r1 - r0) * entry.dout]);
+            r0 = r1;
+        }
+        Ok(out)
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn layer_forward(&mut self, layer: &FFLayer, x: &Matrix) -> Result<Matrix> {
+        let entry = self.rt.entry("layer_fwd", layer.d_in(), layer.d_out(), layer.normalize_input)?;
+        self.forward_chunks(&entry, &layer.w, &layer.b, x)
+    }
+
+    fn ff_train_step(
+        &mut self,
+        layer: &mut FFLayer,
+        opt: &mut AdamState,
+        x_pos: &Matrix,
+        x_neg: &Matrix,
+        theta: f32,
+        lr: f32,
+    ) -> Result<FFStepStats> {
+        let entry = self.rt.entry("ff_step", layer.d_in(), layer.d_out(), layer.normalize_input)?;
+        let bsz = entry.batch;
+        ensure!(
+            x_pos.rows <= bsz,
+            "ff_step: batch {} exceeds artifact batch {bsz}",
+            x_pos.rows
+        );
+        let real = x_pos.rows;
+        let xp = Self::pad_rows(x_pos, bsz);
+        let xn = Self::pad_rows(x_neg, bsz);
+        let mask = Self::mask(real, bsz);
+
+        let mut inputs = vec![matrix_literal(&layer.w)?, vec_literal(&layer.b)];
+        inputs.extend(Self::opt_literals(opt)?);
+        inputs.push(scalar_literal((opt.t + 1) as f32));
+        inputs.push(matrix_literal(&xp)?);
+        inputs.push(matrix_literal(&xn)?);
+        inputs.push(vec_literal(&mask));
+        inputs.push(scalar_literal(theta));
+        inputs.push(scalar_literal(lr));
+
+        let outs = self.rt.run(&entry, &inputs)?;
+        ensure!(outs.len() == 10, "ff_step: expected 10 outputs, got {}", outs.len());
+        layer.w = literal_matrix(&outs[0], layer.w.rows, layer.w.cols)?;
+        layer.b = literal_vec(&outs[1])?;
+        opt.m_w = literal_matrix(&outs[2], opt.m_w.rows, opt.m_w.cols)?;
+        opt.v_w = literal_matrix(&outs[3], opt.v_w.rows, opt.v_w.cols)?;
+        opt.m_b = literal_vec(&outs[4])?;
+        opt.v_b = literal_vec(&outs[5])?;
+        opt.t += 1;
+        Ok(FFStepStats {
+            loss_pos: literal_scalar(&outs[6])?,
+            loss_neg: literal_scalar(&outs[7])?,
+            goodness_pos: literal_scalar(&outs[8])?,
+            goodness_neg: literal_scalar(&outs[9])?,
+        })
+    }
+
+    fn head_logits(&mut self, head: &LinearHead, x: &Matrix) -> Result<Matrix> {
+        let entry = self.rt.entry("head_logits", head.w.rows, head.w.cols, false)?;
+        self.forward_chunks(&entry, &head.w, &head.b, x)
+    }
+
+    fn head_train_step(
+        &mut self,
+        head: &mut LinearHead,
+        opt: &mut AdamState,
+        x: &Matrix,
+        labels: &[u8],
+        lr: f32,
+    ) -> Result<f32> {
+        let entry = self.rt.entry("head_step", head.w.rows, head.w.cols, false)?;
+        let bsz = entry.batch;
+        ensure!(x.rows <= bsz, "head_step: batch {} exceeds artifact batch {bsz}", x.rows);
+        let real = x.rows;
+        let xp = Self::pad_rows(x, bsz);
+        let onehot = Self::onehot(labels, head.w.cols, bsz);
+        let mask = Self::mask(real, bsz);
+
+        let mut inputs = vec![matrix_literal(&head.w)?, vec_literal(&head.b)];
+        inputs.extend(Self::opt_literals(opt)?);
+        inputs.push(scalar_literal((opt.t + 1) as f32));
+        inputs.push(matrix_literal(&xp)?);
+        inputs.push(matrix_literal(&onehot)?);
+        inputs.push(vec_literal(&mask));
+        inputs.push(scalar_literal(lr));
+
+        let outs = self.rt.run(&entry, &inputs)?;
+        ensure!(outs.len() == 7, "head_step: expected 7 outputs, got {}", outs.len());
+        head.w = literal_matrix(&outs[0], head.w.rows, head.w.cols)?;
+        head.b = literal_vec(&outs[1])?;
+        opt.m_w = literal_matrix(&outs[2], opt.m_w.rows, opt.m_w.cols)?;
+        opt.v_w = literal_matrix(&outs[3], opt.v_w.rows, opt.v_w.cols)?;
+        opt.m_b = literal_vec(&outs[4])?;
+        opt.v_b = literal_vec(&outs[5])?;
+        opt.t += 1;
+        literal_scalar(&outs[6])
+    }
+
+    fn perfopt_train_step(
+        &mut self,
+        layer: &mut FFLayer,
+        head: &mut LinearHead,
+        opt_layer: &mut AdamState,
+        opt_head: &mut AdamState,
+        x: &Matrix,
+        labels: &[u8],
+        lr: f32,
+    ) -> Result<f32> {
+        let entry =
+            self.rt.entry("perfopt_step", layer.d_in(), layer.d_out(), layer.normalize_input)?;
+        let bsz = entry.batch;
+        ensure!(x.rows <= bsz, "perfopt_step: batch {} exceeds artifact batch {bsz}", x.rows);
+        let real = x.rows;
+        let xp = Self::pad_rows(x, bsz);
+        let onehot = Self::onehot(labels, head.w.cols, bsz);
+        let mask = Self::mask(real, bsz);
+
+        let mut inputs = vec![
+            matrix_literal(&layer.w)?,
+            vec_literal(&layer.b),
+            matrix_literal(&head.w)?,
+            vec_literal(&head.b),
+        ];
+        inputs.extend(Self::opt_literals(opt_layer)?);
+        inputs.extend(Self::opt_literals(opt_head)?);
+        inputs.push(scalar_literal((opt_layer.t + 1) as f32));
+        inputs.push(matrix_literal(&xp)?);
+        inputs.push(matrix_literal(&onehot)?);
+        inputs.push(vec_literal(&mask));
+        inputs.push(scalar_literal(lr));
+
+        let outs = self.rt.run(&entry, &inputs)?;
+        ensure!(outs.len() == 13, "perfopt_step: expected 13 outputs, got {}", outs.len());
+        layer.w = literal_matrix(&outs[0], layer.w.rows, layer.w.cols)?;
+        layer.b = literal_vec(&outs[1])?;
+        head.w = literal_matrix(&outs[2], head.w.rows, head.w.cols)?;
+        head.b = literal_vec(&outs[3])?;
+        opt_layer.m_w = literal_matrix(&outs[4], opt_layer.m_w.rows, opt_layer.m_w.cols)?;
+        opt_layer.v_w = literal_matrix(&outs[5], opt_layer.v_w.rows, opt_layer.v_w.cols)?;
+        opt_layer.m_b = literal_vec(&outs[6])?;
+        opt_layer.v_b = literal_vec(&outs[7])?;
+        opt_head.m_w = literal_matrix(&outs[8], opt_head.m_w.rows, opt_head.m_w.cols)?;
+        opt_head.v_w = literal_matrix(&outs[9], opt_head.v_w.rows, opt_head.v_w.cols)?;
+        opt_head.m_b = literal_vec(&outs[10])?;
+        opt_head.v_b = literal_vec(&outs[11])?;
+        opt_layer.t += 1;
+        opt_head.t += 1;
+        literal_scalar(&outs[12])
+    }
+}

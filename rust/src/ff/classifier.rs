@@ -1,0 +1,149 @@
+//! The two prediction modes of §3 / §5.3.
+//!
+//! * **Goodness**: run the input once per candidate label overlay and pick
+//!   the label whose accumulated goodness over all-but-the-first layer is
+//!   highest. Matches the training objective; 10× forward cost.
+//! * **Softmax**: overlay the neutral label, collect normalized activations
+//!   of all-but-the-first layer, and classify with a linear head trained by
+//!   cross-entropy. Single pass; slightly less accurate on MNIST (Table 2).
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::ff::network::FFNetwork;
+use crate::ff::overlay::{overlay_neutral, overlay_uniform_label};
+use crate::ff::LinearHead;
+use crate::tensor::{ops, Matrix};
+
+/// Which classifier the experiment uses (paper Tables 1–3 column axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClassifierMode {
+    /// Per-class goodness accumulation (§3 "Goodness prediction").
+    Goodness,
+    /// Neutral-overlay + linear softmax head (§3 "Softmax prediction").
+    Softmax,
+}
+
+impl std::fmt::Display for ClassifierMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClassifierMode::Goodness => write!(f, "Goodness"),
+            ClassifierMode::Softmax => write!(f, "Softmax"),
+        }
+    }
+}
+
+/// Per-class goodness scores for raw (label-free) inputs `x`:
+/// `scores[i][c] = Σ_{l ≥ 1} g_l(overlay(x_i, c))`.
+///
+/// All but the *first* hidden layer contribute (the first layer mostly
+/// encodes the overlay itself, so it is excluded — §3).
+///
+/// All `classes` overlay variants are stacked into ONE tall batch so each
+/// layer runs a single large matmul instead of `classes` small ones
+/// (§Perf iteration 7: the weight panes amortize over 10× the rows).
+/// Callers chunk `x` (`eval_chunk`), bounding the stacked tensor.
+pub fn goodness_scores(eng: &mut dyn Engine, net: &FFNetwork, x: &Matrix) -> Result<Matrix> {
+    let n = x.rows;
+    let classes = net.classes;
+    // rows [c*n, (c+1)*n) hold overlay class c.
+    let mut stacked = Matrix::zeros(n * classes, x.cols);
+    for c in 0..classes {
+        let block = overlay_uniform_label(x, c as u8, classes);
+        stacked.data[c * n * x.cols..(c + 1) * n * x.cols].copy_from_slice(&block.data);
+    }
+    let mut scores = Matrix::zeros(n, classes);
+    let mut h = stacked;
+    for (l, layer) in net.layers.iter().enumerate() {
+        h = eng.layer_forward(layer, &h)?;
+        if l >= 1 {
+            // mean-of-squares goodness (see engine::native) — also
+            // weights equally-wide layers equally in the accumulation
+            let inv_d = 1.0 / h.cols as f32;
+            let g = ops::row_sumsq(&h);
+            for c in 0..classes {
+                for i in 0..n {
+                    scores.data[i * classes + c] += g[c * n + i] * inv_d;
+                }
+            }
+        }
+    }
+    Ok(scores)
+}
+
+/// Goodness-mode prediction: argmax over [`goodness_scores`].
+pub fn predict_goodness(eng: &mut dyn Engine, net: &FFNetwork, x: &Matrix) -> Result<Vec<u8>> {
+    Ok(ops::argmax_rows(&goodness_scores(eng, net, x)?))
+}
+
+/// Feature vector for the softmax head: neutral overlay, forward pass,
+/// concatenate **length-normalized** activations of layers `1..L`.
+pub fn head_features(eng: &mut dyn Engine, net: &FFNetwork, x: &Matrix) -> Result<Matrix> {
+    let xn = overlay_neutral(x, net.classes);
+    let outs = net.forward_all(eng, &xn)?;
+    let mut feats: Option<Matrix> = None;
+    for out in outs.iter().skip(1) {
+        let n = ops::normalize_rows(out, 1e-8);
+        feats = Some(match feats {
+            None => n,
+            Some(f) => f.hcat(&n),
+        });
+    }
+    Ok(feats.expect("softmax head needs ≥2 layers"))
+}
+
+/// Softmax-mode prediction through a trained head.
+pub fn predict_softmax(
+    eng: &mut dyn Engine,
+    net: &FFNetwork,
+    head: &LinearHead,
+    x: &Matrix,
+) -> Result<Vec<u8>> {
+    let feats = head_features(eng, net, x)?;
+    let logits = eng.head_logits(head, &feats)?;
+    Ok(ops::argmax_rows(&logits))
+}
+
+/// Fraction of `pred` equal to `truth`.
+pub fn accuracy(pred: &[u8], truth: &[u8]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(truth).filter(|(a, b)| a == b).count();
+    hits as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn goodness_scores_shape() {
+        let mut rng = Rng::new(21);
+        let net = FFNetwork::new(&[16, 8, 8], 10, &mut rng);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(5, 16, 0.0, 1.0, &mut rng);
+        let s = goodness_scores(&mut eng, &net, &x).unwrap();
+        assert_eq!((s.rows, s.cols), (5, 10));
+        assert!(s.data.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn head_features_dim() {
+        let mut rng = Rng::new(22);
+        let net = FFNetwork::new(&[16, 8, 6, 4], 10, &mut rng);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(3, 16, 0.0, 1.0, &mut rng);
+        let f = head_features(&mut eng, &net, &x).unwrap();
+        assert_eq!((f.rows, f.cols), (3, 10)); // 6 + 4
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 4]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Parameter containers for FF layers and linear (softmax) heads.
+//!
+//! Deliberately *just data*: all math goes through
+//! [`crate::engine::Engine`] so the same coordinator drives both the native
+//! and the PJRT/XLA implementations.
+
+use crate::tensor::{Matrix, Rng};
+
+/// One fully-connected ReLU layer trained with the FF objective.
+#[derive(Clone, Debug)]
+pub struct FFLayer {
+    /// Weights, `(d_in, d_out)` row-major.
+    pub w: Matrix,
+    /// Bias, `d_out`.
+    pub b: Vec<f32>,
+    /// Whether this layer length-normalizes its input first. First layer:
+    /// `false` (raw overlaid pixels); hidden layers: `true` (Hinton's rule —
+    /// only the *direction* of the previous activity is passed on).
+    pub normalize_input: bool,
+}
+
+impl FFLayer {
+    /// Random init: `W ~ N(0, 1/d_in)`, `b = 0`.
+    pub fn new(d_in: usize, d_out: usize, normalize_input: bool, rng: &mut Rng) -> Self {
+        FFLayer { w: Matrix::randn_scaled(d_in, d_out, rng), b: vec![0.0; d_out], normalize_input }
+    }
+
+    /// Input dimensionality.
+    pub fn d_in(&self) -> usize {
+        self.w.rows
+    }
+
+    /// Output dimensionality.
+    pub fn d_out(&self) -> usize {
+        self.w.cols
+    }
+
+    /// Parameter count (weights + bias).
+    pub fn param_count(&self) -> usize {
+        self.w.rows * self.w.cols + self.b.len()
+    }
+
+    /// Serialized size in bytes on the wire (f32 params + shape header).
+    /// This is what one PFF publish costs — the paper's key communication
+    /// advantage over DFF (which ships *activations* for the whole dataset).
+    pub fn wire_bytes(&self) -> u64 {
+        (self.param_count() * 4 + 16) as u64
+    }
+}
+
+/// A linear classification head (`d_in → classes`), trained with softmax
+/// cross-entropy. Used by the Softmax classifier mode and by every layer of
+/// the Performance-Optimized variant.
+#[derive(Clone, Debug)]
+pub struct LinearHead {
+    /// Weights, `(d_in, classes)`.
+    pub w: Matrix,
+    /// Bias, `classes`.
+    pub b: Vec<f32>,
+}
+
+impl LinearHead {
+    /// Random init, same scaling as layers.
+    pub fn new(d_in: usize, classes: usize, rng: &mut Rng) -> Self {
+        LinearHead { w: Matrix::randn_scaled(d_in, classes, rng), b: vec![0.0; classes] }
+    }
+
+    /// Number of classes.
+    pub fn classes(&self) -> usize {
+        self.w.cols
+    }
+
+    /// Parameter count.
+    pub fn param_count(&self) -> usize {
+        self.w.rows * self.w.cols + self.b.len()
+    }
+}
+
+/// Scalar diagnostics from one FF minibatch step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FFStepStats {
+    /// Mean softplus(θ − g) over positive samples.
+    pub loss_pos: f32,
+    /// Mean softplus(g − θ) over negative samples.
+    pub loss_neg: f32,
+    /// Mean goodness of positive samples.
+    pub goodness_pos: f32,
+    /// Mean goodness of negative samples.
+    pub goodness_neg: f32,
+}
+
+impl FFStepStats {
+    /// Total layer loss (pos + neg terms).
+    pub fn loss(&self) -> f32 {
+        self.loss_pos + self.loss_neg
+    }
+
+    /// Goodness separation margin — the quantity FF training grows.
+    pub fn margin(&self) -> f32 {
+        self.goodness_pos - self.goodness_neg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_shapes_and_counts() {
+        let mut rng = Rng::new(1);
+        let l = FFLayer::new(784, 2000, false, &mut rng);
+        assert_eq!((l.d_in(), l.d_out()), (784, 2000));
+        assert_eq!(l.param_count(), 784 * 2000 + 2000);
+        assert_eq!(l.wire_bytes(), (784 * 2000 + 2000) as u64 * 4 + 16);
+    }
+
+    #[test]
+    fn head_shapes() {
+        let mut rng = Rng::new(2);
+        let h = LinearHead::new(6000, 10, &mut rng);
+        assert_eq!(h.classes(), 10);
+        assert_eq!(h.param_count(), 60010);
+    }
+
+    #[test]
+    fn stats_margin() {
+        let s = FFStepStats { goodness_pos: 5.0, goodness_neg: 2.0, ..Default::default() };
+        assert_eq!(s.margin(), 3.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! The Forward-Forward algorithm (Hinton, 2022) as used by the paper.
+//!
+//! FF trains each layer with two *forward* passes instead of
+//! forward+backward: a **positive** pass on real data (label overlaid on the
+//! input) pushes the layer's *goodness* `g = Σ yⱼ²` above a threshold θ, a
+//! **negative** pass on corrupted data (wrong label overlaid) pushes it
+//! below. Because the objective is layer-local, layers can be trained
+//! independently — the property the paper's pipeline schedulers exploit.
+//!
+//! Submodules:
+//! * [`overlay`] — label embedding into the first `C` input dims.
+//! * [`layer`] — layer/head parameter containers.
+//! * [`network`] — the multi-layer FF network and forward transforms.
+//! * [`negative`] — AdaptiveNEG / RandomNEG / FixedNEG strategies (§5).
+//! * [`classifier`] — Goodness and Softmax prediction modes (§3, §5.3).
+//! * [`perfopt`] — the Performance-Optimized goodness function (§4.4).
+
+pub mod classifier;
+pub mod layer;
+pub mod negative;
+pub mod network;
+pub mod overlay;
+pub mod perfopt;
+
+pub use classifier::{predict_goodness, predict_softmax, ClassifierMode};
+pub use layer::{FFLayer, FFStepStats, LinearHead};
+pub use negative::NegStrategy;
+pub use network::FFNetwork;

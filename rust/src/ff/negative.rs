@@ -1,0 +1,142 @@
+//! Negative-sample label strategies (§5, Table 1 row axis).
+//!
+//! FF's negative pass needs *wrong* labels. How they are picked drives the
+//! accuracy/cost trade-off the paper measures:
+//!
+//! * **AdaptiveNEG** — the *most-predicted incorrect* label under the
+//!   current network, recomputed every chapter. Best accuracy, and the most
+//!   expensive: it costs a full goodness sweep over the training set.
+//! * **RandomNEG** — a fresh random wrong label per sample per chapter.
+//!   Nearly as accurate, much cheaper. Crucially, it is derived from a
+//!   `(seed, chapter)` stream, so in the distributed setting every node
+//!   re-rolls identical labels **without any communication**.
+//! * **FixedNEG** — one random wrong label per sample, chosen once at
+//!   initialization. Cheapest, least accurate (negatives go stale).
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::ff::classifier::goodness_scores;
+use crate::ff::network::FFNetwork;
+use crate::tensor::{Matrix, Rng};
+
+/// Negative-data strategy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NegStrategy {
+    /// Most-predicted incorrect label, refreshed per chapter (§5).
+    Adaptive,
+    /// Random incorrect label, refreshed per chapter.
+    Random,
+    /// Random incorrect label, fixed at start of training.
+    Fixed,
+}
+
+impl std::fmt::Display for NegStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NegStrategy::Adaptive => write!(f, "AdaptiveNEG"),
+            NegStrategy::Random => write!(f, "RandomNEG"),
+            NegStrategy::Fixed => write!(f, "FixedNEG"),
+        }
+    }
+}
+
+/// RNG stream tag for negative-label derivation (see [`Rng::derive`]).
+const NEG_STREAM_BASE: u64 = 0x4E45_4721; // "NEG!"
+
+/// Deterministic wrong labels for `chapter` — the RandomNEG/FixedNEG
+/// primitive. FixedNEG always passes `chapter = 0`.
+pub fn random_wrong_labels(seed: u64, chapter: u32, truth: &[u8], classes: usize) -> Vec<u8> {
+    let mut rng = Rng::derive(seed, NEG_STREAM_BASE ^ u64::from(chapter));
+    truth.iter().map(|&t| rng.wrong_label(t, classes)).collect()
+}
+
+/// AdaptiveNEG labels: for each sample, the incorrect class with the
+/// highest goodness under the current network ("most predicted incorrect
+/// label", §5). Runs in minibatch chunks of `chunk` rows.
+pub fn adaptive_neg_labels(
+    eng: &mut dyn Engine,
+    net: &FFNetwork,
+    x: &Matrix,
+    truth: &[u8],
+    chunk: usize,
+) -> Result<Vec<u8>> {
+    assert_eq!(x.rows, truth.len());
+    let mut out = Vec::with_capacity(truth.len());
+    let mut r0 = 0;
+    while r0 < x.rows {
+        let r1 = (r0 + chunk).min(x.rows);
+        let rows: Vec<usize> = (r0..r1).collect();
+        let xb = x.gather_rows(&rows);
+        let scores = goodness_scores(eng, net, &xb)?;
+        for (i, &t) in truth[r0..r1].iter().enumerate() {
+            let row = scores.row(i);
+            let mut best: Option<usize> = None;
+            for (c, &s) in row.iter().enumerate() {
+                if c == t as usize {
+                    continue;
+                }
+                if best.map_or(true, |b| s > row[b]) {
+                    best = Some(c);
+                }
+            }
+            out.push(best.expect("≥2 classes") as u8);
+        }
+        r0 = r1;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+
+    #[test]
+    fn random_wrong_labels_deterministic_and_wrong() {
+        let truth: Vec<u8> = (0..100).map(|i| (i % 10) as u8).collect();
+        let a = random_wrong_labels(7, 3, &truth, 10);
+        let b = random_wrong_labels(7, 3, &truth, 10);
+        assert_eq!(a, b, "same (seed, chapter) must agree across nodes");
+        let c = random_wrong_labels(7, 4, &truth, 10);
+        assert_ne!(a, c, "different chapters must re-roll");
+        assert!(a.iter().zip(&truth).all(|(n, t)| n != t));
+    }
+
+    #[test]
+    fn fixed_equals_chapter_zero() {
+        let truth = vec![1u8, 5, 9];
+        assert_eq!(
+            random_wrong_labels(11, 0, &truth, 10),
+            random_wrong_labels(11, 0, &truth, 10)
+        );
+    }
+
+    #[test]
+    fn adaptive_labels_never_truth_and_in_range() {
+        let mut rng = Rng::new(31);
+        let net = FFNetwork::new(&[16, 8, 8], 10, &mut rng);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(23, 16, 0.0, 1.0, &mut rng);
+        let truth: Vec<u8> = (0..23).map(|i| (i % 10) as u8).collect();
+        let neg = adaptive_neg_labels(&mut eng, &net, &x, &truth, 8).unwrap();
+        assert_eq!(neg.len(), 23);
+        for (n, t) in neg.iter().zip(&truth) {
+            assert_ne!(n, t);
+            assert!(*n < 10);
+        }
+    }
+
+    #[test]
+    fn adaptive_chunking_invariant() {
+        // Same labels regardless of chunk size.
+        let mut rng = Rng::new(32);
+        let net = FFNetwork::new(&[12, 6, 6], 10, &mut rng);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(17, 12, 0.0, 1.0, &mut rng);
+        let truth: Vec<u8> = (0..17).map(|i| (i % 10) as u8).collect();
+        let a = adaptive_neg_labels(&mut eng, &net, &x, &truth, 4).unwrap();
+        let b = adaptive_neg_labels(&mut eng, &net, &x, &truth, 17).unwrap();
+        assert_eq!(a, b);
+    }
+}

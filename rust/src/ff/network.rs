@@ -1,0 +1,125 @@
+//! The multi-layer FF network: a stack of [`FFLayer`]s plus optional heads.
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::ff::layer::{FFLayer, LinearHead};
+use crate::tensor::{Matrix, Rng};
+
+/// A feed-forward FF network, e.g. the paper's `[784, 2000, 2000, 2000,
+/// 2000]` MNIST architecture (`dims = [784, 2000, 2000, 2000, 2000]`).
+#[derive(Clone, Debug)]
+pub struct FFNetwork {
+    /// The FF-trained layers, input-first.
+    pub layers: Vec<FFLayer>,
+    /// Number of label classes (10 for MNIST/CIFAR-10).
+    pub classes: usize,
+}
+
+impl FFNetwork {
+    /// Build a randomly-initialized network from layer widths
+    /// (`dims[0]` = input dim).
+    ///
+    /// # Panics
+    /// If fewer than two dims are given.
+    pub fn new(dims: &[usize], classes: usize, rng: &mut Rng) -> Self {
+        assert!(dims.len() >= 2, "need at least input + one layer");
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| FFLayer::new(w[0], w[1], i > 0, rng))
+            .collect();
+        FFNetwork { layers, classes }
+    }
+
+    /// Number of trainable FF layers.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total FF parameter count.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Layer widths including the input dim (inverse of [`FFNetwork::new`]).
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = self.layers.iter().map(|l| l.d_in()).collect();
+        d.push(self.layers.last().unwrap().d_out());
+        d
+    }
+
+    /// Forward `x` through layers `[0, upto)`, returning the activation fed
+    /// to layer `upto`. `upto == 0` returns `x` unchanged.
+    pub fn transform_upto(&self, eng: &mut dyn Engine, x: &Matrix, upto: usize) -> Result<Matrix> {
+        let mut h = x.clone();
+        for layer in &self.layers[..upto] {
+            h = eng.layer_forward(layer, &h)?;
+        }
+        Ok(h)
+    }
+
+    /// Forward through every layer, returning all per-layer activations
+    /// (`out[l]` = output of layer `l`). Used by both classifier modes.
+    pub fn forward_all(&self, eng: &mut dyn Engine, x: &Matrix) -> Result<Vec<Matrix>> {
+        let mut outs = Vec::with_capacity(self.layers.len());
+        let mut h = x.clone();
+        for layer in &self.layers {
+            h = eng.layer_forward(layer, &h)?;
+            outs.push(h.clone());
+        }
+        Ok(outs)
+    }
+
+    /// Input dimensionality the softmax classifier head expects:
+    /// concatenated activations of all but the first layer (§3 Prediction).
+    pub fn head_input_dim(&self) -> usize {
+        self.layers.iter().skip(1).map(|l| l.d_out()).sum()
+    }
+
+    /// Fresh softmax head sized for this network.
+    pub fn new_head(&self, rng: &mut Rng) -> LinearHead {
+        LinearHead::new(self.head_input_dim(), self.classes, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+
+    #[test]
+    fn construction_matches_dims() {
+        let mut rng = Rng::new(3);
+        let net = FFNetwork::new(&[784, 100, 100, 100], 10, &mut rng);
+        assert_eq!(net.num_layers(), 3);
+        assert_eq!(net.dims(), vec![784, 100, 100, 100]);
+        assert!(!net.layers[0].normalize_input);
+        assert!(net.layers[1].normalize_input);
+        assert_eq!(net.head_input_dim(), 200);
+    }
+
+    #[test]
+    fn transform_upto_zero_is_identity() {
+        let mut rng = Rng::new(4);
+        let net = FFNetwork::new(&[8, 6, 4], 2, &mut rng);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(3, 8, 0.0, 1.0, &mut rng);
+        let y = net.transform_upto(&mut eng, &x, 0).unwrap();
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn forward_all_shapes() {
+        let mut rng = Rng::new(5);
+        let net = FFNetwork::new(&[8, 6, 4], 2, &mut rng);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(3, 8, 0.0, 1.0, &mut rng);
+        let outs = net.forward_all(&mut eng, &x).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!((outs[0].rows, outs[0].cols), (3, 6));
+        assert_eq!((outs[1].rows, outs[1].cols), (3, 4));
+        // ReLU output is non-negative
+        assert!(outs.iter().all(|m| m.data.iter().all(|&v| v >= 0.0)));
+    }
+}

@@ -1,0 +1,99 @@
+//! Label overlay (§3 "Negative Data").
+//!
+//! MNIST digits have a black border, so Hinton's trick is to *write the
+//! label into the image*: the first `C` pixels become a one-hot label. A
+//! positive sample carries its true label, a negative sample a wrong one,
+//! and at prediction time either all `C` candidates are tried (Goodness
+//! mode) or a neutral `1/C`-ish overlay is used (Softmax mode).
+
+use crate::tensor::Matrix;
+
+/// Value used for every class slot in the neutral overlay (paper: 0.1).
+pub const NEUTRAL_VALUE: f32 = 0.1;
+
+/// Overlay one-hot `labels` onto the first `classes` columns of `x`
+/// (returns a copy; `x` is the raw, label-free data).
+///
+/// # Panics
+/// If `x.cols < classes` or `labels.len() != x.rows`.
+pub fn overlay_labels(x: &Matrix, labels: &[u8], classes: usize) -> Matrix {
+    assert!(x.cols >= classes, "input dim {} < classes {}", x.cols, classes);
+    assert_eq!(x.rows, labels.len());
+    let mut out = x.clone();
+    for (r, &l) in labels.iter().enumerate() {
+        let row = out.row_mut(r);
+        row[..classes].fill(0.0);
+        row[l as usize] = 1.0;
+    }
+    out
+}
+
+/// Overlay the same label `l` onto every row — used by Goodness prediction
+/// which scores each candidate class in turn.
+pub fn overlay_uniform_label(x: &Matrix, l: u8, classes: usize) -> Matrix {
+    assert!(x.cols >= classes);
+    let mut out = x.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        row[..classes].fill(0.0);
+        row[l as usize] = 1.0;
+    }
+    out
+}
+
+/// Overlay the neutral label (all slots = [`NEUTRAL_VALUE`]) — Softmax
+/// prediction path (§3 "Prediction").
+pub fn overlay_neutral(x: &Matrix, classes: usize) -> Matrix {
+    assert!(x.cols >= classes);
+    let mut out = x.clone();
+    for r in 0..out.rows {
+        out.row_mut(r)[..classes].fill(NEUTRAL_VALUE);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Matrix {
+        Matrix::from_vec(2, 12, (0..24).map(|i| i as f32 / 24.0).collect())
+    }
+
+    #[test]
+    fn overlay_writes_onehot_and_preserves_rest() {
+        let x = base();
+        let o = overlay_labels(&x, &[3, 0], 10);
+        assert_eq!(o.row(0)[..10], [0., 0., 0., 1., 0., 0., 0., 0., 0., 0.]);
+        assert_eq!(o.row(1)[..10], [1., 0., 0., 0., 0., 0., 0., 0., 0., 0.]);
+        // non-overlay region untouched
+        assert_eq!(o.row(0)[10..], x.row(0)[10..]);
+        assert_eq!(o.row(1)[10..], x.row(1)[10..]);
+        // original not mutated
+        assert_ne!(x.row(0)[..10], o.row(0)[..10]);
+    }
+
+    #[test]
+    fn uniform_label_same_for_all_rows() {
+        let o = overlay_uniform_label(&base(), 7, 10);
+        for r in 0..2 {
+            assert_eq!(o.row(r)[7], 1.0);
+            assert_eq!(o.row(r)[..7].iter().sum::<f32>(), 0.0);
+        }
+    }
+
+    #[test]
+    fn neutral_is_point_one() {
+        let o = overlay_neutral(&base(), 10);
+        for r in 0..2 {
+            assert!(o.row(r)[..10].iter().all(|&v| (v - 0.1).abs() < 1e-7));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "input dim")]
+    fn overlay_rejects_narrow_input() {
+        let x = Matrix::zeros(1, 5);
+        overlay_labels(&x, &[0], 10);
+    }
+}

@@ -1,0 +1,102 @@
+//! Performance-Optimized PFF (§4.4, Figures 7–8, Tables 4–5).
+//!
+//! The paper replaces the goodness function with *classification accuracy*:
+//! each FF layer gets its own softmax head, and layer+head are trained by
+//! backprop **local to that pair** (gradients stop at the layer's input).
+//! There is **no negative data**; inputs carry the neutral overlay. The
+//! pipeline structure is unchanged — a "layer" stage just trains
+//! (layer, head) with cross-entropy instead of the two-pass FF objective.
+//!
+//! Prediction (Table 4's two rows):
+//! * *only last layer* — argmax of the last layer's head.
+//! * *using all layers* — sum of softmax probabilities across every head.
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::ff::network::FFNetwork;
+use crate::ff::overlay::overlay_neutral;
+use crate::ff::LinearHead;
+use crate::tensor::{ops, Matrix, Rng};
+
+/// Which heads vote at prediction time (Table 4 / Table 5 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PerfOptReadout {
+    /// Use only the last layer's head.
+    LastLayer,
+    /// Sum softmax probabilities over all per-layer heads.
+    AllLayers,
+}
+
+impl std::fmt::Display for PerfOptReadout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PerfOptReadout::LastLayer => write!(f, "only last layer"),
+            PerfOptReadout::AllLayers => write!(f, "using all layers"),
+        }
+    }
+}
+
+/// Fresh per-layer heads for a network (one per FF layer).
+pub fn new_heads(net: &FFNetwork, rng: &mut Rng) -> Vec<LinearHead> {
+    net.layers.iter().map(|l| LinearHead::new(l.d_out(), net.classes, rng)).collect()
+}
+
+/// Predict with trained per-layer heads.
+pub fn predict(
+    eng: &mut dyn Engine,
+    net: &FFNetwork,
+    heads: &[LinearHead],
+    x: &Matrix,
+    readout: PerfOptReadout,
+) -> Result<Vec<u8>> {
+    assert_eq!(heads.len(), net.num_layers());
+    let xn = overlay_neutral(x, net.classes);
+    let outs = net.forward_all(eng, &xn)?;
+    match readout {
+        PerfOptReadout::LastLayer => {
+            let logits = eng.head_logits(heads.last().unwrap(), outs.last().unwrap())?;
+            Ok(ops::argmax_rows(&logits))
+        }
+        PerfOptReadout::AllLayers => {
+            let mut vote = Matrix::zeros(x.rows, net.classes);
+            for (h, out) in heads.iter().zip(&outs) {
+                let p = ops::softmax_rows(&eng.head_logits(h, out)?);
+                for (v, pv) in vote.data.iter_mut().zip(&p.data) {
+                    *v += pv;
+                }
+            }
+            Ok(ops::argmax_rows(&vote))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+
+    #[test]
+    fn heads_match_layer_widths() {
+        let mut rng = Rng::new(41);
+        let net = FFNetwork::new(&[16, 12, 8], 10, &mut rng);
+        let heads = new_heads(&net, &mut rng);
+        assert_eq!(heads.len(), 2);
+        assert_eq!(heads[0].w.rows, 12);
+        assert_eq!(heads[1].w.rows, 8);
+    }
+
+    #[test]
+    fn predict_both_readouts_in_range() {
+        let mut rng = Rng::new(42);
+        let net = FFNetwork::new(&[16, 12, 8], 10, &mut rng);
+        let heads = new_heads(&net, &mut rng);
+        let mut eng = NativeEngine::new();
+        let x = Matrix::rand_uniform(9, 16, 0.0, 1.0, &mut rng);
+        for ro in [PerfOptReadout::LastLayer, PerfOptReadout::AllLayers] {
+            let p = predict(&mut eng, &net, &heads, &x, ro).unwrap();
+            assert_eq!(p.len(), 9);
+            assert!(p.iter().all(|&c| c < 10));
+        }
+    }
+}

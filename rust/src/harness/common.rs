@@ -1,0 +1,198 @@
+//! Shared harness plumbing: scales, measured-run helper, DES helper.
+
+use anyhow::Result;
+
+use crate::config::{EngineKind, ExperimentConfig, Scheduler};
+use crate::coordinator::{run_experiment_with_data, ExperimentReport};
+use crate::data::{load_dataset, DataBundle, DatasetKind};
+use crate::ff::{ClassifierMode, NegStrategy};
+use crate::sim::schedules::{SimParams, SimVariant};
+use crate::sim::{build_schedule, simulate, CostModel};
+
+/// Workload extents for measured runs.
+#[derive(Clone, Debug)]
+pub struct Scale {
+    /// Layer widths (input first).
+    pub dims: Vec<usize>,
+    /// Train/test example counts.
+    pub train_n: usize,
+    /// Test examples.
+    pub test_n: usize,
+    /// Epochs E.
+    pub epochs: u32,
+    /// Splits S.
+    pub splits: u32,
+    /// Minibatch size.
+    pub batch: usize,
+    /// DFF baseline rounds (DFF needs ~10× the epochs, §6).
+    pub dff_rounds: u32,
+}
+
+impl Scale {
+    /// Bench-default scale: full code paths, ~seconds per run on 1 core.
+    /// Keeps the paper's L=4 so Single-Layer uses N=4. 80 epochs — FF
+    /// needs them (see `ExperimentConfig::tiny`).
+    pub fn quick() -> Scale {
+        Scale {
+            dims: vec![784, 64, 64, 64, 64],
+            train_n: 512,
+            test_n: 256,
+            epochs: 160,
+            splits: 8,
+            batch: 64,
+            dff_rounds: 320,
+        }
+    }
+
+    /// Larger reduced scale for EXPERIMENTS.md headline runs
+    /// (~1 min per experiment on this host).
+    pub fn reduced() -> Scale {
+        Scale {
+            dims: vec![784, 256, 256, 256, 256],
+            train_n: 2048,
+            test_n: 512,
+            epochs: 64,
+            splits: 8,
+            batch: 64,
+            dff_rounds: 320,
+        }
+    }
+
+    /// CIFAR-geometry variant of this scale (3072-dim input).
+    pub fn cifarized(&self) -> Scale {
+        let mut s = self.clone();
+        s.dims[0] = 3072;
+        s
+    }
+
+    /// Base config at this scale.
+    pub fn config(&self, dataset: DatasetKind, engine: EngineKind) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset = dataset;
+        cfg.dims = self.dims.clone();
+        cfg.train_n = self.train_n;
+        cfg.test_n = self.test_n;
+        cfg.epochs = self.epochs;
+        cfg.splits = self.splits;
+        cfg.batch = self.batch;
+        cfg.engine = engine;
+        cfg
+    }
+}
+
+/// One measured experiment variant (a row of a table).
+#[derive(Clone, Debug)]
+pub struct MeasuredRun {
+    /// Row label, e.g. "AdaptiveNEG-Goodness".
+    pub model: String,
+    /// Implementation label ("Sequential" / "Single-Layer" / "All-Layers").
+    pub implementation: String,
+    /// The report.
+    pub report: ExperimentReport,
+}
+
+/// Configure scheduler + nodes for an implementation label.
+pub fn apply_impl(cfg: &mut ExperimentConfig, implementation: Scheduler) {
+    cfg.scheduler = implementation;
+    cfg.nodes = match implementation {
+        Scheduler::Sequential => 1,
+        Scheduler::SingleLayer => cfg.num_layers(),
+        // Paper uses 4 nodes for All-Layers on the 4-layer net (and notes
+        // 5 for the softmax pipeline); we use the largest N ≤ L that
+        // divides the split count (All-Layers requires S % N == 0).
+        Scheduler::AllLayers | Scheduler::Federated => {
+            let l = cfg.num_layers();
+            (1..=l).rev().find(|n| cfg.splits as usize % n == 0).unwrap_or(1)
+        }
+    };
+}
+
+/// Run one measured variant.
+pub fn run_measured(
+    bundle: &DataBundle,
+    base: &ExperimentConfig,
+    model: &str,
+    implementation: Scheduler,
+    neg: NegStrategy,
+    classifier: ClassifierMode,
+    perfopt: bool,
+) -> Result<MeasuredRun> {
+    let mut cfg = base.clone();
+    cfg.name = format!("{model}/{implementation}");
+    cfg.neg = neg;
+    cfg.classifier = classifier;
+    cfg.perfopt = perfopt;
+    apply_impl(&mut cfg, implementation);
+    let report = run_experiment_with_data(&cfg, bundle)?;
+    Ok(MeasuredRun {
+        model: model.to_string(),
+        implementation: implementation.to_string(),
+        report,
+    })
+}
+
+/// Load the bundle for a scale once.
+pub fn load_bundle(scale: &Scale, dataset: DatasetKind, seed: u64) -> Result<DataBundle> {
+    load_dataset(dataset, scale.train_n, scale.test_n, seed)
+}
+
+/// DES makespan (seconds) of a variant at the paper's full scale.
+pub fn des_paper_time(
+    variant: SimVariant,
+    neg: NegStrategy,
+    softmax_head: bool,
+    perfopt: bool,
+    cifar: bool,
+) -> f64 {
+    let mut cfg = ExperimentConfig::paper_mnist();
+    if cifar {
+        cfg.dims[0] = 3072;
+        cfg.train_n = 50_000;
+    }
+    let cm = CostModel::paper_testbed(&cfg);
+    let params = SimParams { nodes: 4, neg, softmax_head, perfopt };
+    let tasks = build_schedule(variant, &cm, &params);
+    simulate(&tasks).makespan
+}
+
+/// Scheduler → simulator variant mapping.
+pub fn sim_variant(s: Scheduler) -> SimVariant {
+    match s {
+        Scheduler::Sequential => SimVariant::SequentialFF,
+        Scheduler::SingleLayer => SimVariant::SingleLayerPFF,
+        Scheduler::AllLayers => SimVariant::AllLayersPFF,
+        Scheduler::Federated => SimVariant::FederatedPFF,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_validate() {
+        for s in [Scale::quick(), Scale::reduced()] {
+            let cfg = s.config(DatasetKind::SynthMnist, EngineKind::Native);
+            cfg.clone().validated().unwrap();
+            assert_eq!(cfg.num_layers(), 4);
+        }
+        assert_eq!(Scale::quick().cifarized().dims[0], 3072);
+    }
+
+    #[test]
+    fn apply_impl_sets_nodes() {
+        let s = Scale::quick();
+        let mut cfg = s.config(DatasetKind::SynthMnist, EngineKind::Native);
+        apply_impl(&mut cfg, Scheduler::SingleLayer);
+        assert_eq!(cfg.nodes, 4);
+        apply_impl(&mut cfg, Scheduler::Sequential);
+        assert_eq!(cfg.nodes, 1);
+    }
+
+    #[test]
+    fn des_paper_times_ordered() {
+        let seq = des_paper_time(SimVariant::SequentialFF, NegStrategy::Adaptive, false, false, false);
+        let all = des_paper_time(SimVariant::AllLayersPFF, NegStrategy::Adaptive, false, false, false);
+        assert!(seq > 2.0 * all, "seq {seq:.0}s vs all-layers {all:.0}s");
+    }
+}

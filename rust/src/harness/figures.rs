@@ -1,0 +1,136 @@
+//! Figures 1–6: schedule diagrams (ASCII Gantt from the DES) and the
+//! split-count study of Figure 3.
+
+use anyhow::Result;
+
+use crate::config::{EngineKind, ExperimentConfig, Scheduler};
+use crate::coordinator::run_experiment_with_data;
+use crate::data::DatasetKind;
+use crate::ff::NegStrategy;
+use crate::harness::common::{load_bundle, Scale};
+use crate::sim::cost::CostModel;
+use crate::sim::gantt;
+use crate::sim::schedules::{build_schedule, SimParams, SimVariant};
+use crate::sim::simulate;
+
+/// Small config for legible schedule diagrams (3 layers, like the paper's
+/// figures).
+fn figure_cfg(splits: u32) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_mnist();
+    cfg.dims = vec![784, 2000, 2000, 2000];
+    cfg.splits = splits;
+    cfg.epochs = splits; // C = 1
+    cfg
+}
+
+fn render(variant: SimVariant, nodes: usize, splits: u32, neg: NegStrategy) -> String {
+    let cfg = figure_cfg(splits);
+    let cm = CostModel::paper_testbed(&cfg);
+    let p = SimParams { nodes, neg, softmax_head: false, perfopt: false };
+    let tasks = build_schedule(variant, &cm, &p);
+    let result = simulate(&tasks);
+    format!("{}\n{}", gantt::summary_line(&variant.to_string(), &result), gantt::render(&tasks, &result, 96))
+}
+
+/// Figure 1 — backprop pipeline bubbles (3 stages).
+pub fn figure1() -> String {
+    render(SimVariant::BackpropPipeline, 3, 6, NegStrategy::Random)
+}
+
+/// Figure 2 — FF parallelization (3 nodes, no backward dependencies).
+pub fn figure2() -> String {
+    render(SimVariant::AllLayersPFF, 3, 6, NegStrategy::Random)
+}
+
+/// Figure 4 — Single-Layer PFF, 3 layers × 3 splits.
+pub fn figure4() -> String {
+    render(SimVariant::SingleLayerPFF, 3, 3, NegStrategy::Random)
+}
+
+/// Figure 5 — All-Layers PFF, 3 layers × 6 splits.
+pub fn figure5() -> String {
+    render(SimVariant::AllLayersPFF, 3, 6, NegStrategy::Random)
+}
+
+/// Figure 6 — Federated PFF, 3 layers × 6 splits.
+pub fn figure6() -> String {
+    render(SimVariant::FederatedPFF, 3, 6, NegStrategy::Random)
+}
+
+/// Figure 3 — the split-count study: accuracy of split=1 (each layer
+/// trained to completion before the next) vs split=S (fine-grained
+/// chapters), measured end-to-end at `scale`. Returns (S, accuracy) pairs.
+pub fn figure3_measured(
+    scale: &Scale,
+    engine: EngineKind,
+    seed: u64,
+    split_values: &[u32],
+) -> Result<Vec<(u32, f64)>> {
+    let bundle = load_bundle(scale, DatasetKind::SynthMnist, seed)?;
+    let mut out = Vec::new();
+    for &s in split_values {
+        let mut cfg = scale.config(DatasetKind::SynthMnist, engine);
+        cfg.seed = seed;
+        cfg.name = format!("fig3-S{s}");
+        cfg.scheduler = Scheduler::Sequential;
+        cfg.neg = NegStrategy::Random;
+        cfg.splits = s;
+        // keep E divisible by S
+        cfg.epochs = cfg.epochs.max(s);
+        if cfg.epochs % s != 0 {
+            cfg.epochs = s * (cfg.epochs / s + 1);
+        }
+        let rep = run_experiment_with_data(&cfg, &bundle)?;
+        out.push((s, rep.test_accuracy));
+    }
+    Ok(out)
+}
+
+/// All schedule figures as one printable bundle.
+pub fn all_schedule_figures() -> String {
+    let mut s = String::new();
+    s.push_str("── Figure 1: backprop pipeline (F/B dependency bubbles) ──\n");
+    s.push_str(&figure1());
+    s.push_str("\n── Figure 2: FF parallelization (no backward deps) ──\n");
+    s.push_str(&figure2());
+    s.push_str("\n── Figure 4: Single-Layer PFF (3 layers, 3 splits) ──\n");
+    s.push_str(&figure4());
+    s.push_str("\n── Figure 5: All-Layers PFF (3 layers, 6 splits) ──\n");
+    s.push_str(&figure5());
+    s.push_str("\n── Figure 6: Federated PFF (3 layers, 6 splits) ──\n");
+    s.push_str(&figure6());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_figures_render() {
+        let all = all_schedule_figures();
+        for fig in ["Figure 1", "Figure 2", "Figure 4", "Figure 5", "Figure 6"] {
+            assert!(all.contains(fig), "missing {fig}");
+        }
+        assert!(all.contains("node  1"));
+        assert!(all.contains("legend"));
+    }
+
+    #[test]
+    fn figure3_more_splits_not_worse() {
+        // The paper's Figure 3 claim: fine-grained splits help accuracy.
+        let mut scale = Scale::quick();
+        scale.dims = vec![784, 48, 48, 48];
+        scale.train_n = 384;
+        scale.test_n = 192;
+        scale.epochs = 32;
+        scale.splits = 8;
+        let pts = figure3_measured(&scale, EngineKind::Native, 9, &[1, 4]).unwrap();
+        assert_eq!(pts.len(), 2);
+        let (a1, a4) = (pts[0].1, pts[1].1);
+        assert!(
+            a4 >= a1 - 0.05,
+            "split=4 ({a4:.3}) should not be clearly worse than split=1 ({a1:.3})"
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Experiment harness: one driver per paper table/figure.
+//!
+//! Every driver produces two kinds of evidence, printed side by side with
+//! the paper's numbers:
+//!
+//! 1. **Measured** — a real end-to-end run of the full stack at reduced
+//!    scale on this host (accuracy is real; timing is per-node busy time
+//!    plus the modeled makespan, since one core cannot run 4 nodes in
+//!    parallel).
+//! 2. **DES** — the discrete-event simulation at the paper's full scale
+//!    (`[784, 2000×4]`, E = S = 100), which carries the timing claims.
+//!
+//! Benches (`rust/benches/table*.rs`) and the CLI (`pff table1` …) both
+//! call these.
+
+pub mod common;
+pub mod figures;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+pub use common::{MeasuredRun, Scale};

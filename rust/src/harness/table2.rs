@@ -1,0 +1,100 @@
+//! Table 2 — Classifier-mode comparison for AdaptiveNEG: Goodness vs
+//! Softmax across the three implementations.
+
+use anyhow::Result;
+
+use crate::bench_util::{print_table, Row};
+use crate::config::{EngineKind, Scheduler};
+use crate::data::DatasetKind;
+use crate::ff::{ClassifierMode, NegStrategy};
+use crate::harness::common::{des_paper_time, load_bundle, run_measured, sim_variant, Scale};
+use crate::row;
+
+/// Paper Table 2 reference: (model, impl, time_s, accuracy_%).
+pub const PAPER: &[(&str, &str, f64, f64)] = &[
+    ("AdaptiveNEG-Goodness", "Sequential", 11_190.72, 98.52),
+    ("AdaptiveNEG-Goodness", "Single-Layer", 5_254.87, 98.43),
+    ("AdaptiveNEG-Goodness", "All-Layers", 2_980.76, 98.51),
+    ("AdaptiveNEG-Softmax", "Sequential", 8_365.96, 98.38),
+    ("AdaptiveNEG-Softmax", "Single-Layer", 2_471.27, 98.31),
+    ("AdaptiveNEG-Softmax", "All-Layers", 1_886.42, 98.30),
+];
+
+/// Run Table 2 at `scale`; prints and returns rows.
+pub fn run(scale: &Scale, engine: EngineKind, seed: u64) -> Result<Vec<Row>> {
+    let bundle = load_bundle(scale, DatasetKind::SynthMnist, seed)?;
+    let mut base = scale.config(DatasetKind::SynthMnist, engine);
+    base.seed = seed;
+
+    let classifiers =
+        [("AdaptiveNEG-Goodness", ClassifierMode::Goodness), ("AdaptiveNEG-Softmax", ClassifierMode::Softmax)];
+    let impls = [Scheduler::Sequential, Scheduler::SingleLayer, Scheduler::AllLayers];
+
+    let mut rows = Vec::new();
+    for (model, classifier) in classifiers {
+        for implementation in impls {
+            let m = run_measured(
+                &bundle,
+                &base,
+                model,
+                implementation,
+                NegStrategy::Adaptive,
+                classifier,
+                false,
+            )?;
+            let des = des_paper_time(
+                sim_variant(implementation),
+                NegStrategy::Adaptive,
+                classifier == ClassifierMode::Softmax,
+                false,
+                false,
+            );
+            let paper = PAPER
+                .iter()
+                .find(|(pm, pi, _, _)| *pm == model && *pi == implementation.to_string())
+                .copied();
+            rows.push(row![
+                model,
+                implementation,
+                format!("{:.2}", m.report.test_accuracy * 100.0),
+                format!("{:.1}", m.report.modeled.modeled_makespan),
+                format!("{:.0}", des),
+                paper.map_or("-".into(), |(_, _, _, a)| format!("{a:.2}")),
+                paper.map_or("-".into(), |(_, _, t, _)| format!("{t:.0}")),
+            ]);
+        }
+    }
+    print_table(
+        "Table 2 — Classifier mode for AdaptiveNEG",
+        &[
+            "model",
+            "impl",
+            "acc% (measured)",
+            "time_s (measured-modeled)",
+            "time_s (DES @paper scale)",
+            "paper acc%",
+            "paper time_s",
+        ],
+        &rows,
+    );
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_runs_and_softmax_trains_head() {
+        let mut scale = Scale::quick();
+        scale.train_n = 384;
+        scale.test_n = 192;
+        scale.epochs = 96; // adaptive sweeps are the cost here
+        let rows = run(&scale, EngineKind::Native, 7).unwrap();
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            let acc: f64 = r.cells[2].parse().unwrap();
+            assert!(acc > 12.0, "{}/{} too weak: {acc}", r.cells[0], r.cells[1]);
+        }
+    }
+}

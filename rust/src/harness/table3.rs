@@ -1,0 +1,99 @@
+//! Table 3 — Classifier-mode comparison for RandomNEG (the proposed
+//! balanced model is RandomNEG-Softmax All-Layers).
+
+use anyhow::Result;
+
+use crate::bench_util::{print_table, Row};
+use crate::config::{EngineKind, Scheduler};
+use crate::data::DatasetKind;
+use crate::ff::{ClassifierMode, NegStrategy};
+use crate::harness::common::{des_paper_time, load_bundle, run_measured, sim_variant, Scale};
+use crate::row;
+
+/// Paper Table 3 reference: (model, impl, time_s, accuracy_%).
+pub const PAPER: &[(&str, &str, f64, f64)] = &[
+    ("RandomNEG-Goodness", "Sequential", 7_178.71, 98.33),
+    ("RandomNEG-Goodness", "Single-Layer", 1_974.15, 98.26),
+    ("RandomNEG-Goodness", "All-Layers", 2_008.25, 98.17),
+    ("RandomNEG-Softmax", "Sequential", 8_104.96, 98.48),
+    ("RandomNEG-Softmax", "Single-Layer", 1_891.86, 98.31),
+    ("RandomNEG-Softmax", "All-Layers", 1_786.30, 98.33),
+];
+
+/// Run Table 3 at `scale`; prints and returns rows.
+pub fn run(scale: &Scale, engine: EngineKind, seed: u64) -> Result<Vec<Row>> {
+    let bundle = load_bundle(scale, DatasetKind::SynthMnist, seed)?;
+    let mut base = scale.config(DatasetKind::SynthMnist, engine);
+    base.seed = seed;
+
+    let classifiers =
+        [("RandomNEG-Goodness", ClassifierMode::Goodness), ("RandomNEG-Softmax", ClassifierMode::Softmax)];
+    let impls = [Scheduler::Sequential, Scheduler::SingleLayer, Scheduler::AllLayers];
+
+    let mut rows = Vec::new();
+    for (model, classifier) in classifiers {
+        for implementation in impls {
+            let m = run_measured(
+                &bundle,
+                &base,
+                model,
+                implementation,
+                NegStrategy::Random,
+                classifier,
+                false,
+            )?;
+            let des = des_paper_time(
+                sim_variant(implementation),
+                NegStrategy::Random,
+                classifier == ClassifierMode::Softmax,
+                false,
+                false,
+            );
+            let paper = PAPER
+                .iter()
+                .find(|(pm, pi, _, _)| *pm == model && *pi == implementation.to_string())
+                .copied();
+            rows.push(row![
+                model,
+                implementation,
+                format!("{:.2}", m.report.test_accuracy * 100.0),
+                format!("{:.1}", m.report.modeled.modeled_makespan),
+                format!("{:.0}", des),
+                paper.map_or("-".into(), |(_, _, _, a)| format!("{a:.2}")),
+                paper.map_or("-".into(), |(_, _, t, _)| format!("{t:.0}")),
+            ]);
+        }
+    }
+    print_table(
+        "Table 3 — Classifier mode for RandomNEG",
+        &[
+            "model",
+            "impl",
+            "acc% (measured)",
+            "time_s (measured-modeled)",
+            "time_s (DES @paper scale)",
+            "paper acc%",
+            "paper time_s",
+        ],
+        &rows,
+    );
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_runs_all_rows() {
+        let mut scale = Scale::quick();
+        scale.train_n = 384;
+        scale.test_n = 192;
+        let rows = run(&scale, EngineKind::Native, 11).unwrap();
+        assert_eq!(rows.len(), 6);
+        // DES shape: RandomNEG Sequential must be much slower than the
+        // pipelined variants at paper scale.
+        let des: Vec<f64> = rows.iter().map(|r| r.cells[4].parse().unwrap()).collect();
+        assert!(des[0] > 2.0 * des[2], "seq {} vs all-layers {}", des[0], des[2]);
+    }
+}

@@ -1,0 +1,69 @@
+//! # PFF — Pipeline Forward-Forward distributed training
+//!
+//! Reproduction of *"Going Forward-Forward in Distributed Deep Learning"*
+//! (Aktemur et al., 2024): Hinton's Forward-Forward (FF) algorithm trained
+//! layer-locally and pipelined across compute nodes.
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) implement the FF
+//!   compute hot-spot (fused normalize→matmul→ReLU forward, goodness
+//!   reduction, local gradient, Adam).
+//! * **L2** — a JAX model (`python/compile/model.py`) composes the kernels
+//!   into whole train/predict steps, lowered **once** to HLO text artifacts
+//!   by `python/compile/aot.py`.
+//! * **L3** — this crate: loads the artifacts through PJRT ([`runtime`]),
+//!   and schedules them across nodes with the paper's pipeline algorithms
+//!   ([`coordinator`]). Python never runs on the training path.
+//!
+//! ## Quick tour
+//!
+//! * [`tensor`] — minimal dense f32 matrix substrate (blocked matmul, Adam,
+//!   deterministic RNG) used by the native engine and data generators.
+//! * [`data`] — MNIST/CIFAR loaders + deterministic synthetic stand-ins.
+//! * [`ff`] — the Forward-Forward algorithm itself: goodness, label
+//!   overlays, negative-sample strategies, classifiers, Performance-
+//!   Optimized (local-BP head) layers.
+//! * [`engine`] — the compute contract ([`engine::Engine`]) with two
+//!   implementations: pure-Rust [`engine::NativeEngine`] and PJRT-backed
+//!   [`engine::XlaEngine`].
+//! * [`coordinator`] — the paper's contribution: Sequential / Single-Layer
+//!   / All-Layers / Federated PFF schedulers over a chapter-versioned
+//!   parameter store, with per-node busy/idle metrics.
+//! * [`transport`] — in-process channels and a real TCP wire (length-
+//!   prefixed, hand-rolled codec) for the parameter store.
+//! * [`sim`] — discrete-event pipeline simulator regenerating the paper's
+//!   figures (schedules/Gantt) and full-scale timing tables.
+//! * [`baselines`] — DFF [11] and backpropagation-pipeline comparators.
+//! * [`harness`] — drivers that regenerate every table and figure.
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use pff::config::ExperimentConfig;
+//! use pff::coordinator::run_experiment;
+//!
+//! let mut cfg = ExperimentConfig::reduced_mnist();
+//! cfg.scheduler = pff::config::Scheduler::AllLayers;
+//! cfg.nodes = 4;
+//! let report = run_experiment(&cfg).unwrap();
+//! println!("accuracy = {:.2}%", report.test_accuracy * 100.0);
+//! ```
+
+pub mod bench_util;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod ff;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod testing;
+pub mod transport;
+
+pub use config::ExperimentConfig;
+pub use coordinator::run_experiment;

@@ -1,0 +1,256 @@
+//! `pff` — launcher CLI for the Pipeline Forward-Forward framework.
+//!
+//! ```text
+//! pff train   [--config FILE] [--key value ...]   run one experiment
+//! pff table1..table5 [--scale quick|reduced] [--engine native|xla]
+//! pff figures                                     render Figures 1–6
+//! pff fig3    [--scale quick|reduced]             split-count study
+//! pff simulate --variant all-layers [--nodes N]   DES at paper scale
+//! pff inspect-artifacts [--artifact_dir DIR]      list AOT artifacts
+//! pff help
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use pff::config::{EngineKind, ExperimentConfig};
+use pff::coordinator::run_experiment;
+use pff::ff::NegStrategy;
+use pff::harness::{common, figures, table1, table2, table3, table4, table5, Scale};
+use pff::sim::schedules::{SimParams, SimVariant};
+use pff::sim::{build_schedule, gantt, simulate, CostModel};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "table1" => cmd_table(rest, 1),
+        "table2" => cmd_table(rest, 2),
+        "table3" => cmd_table(rest, 3),
+        "table4" => cmd_table(rest, 4),
+        "table5" => cmd_table(rest, 5),
+        "figures" => {
+            println!("{}", figures::all_schedule_figures());
+            Ok(())
+        }
+        "fig3" => cmd_fig3(rest),
+        "simulate" => cmd_simulate(rest),
+        "inspect-artifacts" => cmd_inspect(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `pff help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "pff — Pipeline Forward-Forward distributed training\n\n\
+         commands:\n\
+         \u{20}  train              run one experiment (--config FILE, --key value overrides)\n\
+         \u{20}  table1..table5     reproduce a paper table (--scale quick|reduced, --engine native|xla)\n\
+         \u{20}  figures            render Figures 1/2/4/5/6 (DES Gantt charts)\n\
+         \u{20}  fig3               split-count accuracy study (Figure 3)\n\
+         \u{20}  simulate           DES one schedule at paper scale (--variant, --nodes, --neg)\n\
+         \u{20}  inspect-artifacts  list AOT artifacts and compile them\n\n\
+         config keys (train): scheduler, neg, classifier, perfopt, dims, epochs, splits,\n\
+         \u{20}  nodes, batch, dataset, engine, transport, seed, theta, lr_ff, lr_head, ...\n"
+    );
+}
+
+/// Split `--config FILE` off an arg list.
+fn split_config(args: &[String]) -> Result<(Option<String>, Vec<String>)> {
+    let mut cfg_file = None;
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--config" {
+            cfg_file = Some(args.get(i + 1).context("--config needs a path")?.clone());
+            i += 2;
+        } else {
+            rest.push(args[i].clone());
+            i += 1;
+        }
+    }
+    Ok((cfg_file, rest))
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let (cfg_file, rest) = split_config(args)?;
+    let mut cfg = match cfg_file {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::reduced_mnist(),
+    };
+    cfg.apply_cli(&rest)?;
+    let report = run_experiment(&cfg)?;
+    println!("{}", report.summary());
+    println!("\ntraining curve:\n{}", report.curve.render(12));
+    for n in &report.node_reports {
+        println!("node {}: busy {:.2}s, waiting {:.2}s", n.node, n.busy(), n.waiting());
+    }
+    println!(
+        "comm: {} puts / {} gets, {:.2} MB published",
+        report.comm.puts,
+        report.comm.gets,
+        report.comm.bytes_put as f64 / 1e6
+    );
+    Ok(())
+}
+
+/// Parse common harness flags: --scale, --engine, --seed.
+fn harness_opts(args: &[String]) -> Result<(Scale, EngineKind, u64)> {
+    let mut scale = Scale::quick();
+    let mut engine = EngineKind::Native;
+    let mut seed = 42u64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--scale" => {
+                let v = args.get(i + 1).context("--scale needs a value")?;
+                scale = match v.as_str() {
+                    "quick" => Scale::quick(),
+                    "reduced" => Scale::reduced(),
+                    other => bail!("unknown scale '{other}'"),
+                };
+                i += 2;
+            }
+            "--engine" => {
+                engine = args.get(i + 1).context("--engine needs a value")?.parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                seed = args.get(i + 1).context("--seed needs a value")?.parse()?;
+                i += 2;
+            }
+            other => bail!("unknown flag '{other}'"),
+        }
+    }
+    Ok((scale, engine, seed))
+}
+
+fn cmd_table(args: &[String], which: u8) -> Result<()> {
+    let (scale, engine, seed) = harness_opts(args)?;
+    match which {
+        1 => table1::run(&scale, engine, seed).map(|_| ()),
+        2 => table2::run(&scale, engine, seed).map(|_| ()),
+        3 => table3::run(&scale, engine, seed).map(|_| ()),
+        4 => table4::run(&scale, engine, seed).map(|_| ()),
+        5 => table5::run(&scale, engine, seed).map(|_| ()),
+        _ => unreachable!(),
+    }
+}
+
+fn cmd_fig3(args: &[String]) -> Result<()> {
+    let (scale, engine, seed) = harness_opts(args)?;
+    let pts = figures::figure3_measured(&scale, engine, seed, &[1, 2, 4, scale.splits])?;
+    println!("Figure 3 — accuracy vs split count (Sequential, RandomNEG):");
+    for (s, acc) in pts {
+        println!("  S = {s:<4} accuracy = {:.2}%", acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let mut variant = SimVariant::AllLayersPFF;
+    let mut nodes = 4usize;
+    let mut neg = NegStrategy::Adaptive;
+    let mut splits = 0u32; // 0 = paper default
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--variant" => {
+                let v = args.get(i + 1).context("--variant needs a value")?;
+                variant = match v.as_str() {
+                    "sequential" => SimVariant::SequentialFF,
+                    "single-layer" => SimVariant::SingleLayerPFF,
+                    "all-layers" => SimVariant::AllLayersPFF,
+                    "federated" => SimVariant::FederatedPFF,
+                    "backprop" => SimVariant::BackpropPipeline,
+                    "dff" => SimVariant::Dff,
+                    other => bail!("unknown variant '{other}'"),
+                };
+                i += 2;
+            }
+            "--nodes" => {
+                nodes = args.get(i + 1).context("--nodes needs a value")?.parse()?;
+                i += 2;
+            }
+            "--neg" => {
+                neg = match args.get(i + 1).context("--neg needs a value")?.as_str() {
+                    "adaptive" => NegStrategy::Adaptive,
+                    "random" => NegStrategy::Random,
+                    "fixed" => NegStrategy::Fixed,
+                    other => bail!("unknown neg '{other}'"),
+                };
+                i += 2;
+            }
+            "--splits" => {
+                splits = args.get(i + 1).context("--splits needs a value")?.parse()?;
+                i += 2;
+            }
+            other => bail!("unknown flag '{other}'"),
+        }
+    }
+    let mut cfg = ExperimentConfig::paper_mnist();
+    if splits > 0 {
+        cfg.splits = splits;
+        cfg.epochs = splits;
+    }
+    if variant == SimVariant::SingleLayerPFF {
+        nodes = cfg.num_layers();
+    }
+    let cm = CostModel::paper_testbed(&cfg);
+    let p = SimParams { nodes, neg, softmax_head: false, perfopt: false };
+    let tasks = build_schedule(variant, &cm, &p);
+    let result = simulate(&tasks);
+    println!("{}", gantt::summary_line(&variant.to_string(), &result));
+    println!("{}", gantt::render(&tasks, &result, 100));
+    // speedup vs sequential at same settings
+    let seq = simulate(&build_schedule(SimVariant::SequentialFF, &cm, &p));
+    println!(
+        "speedup vs Sequential: {:.2}x (paper claims 3.75x for All-Layers AdaptiveNEG, N=4)",
+        seq.makespan / result.makespan
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let mut dir = std::path::PathBuf::from("artifacts");
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--artifact_dir" {
+            dir = args.get(i + 1).context("--artifact_dir needs a value")?.into();
+            i += 2;
+        } else {
+            bail!("unknown flag '{}'", args[i]);
+        }
+    }
+    let mut rt = pff::runtime::Runtime::open(&dir)?;
+    println!("artifacts in {}:", dir.display());
+    let entries = rt.manifest().entries.clone();
+    for e in &entries {
+        print!(
+            "  {:<14} din={:<5} dout={:<5} b={:<4} norm={}  {}",
+            e.op, e.din, e.dout, e.batch, u8::from(e.norm), e.file
+        );
+        match rt.executable(e) {
+            Ok(_) => println!("  [compiles OK]"),
+            Err(err) => println!("  [COMPILE FAILED: {err}]"),
+        }
+    }
+    println!("{} modules, {} compiled", entries.len(), rt.cached());
+    let _ = common::sim_variant(pff::config::Scheduler::AllLayers); // keep harness linked
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Loss/accuracy curves logged during training.
+
+/// One logged point on the training curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// Global epoch index (chapter · C + mini-epoch).
+    pub epoch: f32,
+    /// Mean FF layer loss (or CE for PerfOpt) over the epoch.
+    pub loss: f32,
+    /// Optional accuracy measurement (NaN = not measured).
+    pub accuracy: f32,
+}
+
+/// Append-only training curve.
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    /// Logged points in order.
+    pub points: Vec<CurvePoint>,
+}
+
+impl LossCurve {
+    /// Log a loss-only point.
+    pub fn push_loss(&mut self, epoch: f32, loss: f32) {
+        self.points.push(CurvePoint { epoch, loss, accuracy: f32::NAN });
+    }
+
+    /// Log a point with accuracy.
+    pub fn push(&mut self, epoch: f32, loss: f32, accuracy: f32) {
+        self.points.push(CurvePoint { epoch, loss, accuracy });
+    }
+
+    /// Merge another curve (e.g. from another node), keeping epoch order.
+    pub fn merge(&mut self, other: &LossCurve) {
+        self.points.extend_from_slice(&other.points);
+        self.points.sort_by(|a, b| a.epoch.partial_cmp(&b.epoch).unwrap());
+    }
+
+    /// Final loss (last point), if any.
+    pub fn final_loss(&self) -> Option<f32> {
+        self.points.last().map(|p| p.loss)
+    }
+
+    /// Render as a compact multi-line string for logs/EXPERIMENTS.md.
+    pub fn render(&self, max_rows: usize) -> String {
+        if self.points.is_empty() {
+            return "(empty curve)".into();
+        }
+        let stride = (self.points.len() / max_rows.max(1)).max(1);
+        let mut out = String::from("epoch   loss      acc\n");
+        for (i, p) in self.points.iter().enumerate() {
+            if i % stride != 0 && i != self.points.len() - 1 {
+                continue;
+            }
+            if p.accuracy.is_nan() {
+                out.push_str(&format!("{:<7.2} {:<9.4} -\n", p.epoch, p.loss));
+            } else {
+                out.push_str(&format!("{:<7.2} {:<9.4} {:.2}%\n", p.epoch, p.loss, p.accuracy * 100.0));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sorts_by_epoch() {
+        let mut a = LossCurve::default();
+        a.push_loss(0.0, 1.0);
+        a.push_loss(2.0, 0.5);
+        let mut b = LossCurve::default();
+        b.push_loss(1.0, 0.8);
+        a.merge(&b);
+        let epochs: Vec<f32> = a.points.iter().map(|p| p.epoch).collect();
+        assert_eq!(epochs, vec![0.0, 1.0, 2.0]);
+        assert_eq!(a.final_loss(), Some(0.5));
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let mut c = LossCurve::default();
+        for i in 0..10 {
+            c.push(i as f32, 1.0 / (i + 1) as f32, 0.1 * i as f32);
+        }
+        let s = c.render(5);
+        assert!(s.contains("epoch"));
+        assert!(s.lines().count() <= 12);
+    }
+}

@@ -1,0 +1,40 @@
+//! Timing spans, utilization accounting, loss curves and CSV output.
+//!
+//! The paper reports wall-clock training time and (implicitly) node
+//! utilization ("94% utilization (3.75/4)"). On this 1-core testbed,
+//! concurrent node threads cannot exhibit real parallel speedup, so the
+//! measured path records *per-node spans* (what each node did, when, for
+//! how long) and [`makespan`] replays the span DAG as if nodes ran on
+//! dedicated hardware — yielding an honest multi-node wall-clock estimate
+//! alongside raw busy-time sums. The DES (`crate::sim`) covers the paper's
+//! full scale analytically.
+
+pub mod csv;
+pub mod curve;
+pub mod span;
+
+pub use curve::LossCurve;
+pub use span::{makespan, MakespanModel, NodeReport, Span, SpanKind, SpanRecorder};
+
+/// Communication accounting from the parameter store.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Number of publish (put) operations.
+    pub puts: u64,
+    /// Number of fetch (get) operations.
+    pub gets: u64,
+    /// Total published payload bytes.
+    pub bytes_put: u64,
+    /// Total fetched payload bytes.
+    pub bytes_get: u64,
+}
+
+impl CommStats {
+    /// Accumulate another stats block.
+    pub fn merge(&mut self, o: &CommStats) {
+        self.puts += o.puts;
+        self.gets += o.gets;
+        self.bytes_put += o.bytes_put;
+        self.bytes_get += o.bytes_get;
+    }
+}

@@ -1,0 +1,211 @@
+//! Per-node activity spans and pipeline makespan replay.
+
+use std::time::Instant;
+
+/// What a node was doing during a span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// FF (or PerfOpt) layer training.
+    Train,
+    /// Forward transform of the dataset through earlier layers.
+    Forward,
+    /// Blocked waiting for a layer publish from another node.
+    WaitLayer,
+    /// Blocked waiting for negative labels.
+    WaitNeg,
+    /// Generating negative labels (AdaptiveNEG sweep).
+    NegGen,
+    /// Publishing parameters to the store.
+    Publish,
+    /// Softmax-head training.
+    HeadTrain,
+    /// Evaluation (test sweeps).
+    Eval,
+}
+
+impl SpanKind {
+    /// Does this span count as useful work (vs waiting)?
+    pub fn is_busy(self) -> bool {
+        !matches!(self, SpanKind::WaitLayer | SpanKind::WaitNeg)
+    }
+
+    /// Short label for Gantt rendering.
+    pub fn tag(self) -> &'static str {
+        match self {
+            SpanKind::Train => "T",
+            SpanKind::Forward => "F",
+            SpanKind::WaitLayer => ".",
+            SpanKind::WaitNeg => ",",
+            SpanKind::NegGen => "N",
+            SpanKind::Publish => "P",
+            SpanKind::HeadTrain => "H",
+            SpanKind::Eval => "E",
+        }
+    }
+}
+
+/// One timed activity on one node.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Activity class.
+    pub kind: SpanKind,
+    /// Start offset from experiment t0, seconds.
+    pub t0: f64,
+    /// End offset, seconds.
+    pub t1: f64,
+    /// Layer index the activity concerned (usize::MAX = none).
+    pub layer: usize,
+    /// Chapter index.
+    pub chapter: u32,
+}
+
+impl Span {
+    /// Span duration in seconds.
+    pub fn dur(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// Records spans on one node against a shared epoch origin.
+pub struct SpanRecorder {
+    origin: Instant,
+    node: usize,
+    spans: Vec<Span>,
+}
+
+impl SpanRecorder {
+    /// New recorder for `node`, measuring from `origin`.
+    pub fn new(origin: Instant, node: usize) -> Self {
+        SpanRecorder { origin, node, spans: Vec::new() }
+    }
+
+    /// Time an activity, recording a span around the closure.
+    pub fn time<T>(&mut self, kind: SpanKind, layer: usize, chapter: u32, f: impl FnOnce() -> T) -> T {
+        let t0 = self.origin.elapsed().as_secs_f64();
+        let out = f();
+        let t1 = self.origin.elapsed().as_secs_f64();
+        self.spans.push(Span { kind, t0, t1, layer, chapter });
+        out
+    }
+
+    /// Finish, producing the node's report.
+    pub fn finish(self) -> NodeReport {
+        NodeReport { node: self.node, spans: self.spans }
+    }
+}
+
+/// All spans recorded by one node.
+#[derive(Clone, Debug)]
+pub struct NodeReport {
+    /// Node index.
+    pub node: usize,
+    /// Spans in recording order.
+    pub spans: Vec<Span>,
+}
+
+impl NodeReport {
+    /// Total busy (non-wait) seconds.
+    pub fn busy(&self) -> f64 {
+        self.spans.iter().filter(|s| s.kind.is_busy()).map(Span::dur).sum()
+    }
+
+    /// Total wait seconds.
+    pub fn waiting(&self) -> f64 {
+        self.spans.iter().filter(|s| !s.kind.is_busy()).map(Span::dur).sum()
+    }
+
+    /// Seconds spent in `kind`.
+    pub fn in_kind(&self, kind: SpanKind) -> f64 {
+        self.spans.iter().filter(|s| s.kind == kind).map(Span::dur).sum()
+    }
+
+    /// Last span end (node-local wall).
+    pub fn end(&self) -> f64 {
+        self.spans.iter().map(|s| s.t1).fold(0.0, f64::max)
+    }
+}
+
+/// Replay per-node busy spans as if each node had a dedicated core:
+/// node-local order is preserved, wait spans are collapsed to the true
+/// dependency (they only existed because another node hadn't published).
+///
+/// This is a *lower bound* makespan model: it assumes waits shrink to zero
+/// when producers run in true parallel, which holds for PFF's structure
+/// (waits are only on predecessor publishes). Returns per-node busy sums
+/// and the modeled pipeline makespan = max over nodes of busy time, i.e.
+/// the steady-state bound the paper's utilization figure references.
+pub fn makespan(reports: &[NodeReport]) -> MakespanModel {
+    let busy: Vec<f64> = reports.iter().map(NodeReport::busy).collect();
+    let total_busy: f64 = busy.iter().sum();
+    let modeled = busy.iter().copied().fold(0.0, f64::max);
+    let n = reports.len().max(1) as f64;
+    MakespanModel {
+        per_node_busy: busy,
+        modeled_makespan: modeled,
+        total_busy,
+        utilization: if modeled > 0.0 { total_busy / (modeled * n) } else { 0.0 },
+    }
+}
+
+/// Output of [`makespan`].
+#[derive(Clone, Debug)]
+pub struct MakespanModel {
+    /// Busy seconds per node.
+    pub per_node_busy: Vec<f64>,
+    /// Modeled parallel wall-clock (max node busy).
+    pub modeled_makespan: f64,
+    /// Sum of busy seconds over nodes (≈ sequential cost).
+    pub total_busy: f64,
+    /// total_busy / (makespan · N) — the paper's utilization metric.
+    pub utilization: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, t0: f64, t1: f64) -> Span {
+        Span { kind, t0, t1, layer: 0, chapter: 0 }
+    }
+
+    #[test]
+    fn busy_wait_accounting() {
+        let r = NodeReport {
+            node: 0,
+            spans: vec![
+                span(SpanKind::Train, 0.0, 2.0),
+                span(SpanKind::WaitLayer, 2.0, 3.0),
+                span(SpanKind::Publish, 3.0, 3.5),
+            ],
+        };
+        assert!((r.busy() - 2.5).abs() < 1e-9);
+        assert!((r.waiting() - 1.0).abs() < 1e-9);
+        assert!((r.end() - 3.5).abs() < 1e-9);
+        assert!((r.in_kind(SpanKind::Train) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn makespan_is_max_busy() {
+        let a = NodeReport { node: 0, spans: vec![span(SpanKind::Train, 0.0, 4.0)] };
+        let b = NodeReport {
+            node: 1,
+            spans: vec![span(SpanKind::WaitLayer, 0.0, 2.0), span(SpanKind::Train, 2.0, 5.0)],
+        };
+        let m = makespan(&[a, b]);
+        assert!((m.modeled_makespan - 4.0).abs() < 1e-9);
+        assert!((m.total_busy - 7.0).abs() < 1e-9);
+        assert!((m.utilization - 7.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recorder_orders_spans() {
+        let mut rec = SpanRecorder::new(Instant::now(), 3);
+        rec.time(SpanKind::Train, 0, 0, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        rec.time(SpanKind::Publish, 0, 0, || {});
+        let rep = rec.finish();
+        assert_eq!(rep.node, 3);
+        assert_eq!(rep.spans.len(), 2);
+        assert!(rep.spans[0].t1 <= rep.spans[1].t0 + 1e-6);
+        assert!(rep.spans[0].dur() >= 0.001);
+    }
+}

@@ -1,0 +1,130 @@
+//! `artifacts/manifest.txt` parser.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Operation name (`layer_fwd`, `ff_step`, `head_logits`, `head_step`,
+    /// `perfopt_step`).
+    pub op: String,
+    /// Input feature dim.
+    pub din: usize,
+    /// Output dim (layer width or classes).
+    pub dout: usize,
+    /// Static batch the module was lowered for.
+    pub batch: usize,
+    /// Whether the op length-normalizes its input rows.
+    pub norm: bool,
+    /// HLO text file name (relative to the artifact dir).
+    pub file: String,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// All entries in file order.
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.as_ref().display()
+            )
+        })?;
+        Manifest::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut op = None;
+            let mut din = None;
+            let mut dout = None;
+            let mut batch = None;
+            let mut norm = None;
+            let mut file = None;
+            for tok in line.split_whitespace() {
+                let Some((k, v)) = tok.split_once('=') else {
+                    bail!("manifest line {}: bad token '{tok}'", lineno + 1);
+                };
+                match k {
+                    "op" => op = Some(v.to_string()),
+                    "din" => din = Some(v.parse()?),
+                    "dout" => dout = Some(v.parse()?),
+                    "b" => batch = Some(v.parse()?),
+                    "norm" => norm = Some(v == "1" || v == "true"),
+                    "file" => file = Some(v.to_string()),
+                    other => bail!("manifest line {}: unknown key '{other}'", lineno + 1),
+                }
+            }
+            entries.push(ManifestEntry {
+                op: op.context("manifest: missing op")?,
+                din: din.context("manifest: missing din")?,
+                dout: dout.context("manifest: missing dout")?,
+                batch: batch.context("manifest: missing b")?,
+                norm: norm.unwrap_or(false),
+                file: file.context("manifest: missing file")?,
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Find the entry for `(op, din, dout, norm)`.
+    pub fn find(&self, op: &str, din: usize, dout: usize, norm: bool) -> Option<ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.op == op && e.din == din && e.dout == dout && e.norm == norm)
+            .cloned()
+    }
+
+    /// All distinct ops present.
+    pub fn ops(&self) -> Vec<String> {
+        let mut ops: Vec<String> = self.entries.iter().map(|e| e.op.clone()).collect();
+        ops.sort();
+        ops.dedup();
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+op=ff_step din=784 dout=256 b=64 norm=0 file=ff_step_784x256_b64_raw.hlo.txt
+op=ff_step din=256 dout=256 b=64 norm=1 file=ff_step_256x256_b64_norm.hlo.txt
+
+op=layer_fwd din=784 dout=256 b=64 norm=0 file=layer_fwd_784x256_b64_raw.hlo.txt
+";
+
+    #[test]
+    fn parses_entries_and_find() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.find("ff_step", 256, 256, true).unwrap();
+        assert_eq!(e.batch, 64);
+        assert!(e.norm);
+        assert!(m.find("ff_step", 256, 256, false).is_none());
+        assert_eq!(m.ops(), vec!["ff_step".to_string(), "layer_fwd".to_string()]);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Manifest::parse("op=x din=1").is_err()); // missing fields
+        assert!(Manifest::parse("not_kv_token\n").is_err());
+        assert!(Manifest::parse("op=x din=1 dout=1 b=1 zzz=2 file=f").is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange is **HLO text**, not serialized `HloModuleProto` — jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `/opt/xla-example/README.md` and DESIGN.md).
+//!
+//! Artifacts are described by `artifacts/manifest.txt`, one entry per
+//! line of whitespace-separated `key=value` tokens:
+//!
+//! ```text
+//! op=ff_step din=784 dout=256 b=64 norm=0 file=ff_step_784x256_b64_raw.hlo.txt
+//! ```
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ManifestEntry};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Matrix;
+
+/// A PJRT CPU session holding compiled executables, lazily compiled from
+/// the artifact directory and cached by file name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Find the manifest entry for `(op, din, dout, norm)`.
+    pub fn entry(&self, op: &str, din: usize, dout: usize, norm: bool) -> Result<ManifestEntry> {
+        self.manifest.find(op, din, dout, norm).with_context(|| {
+            format!(
+                "no artifact for op={op} din={din} dout={dout} norm={} — regenerate with \
+                 `make artifacts` (profile must cover these dims)",
+                u8::from(norm)
+            )
+        })
+    }
+
+    /// Compile (or fetch cached) the executable for a manifest entry.
+    pub fn executable(&mut self, entry: &ManifestEntry) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&entry.file) {
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+            self.cache.insert(entry.file.clone(), exe);
+        }
+        Ok(&self.cache[&entry.file])
+    }
+
+    /// Execute a compiled entry on literal inputs; returns the flattened
+    /// tuple of outputs (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&mut self, entry: &ManifestEntry, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(entry)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", entry.file))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e}", entry.file))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {}: {e}", entry.file))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Convert a [`Matrix`] to a 2-D f32 literal.
+pub fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+    xla::Literal::vec1(&m.data)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
+}
+
+/// Convert a slice to a 1-D f32 literal.
+pub fn vec_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 scalar literal.
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a 2-D literal back into a [`Matrix`] with the given shape.
+pub fn literal_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?;
+    anyhow::ensure!(data.len() == rows * cols, "literal size {} != {rows}x{cols}", data.len());
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Read a 1-D literal into a Vec.
+pub fn literal_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))
+}
+
+/// Read a scalar literal.
+pub fn literal_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}

@@ -1,0 +1,198 @@
+//! Analytic cost model for the simulator.
+//!
+//! FLOP counts are exact for the implemented algorithms; the two free
+//! parameters (`node_gflops`, `adaptive_subsample`) are calibrated so the
+//! *Sequential RandomNEG* baseline and the AdaptiveNEG/RandomNEG time
+//! ratio land near the paper's Table 1 (7,178 s and 11,190/7,178 ≈ 1.56).
+//! Everything else (speedups, crossovers, utilization) is then emergent —
+//! the quantity we claim to reproduce is the **shape**, per DESIGN.md.
+
+use crate::config::ExperimentConfig;
+
+/// Cost model for one experiment configuration.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Layer widths including input.
+    pub dims: Vec<usize>,
+    /// Training examples.
+    pub train_n: usize,
+    /// Minibatch size.
+    pub batch: usize,
+    /// Total epochs E.
+    pub epochs: u32,
+    /// Splits S.
+    pub splits: u32,
+    /// Classes (goodness prediction fans out this many forwards).
+    pub classes: usize,
+    /// Effective node throughput, GFLOP/s.
+    pub node_gflops: f64,
+    /// Link bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+    /// Fraction of the train set swept by the AdaptiveNEG refresh.
+    pub adaptive_subsample: f64,
+}
+
+impl CostModel {
+    /// Model of the paper's testbed (§5.1 scale), calibrated per module
+    /// docs: commodity nodes over sockets.
+    pub fn paper_testbed(cfg: &ExperimentConfig) -> CostModel {
+        CostModel {
+            dims: cfg.dims.clone(),
+            train_n: if cfg.train_n == 0 { 60_000 } else { cfg.train_n },
+            batch: cfg.batch,
+            epochs: cfg.epochs,
+            splits: cfg.splits,
+            classes: cfg.classes,
+            node_gflops: 90.0,
+            bandwidth: 117e6, // ~1 GbE effective
+            latency: 2e-3,
+            adaptive_subsample: 0.22,
+        }
+    }
+
+    /// Epochs per chapter.
+    pub fn epochs_per_chapter(&self) -> f64 {
+        f64::from(self.epochs) / f64::from(self.splits)
+    }
+
+    /// Number of FF layers.
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Minibatches per epoch.
+    pub fn batches_per_epoch(&self) -> f64 {
+        (self.train_n as f64 / self.batch as f64).ceil()
+    }
+
+    fn gf(&self, flops: f64) -> f64 {
+        flops / (self.node_gflops * 1e9)
+    }
+
+    /// FLOPs of one FF minibatch step on layer `l` (pos+neg = 2B rows):
+    /// forward 2·(2B)·din·dout, grad dW 2·(2B)·din·dout, Adam ~10·din·dout.
+    pub fn ff_step_flops(&self, l: usize) -> f64 {
+        let (din, dout) = (self.dims[l] as f64, self.dims[l + 1] as f64);
+        let b2 = 2.0 * self.batch as f64;
+        4.0 * b2 * din * dout + 10.0 * din * dout
+    }
+
+    /// Seconds to train layer `l` for one chapter (C epochs).
+    pub fn train_chapter_s(&self, l: usize) -> f64 {
+        self.gf(self.ff_step_flops(l) * self.batches_per_epoch() * self.epochs_per_chapter())
+    }
+
+    /// Seconds of one PerfOpt chapter on layer `l` (adds the head's
+    /// forward+backward: ≈ 6·B·dout·classes per step).
+    pub fn perfopt_chapter_s(&self, l: usize) -> f64 {
+        let dout = self.dims[l + 1] as f64;
+        let head = 6.0 * self.batch as f64 * dout * self.classes as f64;
+        // PerfOpt uses only B rows (no negative pass): half the FF matmuls.
+        let step = self.ff_step_flops(l) / 2.0 + head;
+        self.gf(step * self.batches_per_epoch() * self.epochs_per_chapter())
+    }
+
+    /// Seconds to forward the full train set through layer `l` once.
+    pub fn forward_s(&self, l: usize) -> f64 {
+        let (din, dout) = (self.dims[l] as f64, self.dims[l + 1] as f64);
+        self.gf(2.0 * self.train_n as f64 * din * dout)
+    }
+
+    /// Wire seconds to publish (or fetch) layer `l`'s parameters.
+    pub fn publish_s(&self, l: usize) -> f64 {
+        let bytes = (self.dims[l] * self.dims[l + 1] + self.dims[l + 1]) as f64 * 4.0;
+        self.latency + bytes / self.bandwidth
+    }
+
+    /// Wire seconds to ship the *activations* of the full dataset at layer
+    /// `l`'s output — DFF's per-exchange cost (the paper's §6 comparison).
+    pub fn activations_wire_s(&self, l: usize) -> f64 {
+        let bytes = (self.train_n * self.dims[l + 1]) as f64 * 4.0 * 2.0; // pos+neg
+        self.latency + bytes / self.bandwidth
+    }
+
+    /// Seconds of one AdaptiveNEG refresh: goodness sweep = `classes`
+    /// forwards of the (subsampled) train set through all layers.
+    pub fn neggen_s(&self) -> f64 {
+        let full: f64 = (0..self.n_layers()).map(|l| self.forward_s(l)).sum();
+        self.classes as f64 * full * self.adaptive_subsample
+    }
+
+    /// Seconds of one softmax-head chapter (train head on all-but-first
+    /// activations: din = Σ dims[2..], plus the feature forward).
+    pub fn head_chapter_s(&self) -> f64 {
+        let din: f64 = self.dims[2..].iter().map(|&d| d as f64).sum();
+        let steps = self.batches_per_epoch() * self.epochs_per_chapter();
+        let step = 6.0 * self.batch as f64 * din * self.classes as f64;
+        let feature_fwd: f64 = (0..self.n_layers()).map(|l| self.forward_s(l)).sum();
+        self.gf(step * steps) + feature_fwd
+    }
+
+    /// Total FF training FLOPs for the whole run (all layers, all epochs)
+    /// — used for roofline sanity checks.
+    pub fn total_train_flops(&self) -> f64 {
+        (0..self.n_layers())
+            .map(|l| self.ff_step_flops(l) * self.batches_per_epoch() * f64::from(self.epochs))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper() -> CostModel {
+        CostModel::paper_testbed(&ExperimentConfig::paper_mnist())
+    }
+
+    #[test]
+    fn sequential_randomneg_lands_near_paper() {
+        // Sequential RandomNEG ≈ sum of all chapter train costs + fwd
+        // transforms. Paper: 7,178 s. Accept a generous band — we claim
+        // shape, not absolutes.
+        let m = paper();
+        let mut total = 0.0;
+        for _c in 0..m.splits {
+            for l in 0..m.n_layers() {
+                total += m.train_chapter_s(l);
+                if l + 1 < m.n_layers() {
+                    total += 2.0 * m.forward_s(l); // pos+neg transform
+                }
+            }
+        }
+        assert!(
+            (4000.0..12_000.0).contains(&total),
+            "sequential estimate {total:.0}s should be near the paper's 7,178 s"
+        );
+    }
+
+    #[test]
+    fn adaptive_overhead_ratio_near_paper() {
+        // AdaptiveNEG adds one neggen per chapter; ratio vs RandomNEG
+        // should be near 11,190/7,178 ≈ 1.56.
+        let m = paper();
+        let train: f64 = (0..m.splits as usize)
+            .map(|_| (0..m.n_layers()).map(|l| m.train_chapter_s(l)).sum::<f64>())
+            .sum();
+        let adaptive = train + f64::from(m.splits) * m.neggen_s();
+        let ratio = adaptive / train;
+        assert!((1.3..1.9).contains(&ratio), "adaptive/random ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn publish_far_cheaper_than_activations() {
+        // The §6 claim: PFF ships params, DFF ships activations — orders
+        // of magnitude more bytes at MNIST scale.
+        let m = paper();
+        assert!(m.activations_wire_s(0) > 20.0 * m.publish_s(0));
+    }
+
+    #[test]
+    fn flop_counts_scale_with_dims() {
+        let m = paper();
+        assert!(m.ff_step_flops(1) > m.ff_step_flops(0)); // 2000×2000 > 784×2000
+        assert!(m.total_train_flops() > 1e14);
+    }
+}

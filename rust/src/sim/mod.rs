@@ -1,0 +1,24 @@
+//! Discrete-event pipeline simulator.
+//!
+//! The paper's headline numbers (Tables 1–5 training times, Figures 1–6
+//! schedules) come from a 4–5-machine socket testbed. This host has one
+//! CPU core, so wall-clock multi-node speedups cannot be *measured*
+//! locally; they are *simulated* here instead, at the paper's full scale
+//! ([784, 2000×4], E = S = 100, N = 4), from an analytic cost model
+//! calibrated so the Sequential baseline lands in the paper's ballpark
+//! (§DESIGN.md substitution table).
+//!
+//! The simulator is a plain dependency-graph executor ([`engine`]): every
+//! scheduler builds the same task graph its real counterpart executes
+//! (train/forward/publish/neggen per (layer, chapter)), with durations
+//! from [`cost::CostModel`]. [`gantt`] renders the resulting schedules —
+//! these are Figures 1–6.
+
+pub mod cost;
+pub mod engine;
+pub mod gantt;
+pub mod schedules;
+
+pub use cost::CostModel;
+pub use engine::{simulate, SimResult, Task};
+pub use schedules::{build_schedule, SimVariant};

@@ -1,0 +1,126 @@
+//! Adam optimizer state + update (Kingma & Ba), as used by the paper for
+//! both the FF layers and the softmax head (§5.1).
+
+use crate::tensor::Matrix;
+
+/// Adam hyperparameters. Paper §5.1: lr 0.01 for FF layers, 1e-4 for the
+/// softmax head, with a cooldown after half the epochs (handled by
+/// [`crate::coordinator::lr`]).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    /// β₁ — first-moment decay.
+    pub beta1: f32,
+    /// β₂ — second-moment decay.
+    pub beta2: f32,
+    /// ε — denominator fuzz.
+    pub eps: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// First/second-moment state for a weight matrix + bias vector pair.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    /// First moment of the weight matrix.
+    pub m_w: Matrix,
+    /// Second moment of the weight matrix.
+    pub v_w: Matrix,
+    /// First moment of the bias.
+    pub m_b: Vec<f32>,
+    /// Second moment of the bias.
+    pub v_b: Vec<f32>,
+    /// Step counter (for bias correction).
+    pub t: u32,
+    /// Hyperparameters.
+    pub cfg: AdamConfig,
+}
+
+impl AdamState {
+    /// Fresh zeroed state for a `(d_in, d_out)` layer.
+    pub fn new(d_in: usize, d_out: usize) -> Self {
+        AdamState {
+            m_w: Matrix::zeros(d_in, d_out),
+            v_w: Matrix::zeros(d_in, d_out),
+            m_b: vec![0.0; d_out],
+            v_b: vec![0.0; d_out],
+            t: 0,
+            cfg: AdamConfig::default(),
+        }
+    }
+
+    /// One Adam step: applies gradients `(dw, db)` to `(w, b)` in place.
+    pub fn step(&mut self, w: &mut Matrix, b: &mut [f32], dw: &Matrix, db: &[f32], lr: f32) {
+        debug_assert_eq!((w.rows, w.cols), (dw.rows, dw.cols));
+        debug_assert_eq!(b.len(), db.len());
+        self.t += 1;
+        let AdamConfig { beta1, beta2, eps } = self.cfg;
+        let bc1 = 1.0 - beta1.powi(self.t as i32);
+        let bc2 = 1.0 - beta2.powi(self.t as i32);
+        // Fold the bias corrections into one scalar on lr — standard trick,
+        // same as the fused form in the L1 Adam kernel.
+        let alpha = lr * bc2.sqrt() / bc1;
+        for ((wv, mv), (vv, gv)) in w
+            .data
+            .iter_mut()
+            .zip(self.m_w.data.iter_mut())
+            .zip(self.v_w.data.iter_mut().zip(dw.data.iter()))
+        {
+            *mv = beta1 * *mv + (1.0 - beta1) * gv;
+            *vv = beta2 * *vv + (1.0 - beta2) * gv * gv;
+            *wv -= alpha * *mv / (vv.sqrt() + eps);
+        }
+        for ((bv, mv), (vv, gv)) in b
+            .iter_mut()
+            .zip(self.m_b.iter_mut())
+            .zip(self.v_b.iter_mut().zip(db.iter()))
+        {
+            *mv = beta1 * *mv + (1.0 - beta1) * gv;
+            *vv = beta2 * *vv + (1.0 - beta2) * gv * gv;
+            *bv -= alpha * *mv / (vv.sqrt() + eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(w) = (w-3)² with Adam; must converge near 3.
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut w = Matrix::zeros(1, 1);
+        let mut b = vec![0.0f32];
+        let mut st = AdamState::new(1, 1);
+        for _ in 0..2000 {
+            let grad = Matrix::from_vec(1, 1, vec![2.0 * (w.data[0] - 3.0)]);
+            st.step(&mut w, &mut b, &grad, &[0.0], 0.05);
+        }
+        assert!((w.data[0] - 3.0).abs() < 0.01, "w = {}", w.data[0]);
+    }
+
+    /// First step must equal -lr * sign(g) (bias-corrected Adam property).
+    #[test]
+    fn first_step_is_signed_lr() {
+        let mut w = Matrix::zeros(1, 2);
+        let mut b = vec![0.0f32, 0.0];
+        let mut st = AdamState::new(1, 2);
+        let g = Matrix::from_vec(1, 2, vec![10.0, -0.001]);
+        st.step(&mut w, &mut b, &g, &[0.0, 0.0], 0.1);
+        assert!((w.data[0] + 0.1).abs() < 1e-3, "{}", w.data[0]);
+        assert!((w.data[1] - 0.1).abs() < 1e-3, "{}", w.data[1]);
+    }
+
+    #[test]
+    fn zero_grad_keeps_params() {
+        let mut w = Matrix::full(2, 2, 1.5);
+        let mut b = vec![0.5f32, 0.5];
+        let mut st = AdamState::new(2, 2);
+        st.step(&mut w, &mut b, &Matrix::zeros(2, 2), &[0.0, 0.0], 0.1);
+        assert!(w.data.iter().all(|&v| (v - 1.5).abs() < 1e-6));
+        assert!(b.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,185 @@
+//! Row-major dense f32 matrix.
+
+use crate::tensor::Rng;
+
+/// A dense, row-major, `f32` matrix. The only tensor type the coordinator
+/// needs: minibatches are `(batch, dim)`, weights are `(d_in, d_out)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major storage, `len == rows * cols`.
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    ///
+    /// # Panics
+    /// If `data.len() != rows * cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// He/Kaiming-style normal init scaled by `1/sqrt(rows)` — matches the
+    /// reference FF implementations (weights ~ N(0, 1/d_in)).
+    pub fn randn_scaled(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let scale = 1.0 / (rows as f32).sqrt();
+        let data = (0..rows * cols).map(|_| rng.normal() * scale).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform random in `[lo, hi)`.
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| lo + (hi - lo) * rng.f32()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Immutable view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable view of row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Element accessor (debug/test convenience; hot paths index `data`).
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Copy rows `idx` (in order) into a new matrix — minibatch gather.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (o, &r) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Vertical concatenation `[self; other]`.
+    ///
+    /// # Panics
+    /// If column counts differ.
+    pub fn vcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "vcat: column mismatch");
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Horizontal concatenation `[self, other]` (row-wise feature concat).
+    ///
+    /// # Panics
+    /// If row counts differ.
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "hcat: row mismatch");
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Max absolute elementwise difference — test utility.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_and_content() {
+        let m = Matrix::zeros(3, 4);
+        assert_eq!((m.rows, m.cols, m.data.len()), (3, 4, 12));
+        assert!(m.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn row_views() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.at(1, 2), 6.0);
+    }
+
+    #[test]
+    fn gather_rows_reorders() {
+        let m = Matrix::from_vec(3, 2, vec![0., 0., 1., 1., 2., 2.]);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![2., 2., 0., 0.]);
+    }
+
+    #[test]
+    fn vcat_hcat() {
+        let a = Matrix::from_vec(1, 2, vec![1., 2.]);
+        let b = Matrix::from_vec(1, 2, vec![3., 4.]);
+        assert_eq!(a.vcat(&b).data, vec![1., 2., 3., 4.]);
+        assert_eq!(a.hcat(&b).data, vec![1., 2., 3., 4.]);
+        assert_eq!(a.vcat(&b).rows, 2);
+        assert_eq!(a.hcat(&b).cols, 4);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(7);
+        let m = Matrix::rand_uniform(5, 3, -1.0, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn randn_scaled_variance_sane() {
+        let mut rng = Rng::new(42);
+        let m = Matrix::randn_scaled(400, 50, &mut rng);
+        let mean: f32 = m.data.iter().sum::<f32>() / m.data.len() as f32;
+        let var: f32 =
+            m.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / m.data.len() as f32;
+        // target variance = 1/400 = 0.0025
+        assert!(mean.abs() < 0.005, "mean {mean}");
+        assert!((var - 0.0025).abs() < 0.0005, "var {var}");
+    }
+}

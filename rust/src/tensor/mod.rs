@@ -1,0 +1,16 @@
+//! Dense f32 tensor substrate.
+//!
+//! The paper's compute is small dense linear algebra (B×D_in · D_in×D_out
+//! matmuls, elementwise ReLU, per-row reductions). The production path runs
+//! this inside AOT-compiled XLA modules; this module is the pure-Rust
+//! equivalent used by [`crate::engine::NativeEngine`] for tests, oracles and
+//! artifact-free benchmarks, plus the RNG and Adam state shared everywhere.
+
+pub mod adam;
+pub mod matrix;
+pub mod ops;
+pub mod rng;
+
+pub use adam::AdamState;
+pub use matrix::Matrix;
+pub use rng::Rng;

@@ -1,0 +1,329 @@
+//! Linear-algebra kernels for the native engine.
+//!
+//! These mirror, op-for-op, the Pallas kernels in
+//! `python/compile/kernels/ff_layer.py`; the integration test
+//! `rust/tests/xla_vs_native.rs` pins the two implementations against each
+//! other through the AOT artifacts.
+
+use crate::tensor::Matrix;
+
+/// K-tile edge for the blocked matmul (per-(i, k0) pass streams `NTILE`
+/// contiguous floats of B per k).
+const TILE: usize = 32;
+/// N-tile edge: a 32×256 f32 B-panel is 32 KB — L1-resident, so the k-loop
+/// re-reads it from L1 instead of L2 (§Perf iteration 4).
+const NTILE: usize = 256;
+
+/// `C = A · B` — blocked i/k/n matmul, row-major everywhere.
+///
+/// # Panics
+/// On inner-dimension mismatch.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for n0 in (0..n).step_by(NTILE) {
+        let n1 = (n0 + NTILE).min(n);
+        for k0 in (0..k).step_by(TILE) {
+            let k1 = (k0 + TILE).min(k);
+            for i in 0..m {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n + n0..i * n + n1];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue; // ReLU outputs are ~50% zeros — real win
+                    }
+                    let brow = &b.data[kk * n + n0..kk * n + n1];
+                    // autovectorizes: contiguous fused multiply-add sweep
+                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `C = Aᵀ · B` without materializing the transpose (gradient `dW = x̂ᵀ·dz`).
+///
+/// Output-panel tiled: C is (d_in × d_out) — far larger than cache — so
+/// sweeping all of it per sample row thrashes L2. Restricting each pass
+/// to an `ITILE`-row C panel keeps the panel resident across the whole
+/// batch (§Perf iteration 5).
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_at_b: {}x{}ᵀ · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.cols, a.rows, b.cols);
+    /// C-panel rows per pass: 64×256 f32 = 64 KB, L2-resident.
+    const ITILE: usize = 64;
+    let mut c = Matrix::zeros(m, n);
+    for i0 in (0..m).step_by(ITILE) {
+        let i1 = (i0 + ITILE).min(m);
+        for kk in 0..k {
+            let arow = &a.data[kk * m + i0..kk * m + i1];
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (i, &aik) in (i0..i1).zip(arow.iter()) {
+                if aik == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` (used by backprop baselines: `dx = dz · Wᵀ`).
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt: {}x{} · {}x{}ᵀ", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
+/// Add a row-vector bias to every row, in place.
+pub fn add_bias(m: &mut Matrix, bias: &[f32]) {
+    assert_eq!(m.cols, bias.len());
+    for r in 0..m.rows {
+        for (v, b) in m.row_mut(r).iter_mut().zip(bias.iter()) {
+            *v += b;
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu_inplace(m: &mut Matrix) {
+    for v in &mut m.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Row-wise L2 length normalization: `x / (‖x‖₂ + eps)`.
+///
+/// Hinton's FF feeds each hidden layer the *direction* of the previous
+/// layer's activity, destroying the goodness magnitude so the next layer
+/// can't trivially reuse it.
+pub fn normalize_rows(m: &Matrix, eps: f32) -> Matrix {
+    let mut out = m.clone();
+    normalize_rows_inplace(&mut out, eps);
+    out
+}
+
+/// In-place variant of [`normalize_rows`].
+pub fn normalize_rows_inplace(m: &mut Matrix, eps: f32) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let inv = 1.0 / (norm + eps);
+        for v in row {
+            *v *= inv;
+        }
+    }
+}
+
+/// Per-row goodness `g_i = Σ_j y_ij²` (paper Eq. 1's inner sum).
+pub fn row_sumsq(m: &Matrix) -> Vec<f32> {
+    (0..m.rows).map(|r| m.row(r).iter().map(|v| v * v).sum()).collect()
+}
+
+/// Column-wise sum — bias gradient `db_j = Σ_i dz_ij`.
+pub fn col_sum(m: &Matrix) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.cols];
+    for r in 0..m.rows {
+        for (o, v) in out.iter_mut().zip(m.row(r)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Numerically-stable logistic `σ(x)`.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically-stable `softplus(x) = ln(1+eˣ)`.
+#[inline]
+pub fn softplus(x: f32) -> f32 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        0.0
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Row-wise softmax (stable: max-shifted).
+pub fn softmax_rows(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Mean cross-entropy of softmax rows `p` against integer labels.
+pub fn cross_entropy(p: &Matrix, labels: &[u8]) -> f32 {
+    assert_eq!(p.rows, labels.len());
+    let mut loss = 0.0f32;
+    for (r, &l) in labels.iter().enumerate() {
+        loss -= p.at(r, l as usize).max(1e-12).ln();
+    }
+    loss / p.rows as f32
+}
+
+/// Row-wise argmax — predictions from logits/goodness tables.
+pub fn argmax_rows(m: &Matrix) -> Vec<u8> {
+    (0..m.rows)
+        .map(|r| {
+            let row = m.row(r);
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            best as u8
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                c.data[i * b.cols + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (33, 65, 17), (64, 128, 40)] {
+            let a = Matrix::rand_uniform(m, k, -1.0, 1.0, &mut rng);
+            let b = Matrix::rand_uniform(k, n, -1.0, 1.0, &mut rng);
+            let got = matmul(&a, &b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn at_b_equals_explicit_transpose() {
+        let mut rng = Rng::new(12);
+        let a = Matrix::rand_uniform(17, 9, -1.0, 1.0, &mut rng);
+        let b = Matrix::rand_uniform(17, 13, -1.0, 1.0, &mut rng);
+        let got = matmul_at_b(&a, &b);
+        let want = matmul(&a.transpose(), &b);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn a_bt_equals_explicit_transpose() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::rand_uniform(7, 11, -1.0, 1.0, &mut rng);
+        let b = Matrix::rand_uniform(5, 11, -1.0, 1.0, &mut rng);
+        let got = matmul_a_bt(&a, &b);
+        let want = matmul(&a, &b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut rng = Rng::new(14);
+        let m = Matrix::rand_uniform(6, 20, -2.0, 2.0, &mut rng);
+        let n = normalize_rows(&m, 1e-8);
+        for r in 0..n.rows {
+            let norm: f32 = n.row(r).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn normalize_zero_row_is_finite() {
+        let m = Matrix::zeros(1, 4);
+        let n = normalize_rows(&m, 1e-8);
+        assert!(n.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sigmoid_softplus_stability() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+        assert!(sigmoid(100.0) <= 1.0 && sigmoid(100.0) > 0.999);
+        assert!(sigmoid(-100.0) >= 0.0 && sigmoid(-100.0) < 1e-3);
+        assert!((softplus(100.0) - 100.0).abs() < 1e-3);
+        assert_eq!(softplus(-100.0), 0.0);
+        assert!((softplus(0.0) - std::f32::consts::LN_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., -1000., 0., 1000.]);
+        let p = softmax_rows(&m);
+        for r in 0..2 {
+            let s: f32 = p.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(p.row(r).iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn argmax_and_colsum() {
+        let m = Matrix::from_vec(2, 3, vec![0.1, 0.9, 0.0, 5.0, 1.0, 2.0]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+        assert_eq!(col_sum(&m), vec![5.1, 1.9, 2.0]);
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_near_zero() {
+        let p = Matrix::from_vec(1, 3, vec![0.0001, 0.9998, 0.0001]);
+        assert!(cross_entropy(&p, &[1]) < 0.001);
+    }
+}

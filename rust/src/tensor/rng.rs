@@ -1,0 +1,172 @@
+//! Deterministic RNG (SplitMix64 core) — no external crates available
+//! offline, and determinism across nodes/chapters is load-bearing for the
+//! paper's RandomNEG strategy (every node must re-derive the same negative
+//! labels for a given chapter without communication).
+
+/// SplitMix64-based pseudo-random generator with normal/uniform helpers.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    /// Cached second Box-Muller output.
+    spare_normal: Option<f32>,
+}
+
+impl Rng {
+    /// New generator from a seed. Equal seeds ⇒ identical streams.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare_normal: None }
+    }
+
+    /// Derive an independent stream for a (node, chapter, purpose) triple.
+    /// Used so every node can re-derive chapter-local randomness without
+    /// messages (paper §5: RandomNEG re-rolls "at the end of each chapter").
+    pub fn derive(seed: u64, stream: u64) -> Self {
+        let mut r = Rng::new(seed ^ stream.wrapping_mul(0xA24BAED4963EE407));
+        r.next_u64(); // decorrelate
+        r
+    }
+
+    /// Next raw 64-bit value (SplitMix64).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        // 24 mantissa bits of uniformity.
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)`.
+    ///
+    /// # Panics
+    /// If `n == 0`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        if let Some(v) = self.spare_normal.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.f32();
+            if u1 <= f32::EPSILON {
+                continue;
+            }
+            let u2 = self.f32();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f32::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random incorrect label in `[0, classes)` different from `correct`.
+    /// This is the primitive behind FixedNEG and RandomNEG.
+    pub fn wrong_label(&mut self, correct: u8, classes: usize) -> u8 {
+        debug_assert!(classes >= 2);
+        let r = self.below(classes - 1) as u8;
+        if r >= correct {
+            r + 1
+        } else {
+            r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(123);
+        let mut b = Rng::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn wrong_label_never_correct_and_covers_all() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let w = r.wrong_label(3, 10);
+            assert_ne!(w, 3);
+            seen[w as usize] = true;
+        }
+        let covered = seen.iter().filter(|&&s| s).count();
+        assert_eq!(covered, 9, "all 9 wrong labels should appear");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(77);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "astronomically unlikely");
+    }
+
+    #[test]
+    fn derive_streams_independent() {
+        let mut a = Rng::derive(42, 1);
+        let mut b = Rng::derive(42, 2);
+        assert_ne!(a.next_u64(), b.next_u64());
+        // but reproducible
+        let mut a2 = Rng::derive(42, 1);
+        a2.next_u64();
+        let _ = a2; // stream equality checked above via determinism test
+    }
+}

@@ -1,0 +1,105 @@
+//! Mini property-testing harness.
+//!
+//! proptest is unavailable in this offline registry (DESIGN.md
+//! substitution table), so this module provides the subset the test suite
+//! needs: seeded case generation with failure reporting, plus generators
+//! for the domain types. No shrinking — cases are reported with their
+//! generation index and seed so any failure is perfectly reproducible.
+
+use crate::tensor::{Matrix, Rng};
+
+/// How many cases [`forall`] runs by default.
+pub const DEFAULT_CASES: u32 = 64;
+
+/// Run `prop` on `cases` generated inputs; panics on the first failure
+/// with the case index and seed baked into the message.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: u32,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::derive(seed, u64::from(case) ^ 0x50524F50); // "PROP"
+        let input = gen(&mut rng);
+        assert!(
+            prop(&input),
+            "property '{name}' failed at case {case} (seed {seed}): input = {input:?}"
+        );
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` for
+/// richer failure messages.
+pub fn forall_r<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: u32,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::derive(seed, u64::from(case) ^ 0x50524F50);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property '{name}' failed at case {case} (seed {seed}): {msg}\ninput = {input:?}");
+        }
+    }
+}
+
+/// Generator: usize in `[lo, hi]`.
+pub fn gen_usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Generator: matrix with dims in the given ranges, values in `[lo, hi)`.
+pub fn gen_matrix(rng: &mut Rng, rows: (usize, usize), cols: (usize, usize), lo: f32, hi: f32) -> Matrix {
+    let r = gen_usize(rng, rows.0, rows.1);
+    let c = gen_usize(rng, cols.0, cols.1);
+    Matrix::rand_uniform(r, c, lo, hi, rng)
+}
+
+/// Generator: label vector of length `n` over `classes`.
+pub fn gen_labels(rng: &mut Rng, n: usize, classes: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(classes) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially_true() {
+        forall("tautology", 1, 16, |r| r.f32(), |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed at case 0")]
+    fn forall_reports_failure_with_case() {
+        forall("always-false", 2, 4, |r| r.f32(), |_| false);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall(
+            "gen-bounds",
+            3,
+            32,
+            |rng| {
+                let m = gen_matrix(rng, (1, 5), (1, 7), -2.0, 3.0);
+                let l = gen_labels(rng, 9, 4);
+                (m, l)
+            },
+            |(m, l)| {
+                m.rows >= 1
+                    && m.rows <= 5
+                    && m.cols >= 1
+                    && m.cols <= 7
+                    && m.data.iter().all(|&v| (-2.0..3.0).contains(&v))
+                    && l.len() == 9
+                    && l.iter().all(|&c| c < 4)
+            },
+        );
+    }
+}

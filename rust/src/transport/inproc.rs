@@ -1,0 +1,32 @@
+//! In-process transport: nodes share one [`MemStore`] behind an `Arc`.
+
+use std::sync::Arc;
+
+use crate::coordinator::store::{MemStore, ParamStore};
+
+/// Build a shared in-process store handle set: one `Arc<MemStore>` cloned
+/// per node. Trivial, but mirrors [`crate::transport::tcp::TcpStoreClient`]
+/// so the coordinator can construct either uniformly.
+pub fn shared_store() -> Arc<dyn ParamStore> {
+    Arc::new(MemStore::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::store::LayerParams;
+    use crate::tensor::Matrix;
+    use std::time::Duration;
+
+    #[test]
+    fn clones_share_state() {
+        let store = shared_store();
+        let a = store.clone();
+        let b = store.clone();
+        a.put_neg(3, vec![9, 9]).unwrap();
+        assert_eq!(b.get_neg(3, Duration::from_millis(5)).unwrap(), vec![9, 9]);
+        let p = LayerParams { w: Matrix::zeros(2, 2), b: vec![0.0; 2], normalize_input: false, opt: None };
+        b.put_layer(1, 0, p).unwrap();
+        assert!(a.get_layer(1, 0, Duration::from_millis(5)).is_ok());
+    }
+}

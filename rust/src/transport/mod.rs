@@ -1,0 +1,15 @@
+//! Wire transport for the parameter store.
+//!
+//! The paper's testbed used raw sockets between nodes; here the store can
+//! be reached two ways:
+//!
+//! * [`inproc`] — nodes are threads sharing one
+//!   [`crate::coordinator::store::MemStore`] (zero-copy Arc clone).
+//! * [`tcp`] — the leader hosts the store behind a TCP server; worker
+//!   nodes use [`tcp::TcpStoreClient`]. The frame format is hand-rolled
+//!   ([`codec`]) since no serde is available offline: every message is a
+//!   `u32` length prefix + opcode + body, all little-endian.
+
+pub mod codec;
+pub mod inproc;
+pub mod tcp;

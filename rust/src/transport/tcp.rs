@@ -1,0 +1,393 @@
+//! TCP transport: the leader hosts the parameter store; workers speak a
+//! tiny request/response protocol over length-prefixed frames.
+//!
+//! This is the socket setup of the paper's testbed (§6 "we used sockets to
+//! establish communication between different nodes"). Blocking `get`s are
+//! served by parking the per-connection server thread on the underlying
+//! [`MemStore`] — the client connection simply doesn't receive its response
+//! frame until the dependency is published, which propagates backpressure
+//! across the wire for free.
+//!
+//! Protocol (payload = opcode byte + body; response = status byte + body):
+//!
+//! | op | request body | ok-response body |
+//! |----|--------------|------------------|
+//! | 1 PUT_LAYER | u32 layer, u32 chapter, LayerParams | — |
+//! | 2 GET_LAYER | u32 layer, u32 chapter, u64 timeout_ms | LayerParams |
+//! | 3 PUT_HEAD  | u32 chapter, HeadParams | — |
+//! | 4 GET_HEAD  | u32 chapter, u64 timeout_ms | HeadParams |
+//! | 5 PUT_NEG   | u32 chapter, bytes | — |
+//! | 6 GET_NEG   | u32 chapter, u64 timeout_ms | bytes |
+//! | 7 LATEST_LAYER | u32 layer | u8 some, (u32 chapter, LayerParams) |
+//! | 8 LATEST_HEAD  | — | u8 some, (u32 chapter, HeadParams) |
+//! | 9 STATS | — | u64×4 |
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::store::{HeadParams, LayerParams, MemStore, ParamStore};
+use crate::metrics::CommStats;
+use crate::transport::codec::{read_frame, write_frame, Dec, Enc};
+
+/// Max frame size (1 GiB — a [3072,4000] f32 layer is ~49 MB).
+const MAX_FRAME: usize = 1 << 30;
+
+mod op {
+    pub const PUT_LAYER: u8 = 1;
+    pub const GET_LAYER: u8 = 2;
+    pub const PUT_HEAD: u8 = 3;
+    pub const GET_HEAD: u8 = 4;
+    pub const PUT_NEG: u8 = 5;
+    pub const GET_NEG: u8 = 6;
+    pub const LATEST_LAYER: u8 = 7;
+    pub const LATEST_HEAD: u8 = 8;
+    pub const STATS: u8 = 9;
+}
+
+const ST_OK: u8 = 0;
+const ST_ERR: u8 = 1;
+
+/// Running store server handle; dropping does not stop the listener —
+/// call [`StoreServer::shutdown`].
+pub struct StoreServer {
+    /// Bound local address (use `.port()` for ephemeral binds).
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StoreServer {
+    /// Start serving `store` on `127.0.0.1:port` (0 = ephemeral).
+    pub fn start(store: Arc<MemStore>, port: u16) -> Result<StoreServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port)).context("binding store server")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::Builder::new()
+            .name("pff-store-server".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((sock, _)) => {
+                            sock.set_nonblocking(false).ok();
+                            let store = store.clone();
+                            // Detached: a conn thread exits when its client
+                            // disconnects. Joining here would deadlock
+                            // shutdown against still-connected clients.
+                            std::thread::spawn(move || {
+                                let _ = serve_conn(sock, &store);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(StoreServer { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Stop accepting new connections; existing connection threads exit
+    /// on their own when their clients disconnect (they are detached).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_conn(sock: TcpStream, store: &MemStore) -> Result<()> {
+    let mut reader = BufReader::new(sock.try_clone()?);
+    let mut writer = BufWriter::new(sock);
+    loop {
+        let req = match read_frame(&mut reader, MAX_FRAME) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // client closed
+        };
+        let resp = handle_request(&req, store);
+        let payload = match resp {
+            Ok(mut body) => {
+                let mut out = vec![ST_OK];
+                out.append(&mut body);
+                out
+            }
+            Err(e) => {
+                let mut enc = Enc::new();
+                enc.u8(ST_ERR);
+                enc.str(&e.to_string());
+                enc.finish()
+            }
+        };
+        write_frame(&mut writer, &payload)?;
+    }
+}
+
+fn handle_request(req: &[u8], store: &MemStore) -> Result<Vec<u8>> {
+    let mut d = Dec::new(req);
+    let opcode = d.u8()?;
+    let mut e = Enc::new();
+    match opcode {
+        op::PUT_LAYER => {
+            let layer = d.u32()? as usize;
+            let chapter = d.u32()?;
+            let params = d.layer_params()?;
+            store.put_layer(layer, chapter, params)?;
+        }
+        op::GET_LAYER => {
+            let layer = d.u32()? as usize;
+            let chapter = d.u32()?;
+            let timeout = Duration::from_millis(d.u64()?);
+            let p = store.get_layer(layer, chapter, timeout)?;
+            e.layer_params(&p);
+        }
+        op::PUT_HEAD => {
+            let chapter = d.u32()?;
+            let params = d.head_params()?;
+            store.put_head(chapter, params)?;
+        }
+        op::GET_HEAD => {
+            let chapter = d.u32()?;
+            let timeout = Duration::from_millis(d.u64()?);
+            let p = store.get_head(chapter, timeout)?;
+            e.head_params(&p);
+        }
+        op::PUT_NEG => {
+            let chapter = d.u32()?;
+            let labels = d.bytes()?;
+            store.put_neg(chapter, labels)?;
+        }
+        op::GET_NEG => {
+            let chapter = d.u32()?;
+            let timeout = Duration::from_millis(d.u64()?);
+            e.bytes(&store.get_neg(chapter, timeout)?);
+        }
+        op::LATEST_LAYER => {
+            let layer = d.u32()? as usize;
+            match store.latest_layer(layer)? {
+                None => e.u8(0),
+                Some((c, p)) => {
+                    e.u8(1);
+                    e.u32(c);
+                    e.layer_params(&p);
+                }
+            }
+        }
+        op::LATEST_HEAD => match store.latest_head()? {
+            None => e.u8(0),
+            Some((c, p)) => {
+                e.u8(1);
+                e.u32(c);
+                e.head_params(&p);
+            }
+        },
+        op::STATS => {
+            let s = store.comm_stats();
+            e.u64(s.puts);
+            e.u64(s.gets);
+            e.u64(s.bytes_put);
+            e.u64(s.bytes_get);
+        }
+        other => bail!("unknown opcode {other}"),
+    }
+    Ok(e.finish())
+}
+
+/// [`ParamStore`] client over TCP. One connection, serialized by a mutex —
+/// each node owns its own client so contention is nil.
+pub struct TcpStoreClient {
+    conn: Mutex<(BufReader<TcpStream>, BufWriter<TcpStream>)>,
+}
+
+impl TcpStoreClient {
+    /// Connect to a [`StoreServer`].
+    pub fn connect(addr: std::net::SocketAddr) -> Result<TcpStoreClient> {
+        let sock = TcpStream::connect(addr).context("connecting to store server")?;
+        sock.set_nodelay(true).ok();
+        let reader = BufReader::new(sock.try_clone()?);
+        let writer = BufWriter::new(sock);
+        Ok(TcpStoreClient { conn: Mutex::new((reader, writer)) })
+    }
+
+    fn call(&self, payload: Vec<u8>) -> Result<Vec<u8>> {
+        let mut guard = self.conn.lock().unwrap();
+        let (reader, writer) = &mut *guard;
+        write_frame(writer, &payload)?;
+        let resp = read_frame(reader, MAX_FRAME)?;
+        let mut d = Dec::new(&resp);
+        match d.u8()? {
+            ST_OK => Ok(resp[1..].to_vec()),
+            _ => bail!("store server error: {}", Dec::new(&resp[1..]).str()?),
+        }
+    }
+}
+
+impl ParamStore for TcpStoreClient {
+    fn put_layer(&self, layer: usize, chapter: u32, params: LayerParams) -> Result<()> {
+        let mut e = Enc::new();
+        e.u8(op::PUT_LAYER);
+        e.u32(layer as u32);
+        e.u32(chapter);
+        e.layer_params(&params);
+        self.call(e.finish()).map(|_| ())
+    }
+
+    fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<LayerParams> {
+        let mut e = Enc::new();
+        e.u8(op::GET_LAYER);
+        e.u32(layer as u32);
+        e.u32(chapter);
+        e.u64(timeout.as_millis() as u64);
+        let body = self.call(e.finish())?;
+        Dec::new(&body).layer_params()
+    }
+
+    fn put_head(&self, chapter: u32, params: HeadParams) -> Result<()> {
+        let mut e = Enc::new();
+        e.u8(op::PUT_HEAD);
+        e.u32(chapter);
+        e.head_params(&params);
+        self.call(e.finish()).map(|_| ())
+    }
+
+    fn get_head(&self, chapter: u32, timeout: Duration) -> Result<HeadParams> {
+        let mut e = Enc::new();
+        e.u8(op::GET_HEAD);
+        e.u32(chapter);
+        e.u64(timeout.as_millis() as u64);
+        let body = self.call(e.finish())?;
+        Dec::new(&body).head_params()
+    }
+
+    fn put_neg(&self, chapter: u32, labels: Vec<u8>) -> Result<()> {
+        let mut e = Enc::new();
+        e.u8(op::PUT_NEG);
+        e.u32(chapter);
+        e.bytes(&labels);
+        self.call(e.finish()).map(|_| ())
+    }
+
+    fn get_neg(&self, chapter: u32, timeout: Duration) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        e.u8(op::GET_NEG);
+        e.u32(chapter);
+        e.u64(timeout.as_millis() as u64);
+        let body = self.call(e.finish())?;
+        Dec::new(&body).bytes()
+    }
+
+    fn latest_layer(&self, layer: usize) -> Result<Option<(u32, LayerParams)>> {
+        let mut e = Enc::new();
+        e.u8(op::LATEST_LAYER);
+        e.u32(layer as u32);
+        let body = self.call(e.finish())?;
+        let mut d = Dec::new(&body);
+        if d.u8()? == 0 {
+            return Ok(None);
+        }
+        Ok(Some((d.u32()?, d.layer_params()?)))
+    }
+
+    fn latest_head(&self) -> Result<Option<(u32, HeadParams)>> {
+        let mut e = Enc::new();
+        e.u8(op::LATEST_HEAD);
+        let body = self.call(e.finish())?;
+        let mut d = Dec::new(&body);
+        if d.u8()? == 0 {
+            return Ok(None);
+        }
+        Ok(Some((d.u32()?, d.head_params()?)))
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        let mut e = Enc::new();
+        e.u8(op::STATS);
+        match self.call(e.finish()) {
+            Ok(body) => {
+                let mut d = Dec::new(&body);
+                CommStats {
+                    puts: d.u64().unwrap_or(0),
+                    gets: d.u64().unwrap_or(0),
+                    bytes_put: d.u64().unwrap_or(0),
+                    bytes_get: d.u64().unwrap_or(0),
+                }
+            }
+            Err(_) => CommStats::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Matrix, Rng};
+
+    fn params() -> LayerParams {
+        let mut rng = Rng::new(5);
+        LayerParams {
+            w: Matrix::randn_scaled(6, 4, &mut rng),
+            b: vec![1.0; 4],
+            normalize_input: true,
+            opt: None,
+        }
+    }
+
+    #[test]
+    fn tcp_roundtrip_layer_and_neg() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        let client = TcpStoreClient::connect(server.addr).unwrap();
+
+        let p = params();
+        client.put_layer(2, 7, p.clone()).unwrap();
+        let got = client.get_layer(2, 7, Duration::from_millis(100)).unwrap();
+        assert_eq!(got.w, p.w);
+
+        client.put_neg(1, vec![4, 5, 6]).unwrap();
+        assert_eq!(client.get_neg(1, Duration::from_millis(100)).unwrap(), vec![4, 5, 6]);
+
+        let (c, lp) = client.latest_layer(2).unwrap().unwrap();
+        assert_eq!(c, 7);
+        assert_eq!(lp.b, vec![1.0; 4]);
+        assert!(client.latest_layer(9).unwrap().is_none());
+
+        let stats = client.comm_stats();
+        assert!(stats.puts >= 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn blocking_get_across_the_wire() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        let addr = server.addr;
+
+        let waiter = std::thread::spawn(move || {
+            let client = TcpStoreClient::connect(addr).unwrap();
+            client.get_layer(0, 0, Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let publisher = TcpStoreClient::connect(addr).unwrap();
+        publisher.put_layer(0, 0, params()).unwrap();
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(got.w.rows, 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_error_propagates() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        let client = TcpStoreClient::connect(server.addr).unwrap();
+        let err = client.get_neg(99, Duration::from_millis(20)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,150 @@
+//! Failure injection and edge cases: the coordinator must fail loudly and
+//! cleanly (no hangs, no partial-state corruption) when dependencies are
+//! broken, configs are invalid, or data is degenerate.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pff::config::{ExperimentConfig, Scheduler};
+use pff::coordinator::run_experiment;
+use pff::coordinator::store::{MemStore, ParamStore};
+use pff::data::dataset::Dataset;
+use pff::data::synth::synth_mnist;
+use pff::engine::{Engine, NativeEngine};
+use pff::ff::{FFLayer, NegStrategy};
+use pff::tensor::{AdamState, Matrix, Rng};
+
+/// A blocking get on a never-published layer times out with a clear
+/// error instead of deadlocking the pipeline.
+#[test]
+fn store_timeout_is_clean() {
+    let store = MemStore::new();
+    let t0 = std::time::Instant::now();
+    let err = store.get_layer(7, 3, Duration::from_millis(50)).unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(2));
+    let msg = err.to_string();
+    assert!(msg.contains("layer 7") && msg.contains("chapter 3"), "uninformative: {msg}");
+}
+
+/// An experiment whose store timeout is tiny fails (rather than hanging)
+/// when a dependency can never be satisfied in time.
+#[test]
+fn invalid_configs_rejected() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.dims = vec![784, 10]; // single layer — goodness needs ≥2
+    assert!(cfg.clone().validated().is_err());
+
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.epochs = 3;
+    cfg.splits = 2; // not divisible
+    assert!(cfg.clone().validated().is_err());
+
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.scheduler = Scheduler::SingleLayer;
+    cfg.nodes = 2; // ≠ layers
+    assert!(cfg.clone().validated().is_err());
+
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.batch = 0;
+    assert!(cfg.validated().is_err());
+}
+
+/// Degenerate data: all-zero inputs must not produce NaNs anywhere.
+#[test]
+fn all_zero_data_trains_without_nans() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.dims = vec![784, 16, 16, 16];
+    cfg.train_n = 64;
+    cfg.test_n = 32;
+    cfg.neg = NegStrategy::Random;
+    let mut bundle = synth_mnist(64, 32, 1);
+    bundle.train.x = Matrix::zeros(64, 784);
+    bundle.test.x = Matrix::zeros(32, 784);
+    let rep = pff::coordinator::run_experiment_with_data(&cfg, &bundle).unwrap();
+    for layer in &rep.model.net.layers {
+        assert!(layer.w.data.iter().all(|v| v.is_finite()), "NaN weights on zero data");
+    }
+    assert!(rep.test_accuracy.is_finite());
+}
+
+/// Single-example-per-class data (extreme imbalance of batch content).
+#[test]
+fn tiny_dataset_runs() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.dims = vec![784, 16, 16];
+    cfg.train_n = 10;
+    cfg.test_n = 10;
+    cfg.batch = 64; // batch > n: one short batch per epoch
+    cfg.neg = NegStrategy::Random;
+    let rep = run_experiment(&cfg).unwrap();
+    assert!(rep.test_accuracy.is_finite());
+}
+
+/// Huge theta forces the positive loss to dominate; training must remain
+/// finite (softplus/sigmoid saturation handling).
+#[test]
+fn extreme_theta_is_stable() {
+    let mut eng = NativeEngine::new();
+    let mut rng = Rng::new(3);
+    let mut layer = FFLayer::new(20, 16, false, &mut rng);
+    let mut opt = AdamState::new(20, 16);
+    let xp = Matrix::rand_uniform(8, 20, 0.0, 1.0, &mut rng);
+    let xn = Matrix::rand_uniform(8, 20, 0.0, 1.0, &mut rng);
+    for theta in [0.0f32, 1e4, -1e4] {
+        let stats = eng.ff_train_step(&mut layer, &mut opt, &xp, &xn, theta, 0.01).unwrap();
+        assert!(stats.loss().is_finite(), "theta={theta}");
+        assert!(layer.w.data.iter().all(|v| v.is_finite()), "theta={theta}");
+    }
+}
+
+/// A store pre-seeded with a poisoned (wrong-shape) layer makes the
+/// consumer fail with an error rather than corrupting downstream state.
+#[test]
+fn wrong_shape_layer_fails_cleanly() {
+    let store = Arc::new(MemStore::new());
+    // publish a layer with the wrong d_in under (0, 0)
+    let mut rng = Rng::new(4);
+    let bad = FFLayer::new(13, 16, false, &mut rng);
+    store
+        .put_layer(0, 0, pff::coordinator::store::LayerParams::from_layer(&bad, None))
+        .unwrap();
+    let (layer, _) = store
+        .get_layer(0, 0, Duration::from_millis(50))
+        .unwrap()
+        .into_layer();
+    // feeding 784-dim data through the 13-in layer must error via shape
+    // asserts, not silently mangle
+    let mut eng = NativeEngine::new();
+    let x = Matrix::rand_uniform(4, 784, 0.0, 1.0, &mut rng);
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        eng.layer_forward(&layer, &x).unwrap()
+    }));
+    assert!(res.is_err(), "shape mismatch must not pass silently");
+}
+
+/// Dataset sharding of fewer examples than shards yields empty shards
+/// that fail loudly in federated mode... actually: shard() handles it;
+/// nodes with empty shards should not divide by zero.
+#[test]
+fn federated_with_sparse_shards() {
+    let d = synth_mnist(3, 2, 5).train;
+    let shards = d.shard(4);
+    assert_eq!(shards.len(), 4);
+    assert_eq!(shards.iter().map(Dataset::len).sum::<usize>(), 3);
+    assert!(shards[3].is_empty());
+}
+
+/// Config file parsing: unknown keys and malformed lines are rejected
+/// with the offending key/line in the message.
+#[test]
+fn config_file_errors_are_actionable() {
+    let dir = std::env::temp_dir().join(format!("pff_cfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.conf");
+    std::fs::write(&path, "scheduler = all-layers\nbogus_key = 7\n").unwrap();
+    let err = ExperimentConfig::from_file(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("bogus_key"), "{err:#}");
+    std::fs::write(&path, "this is not kv\n").unwrap();
+    assert!(ExperimentConfig::from_file(&path).is_err());
+    std::fs::remove_dir_all(dir).ok();
+}

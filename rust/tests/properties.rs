@@ -1,0 +1,309 @@
+//! Property-based tests over coordinator and FF invariants (mini-harness
+//! in `pff::testing`; proptest is unavailable offline — see DESIGN.md).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pff::coordinator::store::{LayerParams, MemStore, ParamStore};
+use pff::engine::{Engine, NativeEngine};
+use pff::ff::negative::random_wrong_labels;
+use pff::ff::overlay::{overlay_labels, overlay_neutral};
+use pff::ff::{FFLayer, FFNetwork};
+use pff::tensor::{ops, AdamState, Matrix, Rng};
+use pff::testing::{forall, forall_r, gen_labels, gen_matrix, gen_usize};
+use pff::transport::codec::{Dec, Enc};
+
+/// Forward output is always non-negative and finite, for any layer and
+/// any input (ReLU + normalization guarantees).
+#[test]
+fn prop_forward_nonneg_finite() {
+    forall_r(
+        "forward-nonneg",
+        101,
+        48,
+        |rng| {
+            let din = gen_usize(rng, 1, 40);
+            let dout = gen_usize(rng, 1, 24);
+            let norm = rng.below(2) == 1;
+            let layer = FFLayer::new(din, dout, norm, rng);
+            let x = gen_matrix(rng, (1, 16), (din, din), -3.0, 3.0);
+            (layer, x)
+        },
+        |(layer, x)| {
+            let mut eng = NativeEngine::new();
+            let y = eng.layer_forward(layer, x).map_err(|e| e.to_string())?;
+            if !y.data.iter().all(|v| v.is_finite() && *v >= 0.0) {
+                return Err("non-finite or negative activation".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// An FF step never produces non-finite parameters, whatever the data.
+#[test]
+fn prop_ff_step_finite_params() {
+    forall_r(
+        "ff-step-finite",
+        102,
+        32,
+        |rng| {
+            let din = gen_usize(rng, 2, 32);
+            let dout = gen_usize(rng, 2, 24);
+            let b = gen_usize(rng, 1, 12);
+            let layer = FFLayer::new(din, dout, rng.below(2) == 1, rng);
+            let xp = gen_matrix(rng, (b, b), (din, din), 0.0, 2.0);
+            let xn = gen_matrix(rng, (b, b), (din, din), 0.0, 2.0);
+            let theta = rng.f32() * 4.0;
+            (layer, xp, xn, theta)
+        },
+        |(layer, xp, xn, theta)| {
+            let mut eng = NativeEngine::new();
+            let mut l = layer.clone();
+            let mut opt = AdamState::new(l.d_in(), l.d_out());
+            let stats = eng
+                .ff_train_step(&mut l, &mut opt, xp, xn, *theta, 0.05)
+                .map_err(|e| e.to_string())?;
+            if !l.w.data.iter().all(|v| v.is_finite()) || !l.b.iter().all(|v| v.is_finite()) {
+                return Err("non-finite parameter".into());
+            }
+            if !stats.loss().is_finite() {
+                return Err(format!("non-finite loss {}", stats.loss()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Store invariant: whatever sequence of puts, `get(l, c)` returns the
+/// last value put at (l, c) and `latest_layer(l)` the max chapter.
+#[test]
+fn prop_store_last_write_wins() {
+    forall_r(
+        "store-lww",
+        103,
+        32,
+        |rng| {
+            let n_ops = gen_usize(rng, 1, 20);
+            let ops: Vec<(usize, u32, f32)> = (0..n_ops)
+                .map(|_| (rng.below(3), rng.below(4) as u32, rng.f32()))
+                .collect();
+            ops
+        },
+        |puts| {
+            let store = MemStore::new();
+            let mut expected: std::collections::HashMap<(usize, u32), f32> = Default::default();
+            for &(l, c, v) in puts {
+                let p = LayerParams {
+                    w: Matrix::full(2, 2, v),
+                    b: vec![v],
+                    normalize_input: false,
+                    opt: None,
+                };
+                store.put_layer(l, c, p).map_err(|e| e.to_string())?;
+                expected.insert((l, c), v);
+            }
+            for (&(l, c), &v) in &expected {
+                let got = store
+                    .get_layer(l, c, Duration::from_millis(10))
+                    .map_err(|e| e.to_string())?;
+                if got.w.data[0] != v {
+                    return Err(format!("get({l},{c}) = {} want {v}", got.w.data[0]));
+                }
+            }
+            for l in 0..3usize {
+                let want = expected.keys().filter(|(ll, _)| *ll == l).map(|&(_, c)| c).max();
+                let got = store.latest_layer(l).map_err(|e| e.to_string())?.map(|(c, _)| c);
+                if got != want {
+                    return Err(format!("latest({l}) = {got:?} want {want:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Codec roundtrip is identity for arbitrary layer params.
+#[test]
+fn prop_codec_roundtrip() {
+    forall_r(
+        "codec-roundtrip",
+        104,
+        48,
+        |rng| {
+            let r = gen_usize(rng, 1, 20);
+            let c = gen_usize(rng, 1, 20);
+            let with_opt = rng.below(2) == 1;
+            let mk = |rng: &mut Rng| gen_matrix(rng, (r, r), (c, c), -10.0, 10.0);
+            let w = mk(rng);
+            let opt = with_opt.then(|| pff::coordinator::store::OptSnapshot {
+                m_w: mk(rng),
+                v_w: mk(rng),
+                m_b: (0..c).map(|_| rng.f32()).collect(),
+                v_b: (0..c).map(|_| rng.f32()).collect(),
+                t: rng.below(1000) as u32,
+            });
+            LayerParams {
+                w,
+                b: (0..c).map(|_| rng.f32() * 5.0 - 2.5).collect(),
+                normalize_input: rng.below(2) == 1,
+                opt,
+            }
+        },
+        |p| {
+            let mut e = Enc::new();
+            e.layer_params(p);
+            let buf = e.finish();
+            let got = Dec::new(&buf).layer_params().map_err(|e| e.to_string())?;
+            if got.w != p.w || got.b != p.b || got.normalize_input != p.normalize_input {
+                return Err("params mismatch".into());
+            }
+            match (&got.opt, &p.opt) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    if a.t != b.t || a.m_w != b.m_w || a.v_b != b.v_b {
+                        return Err("opt snapshot mismatch".into());
+                    }
+                }
+                _ => return Err("opt presence mismatch".into()),
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Negative labels are never the truth and are chapter-deterministic.
+#[test]
+fn prop_neg_labels_wrong_and_deterministic() {
+    forall(
+        "neg-labels",
+        105,
+        48,
+        |rng| {
+            let n = gen_usize(rng, 1, 100);
+            let classes = gen_usize(rng, 2, 12);
+            let truth = gen_labels(rng, n, classes);
+            let chapter = rng.below(50) as u32;
+            let seed = rng.next_u64();
+            (truth, classes, chapter, seed)
+        },
+        |(truth, classes, chapter, seed)| {
+            let a = random_wrong_labels(*seed, *chapter, truth, *classes);
+            let b = random_wrong_labels(*seed, *chapter, truth, *classes);
+            a == b
+                && a.iter().zip(truth).all(|(n, t)| n != t)
+                && a.iter().all(|&l| (l as usize) < *classes)
+        },
+    );
+}
+
+/// Overlays only touch the first `classes` dims.
+#[test]
+fn prop_overlay_preserves_payload() {
+    forall(
+        "overlay-payload",
+        106,
+        48,
+        |rng| {
+            let classes = gen_usize(rng, 2, 10);
+            let dim = gen_usize(rng, classes, classes + 30);
+            let n = gen_usize(rng, 1, 8);
+            let x = gen_matrix(rng, (n, n), (dim, dim), 0.0, 1.0);
+            let labels = gen_labels(rng, n, classes);
+            (x, labels, classes)
+        },
+        |(x, labels, classes)| {
+            let pos = overlay_labels(x, labels, *classes);
+            let neu = overlay_neutral(x, *classes);
+            (0..x.rows).all(|r| {
+                pos.row(r)[*classes..] == x.row(r)[*classes..]
+                    && neu.row(r)[*classes..] == x.row(r)[*classes..]
+                    && pos.row(r)[labels[r] as usize] == 1.0
+            })
+        },
+    );
+}
+
+/// Goodness scores grow monotonically with activation scale (sum of
+/// squares is scale-quadratic) — guards the goodness reduction.
+#[test]
+fn prop_goodness_scale_quadratic() {
+    forall(
+        "goodness-quadratic",
+        107,
+        32,
+        |rng| gen_matrix(rng, (1, 6), (1, 20), 0.0, 2.0),
+        |y| {
+            let g1 = ops::row_sumsq(y);
+            let mut y2 = y.clone();
+            for v in &mut y2.data {
+                *v *= 2.0;
+            }
+            let g2 = ops::row_sumsq(&y2);
+            g1.iter().zip(&g2).all(|(a, b)| (b - 4.0 * a).abs() <= 1e-3 * (1.0 + b.abs()))
+        },
+    );
+}
+
+/// Concurrent store access from many threads stays consistent.
+#[test]
+fn prop_store_concurrent_publishes() {
+    let store = Arc::new(MemStore::new());
+    let threads: Vec<_> = (0..4usize)
+        .map(|tid| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                for c in 0..10u32 {
+                    let p = LayerParams {
+                        w: Matrix::full(1, 1, tid as f32),
+                        b: vec![c as f32],
+                        normalize_input: false,
+                        opt: None,
+                    };
+                    store.put_layer(tid, c, p).unwrap();
+                    // read back a random other slot that must eventually exist
+                    let _ = store.get_layer(tid, c, Duration::from_secs(1)).unwrap();
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    for l in 0..4usize {
+        let (c, p) = store.latest_layer(l).unwrap().unwrap();
+        assert_eq!(c, 9);
+        assert_eq!(p.b, vec![9.0]);
+    }
+    assert_eq!(store.comm_stats().puts, 40);
+}
+
+/// Network transform dimensionality invariant for arbitrary stacks.
+#[test]
+fn prop_network_dims_compose() {
+    forall_r(
+        "network-dims",
+        108,
+        24,
+        |rng| {
+            let n_layers = gen_usize(rng, 2, 4);
+            let mut dims = vec![gen_usize(rng, 11, 30)];
+            for _ in 0..n_layers {
+                dims.push(gen_usize(rng, 2, 20));
+            }
+            let net = FFNetwork::new(&dims, 10, rng);
+            let x = gen_matrix(rng, (1, 5), (dims[0], dims[0]), 0.0, 1.0);
+            (net, x)
+        },
+        |(net, x)| {
+            let mut eng = NativeEngine::new();
+            let outs = net.forward_all(&mut eng, x).map_err(|e| e.to_string())?;
+            for (l, out) in outs.iter().enumerate() {
+                if out.cols != net.layers[l].d_out() || out.rows != x.rows {
+                    return Err(format!("layer {l} shape {}x{}", out.rows, out.cols));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,184 @@
+//! Cross-scheduler semantic guarantees: the pipeline schedulers must
+//! compute the SAME model as the sequential baseline (the paper's central
+//! accuracy claim: "matches the top accuracy of its sequential version"),
+//! and all schedulers must be deterministic in the seed.
+
+use pff::config::{ExperimentConfig, Scheduler};
+use pff::coordinator::run_experiment;
+use pff::ff::{ClassifierMode, NegStrategy};
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.train_n = 384;
+    cfg.test_n = 192;
+    cfg.epochs = 48;
+    cfg.splits = 8;
+    cfg.neg = NegStrategy::Random;
+    cfg
+}
+
+/// Fast variant for the pure-mechanics tests (no accuracy asserts).
+fn mech_cfg() -> ExperimentConfig {
+    let mut cfg = base_cfg();
+    cfg.train_n = 128;
+    cfg.test_n = 64;
+    cfg.epochs = 8;
+    cfg.splits = 8;
+    cfg
+}
+
+/// All-Layers with shipped optimizer state is a *bit-faithful* pipelining
+/// of the sequential chapter sequence.
+#[test]
+fn all_layers_bitwise_reproduces_sequential() {
+    let mut cfg = mech_cfg();
+    cfg.ship_opt_state = true;
+    cfg.scheduler = Scheduler::Sequential;
+    let seq = run_experiment(&cfg).unwrap();
+    for nodes in [2] {
+        let mut c = cfg.clone();
+        c.scheduler = Scheduler::AllLayers;
+        c.nodes = nodes;
+        let pff = run_experiment(&c).unwrap();
+        for (i, (a, b)) in seq.model.net.layers.iter().zip(&pff.model.net.layers).enumerate() {
+            let d = a.w.max_abs_diff(&b.w);
+            assert!(d < 1e-5, "layer {i} diverged (N={nodes}): {d}");
+        }
+    }
+}
+
+/// Without shipping optimizer state (the paper's wire format), pipelined
+/// training still reaches equivalent accuracy.
+#[test]
+fn all_layers_accuracy_matches_sequential_without_opt_state() {
+    let mut cfg = base_cfg();
+    cfg.scheduler = Scheduler::Sequential;
+    let seq = run_experiment(&cfg).unwrap();
+    let mut c = cfg.clone();
+    c.scheduler = Scheduler::AllLayers;
+    c.nodes = 2;
+    let pff = run_experiment(&c).unwrap();
+    assert!(
+        (seq.test_accuracy - pff.test_accuracy).abs() < 0.12,
+        "sequential {:.1}% vs all-layers {:.1}%",
+        seq.test_accuracy * 100.0,
+        pff.test_accuracy * 100.0
+    );
+}
+
+/// Single-Layer trains each layer every chapter on freshly-fetched
+/// predecessors — different update order than Sequential, but must land
+/// in the same accuracy band.
+#[test]
+fn single_layer_accuracy_in_band() {
+    let mut cfg = base_cfg();
+    cfg.scheduler = Scheduler::Sequential;
+    let seq = run_experiment(&cfg).unwrap();
+    let mut c = cfg.clone();
+    c.scheduler = Scheduler::SingleLayer;
+    c.nodes = 3;
+    let sl = run_experiment(&c).unwrap();
+    assert!(
+        (seq.test_accuracy - sl.test_accuracy).abs() < 0.15,
+        "sequential {:.1}% vs single-layer {:.1}%",
+        seq.test_accuracy * 100.0,
+        sl.test_accuracy * 100.0
+    );
+}
+
+/// Same seed ⇒ identical trained model, for every scheduler.
+#[test]
+fn schedulers_are_deterministic() {
+    for (sched, nodes) in [
+        (Scheduler::Sequential, 1usize),
+        (Scheduler::AllLayers, 2),
+        (Scheduler::SingleLayer, 3),
+        (Scheduler::Federated, 2),
+    ] {
+        let mut cfg = mech_cfg();
+        cfg.scheduler = sched;
+        cfg.nodes = nodes;
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        for (la, lb) in a.model.net.layers.iter().zip(&b.model.net.layers) {
+            assert_eq!(la.w.data, lb.w.data, "{sched:?} not deterministic");
+        }
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+    }
+}
+
+/// Different seeds ⇒ different models (no accidental seed pinning).
+#[test]
+fn seed_changes_model() {
+    let mut cfg = mech_cfg();
+    let a = run_experiment(&cfg).unwrap();
+    cfg.seed += 1;
+    let b = run_experiment(&cfg).unwrap();
+    assert_ne!(a.model.net.layers[0].w.data, b.model.net.layers[0].w.data);
+}
+
+/// AdaptiveNEG runs correctly and clearly beats chance. (Its Table-1
+/// accuracy ADVANTAGE needs paper-scale data/width — at tiny scale the
+/// early network's class-biased scores make adaptive negatives degenerate;
+/// the paper's own Table 5 shows the same fragility on CIFAR. Documented
+/// in EXPERIMENTS.md.)
+#[test]
+fn adaptive_beats_chance_and_differs_from_fixed() {
+    let mut cfg = base_cfg();
+    cfg.epochs = 160; // adaptive needs a usable network before it pays off
+    cfg.neg = NegStrategy::Fixed;
+    let fixed = run_experiment(&cfg).unwrap();
+    cfg.neg = NegStrategy::Adaptive;
+    let adaptive = run_experiment(&cfg).unwrap();
+    assert!(
+        adaptive.test_accuracy > 0.15,
+        "adaptive should beat chance, got {:.1}%",
+        adaptive.test_accuracy * 100.0
+    );
+    // the two strategies genuinely train different models
+    assert_ne!(
+        adaptive.model.net.layers[1].w.data, fixed.model.net.layers[1].w.data,
+        "adaptive and fixed negatives should produce different models"
+    );
+}
+
+/// Softmax classifier trains inline and post-hoc to similar accuracy.
+#[test]
+fn softmax_inline_vs_posthoc() {
+    let mut cfg = mech_cfg();
+    cfg.epochs = 48; // the head itself needs real training
+    cfg.train_n = 384;
+    cfg.classifier = ClassifierMode::Softmax;
+    cfg.scheduler = Scheduler::AllLayers;
+    cfg.nodes = 2;
+    cfg.head_inline = true;
+    let inline = run_experiment(&cfg).unwrap();
+    cfg.head_inline = false;
+    let posthoc = run_experiment(&cfg).unwrap();
+    assert!(inline.model.head.is_some() && posthoc.model.head.is_some());
+    assert!(posthoc.head_posthoc_s > 0.0);
+    assert!(
+        (inline.test_accuracy - posthoc.test_accuracy).abs() < 0.15,
+        "inline {:.1}% vs posthoc {:.1}%",
+        inline.test_accuracy * 100.0,
+        posthoc.test_accuracy * 100.0
+    );
+}
+
+/// The ship-opt-state ablation changes the wire bytes accordingly.
+#[test]
+fn ship_opt_state_triples_wire_bytes() {
+    let mut cfg = mech_cfg();
+    cfg.scheduler = Scheduler::AllLayers;
+    cfg.nodes = 2;
+    cfg.ship_opt_state = false;
+    let lean = run_experiment(&cfg).unwrap();
+    cfg.ship_opt_state = true;
+    let fat = run_experiment(&cfg).unwrap();
+    assert!(
+        fat.comm.bytes_put as f64 > 2.5 * lean.comm.bytes_put as f64,
+        "opt-state shipping should ~3x publish bytes: {} vs {}",
+        fat.comm.bytes_put,
+        lean.comm.bytes_put
+    );
+}

@@ -1,0 +1,120 @@
+//! FF stability regression tests — these encode the failure modes found
+//! (and fixed) during bring-up, so they can't silently return:
+//!
+//! 1. **Dead-ReLU collapse**: with sum-of-squares goodness (or with
+//!    uncentered all-positive inputs), a fresh layer starts above θ, the
+//!    negative pass dominates, and every unit dies within ~20 steps.
+//!    Fixed by mean-of-squares goodness + per-sample centering.
+//! 2. **Upper-layer starvation**: prediction excludes the first layer
+//!    (§3), so the stack only predicts once layers ≥1 develop margins —
+//!    which takes ~100 epochs at reduced scale. Guarded by a margin-growth
+//!    test against a trained first layer.
+//!
+//! EXPERIMENTS.md §Stability records the measurements behind these.
+
+use pff::data::{load_dataset, DatasetKind};
+use pff::engine::{Engine, NativeEngine};
+use pff::ff::negative::random_wrong_labels;
+use pff::ff::overlay::overlay_labels;
+use pff::ff::FFLayer;
+use pff::tensor::{ops, AdamState, Rng};
+
+fn train_layer(
+    eng: &mut NativeEngine,
+    layer: &mut FFLayer,
+    opt: &mut AdamState,
+    x_pos: &pff::tensor::Matrix,
+    x_neg: &pff::tensor::Matrix,
+    epochs: u32,
+    seed: u64,
+) -> f32 {
+    let mut last_margin = 0.0;
+    for epoch in 0..epochs {
+        let mut order: Vec<usize> = (0..x_pos.rows).collect();
+        let mut srng = Rng::derive(seed, epoch.into());
+        srng.shuffle(&mut order);
+        let mut msum = 0.0;
+        let mut steps = 0;
+        for idx in order.chunks(64) {
+            let s = eng
+                .ff_train_step(layer, opt, &x_pos.gather_rows(idx), &x_neg.gather_rows(idx), 2.0, 0.01)
+                .unwrap();
+            msum += s.margin();
+            steps += 1;
+        }
+        last_margin = msum / steps as f32;
+    }
+    last_margin
+}
+
+/// Regression 1: after 50 epochs the first layer must be (a) alive —
+/// a healthy fraction of non-zero activations — and (b) discriminating,
+/// with a clearly positive pos/neg goodness margin.
+#[test]
+fn first_layer_stays_alive_and_discriminates() {
+    let bundle = load_dataset(DatasetKind::SynthMnist, 512, 128, 42).unwrap();
+    let mut eng = NativeEngine::new();
+    let mut rng = Rng::new(1);
+    let mut layer = FFLayer::new(784, 128, false, &mut rng);
+    let mut opt = AdamState::new(784, 128);
+    let neg = random_wrong_labels(42, 0, &bundle.train.y, 10);
+    let xp = overlay_labels(&bundle.train.x, &bundle.train.y, 10);
+    let xn = overlay_labels(&bundle.train.x, &neg, 10);
+
+    let margin = train_layer(&mut eng, &mut layer, &mut opt, &xp, &xn, 50, 9);
+    assert!(margin > 0.5, "layer-0 margin collapsed: {margin}");
+
+    let y = eng.layer_forward(&layer, &xp).unwrap();
+    let alive = y.data.iter().filter(|v| **v > 0.0).count() as f32 / y.data.len() as f32;
+    assert!(alive > 0.10, "dead-ReLU collapse: only {:.1}% units alive", alive * 100.0);
+    assert!(y.data.iter().all(|v| v.is_finite()), "non-finite activations");
+}
+
+/// Regression 2: a second layer trained against a converged first layer
+/// must develop a positive margin (upper layers are learnable — the
+/// cascade starts once layer 0 is good).
+#[test]
+fn second_layer_develops_margin() {
+    let bundle = load_dataset(DatasetKind::SynthMnist, 512, 128, 42).unwrap();
+    let mut eng = NativeEngine::new();
+    let mut rng = Rng::new(2);
+    let mut l0 = FFLayer::new(784, 64, false, &mut rng);
+    let mut o0 = AdamState::new(784, 64);
+    let neg = random_wrong_labels(42, 0, &bundle.train.y, 10);
+    let xp0 = overlay_labels(&bundle.train.x, &bundle.train.y, 10);
+    let xn0 = overlay_labels(&bundle.train.x, &neg, 10);
+    train_layer(&mut eng, &mut l0, &mut o0, &xp0, &xn0, 40, 11);
+
+    let xp1 = eng.layer_forward(&l0, &xp0).unwrap();
+    let xn1 = eng.layer_forward(&l0, &xn0).unwrap();
+    let mut l1 = FFLayer::new(64, 64, true, &mut rng);
+    let mut o1 = AdamState::new(64, 64);
+    let early = train_layer(&mut eng, &mut l1, &mut o1, &xp1, &xn1, 5, 12);
+    let late = train_layer(&mut eng, &mut l1, &mut o1, &xp1, &xn1, 100, 13);
+    assert!(
+        late > early && late > 0.3,
+        "second-layer margin failed to grow: early {early}, late {late}"
+    );
+}
+
+/// Regression 3: the mean-goodness loss keeps gradients sane under both
+/// goodness regimes (g ≪ θ at init, g ≈ θ at equilibrium) — weights stay
+/// finite through aggressive training.
+#[test]
+fn aggressive_training_stays_finite() {
+    let bundle = load_dataset(DatasetKind::SynthMnist, 256, 64, 7).unwrap();
+    let mut eng = NativeEngine::new();
+    let mut rng = Rng::new(3);
+    let mut layer = FFLayer::new(784, 32, false, &mut rng);
+    let mut opt = AdamState::new(784, 32);
+    let neg = random_wrong_labels(7, 0, &bundle.train.y, 10);
+    let xp = overlay_labels(&bundle.train.x, &bundle.train.y, 10);
+    let xn = overlay_labels(&bundle.train.x, &neg, 10);
+    // lr 10x the default — must not NaN even if it won't learn well
+    for _ in 0..200 {
+        eng.ff_train_step(&mut layer, &mut opt, &xp, &xn, 2.0, 0.1).unwrap();
+    }
+    assert!(layer.w.data.iter().all(|v| v.is_finite()));
+    let g = ops::row_sumsq(&eng.layer_forward(&layer, &xp).unwrap());
+    assert!(g.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,187 @@
+//! The cross-backend oracle: the PJRT/XLA engine (AOT artifacts lowered
+//! from the L1 Pallas kernels) must match the pure-Rust NativeEngine
+//! numerically, op by op and over multi-step training.
+//!
+//! Requires `artifacts/` built with the `test` profile
+//! (`make artifacts`). Tests self-skip (with a loud message) if absent so
+//! `cargo test` stays runnable pre-artifacts.
+
+use pff::engine::{Engine, NativeEngine, XlaEngine};
+use pff::ff::{FFLayer, LinearHead};
+use pff::tensor::{AdamState, Matrix, Rng};
+
+const DIN: usize = 784;
+const H: usize = 32;
+const B: usize = 16; // test-profile batch
+
+fn artifacts() -> Option<XlaEngine> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/manifest.txt missing — run `make artifacts`");
+        return None;
+    }
+    match XlaEngine::new("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => panic!("artifacts exist but engine failed to open: {e:#}"),
+    }
+}
+
+fn close(a: &Matrix, b: &Matrix, tol: f32, what: &str) {
+    let d = a.max_abs_diff(b);
+    assert!(d < tol, "{what}: max abs diff {d} > {tol}");
+}
+
+fn close_v(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    let d = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(d < tol, "{what}: max abs diff {d} > {tol}");
+}
+
+#[test]
+fn layer_forward_matches() {
+    let Some(mut xla) = artifacts() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::new(1);
+    for (norm, din, dout) in [(false, DIN, H), (true, H, H)] {
+        let layer = FFLayer::new(din, dout, norm, &mut rng);
+        let x = Matrix::rand_uniform(B, din, 0.0, 1.0, &mut rng);
+        let yn = native.layer_forward(&layer, &x).unwrap();
+        let yx = xla.layer_forward(&layer, &x).unwrap();
+        close(&yn, &yx, 1e-4, &format!("layer_forward norm={norm}"));
+    }
+}
+
+#[test]
+fn layer_forward_chunked_matches() {
+    // rows > artifact batch exercise the pad+chunk path.
+    let Some(mut xla) = artifacts() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::new(2);
+    let layer = FFLayer::new(DIN, H, false, &mut rng);
+    let x = Matrix::rand_uniform(3 * B + 5, DIN, 0.0, 1.0, &mut rng);
+    let yn = native.layer_forward(&layer, &x).unwrap();
+    let yx = xla.layer_forward(&layer, &x).unwrap();
+    close(&yn, &yx, 1e-4, "chunked forward");
+}
+
+#[test]
+fn ff_train_step_matches_over_many_steps() {
+    let Some(mut xla) = artifacts() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::new(3);
+    let layer0 = FFLayer::new(DIN, H, false, &mut rng);
+    let mut ln = layer0.clone();
+    let mut lx = layer0;
+    let mut on = AdamState::new(DIN, H);
+    let mut ox = AdamState::new(DIN, H);
+    for step in 0..10 {
+        let xp = Matrix::rand_uniform(B, DIN, 0.0, 1.0, &mut rng);
+        let xn = Matrix::rand_uniform(B, DIN, 0.0, 1.0, &mut rng);
+        let sn = native.ff_train_step(&mut ln, &mut on, &xp, &xn, 2.0, 0.01).unwrap();
+        let sx = xla.ff_train_step(&mut lx, &mut ox, &xp, &xn, 2.0, 0.01).unwrap();
+        assert!(
+            (sn.loss() - sx.loss()).abs() < 1e-3,
+            "step {step}: loss {} vs {}",
+            sn.loss(),
+            sx.loss()
+        );
+        close(&ln.w, &lx.w, 5e-4, &format!("weights after step {step}"));
+        close_v(&ln.b, &lx.b, 5e-4, &format!("bias after step {step}"));
+    }
+    assert_eq!(on.t, ox.t);
+    close(&on.m_w, &ox.m_w, 5e-4, "adam m_w");
+}
+
+#[test]
+fn ff_train_step_partial_batch_matches() {
+    // fewer rows than the artifact batch exercise the mask path.
+    let Some(mut xla) = artifacts() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::new(4);
+    let layer0 = FFLayer::new(DIN, H, false, &mut rng);
+    let mut ln = layer0.clone();
+    let mut lx = layer0;
+    let mut on = AdamState::new(DIN, H);
+    let mut ox = AdamState::new(DIN, H);
+    let rows = B - 5;
+    let xp = Matrix::rand_uniform(rows, DIN, 0.0, 1.0, &mut rng);
+    let xn = Matrix::rand_uniform(rows, DIN, 0.0, 1.0, &mut rng);
+    let sn = native.ff_train_step(&mut ln, &mut on, &xp, &xn, 2.0, 0.01).unwrap();
+    let sx = xla.ff_train_step(&mut lx, &mut ox, &xp, &xn, 2.0, 0.01).unwrap();
+    assert!((sn.loss() - sx.loss()).abs() < 1e-3, "{} vs {}", sn.loss(), sx.loss());
+    assert!((sn.goodness_pos - sx.goodness_pos).abs() < 1e-2);
+    close(&ln.w, &lx.w, 5e-4, "weights (masked batch)");
+}
+
+#[test]
+fn head_step_and_logits_match() {
+    let Some(mut xla) = artifacts() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::new(5);
+    let head_din = 2 * H; // test profile: dims [784,32,32,32] → head over layers 2..
+    let head0 = LinearHead::new(head_din, 10, &mut rng);
+    let mut hn = head0.clone();
+    let mut hx = head0;
+    let mut on = AdamState::new(head_din, 10);
+    let mut ox = AdamState::new(head_din, 10);
+    let labels: Vec<u8> = (0..B).map(|i| (i % 10) as u8).collect();
+    for step in 0..5 {
+        let x = Matrix::rand_uniform(B, head_din, 0.0, 1.0, &mut rng);
+        let ln = native.head_train_step(&mut hn, &mut on, &x, &labels, 1e-3).unwrap();
+        let lx = xla.head_train_step(&mut hx, &mut ox, &x, &labels, 1e-3).unwrap();
+        assert!((ln - lx).abs() < 1e-3, "step {step}: {ln} vs {lx}");
+        close(&hn.w, &hx.w, 5e-4, &format!("head weights step {step}"));
+        let x2 = Matrix::rand_uniform(B, head_din, 0.0, 1.0, &mut rng);
+        let zn = native.head_logits(&hn, &x2).unwrap();
+        let zx = xla.head_logits(&hx, &x2).unwrap();
+        close(&zn, &zx, 1e-3, "logits");
+    }
+}
+
+#[test]
+fn perfopt_step_matches() {
+    let Some(mut xla) = artifacts() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::new(6);
+    let l0 = FFLayer::new(DIN, H, false, &mut rng);
+    let h0 = LinearHead::new(H, 10, &mut rng);
+    let (mut ln, mut lx) = (l0.clone(), l0);
+    let (mut hn, mut hx) = (h0.clone(), h0);
+    let (mut oln, mut olx) = (AdamState::new(DIN, H), AdamState::new(DIN, H));
+    let (mut ohn, mut ohx) = (AdamState::new(H, 10), AdamState::new(H, 10));
+    let labels: Vec<u8> = (0..B).map(|i| (i % 10) as u8).collect();
+    for step in 0..5 {
+        let x = Matrix::rand_uniform(B, DIN, 0.0, 1.0, &mut rng);
+        let a = native
+            .perfopt_train_step(&mut ln, &mut hn, &mut oln, &mut ohn, &x, &labels, 0.01)
+            .unwrap();
+        let b = xla
+            .perfopt_train_step(&mut lx, &mut hx, &mut olx, &mut ohx, &x, &labels, 0.01)
+            .unwrap();
+        assert!((a - b).abs() < 1e-3, "step {step}: CE {a} vs {b}");
+        close(&ln.w, &lx.w, 5e-4, &format!("perfopt layer weights step {step}"));
+        close(&hn.w, &hx.w, 5e-4, &format!("perfopt head weights step {step}"));
+    }
+}
+
+#[test]
+fn end_to_end_xla_experiment_learns() {
+    // Full coordinator run on the XLA engine: the production path.
+    let Some(_) = artifacts() else { return };
+    let mut cfg = pff::config::ExperimentConfig::tiny();
+    cfg.engine = pff::config::EngineKind::Xla;
+    cfg.dims = vec![784, 32, 32, 32]; // must match the `test` profile
+    cfg.batch = 16;
+    cfg.train_n = 256;
+    cfg.test_n = 96;
+    cfg.eval_chunk = 16;
+    cfg.epochs = 96;
+    cfg.splits = 8;
+    cfg.neg = pff::ff::NegStrategy::Random;
+    cfg.scheduler = pff::config::Scheduler::AllLayers;
+    cfg.nodes = 2;
+    let rep = pff::coordinator::run_experiment(&cfg).unwrap();
+    assert!(
+        rep.test_accuracy > 0.12,
+        "XLA end-to-end should reach ≥ chance, got {:.1}%",
+        rep.test_accuracy * 100.0
+    );
+}
