@@ -1,15 +1,91 @@
 //! Micro-benchmarks of the compute engine hot paths (the §Perf L3/L2
 //! working set): FF step, forward, head step, perfopt step, adaptive
-//! neg-label generation — native engine, plus XLA when artifacts exist.
+//! neg-label generation — native engine, plus XLA when the feature and
+//! artifacts are present.
 //!
-//! `cargo bench --bench micro_engine`
+//! ```bash
+//! cargo bench --bench micro_engine                      # full scale
+//! cargo bench --bench micro_engine -- --quick           # CI smoke scale
+//! cargo bench --bench micro_engine -- --json OUT.json   # perf artifact
+//! ```
 
-use pff::bench_util::{bench, fmt_s};
-use pff::engine::{Engine, NativeEngine, XlaEngine};
+use pff::bench_util::{bench, fmt_s, BenchStats};
+use pff::engine::{Engine, NativeEngine};
 use pff::ff::{negative, FFLayer, FFNetwork, LinearHead};
 use pff::tensor::{AdamState, Matrix, Rng};
 
-fn bench_engine(eng: &mut dyn Engine, dims: &[usize], batch: usize) {
+/// One named measurement, accumulated for the optional JSON artifact.
+struct Record {
+    name: String,
+    stats: BenchStats,
+}
+
+/// Collects records and mirrors them to stdout.
+#[derive(Default)]
+struct Report {
+    records: Vec<Record>,
+}
+
+impl Report {
+    fn add(&mut self, name: String, stats: BenchStats) {
+        println!("{}", stats.line(&name));
+        self.records.push(Record { name, stats });
+    }
+
+    /// Hand-rolled JSON (no serde offline): one object per record.
+    fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"bench\": \"micro_engine\",\n  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \
+                 \"p50_s\": {:.9}, \"iters\": {}}}{}\n",
+                r.name,
+                r.stats.mean_s,
+                r.stats.min_s,
+                r.stats.p50_s,
+                r.stats.iters,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+struct Opts {
+    quick: bool,
+    json: Option<String>,
+}
+
+fn parse_opts() -> Opts {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut opts = Opts { quick: false, json: None };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => {
+                opts.quick = true;
+                i += 1;
+            }
+            "--json" => {
+                opts.json = args.get(i + 1).cloned();
+                i += 2;
+            }
+            // tolerate cargo-bench passthrough flags like --bench
+            _ => i += 1,
+        }
+    }
+    opts
+}
+
+fn bench_engine(
+    report: &mut Report,
+    eng: &mut dyn Engine,
+    dims: &[usize],
+    batch: usize,
+    warmup: u32,
+    iters: u32,
+) {
     let mut rng = Rng::new(42);
     let (din, dout) = (dims[0], dims[1]);
     let mut layer = FFLayer::new(din, dout, false, &mut rng);
@@ -17,84 +93,112 @@ fn bench_engine(eng: &mut dyn Engine, dims: &[usize], batch: usize) {
     let x_pos = Matrix::rand_uniform(batch, din, 0.0, 1.0, &mut rng);
     let x_neg = Matrix::rand_uniform(batch, din, 0.0, 1.0, &mut rng);
 
-    let s = bench(3, 20, || {
+    let s = bench(warmup, iters, || {
         eng.ff_train_step(&mut layer, &mut opt, &x_pos, &x_neg, 2.0, 0.01).unwrap();
     });
     let flops = 4.0 * (2 * batch) as f64 * din as f64 * dout as f64;
-    println!(
-        "{}",
-        s.line(&format!(
+    report.add(
+        format!(
             "[{}] ff_step {din}x{dout} b{batch}  ({:.2} GFLOP/s)",
             eng.name(),
             flops / s.min_s / 1e9
-        ))
+        ),
+        s,
     );
 
-    let s = bench(3, 20, || {
+    let s = bench(warmup, iters, || {
         eng.layer_forward(&layer, &x_pos).unwrap();
     });
-    println!("{}", s.line(&format!("[{}] layer_forward {din}x{dout} b{batch}", eng.name())));
+    report.add(format!("[{}] layer_forward {din}x{dout} b{batch}", eng.name()), s);
 
     let head_din: usize = dims[2..].iter().sum::<usize>().max(dout);
     let mut head = LinearHead::new(head_din, 10, &mut rng);
     let mut hopt = AdamState::new(head_din, 10);
     let hx = Matrix::rand_uniform(batch, head_din, 0.0, 1.0, &mut rng);
     let labels: Vec<u8> = (0..batch).map(|i| (i % 10) as u8).collect();
-    let s = bench(3, 20, || {
+    let s = bench(warmup, iters, || {
         eng.head_train_step(&mut head, &mut hopt, &hx, &labels, 1e-3).unwrap();
     });
-    println!("{}", s.line(&format!("[{}] head_step {head_din}x10 b{batch}", eng.name())));
+    report.add(format!("[{}] head_step {head_din}x10 b{batch}", eng.name()), s);
 
     let mut po_head = LinearHead::new(dout, 10, &mut rng);
     let (mut po_l, mut po_h) = (AdamState::new(din, dout), AdamState::new(dout, 10));
-    let s = bench(3, 20, || {
+    let s = bench(warmup, iters, || {
         eng.perfopt_train_step(&mut layer, &mut po_head, &mut po_l, &mut po_h, &x_pos, &labels, 0.01)
             .unwrap();
     });
-    println!("{}", s.line(&format!("[{}] perfopt_step {din}x{dout} b{batch}", eng.name())));
+    report.add(format!("[{}] perfopt_step {din}x{dout} b{batch}", eng.name()), s);
+}
+
+#[cfg(feature = "xla")]
+fn xla_micro(report: &mut Report, warmup: u32, iters: u32) {
+    use pff::engine::XlaEngine;
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        println!("\n(artifacts/ missing — run `make artifacts` to include XLA micro-benches)");
+        return;
+    }
+    println!("\n── micro: XLA engine (test profile 784→32, b16) ──");
+    match XlaEngine::new("artifacts") {
+        Ok(mut xla) => {
+            let mut rng = Rng::new(42);
+            let mut layer = FFLayer::new(784, 32, false, &mut rng);
+            let mut opt = AdamState::new(784, 32);
+            let xp = Matrix::rand_uniform(16, 784, 0.0, 1.0, &mut rng);
+            let xn = Matrix::rand_uniform(16, 784, 0.0, 1.0, &mut rng);
+            let s = bench(warmup, iters, || {
+                xla.ff_train_step(&mut layer, &mut opt, &xp, &xn, 2.0, 0.01).unwrap();
+            });
+            report.add("[xla] ff_step 784x32 b16 (incl. PJRT transfer)".to_string(), s);
+            let s = bench(warmup, iters, || {
+                xla.layer_forward(&layer, &xp).unwrap();
+            });
+            report.add("[xla] layer_forward 784x32 b16".to_string(), s);
+        }
+        Err(e) => println!("  (skipping XLA micro-bench: {e})"),
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_micro(_report: &mut Report, _warmup: u32, _iters: u32) {
+    println!("\n(xla feature disabled — rebuild with `--features xla` for XLA micro-benches)");
 }
 
 fn main() {
-    println!("── micro: native engine (reduced dims 784→256→…) ──");
+    let opts = parse_opts();
+    let mut report = Report::default();
+    let (dims, batch, warmup, iters): (&[usize], usize, u32, u32) = if opts.quick {
+        (&[784, 64, 64, 64, 64], 32, 1, 5)
+    } else {
+        (&[784, 256, 256, 256, 256], 64, 3, 20)
+    };
+
+    println!(
+        "── micro: native engine ({} dims {dims:?}) ──",
+        if opts.quick { "quick" } else { "reduced" }
+    );
     let mut native = NativeEngine::new();
-    bench_engine(&mut native, &[784, 256, 256, 256, 256], 64);
+    bench_engine(&mut report, &mut native, dims, batch, warmup, iters);
 
     println!("\n── micro: AdaptiveNEG sweep (the most expensive coordinator stage) ──");
+    let (sweep_n, sweep_reps) = if opts.quick { (128usize, 2u32) } else { (512, 5) };
     let mut rng = Rng::new(7);
-    let net = FFNetwork::new(&[784, 256, 256, 256, 256], 10, &mut rng);
-    let x = Matrix::rand_uniform(512, 784, 0.0, 1.0, &mut rng);
-    let truth: Vec<u8> = (0..512).map(|i| (i % 10) as u8).collect();
-    let s = bench(1, 5, || {
+    let net = FFNetwork::new(dims, 10, &mut rng);
+    let x = Matrix::rand_uniform(sweep_n, 784, 0.0, 1.0, &mut rng);
+    let truth: Vec<u8> = (0..sweep_n).map(|i| (i % 10) as u8).collect();
+    let s = bench(1, sweep_reps, || {
         negative::adaptive_neg_labels(&mut native, &net, &x, &truth, 256).unwrap();
     });
-    println!("{}", s.line("[native] adaptive_neg_labels n=512 (10-way sweep)"));
+    let per_sample = s.min_s / sweep_n as f64;
+    report.add(format!("[native] adaptive_neg_labels n={sweep_n} (10-way sweep)"), s);
     println!(
         "        per-sample cost {} — vs one ff_step costing ~the same per 128 samples",
-        fmt_s(s.min_s / 512.0)
+        fmt_s(per_sample)
     );
 
-    // XLA engine, when artifacts are present (test profile dims).
-    if std::path::Path::new("artifacts/manifest.txt").exists() {
-        println!("\n── micro: XLA engine (test profile 784→32, b16) ──");
-        match XlaEngine::new("artifacts") {
-            Ok(mut xla) => {
-                let mut rng = Rng::new(42);
-                let mut layer = FFLayer::new(784, 32, false, &mut rng);
-                let mut opt = AdamState::new(784, 32);
-                let xp = Matrix::rand_uniform(16, 784, 0.0, 1.0, &mut rng);
-                let xn = Matrix::rand_uniform(16, 784, 0.0, 1.0, &mut rng);
-                let s = bench(3, 20, || {
-                    xla.ff_train_step(&mut layer, &mut opt, &xp, &xn, 2.0, 0.01).unwrap();
-                });
-                println!("{}", s.line("[xla] ff_step 784x32 b16 (incl. PJRT transfer)"));
-                let s = bench(3, 20, || {
-                    xla.layer_forward(&layer, &xp).unwrap();
-                });
-                println!("{}", s.line("[xla] layer_forward 784x32 b16"));
-            }
-            Err(e) => println!("  (skipping XLA micro-bench: {e})"),
-        }
-    } else {
-        println!("\n(artifacts/ missing — run `make artifacts` to include XLA micro-benches)");
+    xla_micro(&mut report, warmup, iters);
+
+    if let Some(path) = opts.json {
+        std::fs::write(&path, report.to_json()).expect("writing json artifact");
+        println!("\nwrote perf artifact: {path}");
     }
 }

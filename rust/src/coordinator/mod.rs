@@ -22,10 +22,10 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::{EngineKind, ExperimentConfig, Scheduler, TransportKind};
+use crate::config::{ExperimentConfig, Scheduler, TransportKind};
 use crate::coordinator::store::{MemStore, ParamStore};
 use crate::data::{load_dataset, DataBundle};
-use crate::engine::{native_factory, xla_factory, Engine, EngineFactory};
+use crate::engine::{factory_for, Engine, EngineFactory};
 use crate::ff::ClassifierMode;
 use crate::metrics::{makespan, CommStats, LossCurve, MakespanModel, NodeReport, SpanRecorder};
 use crate::transport::tcp::{StoreServer, TcpStoreClient};
@@ -74,11 +74,11 @@ impl ExperimentReport {
     }
 }
 
-fn engine_factory(cfg: &ExperimentConfig) -> EngineFactory {
-    match cfg.engine {
-        EngineKind::Native => native_factory(),
-        EngineKind::Xla => xla_factory(cfg.artifact_dir.clone()),
-    }
+/// Resolve the configured backend through the [`crate::engine`] registry
+/// seam (errors immediately — with a rebuild hint — when the binary was
+/// built without the requested backend).
+fn engine_factory(cfg: &ExperimentConfig) -> Result<EngineFactory> {
+    factory_for(cfg.engine, &cfg.artifact_dir)
 }
 
 /// Run a full PFF experiment per `cfg`. See module docs.
@@ -94,7 +94,7 @@ pub fn run_experiment_with_data(
     bundle: &DataBundle,
 ) -> Result<ExperimentReport> {
     let cfg = cfg.clone().validated()?;
-    let factory = engine_factory(&cfg);
+    let factory = engine_factory(&cfg)?;
 
     // --- store + transport ---------------------------------------------------
     let mem = Arc::new(MemStore::new());

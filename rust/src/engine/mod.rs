@@ -14,13 +14,16 @@
 //! executables and scratch buffers keyed by shape.
 
 pub mod native;
+#[cfg(feature = "xla")]
 pub mod xla;
 
 pub use native::NativeEngine;
-pub use xla::XlaEngine;
+#[cfg(feature = "xla")]
+pub use self::xla::XlaEngine;
 
 use anyhow::Result;
 
+use crate::config::EngineKind;
 use crate::ff::layer::{FFLayer, FFStepStats, LinearHead};
 use crate::tensor::{AdamState, Matrix};
 
@@ -91,6 +94,38 @@ pub fn native_factory() -> EngineFactory {
 }
 
 /// Factory for [`XlaEngine`]s reading from `artifact_dir`.
+#[cfg(feature = "xla")]
 pub fn xla_factory(artifact_dir: std::path::PathBuf) -> EngineFactory {
     std::sync::Arc::new(move || Ok(Box::new(XlaEngine::new(&artifact_dir)?) as Box<dyn Engine>))
+}
+
+/// Resolve a configured [`EngineKind`] to a concrete [`EngineFactory`] —
+/// the backend-registry seam every experiment goes through.
+///
+/// With default features this build carries only the native backend;
+/// selecting [`EngineKind::Xla`] then returns an error telling the user
+/// to rebuild with `--features xla` instead of failing deep inside a
+/// worker thread.
+pub fn factory_for(kind: EngineKind, artifact_dir: &std::path::Path) -> Result<EngineFactory> {
+    match kind {
+        EngineKind::Native => Ok(native_factory()),
+        EngineKind::Xla => xla_factory_for(artifact_dir),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn xla_factory_for(artifact_dir: &std::path::Path) -> Result<EngineFactory> {
+    Ok(xla_factory(artifact_dir.to_path_buf()))
+}
+
+// The factory seam's contract is pinned by `tests/engine_factory.rs`
+// through the public API (native resolves and computes; Xla fails fast
+// with a rebuild hint on default builds, resolves under `--features xla`).
+#[cfg(not(feature = "xla"))]
+fn xla_factory_for(_artifact_dir: &std::path::Path) -> Result<EngineFactory> {
+    anyhow::bail!(
+        "engine 'xla' is not compiled into this binary — rebuild with \
+         `cargo build --features xla` (and generate AOT artifacts via \
+         `python/compile/aot.py`; see README \"Build matrix\")"
+    )
 }

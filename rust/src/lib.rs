@@ -25,8 +25,9 @@
 //!   overlays, negative-sample strategies, classifiers, Performance-
 //!   Optimized (local-BP head) layers.
 //! * [`engine`] — the compute contract ([`engine::Engine`]) with two
-//!   implementations: pure-Rust [`engine::NativeEngine`] and PJRT-backed
-//!   [`engine::XlaEngine`].
+//!   implementations: pure-Rust [`engine::NativeEngine`] and the
+//!   PJRT-backed `engine::XlaEngine` (behind the off-by-default `xla`
+//!   cargo feature; see README "Build matrix").
 //! * [`coordinator`] — the paper's contribution: Sequential / Single-Layer
 //!   / All-Layers / Federated PFF schedulers over a chapter-versioned
 //!   parameter store, with per-node busy/idle metrics.
@@ -59,6 +60,7 @@ pub mod engine;
 pub mod ff;
 pub mod harness;
 pub mod metrics;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 use pff::config::{EngineKind, ExperimentConfig};
 use pff::coordinator::run_experiment;
 use pff::ff::NegStrategy;
-use pff::harness::{common, figures, table1, table2, table3, table4, table5, Scale};
+use pff::harness::{figures, table1, table2, table3, table4, table5, Scale};
 use pff::sim::schedules::{SimParams, SimVariant};
 use pff::sim::{build_schedule, gantt, simulate, CostModel};
 
@@ -226,6 +226,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_inspect(args: &[String]) -> Result<()> {
     let mut dir = std::path::PathBuf::from("artifacts");
     let mut i = 0;
@@ -251,6 +252,14 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
         }
     }
     println!("{} modules, {} compiled", entries.len(), rt.cached());
-    let _ = common::sim_variant(pff::config::Scheduler::AllLayers); // keep harness linked
+    let _ = pff::harness::common::sim_variant(pff::config::Scheduler::AllLayers); // keep harness linked
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_inspect(_args: &[String]) -> Result<()> {
+    bail!(
+        "inspect-artifacts needs the PJRT runtime — rebuild with \
+         `cargo build --features xla` (see README \"Build matrix\")"
+    )
 }

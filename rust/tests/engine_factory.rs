@@ -1,0 +1,76 @@
+//! The `EngineFactory` backend-registry seam, exercised through the
+//! public API: `EngineKind::Native` must always resolve and construct,
+//! and `EngineKind::Xla` must either resolve (with `--features xla`) or
+//! fail fast with a rebuild hint (default offline build) — *before* any
+//! worker thread spawns.
+
+use std::path::Path;
+
+use pff::config::EngineKind;
+use pff::engine::factory_for;
+
+#[test]
+fn native_resolves_and_produces_working_engine() {
+    let factory = factory_for(EngineKind::Native, Path::new("artifacts")).unwrap();
+    let mut engine = factory().unwrap();
+    assert_eq!(engine.name(), "native");
+
+    // The factory engine must actually compute: a tiny forward pass.
+    let mut rng = pff::tensor::Rng::new(1);
+    let layer = pff::ff::FFLayer::new(8, 4, false, &mut rng);
+    let x = pff::tensor::Matrix::rand_uniform(3, 8, 0.0, 1.0, &mut rng);
+    let y = engine.layer_forward(&layer, &x).unwrap();
+    assert_eq!((y.rows, y.cols), (3, 4));
+}
+
+#[test]
+fn each_factory_call_yields_a_fresh_engine() {
+    // One engine per node thread is the seam's contract (non-Send backend
+    // internals must never cross threads).
+    let factory = factory_for(EngineKind::Native, Path::new("artifacts")).unwrap();
+    let a = factory().unwrap();
+    let b = factory().unwrap();
+    assert_eq!(a.name(), b.name());
+}
+
+#[cfg(not(feature = "xla"))]
+#[test]
+fn xla_kind_fails_fast_with_rebuild_hint() {
+    let err = factory_for(EngineKind::Xla, Path::new("artifacts")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--features xla"), "missing rebuild hint: {msg}");
+}
+
+#[cfg(not(feature = "xla"))]
+#[test]
+fn experiment_with_xla_engine_reports_rebuild_hint() {
+    // End to end through run_experiment: the error must surface from the
+    // leader's factory resolution, not from a hung or panicked worker.
+    let mut cfg = pff::config::ExperimentConfig::tiny();
+    cfg.train_n = 32;
+    cfg.test_n = 16;
+    cfg.epochs = 8;
+    cfg.engine = EngineKind::Xla;
+    let err = pff::coordinator::run_experiment(&cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--features xla"), "missing rebuild hint: {msg}");
+}
+
+#[cfg(feature = "xla")]
+#[test]
+fn xla_kind_resolves_with_feature_and_fails_without_artifacts() {
+    let factory = factory_for(EngineKind::Xla, Path::new("definitely-missing-artifacts")).unwrap();
+    // Construction needs artifacts (or the real PJRT runtime); the error
+    // must mention what to do, not crash.
+    let err = factory().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(!msg.is_empty());
+}
+
+#[test]
+fn engine_kind_parses_both_backends() {
+    assert_eq!("native".parse::<EngineKind>().unwrap(), EngineKind::Native);
+    assert_eq!("xla".parse::<EngineKind>().unwrap(), EngineKind::Xla);
+    assert_eq!("pjrt".parse::<EngineKind>().unwrap(), EngineKind::Xla);
+    assert!("cuda".parse::<EngineKind>().is_err());
+}

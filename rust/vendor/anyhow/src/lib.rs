@@ -1,0 +1,269 @@
+//! Offline shim of the [`anyhow`](https://docs.rs/anyhow) API surface the
+//! `pff` crate uses.
+//!
+//! The build environment has no network/registry access, so this vendored
+//! path crate provides a drop-in subset with the same names and semantics:
+//!
+//! * [`Error`] — an opaque error value holding a context chain. `{e}`
+//!   prints the outermost message, `{e:#}` the full `a: b: c` chain,
+//!   matching anyhow's Display contract.
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` (for
+//!   any std error *and* for `Error` itself) and on `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//!
+//! Swapping in the real crates.io `anyhow` is a one-line Cargo.toml change;
+//! nothing here exposes shim-specific API.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Opaque error: an outermost message plus the chain of causes beneath it.
+///
+/// Deliberately does **not** implement `std::error::Error`, exactly like
+/// the real `anyhow::Error` — that is what makes the blanket
+/// `From<E: std::error::Error>` conversion (and therefore `?`) coherent.
+pub struct Error {
+    /// `chain[0]` is the outermost context; deeper entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    fn wrap(mut self, outer: String) -> Error {
+        self.chain.insert(0, outer);
+        self
+    }
+
+    /// The cause chain, outermost first (anyhow calls this `chain()`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The outermost (root-of-report) message.
+    pub fn root_cause_message(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod ext {
+    use super::Error;
+    use std::fmt;
+
+    /// Unifies "a std error" and "already an [`Error`]" for the blanket
+    /// [`super::Context`] impl (the same sealed-helper trick real anyhow
+    /// uses to stay coherent).
+    pub trait StdError {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            Error::from(self).wrap(context.to_string())
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            self.wrap(context.to_string())
+        }
+    }
+}
+
+/// Attach context to errors (`Result`) or turn absence into an error
+/// (`Option`).
+pub trait Context<T, E> {
+    /// Wrap the error with `context`.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless `$cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file is gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            let r: std::result::Result<(), std::io::Error> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "file is gone");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file is gone");
+    }
+
+    #[test]
+    fn context_on_anyhow_error_and_option() {
+        let e = Err::<(), Error>(anyhow!("inner {}", 7))
+            .with_context(|| "outer".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

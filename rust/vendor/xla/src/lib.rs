@@ -1,0 +1,192 @@
+//! Type-level stub of the [`xla-rs`](https://github.com/LaurentMazare/xla-rs)
+//! PJRT bindings.
+//!
+//! The real `xla` crate links the native `xla_extension` library, which
+//! cannot be downloaded or built in this offline environment. This stub
+//! keeps `cargo check --features xla` (and the whole `engine::XlaEngine` /
+//! `runtime` source tree) type-checking offline with the exact API shape
+//! `pff` uses:
+//!
+//! * [`PjRtClient::cpu`] / [`PjRtClient::compile`]
+//! * [`PjRtLoadedExecutable::execute`] → [`PjRtBuffer::to_literal_sync`]
+//! * [`HloModuleProto::from_text_file`] / [`XlaComputation::from_proto`]
+//! * [`Literal`] constructors and readbacks (`vec1`, `scalar`, `reshape`,
+//!   `to_vec`, `to_tuple`)
+//!
+//! Every entry point that would need the native runtime returns
+//! [`Error`] at *run time* ([`PjRtClient::cpu`] fails first, so the
+//! engine surfaces one clear message). To actually execute the AOT
+//! artifacts, point the `xla` dependency in `rust/Cargo.toml` at the real
+//! crate; no `pff` source changes are required.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs's displayable error.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable — this build links the type-level \
+         stub at rust/vendor/xla; depend on the real `xla` crate (xla-rs) \
+         to execute AOT artifacts"
+    ))
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    /// Convert from the stub's f32 storage.
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// Host-side tensor value (f32 storage only — all `pff` artifacts are f32).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+
+    /// Scalar literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: vec![v], dims: Vec::new() }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read back as a flat vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Flatten a tuple literal into its elements. The stub has no tuple
+    /// representation; a real runtime never hands one out here.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Shape of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Compilable computation wrapper.
+#[derive(Debug, Clone)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Open the CPU PJRT client. Always fails in the stub — this is the
+    /// single clear error the engine reports.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute on a slice of inputs; returns per-device, per-output
+    /// buffers (`result[0][0]` is the first output on the first device).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device-resident buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host [`Literal`].
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert_eq!(Literal::scalar(7.5).to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_loudly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
