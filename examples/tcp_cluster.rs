@@ -1,15 +1,99 @@
-//! TCP cluster demo: the paper's socket deployment. The leader hosts the
-//! parameter store on a TCP port; node workers connect as real network
-//! clients (loopback here; point them at another host in a real cluster).
-//! Compares the communication profile against the in-process transport.
+//! TCP cluster demo: the paper's socket deployment, now with real OS
+//! processes. The leader (this process) hosts the parameter store on a TCP
+//! port and parks until N `pff worker` processes register over the v2
+//! protocol, train their chapters, and report DONE. Falls back to
+//! in-process worker threads (same wire protocol) when the `pff` binary
+//! has not been built yet. Finishes by comparing against the pure
+//! in-process transport — the wire must not change what is learned.
 //!
 //! ```bash
+//! cargo build --release                      # builds the pff binary
 //! cargo run --release --example tcp_cluster
 //! ```
 
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::Duration;
+
 use pff::config::{ExperimentConfig, Scheduler, TransportKind};
-use pff::coordinator::run_experiment;
+use pff::coordinator::node::run_worker;
+use pff::coordinator::{run_experiment, ExperimentReport};
 use pff::ff::NegStrategy;
+
+/// Locate the `pff` binary next to this example (`target/<profile>/pff`),
+/// overridable via `PFF_BIN`.
+fn pff_binary() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("PFF_BIN") {
+        let p = PathBuf::from(p);
+        return p.exists().then_some(p);
+    }
+    let exe = std::env::current_exe().ok()?; // target/<profile>/examples/tcp_cluster
+    let dir = exe.parent()?.parent()?;
+    let cand = dir.join(if cfg!(windows) { "pff.exe" } else { "pff" });
+    cand.exists().then_some(cand)
+}
+
+fn free_port() -> anyhow::Result<u16> {
+    let l = std::net::TcpListener::bind(("127.0.0.1", 0))?;
+    Ok(l.local_addr()?.port())
+}
+
+/// Leader in this process, N workers as real OS processes. The workers
+/// receive the leader's FULL config through a `--config` file rendered by
+/// `ExperimentConfig::to_kv_string`, so leader and workers cannot drift.
+fn run_multiprocess(
+    cfg: &ExperimentConfig,
+    bin: &std::path::Path,
+) -> anyhow::Result<ExperimentReport> {
+    let port = free_port()?;
+    let addr = format!("127.0.0.1:{port}");
+    let cfg_path = std::env::temp_dir().join(format!("pff-cluster-{}.cfg", std::process::id()));
+    std::fs::write(&cfg_path, cfg.to_kv_string())?;
+    let cfg_path_s = cfg_path.display().to_string();
+
+    let mut children = Vec::new();
+    for i in 0..cfg.nodes {
+        children.push(
+            Command::new(bin)
+                .arg("worker")
+                .args(["--connect", &addr, "--node-id", &i.to_string(), "--connect-wait-s", "60"])
+                .args(["--config", &cfg_path_s])
+                .spawn()?,
+        );
+    }
+    let mut lcfg = cfg.clone();
+    lcfg.name = "tcp-cluster-multiprocess".into();
+    lcfg.cluster = true;
+    lcfg.tcp_port = port;
+    let report = run_experiment(&lcfg);
+    for mut c in children {
+        let status = c.wait()?;
+        anyhow::ensure!(status.success(), "worker process exited with {status}");
+    }
+    std::fs::remove_file(&cfg_path).ok();
+    report
+}
+
+/// Same cluster protocol, workers as threads (fallback without the binary).
+fn run_threaded(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
+    let port = free_port()?;
+    let addr: std::net::SocketAddr = format!("127.0.0.1:{port}").parse()?;
+    let mut lcfg = cfg.clone();
+    lcfg.name = "tcp-cluster-threads".into();
+    lcfg.cluster = true;
+    lcfg.tcp_port = port;
+    let leader = std::thread::spawn(move || run_experiment(&lcfg));
+    let workers: Vec<_> = (0..cfg.nodes as u32)
+        .map(|i| {
+            let wcfg = cfg.clone();
+            std::thread::spawn(move || run_worker(&wcfg, addr, Some(i), Duration::from_secs(30)))
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("worker thread panicked")?;
+    }
+    leader.join().expect("leader thread panicked")
+}
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::default();
@@ -21,35 +105,51 @@ fn main() -> anyhow::Result<()> {
     cfg.splits = 8;
     cfg.neg = NegStrategy::Random;
     cfg.scheduler = Scheduler::AllLayers;
-    cfg.nodes = 4;
-
+    cfg.nodes = 2;
     cfg.transport = TransportKind::Tcp;
-    cfg.tcp_port = 0; // ephemeral
-    let t0 = std::time::Instant::now();
-    let tcp = run_experiment(&cfg)?;
-    let tcp_wall = t0.elapsed().as_secs_f64();
 
-    cfg.transport = TransportKind::InProc;
-    cfg.name = "inproc".into();
+    // --- cluster run: N OS processes (or threads, without the binary) -----
+    let t0 = std::time::Instant::now();
+    let (cluster, mode) = match pff_binary() {
+        Some(bin) => {
+            println!("spawning {} worker process(es) of {}", cfg.nodes, bin.display());
+            (run_multiprocess(&cfg, &bin)?, "multi-process")
+        }
+        None => {
+            eprintln!(
+                "note: pff binary not found (run `cargo build --release` first, or set \
+                 PFF_BIN) — falling back to worker threads over the same TCP protocol"
+            );
+            (run_threaded(&cfg)?, "threads")
+        }
+    };
+    let cluster_wall = t0.elapsed().as_secs_f64();
+
+    // --- reference: in-process transport ----------------------------------
+    let mut mcfg = cfg.clone();
+    mcfg.transport = TransportKind::InProc;
+    mcfg.name = "inproc".into();
     let t1 = std::time::Instant::now();
-    let mem = run_experiment(&cfg)?;
+    let mem = run_experiment(&mcfg)?;
     let mem_wall = t1.elapsed().as_secs_f64();
 
     println!("\n===== transport comparison (same experiment) =====");
-    println!("tcp:    {}", tcp.summary());
-    println!("inproc: {}", mem.summary());
+    println!("cluster ({mode}): {}", cluster.summary());
+    println!("inproc:           {}", mem.summary());
     println!(
         "\nwire traffic: {} puts / {} gets, {:.2} MB published, {:.2} MB fetched",
-        tcp.comm.puts,
-        tcp.comm.gets,
-        tcp.comm.bytes_put as f64 / 1e6,
-        tcp.comm.bytes_get as f64 / 1e6
+        cluster.comm.puts,
+        cluster.comm.gets,
+        cluster.comm.bytes_put as f64 / 1e6,
+        cluster.comm.bytes_get as f64 / 1e6
     );
-    println!("wall: tcp {tcp_wall:.1}s vs inproc {mem_wall:.1}s (loopback overhead)");
+    println!("wall: cluster {cluster_wall:.1}s vs inproc {mem_wall:.1}s (loopback + process overhead)");
     anyhow::ensure!(
-        (tcp.test_accuracy - mem.test_accuracy).abs() < 0.05,
-        "transport must not change learning outcomes"
+        (cluster.test_accuracy - mem.test_accuracy).abs() < 0.02,
+        "cluster accuracy must match in-proc within 2% (got {:.1}% vs {:.1}%)",
+        cluster.test_accuracy * 100.0,
+        mem.test_accuracy * 100.0
     );
-    println!("accuracies agree across transports — wire format is faithful.");
+    println!("accuracies agree across transports — wire format and cluster mode are faithful.");
     Ok(())
 }

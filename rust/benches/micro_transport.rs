@@ -1,13 +1,19 @@
 //! Micro-benchmarks of the parameter store and TCP transport: publish/
-//! fetch latency and throughput for paper-scale layer payloads — the
-//! coordinator-side §Perf working set.
+//! fetch latency and throughput for paper-scale layer payloads, plus the
+//! protocol-v2 headline numbers — blocking-wait wake latency (server-side
+//! Condvar, no poll interval) and multiplexed in-flight throughput on one
+//! connection.
 //!
-//! `cargo bench --bench micro_transport`
+//! ```bash
+//! cargo bench --bench micro_transport                       # full scale
+//! cargo bench --bench micro_transport -- --quick            # CI smoke
+//! cargo bench --bench micro_transport -- --json OUT.json    # perf artifact
+//! ```
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use pff::bench_util::bench;
+use pff::bench_util::{bench, BenchStats, JsonReport};
 use pff::coordinator::store::{LayerParams, MemStore, ParamStore};
 use pff::tensor::{Matrix, Rng};
 use pff::transport::tcp::{StoreServer, TcpStoreClient};
@@ -22,43 +28,164 @@ fn params(din: usize, dout: usize) -> LayerParams {
     }
 }
 
+struct Opts {
+    quick: bool,
+    json: Option<String>,
+}
+
+fn parse_opts() -> Opts {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut opts = Opts { quick: false, json: None };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => {
+                opts.quick = true;
+                i += 1;
+            }
+            "--json" => {
+                opts.json = args.get(i + 1).cloned();
+                i += 2;
+            }
+            // tolerate cargo-bench passthrough flags like --bench
+            _ => i += 1,
+        }
+    }
+    opts
+}
+
+/// Stats from a pre-collected sample vector (seconds).
+fn stats_of(mut samples: Vec<f64>) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        iters: samples.len() as u32,
+        min_s: samples[0],
+        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_s: samples[samples.len() / 2],
+    }
+}
+
+/// Publish→wakeup latency of a blocking get across the wire: a waiter
+/// parks on `WAIT_LAYER` (server-side Condvar), and we time from just
+/// before the publish until the waiter's response lands. Protocol v1
+/// quantized this at its 5 ms poll interval; v2 should sit well under
+/// 1 ms on localhost.
+fn wait_wake_latency(n: u32) -> BenchStats {
+    let mem = Arc::new(MemStore::new());
+    let server = StoreServer::start(mem.clone(), 0).unwrap();
+    let waiter_client = Arc::new(TcpStoreClient::connect(server.addr).unwrap());
+    let publisher = TcpStoreClient::connect(server.addr).unwrap();
+    let p = params(64, 64);
+
+    let mut samples = Vec::with_capacity(n as usize);
+    for chapter in 0..n {
+        let wc = waiter_client.clone();
+        let h = std::thread::spawn(move || {
+            wc.get_layer(0, chapter, Duration::from_secs(5)).unwrap();
+            Instant::now()
+        });
+        // Condvar handoff: publish only once the server-side wait thread is
+        // provably parked on the store.
+        mem.wait_for_waiters(1, Duration::from_secs(5)).unwrap();
+        let t0 = Instant::now();
+        publisher.put_layer(0, chapter, p.clone()).unwrap();
+        let woke = h.join().unwrap();
+        samples.push(woke.duration_since(t0).as_secs_f64());
+    }
+    server.shutdown();
+    stats_of(samples)
+}
+
+/// Aggregate get throughput with `threads` concurrent in-flight requests
+/// multiplexed over ONE connection.
+fn multiplexed_gets(threads: usize, gets_per_thread: u32) -> f64 {
+    let mem = Arc::new(MemStore::new());
+    let server = StoreServer::start(mem, 0).unwrap();
+    let client = Arc::new(TcpStoreClient::connect(server.addr).unwrap());
+    client.put_layer(0, 0, params(64, 64)).unwrap();
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                for _ in 0..gets_per_thread {
+                    c.get_layer(0, 0, Duration::from_secs(5)).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    (threads as u32 * gets_per_thread) as f64 / secs
+}
+
 fn main() {
-    for (din, dout, label) in [
-        (256usize, 256usize, "reduced layer (256x256, 256 KB)"),
-        (2000, 2000, "paper layer (2000x2000, 16 MB)"),
-    ] {
+    let opts = parse_opts();
+    let mut report = JsonReport::new("micro_transport");
+
+    let sizes: &[(usize, usize, &str)] = if opts.quick {
+        &[(256, 256, "reduced layer (256x256, 256 KB)")]
+    } else {
+        &[
+            (256, 256, "reduced layer (256x256, 256 KB)"),
+            (2000, 2000, "paper layer (2000x2000, 16 MB)"),
+        ]
+    };
+    let (warmup, iters) = if opts.quick { (1, 5) } else { (2, 20) };
+
+    for &(din, dout, label) in sizes {
         let p = params(din, dout);
         let mb = p.wire_bytes() as f64 / 1e6;
 
         // in-proc store
         let store = MemStore::new();
-        let s = bench(2, 20, || {
+        let s = bench(warmup, iters, || {
             store.put_layer(0, 0, p.clone()).unwrap();
             store.get_layer(0, 0, Duration::from_secs(1)).unwrap();
         });
-        println!(
-            "{}",
-            s.line(&format!("[inproc] put+get {label}  ({:.0} MB/s)", 2.0 * mb / s.min_s))
+        report.add(
+            format!("[inproc] put+get {label}  ({:.0} MB/s)", 2.0 * mb / s.min_s),
+            s,
         );
 
         // tcp store
         let mem = Arc::new(MemStore::new());
         let server = StoreServer::start(mem, 0).unwrap();
         let client = TcpStoreClient::connect(server.addr).unwrap();
-        let s = bench(2, 10, || {
+        let s = bench(warmup, iters.min(10), || {
             client.put_layer(0, 0, p.clone()).unwrap();
             client.get_layer(0, 0, Duration::from_secs(5)).unwrap();
         });
-        println!(
-            "{}",
-            s.line(&format!("[tcp]    put+get {label}  ({:.0} MB/s)", 2.0 * mb / s.min_s))
-        );
+        report.add(format!("[tcp]    put+get {label}  ({:.0} MB/s)", 2.0 * mb / s.min_s), s);
         server.shutdown();
     }
 
+    // blocking-wait wake latency (the v2 acceptance number: p50 < 1 ms,
+    // i.e. no 5 ms poll quantization anywhere on the dependency path)
+    let s = wait_wake_latency(if opts.quick { 20 } else { 100 });
+    report.add(
+        format!("[tcp]    blocking-wait wake latency (p50 {:.3} ms)", s.p50_s * 1e3),
+        s,
+    );
+
+    // multiplexing: concurrent in-flight gets on one connection
+    let gets = if opts.quick { 50 } else { 200 };
+    let rate = multiplexed_gets(8, gets);
+    let s = BenchStats {
+        iters: 8 * gets,
+        min_s: 1.0 / rate,
+        mean_s: 1.0 / rate,
+        p50_s: 1.0 / rate,
+    };
+    report.add(format!("[tcp]    8-way multiplexed gets, one conn ({rate:.0}/s)"), s);
+
     // codec throughput in isolation
-    let p = params(2000, 2000);
-    let s = bench(2, 20, || {
+    let p = params(if opts.quick { 256 } else { 2000 }, if opts.quick { 256 } else { 2000 });
+    let s = bench(warmup, iters, || {
         let mut e = pff::transport::codec::Enc::new();
         e.layer_params(&p);
         let buf = e.finish();
@@ -66,5 +193,7 @@ fn main() {
         std::hint::black_box(got);
     });
     let mb = p.wire_bytes() as f64 / 1e6;
-    println!("{}", s.line(&format!("[codec]  enc+dec paper layer ({:.0} MB/s)", 2.0 * mb / s.min_s)));
+    report.add(format!("[codec]  enc+dec layer ({:.0} MB/s)", 2.0 * mb / s.min_s), s);
+
+    report.write(opts.json.as_deref());
 }

@@ -63,6 +63,54 @@ pub fn bench(warmup: u32, iters: u32, mut f: impl FnMut()) -> BenchStats {
     BenchStats { iters: times.len() as u32, min_s, mean_s, p50_s }
 }
 
+/// Named-measurement collector with a hand-rolled JSON artifact writer
+/// (no serde offline) — the `BENCH_*.json` perf-trajectory files CI
+/// uploads. Mirrors every record to stdout as it is added.
+pub struct JsonReport {
+    bench: String,
+    records: Vec<(String, BenchStats)>,
+}
+
+impl JsonReport {
+    /// Start a report for the bench named `bench`.
+    pub fn new(bench: &str) -> Self {
+        JsonReport { bench: bench.into(), records: Vec::new() }
+    }
+
+    /// Record one measurement (also printed immediately).
+    pub fn add(&mut self, name: String, stats: BenchStats) {
+        println!("{}", stats.line(&name));
+        self.records.push((name, stats));
+    }
+
+    /// Render the artifact: one object per record.
+    pub fn to_json(&self) -> String {
+        let mut out = format!("{{\n  \"bench\": {:?},\n  \"records\": [\n", self.bench);
+        for (i, (name, s)) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \
+                 \"p50_s\": {:.9}, \"iters\": {}}}{}\n",
+                name,
+                s.mean_s,
+                s.min_s,
+                s.p50_s,
+                s.iters,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the artifact to `path` when `Some`.
+    pub fn write(&self, path: Option<&str>) {
+        if let Some(path) = path {
+            std::fs::write(path, self.to_json()).expect("writing json artifact");
+            println!("wrote {path}");
+        }
+    }
+}
+
 /// A row of a paper-style results table.
 #[derive(Clone, Debug)]
 pub struct Row {
@@ -124,6 +172,17 @@ mod tests {
         assert!(fmt_s(2.5).contains('s'));
         assert!(fmt_s(0.002).contains("ms"));
         assert!(fmt_s(2e-6).contains("µs"));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut r = JsonReport::new("unit");
+        r.add("a".into(), bench(0, 2, || {}));
+        r.add("b".into(), bench(0, 2, || {}));
+        let json = r.to_json();
+        assert!(json.contains("\"bench\": \"unit\""));
+        assert!(json.contains("\"name\": \"a\","));
+        assert_eq!(json.matches("mean_s").count(), 2);
     }
 
     #[test]

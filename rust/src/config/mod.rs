@@ -154,6 +154,11 @@ pub struct ExperimentConfig {
     pub neg_subsample: usize,
     /// Store transport.
     pub transport: TransportKind,
+    /// Multi-process cluster mode: the leader hosts the store and waits
+    /// for `nodes` external `pff worker --connect` processes instead of
+    /// spawning node threads. Requires `transport = tcp` and a fixed
+    /// `tcp_port` (workers must know where to connect).
+    pub cluster: bool,
     /// TCP port when `transport == Tcp` (leader binds 127.0.0.1:port).
     pub tcp_port: u16,
     /// Blocking-get timeout (seconds) — deadlock tripwire.
@@ -191,6 +196,7 @@ impl Default for ExperimentConfig {
             eval_chunk: 256,
             neg_subsample: 0,
             transport: TransportKind::InProc,
+            cluster: false,
             tcp_port: 0,
             store_timeout_s: 300,
             verbose: false,
@@ -290,6 +296,14 @@ impl ExperimentConfig {
         if self.batch == 0 {
             bail!("batch must be ≥1");
         }
+        if self.cluster {
+            if self.transport != TransportKind::Tcp {
+                bail!("cluster mode needs transport = tcp (workers are separate processes)");
+            }
+            if self.tcp_port == 0 {
+                bail!("cluster mode needs a fixed tcp_port (workers must know where to connect)");
+            }
+        }
         Ok(self)
     }
 
@@ -347,6 +361,7 @@ impl ExperimentConfig {
             "eval_chunk" => self.eval_chunk = v.parse()?,
             "neg_subsample" => self.neg_subsample = v.parse()?,
             "transport" => self.transport = v.parse()?,
+            "cluster" => self.cluster = parse_bool(v)?,
             "tcp_port" => self.tcp_port = v.parse()?,
             "store_timeout_s" => self.store_timeout_s = v.parse()?,
             "verbose" => self.verbose = parse_bool(v)?,
@@ -362,6 +377,72 @@ impl ExperimentConfig {
             cfg.set(&k, &v).with_context(|| format!("config key '{k}'"))?;
         }
         Ok(cfg)
+    }
+
+    /// Render the full configuration in the `key = value` file format
+    /// [`ExperimentConfig::from_file`] parses; every value round-trips
+    /// through [`ExperimentConfig::set`]. Cluster launchers use this to
+    /// ship ONE canonical config to `pff worker` processes instead of
+    /// hand-maintaining flag lists that silently drift from the leader's.
+    pub fn to_kv_string(&self) -> String {
+        use std::fmt::Write;
+        fn kv(out: &mut String, k: &str, v: impl std::fmt::Display) {
+            let _ = writeln!(out, "{k} = {v}");
+        }
+        let dims = self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",");
+        let neg = match self.neg {
+            NegStrategy::Adaptive => "adaptive",
+            NegStrategy::Random => "random",
+            NegStrategy::Fixed => "fixed",
+        };
+        let classifier = match self.classifier {
+            ClassifierMode::Goodness => "goodness",
+            ClassifierMode::Softmax => "softmax",
+        };
+        let readout = match self.perfopt_readout {
+            PerfOptReadout::LastLayer => "last",
+            PerfOptReadout::AllLayers => "all",
+        };
+        let engine = match self.engine {
+            EngineKind::Native => "native",
+            EngineKind::Xla => "xla",
+        };
+        let transport = match self.transport {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        };
+        let mut out = String::new();
+        kv(&mut out, "name", &self.name);
+        kv(&mut out, "dataset", self.dataset);
+        kv(&mut out, "train_n", self.train_n);
+        kv(&mut out, "test_n", self.test_n);
+        kv(&mut out, "dims", dims);
+        kv(&mut out, "classes", self.classes);
+        kv(&mut out, "epochs", self.epochs);
+        kv(&mut out, "splits", self.splits);
+        kv(&mut out, "batch", self.batch);
+        kv(&mut out, "nodes", self.nodes);
+        kv(&mut out, "scheduler", self.scheduler.to_string().to_ascii_lowercase());
+        kv(&mut out, "neg", neg);
+        kv(&mut out, "classifier", classifier);
+        kv(&mut out, "perfopt", self.perfopt);
+        kv(&mut out, "perfopt_readout", readout);
+        kv(&mut out, "theta", self.theta);
+        kv(&mut out, "lr_ff", self.lr_ff);
+        kv(&mut out, "lr_head", self.lr_head);
+        kv(&mut out, "seed", self.seed);
+        kv(&mut out, "engine", engine);
+        kv(&mut out, "artifact_dir", self.artifact_dir.display());
+        kv(&mut out, "ship_opt_state", self.ship_opt_state);
+        kv(&mut out, "head_inline", self.head_inline);
+        kv(&mut out, "eval_chunk", self.eval_chunk);
+        kv(&mut out, "neg_subsample", self.neg_subsample);
+        kv(&mut out, "transport", transport);
+        kv(&mut out, "cluster", self.cluster);
+        kv(&mut out, "tcp_port", self.tcp_port);
+        kv(&mut out, "store_timeout_s", self.store_timeout_s);
+        kv(&mut out, "verbose", self.verbose);
+        out
     }
 
     /// Apply `--key value` / `--key=value` CLI pairs over `self`.
@@ -449,6 +530,42 @@ mod tests {
         assert_eq!(cfg.neg, NegStrategy::Random);
         assert_eq!(cfg.dims, vec![784, 128, 128, 128, 128]);
         assert_eq!(cfg.classifier, ClassifierMode::Softmax);
+        cfg.validated().unwrap();
+    }
+
+    #[test]
+    fn to_kv_string_roundtrips_every_field() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "kv-roundtrip".into();
+        cfg.dims = vec![784, 96, 96];
+        cfg.scheduler = Scheduler::SingleLayer;
+        cfg.nodes = 2;
+        cfg.neg = NegStrategy::Fixed;
+        cfg.classifier = ClassifierMode::Softmax;
+        cfg.perfopt = true;
+        cfg.perfopt_readout = PerfOptReadout::LastLayer;
+        cfg.ship_opt_state = true;
+        cfg.transport = TransportKind::Tcp;
+        cfg.cluster = true;
+        cfg.tcp_port = 7441;
+        cfg.lr_head = 0.00025;
+        cfg.verbose = true;
+
+        let mut parsed = ExperimentConfig::default();
+        for (k, v) in parse::parse_kv_str(&cfg.to_kv_string()).unwrap() {
+            parsed.set(&k, &v).unwrap_or_else(|e| panic!("key '{k}': {e}"));
+        }
+        assert_eq!(format!("{parsed:?}"), format!("{cfg:?}"), "kv serialization must round-trip");
+    }
+
+    #[test]
+    fn cluster_mode_constraints() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster = true;
+        assert!(cfg.clone().validated().is_err(), "cluster needs tcp transport");
+        cfg.transport = TransportKind::Tcp;
+        assert!(cfg.clone().validated().is_err(), "cluster needs a fixed port");
+        cfg.tcp_port = 7441;
         cfg.validated().unwrap();
     }
 

@@ -10,15 +10,17 @@
 pub mod eval;
 pub mod lr;
 pub mod node;
+pub mod registry;
 pub mod schedulers;
 pub mod store;
 
 pub use eval::TrainedModel;
 pub use node::NodeCtx;
+pub use registry::NodeRegistry;
 
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -98,66 +100,115 @@ pub fn run_experiment_with_data(
 
     // --- store + transport ---------------------------------------------------
     let mem = Arc::new(MemStore::new());
+    // Capacity-bounded: a mis-launched worker with an out-of-range
+    // --node-id is refused at HELLO instead of poisoning membership.
+    let registry = Arc::new(NodeRegistry::with_capacity(cfg.nodes));
     let server = match cfg.transport {
         TransportKind::InProc => None,
-        TransportKind::Tcp => Some(StoreServer::start(mem.clone(), cfg.tcp_port)?),
-    };
-    let node_store = |_: usize| -> Result<Arc<dyn ParamStore>> {
-        match (&cfg.transport, &server) {
-            (TransportKind::InProc, _) => Ok(mem.clone()),
-            (TransportKind::Tcp, Some(srv)) => {
-                Ok(Arc::new(TcpStoreClient::connect(srv.addr)?) as Arc<dyn ParamStore>)
-            }
-            _ => unreachable!(),
+        TransportKind::Tcp => {
+            Some(StoreServer::start_with(mem.clone(), registry.clone(), cfg.tcp_port)?)
         }
     };
 
-    // --- data placement -------------------------------------------------------
-    let shards: Vec<crate::data::Dataset> = if cfg.scheduler == Scheduler::Federated {
-        bundle.train.shard(cfg.nodes)
-    } else {
-        vec![bundle.train.clone(); cfg.nodes]
-    };
-
-    // --- spawn nodes -----------------------------------------------------------
+    let server_addr = server.as_ref().map(|s| s.addr);
     let origin = Instant::now();
-    let mut handles = Vec::with_capacity(cfg.nodes);
-    for (node_id, data) in shards.into_iter().enumerate() {
-        let cfg_n = cfg.clone();
-        let store = node_store(node_id)?;
-        let factory = factory.clone();
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("pff-node-{node_id}"))
-                .spawn(move || -> Result<(NodeReport, LossCurve)> {
-                    let engine = factory().context("constructing node engine")?;
-                    let mut ctx = NodeCtx {
-                        node_id,
-                        cfg: cfg_n,
-                        store,
-                        engine,
-                        data,
-                        rec: SpanRecorder::new(origin, node_id),
-                        curve: LossCurve::default(),
-                        opt_cache: HashMap::new(),
-                        head_opt: None,
-                    };
-                    schedulers::run_node(&mut ctx)?;
-                    Ok((ctx.rec.finish(), ctx.curve))
-                })?,
-        );
-    }
+    let run_result: Result<(Vec<NodeReport>, LossCurve)> = if cfg.cluster {
+        // --- external workers: `pff worker --connect` processes ----------------
+        // Membership and completion both ride the registry's Condvar — the
+        // leader parks exactly like a blocked store read, no polling.
+        (|| {
+            let reg_timeout = Duration::from_secs(cfg.store_timeout_s);
+            // Each chapter's progress is already bounded by the store timeout
+            // (the dependency-wait tripwire), so completion gets S times that.
+            let done_timeout = reg_timeout * cfg.splits.max(1);
+            let workers = registry
+                .wait_for_workers(cfg.nodes, reg_timeout)
+                .context("waiting for cluster workers to register")?;
+            eprintln!(
+                "[leader] {} worker(s) registered: {}",
+                workers.len(),
+                workers
+                    .iter()
+                    .map(|w| format!("{}#{}", w.name, w.id))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+            registry
+                .wait_for_done(cfg.nodes, done_timeout)
+                .context("waiting for cluster workers to finish")?;
+            Ok((Vec::new(), LossCurve::default()))
+        })()
+    } else {
+        // --- in-process nodes: one thread per node -----------------------------
+        (|| {
+            let node_store = |_: usize| -> Result<Arc<dyn ParamStore>> {
+                match (cfg.transport, server_addr) {
+                    (TransportKind::InProc, _) => Ok(mem.clone()),
+                    (TransportKind::Tcp, Some(addr)) => {
+                        Ok(Arc::new(TcpStoreClient::connect(addr)?) as Arc<dyn ParamStore>)
+                    }
+                    _ => unreachable!(),
+                }
+            };
 
-    let mut node_reports = Vec::with_capacity(cfg.nodes);
-    let mut curve = LossCurve::default();
-    for (i, h) in handles.into_iter().enumerate() {
-        let (rep, c) = h
-            .join()
-            .map_err(|_| anyhow::anyhow!("node {i} panicked"))?
-            .with_context(|| format!("node {i} failed"))?;
-        node_reports.push(rep);
-        curve.merge(&c);
-    }
+            // data placement
+            let shards: Vec<crate::data::Dataset> = if cfg.scheduler == Scheduler::Federated {
+                bundle.train.shard(cfg.nodes)
+            } else {
+                vec![bundle.train.clone(); cfg.nodes]
+            };
+
+            let mut handles = Vec::with_capacity(cfg.nodes);
+            for (node_id, data) in shards.into_iter().enumerate() {
+                let cfg_n = cfg.clone();
+                let store = node_store(node_id)?;
+                let factory = factory.clone();
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("pff-node-{node_id}"))
+                        .spawn(move || -> Result<(NodeReport, LossCurve)> {
+                            let engine = factory().context("constructing node engine")?;
+                            let mut ctx = NodeCtx {
+                                node_id,
+                                cfg: cfg_n,
+                                store,
+                                engine,
+                                data,
+                                rec: SpanRecorder::new(origin, node_id),
+                                curve: LossCurve::default(),
+                                opt_cache: HashMap::new(),
+                                head_opt: None,
+                            };
+                            schedulers::run_node(&mut ctx)?;
+                            Ok((ctx.rec.finish(), ctx.curve))
+                        })?,
+                );
+            }
+
+            let mut node_reports = Vec::with_capacity(cfg.nodes);
+            let mut curve = LossCurve::default();
+            for (i, h) in handles.into_iter().enumerate() {
+                let (rep, c) = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("node {i} panicked"))?
+                    .with_context(|| format!("node {i} failed"))?;
+                node_reports.push(rep);
+                curve.merge(&c);
+            }
+            Ok((node_reports, curve))
+        })()
+    };
+    let (node_reports, curve) = match run_result {
+        Ok(v) => v,
+        Err(e) => {
+            // Don't leak the listener/accept thread on a failed run — the
+            // fixed cluster port must stay rebindable for a retry.
+            if let Some(srv) = server {
+                srv.shutdown();
+            }
+            return Err(e);
+        }
+    };
     let wall_s = origin.elapsed().as_secs_f64();
 
     // --- assemble + post-hoc head + evaluate -----------------------------------
@@ -299,5 +350,59 @@ mod tests {
         let rep = run_experiment(&cfg).unwrap();
         assert!(rep.test_accuracy > 0.25, "got {:.1}%", rep.test_accuracy * 100.0);
         assert!(rep.comm.bytes_put > 0);
+    }
+
+    /// Cluster mode end to end: the leader waits for external workers that
+    /// join over TCP (threads here; `pff worker` processes in the example
+    /// and CI smoke), and the result matches the in-proc run bitwise when
+    /// opt state is shipped.
+    #[test]
+    fn cluster_mode_matches_inproc() {
+        let mut cfg = quick_cfg();
+        cfg.scheduler = Scheduler::AllLayers;
+        cfg.nodes = 2;
+        cfg.ship_opt_state = true;
+        let inproc = run_experiment(&cfg).unwrap();
+
+        // free localhost port for the leader
+        let port = {
+            let l = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let mut lcfg = cfg.clone();
+        lcfg.transport = TransportKind::Tcp;
+        lcfg.cluster = true;
+        lcfg.tcp_port = port;
+        let leader = std::thread::spawn(move || run_experiment(&lcfg));
+
+        let addr: std::net::SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+        let mut wcfg = cfg.clone();
+        wcfg.transport = TransportKind::Tcp;
+        let workers: Vec<_> = (0..2u32)
+            .map(|i| {
+                let wcfg = wcfg.clone();
+                std::thread::spawn(move || {
+                    crate::coordinator::node::run_worker(
+                        &wcfg,
+                        addr,
+                        Some(i),
+                        std::time::Duration::from_secs(30),
+                    )
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        let clustered = leader.join().unwrap().unwrap();
+        for (a, b) in inproc.model.net.layers.iter().zip(&clustered.model.net.layers) {
+            assert_eq!(a.w.data, b.w.data, "cluster run must reproduce in-proc weights bitwise");
+        }
+        assert!(
+            (inproc.test_accuracy - clustered.test_accuracy).abs() < 0.02,
+            "in-proc {:.1}% vs cluster {:.1}%",
+            inproc.test_accuracy * 100.0,
+            clustered.test_accuracy * 100.0
+        );
     }
 }

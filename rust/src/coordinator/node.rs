@@ -8,21 +8,23 @@
 //! deltas the paper describes.
 
 use std::collections::HashMap;
+use std::net::SocketAddr;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{ensure, Context, Result};
 
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, Scheduler, TransportKind};
 use crate::coordinator::lr::cooldown;
 use crate::coordinator::store::{LayerParams, ParamStore};
-use crate::data::Dataset;
-use crate::engine::Engine;
+use crate::data::{load_dataset, Dataset};
+use crate::engine::{factory_for, Engine};
 use crate::ff::negative::{adaptive_neg_labels, random_wrong_labels};
 use crate::ff::overlay::{overlay_labels, overlay_neutral};
 use crate::ff::{FFLayer, FFNetwork, LinearHead, NegStrategy};
-use crate::metrics::{LossCurve, SpanKind, SpanRecorder};
+use crate::metrics::{LossCurve, NodeReport, SpanKind, SpanRecorder};
 use crate::tensor::{AdamState, Matrix, Rng};
+use crate::transport::tcp::TcpStoreClient;
 
 /// RNG stream tags for deterministic, scheduler-independent derivations.
 mod stream {
@@ -355,6 +357,80 @@ impl NodeCtx {
     pub fn put_opt(&mut self, layer_idx: usize, opt: AdamState) {
         self.opt_cache.insert(layer_idx, opt);
     }
+}
+
+/// Outcome of one external worker run ([`run_worker`]).
+#[derive(Debug)]
+pub struct WorkerRun {
+    /// The node id the leader assigned (or confirmed).
+    pub node_id: usize,
+    /// Span report (busy/wait accounting) for this worker.
+    pub report: NodeReport,
+    /// This worker's training curve.
+    pub curve: LossCurve,
+    /// Wall-clock seconds from connect to DONE.
+    pub wall_s: f64,
+}
+
+/// Entry point of the `pff worker --connect <addr>` process: join the
+/// leader's cluster over TCP, run this node's scheduler chapters against
+/// the remote store, and report `DONE`.
+///
+/// The worker loads its data locally (synthetic sets derive
+/// deterministically from `cfg.seed`, so every process sees identical
+/// examples without shipping them); Federated runs carve the node's shard
+/// from the leader-assigned node id.
+pub fn run_worker(
+    cfg: &ExperimentConfig,
+    addr: SocketAddr,
+    requested_id: Option<u32>,
+    connect_wait: Duration,
+) -> Result<WorkerRun> {
+    let cfg = cfg.clone().validated()?;
+    ensure!(
+        cfg.transport == TransportKind::Tcp,
+        "worker mode needs transport = tcp (got {:?})",
+        cfg.transport
+    );
+    let name = format!("worker-{}", std::process::id());
+    let client = TcpStoreClient::connect_worker_retry(addr, requested_id, &name, connect_wait)?;
+    let node_id = client.node_id().context("leader did not assign a node id")? as usize;
+    ensure!(
+        node_id < cfg.nodes,
+        "assigned node id {node_id} out of range for a {}-node experiment",
+        cfg.nodes
+    );
+
+    let bundle = load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+    let data = if cfg.scheduler == Scheduler::Federated {
+        bundle.train.shard(cfg.nodes).swap_remove(node_id)
+    } else {
+        bundle.train
+    };
+    let factory = factory_for(cfg.engine, &cfg.artifact_dir)?;
+    let engine = factory().context("constructing worker engine")?;
+
+    let client = Arc::new(client);
+    let origin = Instant::now();
+    let mut ctx = NodeCtx {
+        node_id,
+        cfg,
+        store: client.clone() as Arc<dyn ParamStore>,
+        engine,
+        data,
+        rec: SpanRecorder::new(origin, node_id),
+        curve: LossCurve::default(),
+        opt_cache: HashMap::new(),
+        head_opt: None,
+    };
+    crate::coordinator::schedulers::run_node(&mut ctx)?;
+    client.done().context("reporting DONE to the leader")?;
+    Ok(WorkerRun {
+        node_id,
+        report: ctx.rec.finish(),
+        curve: ctx.curve,
+        wall_s: origin.elapsed().as_secs_f64(),
+    })
 }
 
 #[cfg(test)]

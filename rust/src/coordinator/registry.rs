@@ -1,0 +1,258 @@
+//! Leader-side registry of cluster nodes.
+//!
+//! In multi-process cluster mode (`pff worker --connect`), worker
+//! processes announce themselves to the leader through the v2 `HELLO`
+//! handshake (see `transport/PROTOCOL.md`). The leader parks on this
+//! registry's Condvar until the expected number of workers has joined,
+//! and again until every worker has reported `DONE` — the same
+//! wait-on-publish discipline the parameter store uses, so there is no
+//! polling anywhere in the control plane.
+//!
+//! Membership is crash-tolerant: a worker whose connection drops before
+//! its `DONE` is deregistered (freeing its node id for a restarted
+//! process); completed workers stay on the roster.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+/// One registered worker.
+#[derive(Clone, Debug)]
+pub struct NodeInfo {
+    /// Node index in `[0, N)` (drives chapter/shard assignment).
+    pub id: u32,
+    /// Self-reported name (worker processes use `worker-<pid>`).
+    pub name: String,
+}
+
+struct WorkerEntry {
+    info: NodeInfo,
+    done: bool,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    workers: Vec<WorkerEntry>,
+}
+
+/// Membership + completion tracking for one training run.
+pub struct NodeRegistry {
+    inner: Mutex<RegistryInner>,
+    cv: Condvar,
+    /// `Some(n)`: node ids are bounded to `[0, n)` and at most `n`
+    /// workers may hold a registration at once.
+    capacity: Option<usize>,
+}
+
+impl Default for NodeRegistry {
+    fn default() -> Self {
+        NodeRegistry::new()
+    }
+}
+
+impl NodeRegistry {
+    /// Fresh unbounded registry (tests, ad-hoc servers).
+    pub fn new() -> Self {
+        NodeRegistry { inner: Mutex::default(), cv: Condvar::new(), capacity: None }
+    }
+
+    /// Registry for an `n`-node cluster: requested ids must be `< n`, and
+    /// registration is refused once `n` workers hold live entries — a
+    /// mis-launched `--node-id 7` fails fast at `HELLO` instead of
+    /// satisfying the leader's membership count with a bogus node.
+    pub fn with_capacity(n: usize) -> Self {
+        NodeRegistry { inner: Mutex::default(), cv: Condvar::new(), capacity: Some(n) }
+    }
+
+    /// Register a worker. `requested = Some(id)` claims a specific node
+    /// index (rejected when already taken); `None` auto-assigns the
+    /// smallest free index.
+    pub fn register(&self, requested: Option<u32>, name: &str) -> Result<u32> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(cap) = self.capacity {
+            if let Some(id) = requested {
+                if id as usize >= cap {
+                    bail!("node id {id} out of range for a {cap}-node cluster");
+                }
+            } else if g.workers.len() >= cap {
+                bail!("cluster is full ({cap} nodes registered)");
+            }
+        }
+        let id = match requested {
+            Some(id) => {
+                if g.workers.iter().any(|w| w.info.id == id) {
+                    bail!("node id {id} is already registered");
+                }
+                id
+            }
+            None => {
+                let mut id = 0u32;
+                while g.workers.iter().any(|w| w.info.id == id) {
+                    id += 1;
+                }
+                id
+            }
+        };
+        g.workers.push(WorkerEntry { info: NodeInfo { id, name: name.into() }, done: false });
+        drop(g);
+        self.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Record node `id`'s `DONE`. Duplicate DONEs are an error — the
+    /// completion count must never run ahead of actual worker completion.
+    pub fn mark_done(&self, id: u32) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let Some(w) = g.workers.iter_mut().find(|w| w.info.id == id) else {
+            bail!("DONE from unregistered node {id}");
+        };
+        if w.done {
+            bail!("duplicate DONE from node {id}");
+        }
+        w.done = true;
+        drop(g);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// A worker's connection dropped. Unfinished workers are removed
+    /// (their id becomes claimable by a restarted process); finished ones
+    /// stay on the roster.
+    pub fn disconnect(&self, id: u32) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(pos) = g.workers.iter().position(|w| w.info.id == id && !w.done) {
+            g.workers.remove(pos);
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Snapshot of the registered workers.
+    pub fn workers(&self) -> Vec<NodeInfo> {
+        self.inner.lock().unwrap().workers.iter().map(|w| w.info.clone()).collect()
+    }
+
+    /// Registered-worker count.
+    pub fn worker_count(&self) -> usize {
+        self.inner.lock().unwrap().workers.len()
+    }
+
+    /// Count of workers that reported `DONE`.
+    pub fn done_count(&self) -> usize {
+        self.inner.lock().unwrap().workers.iter().filter(|w| w.done).count()
+    }
+
+    /// Park until at least `n` workers have registered.
+    pub fn wait_for_workers(&self, n: usize, timeout: Duration) -> Result<Vec<NodeInfo>> {
+        self.wait_until(timeout, &format!("{n} registered workers"), |g| {
+            (g.workers.len() >= n).then(|| g.workers.iter().map(|w| w.info.clone()).collect())
+        })
+    }
+
+    /// Park until at least `n` workers have reported `DONE`.
+    pub fn wait_for_done(&self, n: usize, timeout: Duration) -> Result<()> {
+        self.wait_until(timeout, &format!("{n} workers to finish"), |g| {
+            (g.workers.iter().filter(|w| w.done).count() >= n).then_some(())
+        })
+    }
+
+    fn wait_until<T>(
+        &self,
+        timeout: Duration,
+        what: &str,
+        mut probe: impl FnMut(&RegistryInner) -> Option<T>,
+    ) -> Result<T> {
+        let mut guard = self.inner.lock().unwrap();
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(v) = probe(&guard) {
+                return Ok(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("registry: timed out after {timeout:?} waiting for {what}");
+            }
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn auto_assignment_fills_smallest_free_id() {
+        let r = NodeRegistry::new();
+        assert_eq!(r.register(None, "a").unwrap(), 0);
+        assert_eq!(r.register(None, "b").unwrap(), 1);
+        assert_eq!(r.register(Some(5), "c").unwrap(), 5);
+        assert_eq!(r.register(None, "d").unwrap(), 2, "smallest free id, not max+1");
+        assert_eq!(r.worker_count(), 4);
+    }
+
+    #[test]
+    fn duplicate_requested_id_rejected() {
+        let r = NodeRegistry::new();
+        r.register(Some(0), "a").unwrap();
+        let err = r.register(Some(0), "b").unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+    }
+
+    #[test]
+    fn capacity_bounds_ids_and_count() {
+        let r = NodeRegistry::with_capacity(2);
+        let err = r.register(Some(2), "oob").unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        r.register(None, "a").unwrap();
+        r.register(None, "b").unwrap();
+        let err = r.register(None, "c").unwrap_err();
+        assert!(err.to_string().contains("full"), "{err}");
+    }
+
+    #[test]
+    fn wait_for_workers_wakes_on_register() {
+        let r = Arc::new(NodeRegistry::new());
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || r2.wait_for_workers(2, Duration::from_secs(5)));
+        r.register(None, "a").unwrap();
+        r.register(None, "b").unwrap();
+        let workers = h.join().unwrap().unwrap();
+        assert_eq!(workers.len(), 2);
+    }
+
+    #[test]
+    fn done_tracking_rejects_duplicates_and_times_out() {
+        let r = NodeRegistry::new();
+        let id = r.register(None, "a").unwrap();
+        assert!(r.mark_done(99).is_err());
+        r.mark_done(id).unwrap();
+        assert_eq!(r.done_count(), 1);
+        let err = r.mark_done(id).unwrap_err();
+        assert!(err.to_string().contains("duplicate DONE"), "{err}");
+        r.wait_for_done(1, Duration::from_millis(10)).unwrap();
+        let err = r.wait_for_done(2, Duration::from_millis(20)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn disconnect_frees_unfinished_ids_only() {
+        let r = NodeRegistry::with_capacity(2);
+        r.register(Some(0), "crashes").unwrap();
+        r.register(Some(1), "finishes").unwrap();
+        r.mark_done(1).unwrap();
+
+        // Crash before DONE: the id is reclaimable by a restart.
+        r.disconnect(0);
+        assert_eq!(r.worker_count(), 1);
+        assert_eq!(r.register(Some(0), "restarted").unwrap(), 0);
+
+        // Disconnect after DONE: the roster (and the done count) survive.
+        r.disconnect(1);
+        assert_eq!(r.done_count(), 1);
+        assert_eq!(r.worker_count(), 2);
+    }
+}

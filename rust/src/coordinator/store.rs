@@ -156,6 +156,10 @@ struct MemInner {
     heads: HashMap<u32, HeadParams>,
     negs: HashMap<u32, Vec<u8>>,
     stats: CommStats,
+    /// Threads currently parked inside [`MemStore::wait_for`]. Lets tests
+    /// and benchmarks synchronize on "the reader is actually blocked"
+    /// without sleep-based handoffs (see [`MemStore::wait_for_waiters`]).
+    waiting: usize,
 }
 
 /// In-process [`ParamStore`] (Mutex + Condvar).
@@ -178,18 +182,84 @@ impl MemStore {
         mut probe: impl FnMut(&mut MemInner) -> Option<T>,
     ) -> Result<T> {
         let mut guard = self.inner.lock().unwrap();
+        if let Some(v) = probe(&mut guard) {
+            return Ok(v);
+        }
         let deadline = std::time::Instant::now() + timeout;
-        loop {
-            if let Some(v) = probe(&mut guard) {
-                return Ok(v);
-            }
+        guard.waiting += 1;
+        // Wake wait_for_waiters observers of the parked-thread count.
+        self.cv.notify_all();
+        let result = loop {
             let now = std::time::Instant::now();
             if now >= deadline {
-                bail!("store: timed out after {timeout:?} waiting for {what}");
+                break Err(anyhow::anyhow!("store: timed out after {timeout:?} waiting for {what}"));
+            }
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+            if let Some(v) = probe(&mut guard) {
+                break Ok(v);
+            }
+        };
+        guard.waiting -= 1;
+        result
+    }
+
+    /// Block until at least `n` threads are parked inside a blocking get.
+    ///
+    /// Deterministic replacement for the `sleep(..)` handoffs tests used to
+    /// need before publishing to an (intended-to-be) blocked reader: the
+    /// publisher waits on the same Condvar until the reader is provably
+    /// parked, so there is no timing guesswork and no poll interval.
+    pub fn wait_for_waiters(&self, n: usize, timeout: Duration) -> Result<()> {
+        let mut guard = self.inner.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        while guard.waiting < n {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                bail!(
+                    "store: timed out after {timeout:?} waiting for {n} parked readers (have {})",
+                    guard.waiting
+                );
             }
             let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
             guard = g;
         }
+        Ok(())
+    }
+
+    /// Threads currently parked inside a blocking get.
+    pub fn waiter_count(&self) -> usize {
+        self.inner.lock().unwrap().waiting
+    }
+
+    /// Non-blocking fetch: `(layer, chapter)` if already published (a hit
+    /// counts as a get in [`CommStats`], exactly like the blocking path).
+    /// Backs the v2 wire protocol's immediate `GET_LAYER` and the
+    /// `WAIT_LAYER` fast path (see `transport/PROTOCOL.md`).
+    pub fn try_layer(&self, layer: usize, chapter: u32) -> Option<LayerParams> {
+        let mut g = self.inner.lock().unwrap();
+        let p = g.layers.get(&(layer, chapter)).cloned()?;
+        g.stats.gets += 1;
+        g.stats.bytes_get += p.wire_bytes();
+        Some(p)
+    }
+
+    /// Non-blocking fetch: the head at `chapter` if already published.
+    pub fn try_head(&self, chapter: u32) -> Option<HeadParams> {
+        let mut g = self.inner.lock().unwrap();
+        let p = g.heads.get(&chapter).cloned()?;
+        g.stats.gets += 1;
+        g.stats.bytes_get += p.wire_bytes();
+        Some(p)
+    }
+
+    /// Non-blocking fetch: negative labels at `chapter` if published.
+    pub fn try_neg(&self, chapter: u32) -> Option<Vec<u8>> {
+        let mut g = self.inner.lock().unwrap();
+        let p = g.negs.get(&chapter).cloned()?;
+        g.stats.gets += 1;
+        g.stats.bytes_get += p.len() as u64;
+        Some(p)
     }
 }
 
@@ -311,10 +381,31 @@ mod tests {
         let s = Arc::new(MemStore::new());
         let s2 = s.clone();
         let h = std::thread::spawn(move || s2.get_layer(1, 7, Duration::from_secs(5)));
-        std::thread::sleep(Duration::from_millis(30));
+        // Condvar-backed handoff: publish only once the reader is parked.
+        s.wait_for_waiters(1, Duration::from_secs(5)).unwrap();
         s.put_layer(1, 7, params(2)).unwrap();
         let got = h.join().unwrap().unwrap();
         assert_eq!(got.w.rows, 4);
+        assert_eq!(s.waiter_count(), 0);
+    }
+
+    #[test]
+    fn wait_for_waiters_times_out_cleanly() {
+        let s = MemStore::new();
+        let err = s.wait_for_waiters(1, Duration::from_millis(20)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn try_probes_do_not_block() {
+        let s = MemStore::new();
+        assert!(s.try_layer(0, 0).is_none());
+        assert!(s.try_head(0).is_none());
+        assert!(s.try_neg(0).is_none());
+        s.put_layer(0, 0, params(1)).unwrap();
+        s.put_neg(2, vec![7]).unwrap();
+        assert_eq!(s.try_layer(0, 0).unwrap().w.rows, 4);
+        assert_eq!(s.try_neg(2).unwrap(), vec![7]);
     }
 
     #[test]

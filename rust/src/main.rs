@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! pff train   [--config FILE] [--key value ...]   run one experiment
+//! pff worker  --connect HOST:PORT [--node-id K]   join a cluster leader
 //! pff table1..table5 [--scale quick|reduced] [--engine native|xla]
 //! pff figures                                     render Figures 1–6
 //! pff fig3    [--scale quick|reduced]             split-count study
@@ -9,6 +10,10 @@
 //! pff inspect-artifacts [--artifact_dir DIR]      list AOT artifacts
 //! pff help
 //! ```
+//!
+//! Cluster mode: the leader runs `pff train --transport tcp --cluster true
+//! --tcp_port P --nodes N ...` and parks until `N` `pff worker` processes
+//! (same config flags, plus `--connect`) register, train, and report DONE.
 
 use anyhow::{bail, Context, Result};
 
@@ -35,6 +40,7 @@ fn run(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "train" => cmd_train(rest),
+        "worker" => cmd_worker(rest),
         "table1" => cmd_table(rest, 1),
         "table2" => cmd_table(rest, 2),
         "table3" => cmd_table(rest, 3),
@@ -59,7 +65,10 @@ fn print_help() {
     println!(
         "pff — Pipeline Forward-Forward distributed training\n\n\
          commands:\n\
-         \u{20}  train              run one experiment (--config FILE, --key value overrides)\n\
+         \u{20}  train              run one experiment (--config FILE, --key value overrides;\n\
+         \u{20}                     --cluster true parks the leader for external workers)\n\
+         \u{20}  worker             join a cluster leader (--connect HOST:PORT, optional --node-id K,\n\
+         \u{20}                     --connect-wait-s S, plus the same config flags as train)\n\
          \u{20}  table1..table5     reproduce a paper table (--scale quick|reduced, --engine native|xla)\n\
          \u{20}  figures            render Figures 1/2/4/5/6 (DES Gantt charts)\n\
          \u{20}  fig3               split-count accuracy study (Figure 3)\n\
@@ -94,6 +103,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         None => ExperimentConfig::reduced_mnist(),
     };
     cfg.apply_cli(&rest)?;
+    if cfg.cluster {
+        eprintln!(
+            "[leader] hosting store on 127.0.0.1:{}, waiting for {} worker(s) \
+             (pff worker --connect 127.0.0.1:{})",
+            cfg.tcp_port, cfg.nodes, cfg.tcp_port
+        );
+    }
     let report = run_experiment(&cfg)?;
     println!("{}", report.summary());
     println!("\ntraining curve:\n{}", report.curve.render(12));
@@ -105,6 +121,68 @@ fn cmd_train(args: &[String]) -> Result<()> {
         report.comm.puts,
         report.comm.gets,
         report.comm.bytes_put as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_worker(args: &[String]) -> Result<()> {
+    use std::net::ToSocketAddrs;
+
+    let mut connect: Option<String> = None;
+    let mut node_id: Option<u32> = None;
+    let mut wait_s: u64 = 30;
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--connect" => {
+                connect = Some(args.get(i + 1).context("--connect needs HOST:PORT")?.clone());
+                i += 2;
+            }
+            "--node-id" => {
+                node_id = Some(args.get(i + 1).context("--node-id needs a value")?.parse()?);
+                i += 2;
+            }
+            "--connect-wait-s" => {
+                wait_s = args.get(i + 1).context("--connect-wait-s needs a value")?.parse()?;
+                i += 2;
+            }
+            _ => {
+                rest.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    let connect = connect.context("worker needs --connect HOST:PORT")?;
+    let addr = connect
+        .to_socket_addrs()
+        .with_context(|| format!("resolving '{connect}'"))?
+        .next()
+        .with_context(|| format!("'{connect}' resolved to no address"))?;
+
+    let (cfg_file, rest) = split_config(&rest)?;
+    let mut cfg = match cfg_file {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::reduced_mnist(),
+    };
+    cfg.transport = pff::config::TransportKind::Tcp;
+    cfg.apply_cli(&rest)?;
+    // Workers never lead a cluster themselves, whatever the shared config
+    // file says.
+    cfg.cluster = false;
+
+    let run = pff::coordinator::node::run_worker(
+        &cfg,
+        addr,
+        node_id,
+        std::time::Duration::from_secs(wait_s),
+    )?;
+    println!(
+        "worker {}: busy {:.2}s, waiting {:.2}s, wall {:.2}s",
+        run.node_id,
+        run.report.busy(),
+        run.report.waiting(),
+        run.wall_s
     );
     Ok(())
 }

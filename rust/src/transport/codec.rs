@@ -6,6 +6,10 @@
 //! * `Vec<u8>`  = `u32 len, len × u8`
 //! * `Option<OptSnapshot>` = `u8 flag (0/1)` then the snapshot fields
 //! * frame     = `u32 payload_len, payload`
+//!
+//! Protocol-v2 multiplexing headers (full wire spec: `transport/PROTOCOL.md`):
+//! * request payload  = `u64 req_id, u8 opcode, body`
+//! * response payload = `u64 req_id, u8 status, body`
 
 use anyhow::{bail, Result};
 
@@ -79,6 +83,13 @@ impl Enc {
         self.buf.extend_from_slice(v);
     }
 
+    /// Append raw bytes with **no** length prefix — for already-encoded
+    /// message bodies appended after a header (the frame layer adds the
+    /// outer length).
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
     /// Append a length-prefixed UTF-8 string.
     pub fn str(&mut self, v: &str) {
         self.bytes(v.as_bytes());
@@ -104,6 +115,19 @@ impl Enc {
         self.matrix(&p.w);
         self.f32s(&p.b);
         self.opt_snapshot(&p.opt);
+    }
+
+    /// Append a v2 request header (`u64 req_id, u8 opcode`). The body
+    /// follows via the other `Enc` methods.
+    pub fn req_header(&mut self, req_id: u64, opcode: u8) {
+        self.u64(req_id);
+        self.u8(opcode);
+    }
+
+    /// Append a v2 response header (`u64 req_id, u8 status`).
+    pub fn resp_header(&mut self, req_id: u64, status: u8) {
+        self.u64(req_id);
+        self.u8(status);
     }
 
     fn opt_snapshot(&mut self, o: &Option<OptSnapshot>) {
@@ -186,6 +210,11 @@ impl<'a> Dec<'a> {
     /// Read a length-prefixed string.
     pub fn str(&mut self) -> Result<String> {
         Ok(String::from_utf8(self.bytes()?)?)
+    }
+
+    /// Read a v2 request/response header: `(u64 req_id, u8 opcode_or_status)`.
+    pub fn header(&mut self) -> Result<(u64, u8)> {
+        Ok((self.u64()?, self.u8()?))
     }
 
     /// Read a matrix.
@@ -336,6 +365,22 @@ mod tests {
         let mut cur = std::io::Cursor::new(pipe);
         assert_eq!(read_frame(&mut cur, 1 << 20).unwrap(), b"abc");
         assert_eq!(read_frame(&mut cur, 1 << 20).unwrap(), b"");
+    }
+
+    #[test]
+    fn v2_header_roundtrip() {
+        let mut e = Enc::new();
+        e.req_header(u64::MAX - 1, 0x12);
+        e.u32(7);
+        let buf = e.finish();
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.header().unwrap(), (u64::MAX - 1, 0x12));
+        assert_eq!(d.u32().unwrap(), 7);
+
+        let mut e = Enc::new();
+        e.resp_header(3, 0);
+        let buf = e.finish();
+        assert_eq!(Dec::new(&buf).header().unwrap(), (3, 0));
     }
 
     #[test]

@@ -1,4 +1,9 @@
 //! In-process transport: nodes share one [`MemStore`] behind an `Arc`.
+//!
+//! This path bypasses the v2 wire protocol entirely — blocking gets park
+//! directly on the store's Condvar with no frames, no codec, no copies.
+//! It is the semantic reference the TCP transport must match bitwise
+//! (`tests/scheduler_equivalence.rs` asserts exactly that).
 
 use std::sync::Arc;
 

@@ -4,11 +4,21 @@
 //! be reached two ways:
 //!
 //! * [`inproc`] — nodes are threads sharing one
-//!   [`crate::coordinator::store::MemStore`] (zero-copy Arc clone).
+//!   [`crate::coordinator::store::MemStore`] (zero-copy Arc clone, no wire
+//!   format at all).
 //! * [`tcp`] — the leader hosts the store behind a TCP server; worker
-//!   nodes use [`tcp::TcpStoreClient`]. The frame format is hand-rolled
-//!   ([`codec`]) since no serde is available offline: every message is a
-//!   `u32` length prefix + opcode + body, all little-endian.
+//!   nodes (threads, or `pff worker` OS processes) use
+//!   [`tcp::TcpStoreClient`]. Protocol v2 multiplexes request-id-tagged
+//!   frames over one connection and moves all blocking waits server-side
+//!   (`WAIT_*` opcodes park on the store's Condvar and reply on publish).
+//!
+//! The frame format is hand-rolled ([`codec`]) since no serde is
+//! available offline: every message is a `u32` length prefix + payload,
+//! all little-endian. The full wire specification — framing, handshake,
+//! opcode table, blocking semantics, and versioning rules — is
+//! `rust/src/transport/PROTOCOL.md`:
+//!
+#![doc = include_str!("PROTOCOL.md")]
 
 pub mod codec;
 pub mod inproc;

@@ -1,138 +1,402 @@
-//! TCP transport: the leader hosts the parameter store; workers speak a
-//! tiny request/response protocol over length-prefixed frames.
+//! TCP transport v2: the leader hosts the parameter store; workers speak a
+//! multiplexed request/response protocol over length-prefixed frames.
 //!
 //! This is the socket setup of the paper's testbed (§6 "we used sockets to
-//! establish communication between different nodes"). Blocking `get`s are
-//! served by parking the per-connection server thread on the underlying
-//! [`MemStore`] — the client connection simply doesn't receive its response
-//! frame until the dependency is published, which propagates backpressure
-//! across the wire for free.
+//! establish communication between different nodes"), upgraded to a real
+//! wire protocol (full spec: `transport/PROTOCOL.md`):
 //!
-//! Protocol (payload = opcode byte + body; response = status byte + body):
-//!
-//! | op | request body | ok-response body |
-//! |----|--------------|------------------|
-//! | 1 PUT_LAYER | u32 layer, u32 chapter, LayerParams | — |
-//! | 2 GET_LAYER | u32 layer, u32 chapter, u64 timeout_ms | LayerParams |
-//! | 3 PUT_HEAD  | u32 chapter, HeadParams | — |
-//! | 4 GET_HEAD  | u32 chapter, u64 timeout_ms | HeadParams |
-//! | 5 PUT_NEG   | u32 chapter, bytes | — |
-//! | 6 GET_NEG   | u32 chapter, u64 timeout_ms | bytes |
-//! | 7 LATEST_LAYER | u32 layer | u8 some, (u32 chapter, LayerParams) |
-//! | 8 LATEST_HEAD  | — | u8 some, (u32 chapter, HeadParams) |
-//! | 9 STATS | — | u64×4 |
+//! * **Server-side blocking** — `WAIT_LAYER`/`WAIT_HEAD`/`WAIT_NEG` park a
+//!   leader-side thread on the [`MemStore`] Condvar and send the response
+//!   frame the moment the dependency is published (or its timeout trips).
+//!   There is no client-side poll loop anywhere: the paper's pipeline
+//!   arrow (§Figure 4) is a Condvar wakeup plus one frame on the wire.
+//! * **Multiplexing** — every request carries a `u64 req_id`; responses may
+//!   arrive out of order, so one connection carries any number of in-flight
+//!   requests. A parked `WAIT_*` never head-of-line-blocks the puts/gets
+//!   behind it.
+//! * **Batched publish** — `PUT_LAYER` ships weights, bias, and the
+//!   optional Adam snapshot (`ship_opt_state`) as one frame.
+//! * **Membership** — the first frame on a connection must be `HELLO`
+//!   (protocol version + role); workers are assigned node ids through the
+//!   leader's [`NodeRegistry`] and report `DONE` when their chapters are
+//!   finished, which is how multi-process cluster mode joins.
 
+use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::registry::{NodeInfo, NodeRegistry};
 use crate::coordinator::store::{HeadParams, LayerParams, MemStore, ParamStore};
 use crate::metrics::CommStats;
 use crate::transport::codec::{read_frame, write_frame, Dec, Enc};
 
+/// Wire protocol major version, negotiated in `HELLO`.
+pub const PROTOCOL_VERSION: u8 = 2;
+
 /// Max frame size (1 GiB — a [3072,4000] f32 layer is ~49 MB).
 const MAX_FRAME: usize = 1 << 30;
 
+/// Extra slack the client grants the server past a `WAIT_*` op's own
+/// timeout before declaring the connection dead.
+const WAIT_GRACE: Duration = Duration::from_secs(10);
+
+/// Client-side response deadline for immediate (non-waiting) ops.
+const RPC_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// v2 opcodes (see `transport/PROTOCOL.md` for bodies and responses).
 mod op {
-    pub const PUT_LAYER: u8 = 1;
-    pub const GET_LAYER: u8 = 2;
-    pub const PUT_HEAD: u8 = 3;
-    pub const GET_HEAD: u8 = 4;
-    pub const PUT_NEG: u8 = 5;
-    pub const GET_NEG: u8 = 6;
-    pub const LATEST_LAYER: u8 = 7;
-    pub const LATEST_HEAD: u8 = 8;
-    pub const STATS: u8 = 9;
+    pub const HELLO: u8 = 0x01;
+    pub const PUT_LAYER: u8 = 0x10;
+    pub const GET_LAYER: u8 = 0x11;
+    pub const WAIT_LAYER: u8 = 0x12;
+    pub const PUT_HEAD: u8 = 0x13;
+    pub const GET_HEAD: u8 = 0x14;
+    pub const WAIT_HEAD: u8 = 0x15;
+    pub const PUT_NEG: u8 = 0x16;
+    pub const GET_NEG: u8 = 0x17;
+    pub const WAIT_NEG: u8 = 0x18;
+    pub const LATEST_LAYER: u8 = 0x19;
+    pub const LATEST_HEAD: u8 = 0x1a;
+    pub const STATS: u8 = 0x1b;
+    pub const LIST_NODES: u8 = 0x20;
+    pub const WAIT_NODES: u8 = 0x21;
+    pub const DONE: u8 = 0x22;
 }
 
 const ST_OK: u8 = 0;
 const ST_ERR: u8 = 1;
 
+/// Roles a connection declares in `HELLO`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Plain store client (no node id, no registry entry).
+    Client,
+    /// Cluster worker: registered with the leader's [`NodeRegistry`].
+    Worker,
+}
+
+const ROLE_CLIENT: u8 = 0;
+const ROLE_WORKER: u8 = 1;
+
+// ---------------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------------
+
 /// Running store server handle; dropping does not stop the listener —
 /// call [`StoreServer::shutdown`].
 pub struct StoreServer {
     /// Bound local address (use `.port()` for ephemeral binds).
-    pub addr: std::net::SocketAddr,
+    pub addr: SocketAddr,
+    registry: Arc<NodeRegistry>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl StoreServer {
-    /// Start serving `store` on `127.0.0.1:port` (0 = ephemeral).
+    /// Start serving `store` on `127.0.0.1:port` (0 = ephemeral) with a
+    /// fresh node registry.
     pub fn start(store: Arc<MemStore>, port: u16) -> Result<StoreServer> {
+        StoreServer::start_with(store, Arc::new(NodeRegistry::new()), port)
+    }
+
+    /// Start serving `store` with an externally-owned registry (cluster
+    /// mode: the coordinator parks on it for membership/completion).
+    pub fn start_with(
+        store: Arc<MemStore>,
+        registry: Arc<NodeRegistry>,
+        port: u16,
+    ) -> Result<StoreServer> {
         let listener = TcpListener::bind(("127.0.0.1", port)).context("binding store server")?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        listener.set_nonblocking(true)?;
+        let reg2 = registry.clone();
+        // Blocking accept — no poll interval. `shutdown` sets the stop flag
+        // and wakes the loop with a throwaway connection to itself.
         let accept_thread = std::thread::Builder::new()
             .name("pff-store-server".into())
             .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
+                let mut consecutive_errs = 0u32;
+                loop {
                     match listener.accept() {
                         Ok((sock, _)) => {
-                            sock.set_nonblocking(false).ok();
+                            consecutive_errs = 0;
+                            if stop2.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            sock.set_nodelay(true).ok();
                             let store = store.clone();
+                            let registry = reg2.clone();
                             // Detached: a conn thread exits when its client
                             // disconnects. Joining here would deadlock
                             // shutdown against still-connected clients.
                             std::thread::spawn(move || {
-                                let _ = serve_conn(sock, &store);
+                                let _ = serve_conn(sock, &store, &registry);
                             });
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
+                        Err(e) => {
+                            if stop2.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            consecutive_errs += 1;
+                            if consecutive_errs > 100 {
+                                eprintln!(
+                                    "[pff-store-server] accept failing repeatedly, \
+                                     giving up: {e}"
+                                );
+                                return;
+                            }
+                            // Error-path backoff only (fd pressure etc.);
+                            // the happy path is a plain blocking accept.
+                            std::thread::sleep(Duration::from_millis(10));
                         }
-                        Err(_) => break,
                     }
                 }
             })?;
-        Ok(StoreServer { addr, stop, accept_thread: Some(accept_thread) })
+        Ok(StoreServer { addr, registry, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The server's node registry (cluster membership + completion).
+    pub fn registry(&self) -> Arc<NodeRegistry> {
+        self.registry.clone()
     }
 
     /// Stop accepting new connections; existing connection threads exit
     /// on their own when their clients disconnect (they are detached).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept.
+        let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
     }
 }
 
-fn serve_conn(sock: TcpStream, store: &MemStore) -> Result<()> {
-    let mut reader = BufReader::new(sock.try_clone()?);
-    let mut writer = BufWriter::new(sock);
-    loop {
-        let req = match read_frame(&mut reader, MAX_FRAME) {
-            Ok(f) => f,
-            Err(_) => return Ok(()), // client closed
-        };
-        let resp = handle_request(&req, store);
-        let payload = match resp {
-            Ok(mut body) => {
-                let mut out = vec![ST_OK];
-                out.append(&mut body);
-                out
+/// Per-connection response writer, shared between the connection's request
+/// loop and any wait threads parked on its behalf. Frames are written
+/// whole under the lock, so concurrent repliers never interleave.
+struct ConnWriter {
+    w: Mutex<BufWriter<TcpStream>>,
+}
+
+impl ConnWriter {
+    fn reply(&self, req_id: u64, result: Result<Vec<u8>>) -> Result<()> {
+        let mut enc = Enc::new();
+        match result {
+            Ok(body) => {
+                enc.resp_header(req_id, ST_OK);
+                enc.raw(&body);
             }
             Err(e) => {
-                let mut enc = Enc::new();
-                enc.u8(ST_ERR);
-                enc.str(&e.to_string());
-                enc.finish()
+                enc.resp_header(req_id, ST_ERR);
+                enc.str(&format!("{e:#}"));
             }
-        };
-        write_frame(&mut writer, &payload)?;
+        }
+        let payload = enc.finish();
+        let mut w = self.w.lock().unwrap();
+        write_frame(&mut *w, &payload)
     }
 }
 
-fn handle_request(req: &[u8], store: &MemStore) -> Result<Vec<u8>> {
-    let mut d = Dec::new(req);
-    let opcode = d.u8()?;
+fn serve_conn(sock: TcpStream, store: &Arc<MemStore>, registry: &Arc<NodeRegistry>) -> Result<()> {
+    let mut reader = BufReader::new(sock.try_clone()?);
+    let writer = Arc::new(ConnWriter { w: Mutex::new(BufWriter::new(sock)) });
+
+    // --- handshake: the first frame must be HELLO --------------------------
+    let first = match read_frame(&mut reader, MAX_FRAME) {
+        Ok(f) => f,
+        Err(_) => return Ok(()), // client closed before speaking
+    };
+    let mut d = Dec::new(&first);
+    let (req_id, opcode) = d.header()?;
+    if opcode != op::HELLO {
+        writer.reply(
+            req_id,
+            Err(anyhow::anyhow!(
+                "protocol v{PROTOCOL_VERSION}: first frame must be HELLO, got opcode {opcode:#x}"
+            )),
+        )?;
+        return Ok(());
+    }
+    let version = d.u8()?;
+    if version != PROTOCOL_VERSION {
+        writer.reply(
+            req_id,
+            Err(anyhow::anyhow!(
+                "protocol version mismatch: server speaks v{PROTOCOL_VERSION}, client sent v{version}"
+            )),
+        )?;
+        return Ok(());
+    }
+    let role = d.u8()?;
+    let requested = d.u32()?;
+    let name = d.str()?;
+    let node_id = if role == ROLE_WORKER {
+        let requested = (requested != u32::MAX).then_some(requested);
+        match registry.register(requested, &name) {
+            Ok(id) => id,
+            Err(e) => {
+                writer.reply(req_id, Err(e))?;
+                return Ok(());
+            }
+        }
+    } else {
+        u32::MAX
+    };
+    let mut e = Enc::new();
+    e.u8(PROTOCOL_VERSION);
+    e.u32(node_id);
+    let result = writer
+        .reply(req_id, Ok(e.finish()))
+        .and_then(|()| conn_loop(&mut reader, &writer, store, registry, node_id));
+    // A worker that drops before DONE is deregistered so a restarted
+    // process can reclaim its node id; finished workers stay counted.
+    if node_id != u32::MAX {
+        registry.disconnect(node_id);
+    }
+    result
+}
+
+/// Post-handshake request loop of one connection.
+fn conn_loop(
+    reader: &mut BufReader<TcpStream>,
+    writer: &Arc<ConnWriter>,
+    store: &Arc<MemStore>,
+    registry: &Arc<NodeRegistry>,
+    conn_node: u32,
+) -> Result<()> {
+    loop {
+        let frame = match read_frame(reader, MAX_FRAME) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // client closed
+        };
+        let mut d = Dec::new(&frame);
+        let (req_id, opcode) = d.header()?;
+        match opcode {
+            // Blocking ops: answer inline when the value is already
+            // there (the steady-state pipeline case — no thread spawn on
+            // the hot path); otherwise park a dedicated thread on the
+            // store/registry Condvar and reply whenever the publish
+            // lands. The request loop keeps draining frames meanwhile
+            // (multiplexing).
+            op::WAIT_LAYER => {
+                let layer = d.u32()? as usize;
+                let chapter = d.u32()?;
+                let timeout = Duration::from_millis(d.u64()?);
+                if let Some(p) = store.try_layer(layer, chapter) {
+                    let mut e = Enc::new();
+                    e.layer_params(&p);
+                    writer.reply(req_id, Ok(e.finish()))?;
+                    continue;
+                }
+                let (store, writer) = (store.clone(), writer.clone());
+                std::thread::Builder::new().name("pff-wait-layer".into()).spawn(move || {
+                    let res = store.get_layer(layer, chapter, timeout).map(|p| {
+                        let mut e = Enc::new();
+                        e.layer_params(&p);
+                        e.finish()
+                    });
+                    let _ = writer.reply(req_id, res);
+                })?;
+            }
+            op::WAIT_HEAD => {
+                let chapter = d.u32()?;
+                let timeout = Duration::from_millis(d.u64()?);
+                if let Some(p) = store.try_head(chapter) {
+                    let mut e = Enc::new();
+                    e.head_params(&p);
+                    writer.reply(req_id, Ok(e.finish()))?;
+                    continue;
+                }
+                let (store, writer) = (store.clone(), writer.clone());
+                std::thread::Builder::new().name("pff-wait-head".into()).spawn(move || {
+                    let res = store.get_head(chapter, timeout).map(|p| {
+                        let mut e = Enc::new();
+                        e.head_params(&p);
+                        e.finish()
+                    });
+                    let _ = writer.reply(req_id, res);
+                })?;
+            }
+            op::WAIT_NEG => {
+                let chapter = d.u32()?;
+                let timeout = Duration::from_millis(d.u64()?);
+                if let Some(v) = store.try_neg(chapter) {
+                    let mut e = Enc::new();
+                    e.bytes(&v);
+                    writer.reply(req_id, Ok(e.finish()))?;
+                    continue;
+                }
+                let (store, writer) = (store.clone(), writer.clone());
+                std::thread::Builder::new().name("pff-wait-neg".into()).spawn(move || {
+                    let res = store.get_neg(chapter, timeout).map(|v| {
+                        let mut e = Enc::new();
+                        e.bytes(&v);
+                        e.finish()
+                    });
+                    let _ = writer.reply(req_id, res);
+                })?;
+            }
+            op::WAIT_NODES => {
+                let n = d.u32()? as usize;
+                let timeout = Duration::from_millis(d.u64()?);
+                let nodes = registry.workers();
+                if nodes.len() >= n {
+                    writer.reply(req_id, Ok(encode_nodes(&nodes)))?;
+                    continue;
+                }
+                let (registry, writer) = (registry.clone(), writer.clone());
+                std::thread::Builder::new().name("pff-wait-nodes".into()).spawn(move || {
+                    let res =
+                        registry.wait_for_workers(n, timeout).map(|nodes| encode_nodes(&nodes));
+                    let _ = writer.reply(req_id, res);
+                })?;
+            }
+            _ => {
+                let res = handle_immediate(opcode, &mut d, store, registry, conn_node);
+                writer.reply(req_id, res)?;
+            }
+        }
+    }
+}
+
+fn encode_nodes(nodes: &[NodeInfo]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u32(nodes.len() as u32);
+    for n in nodes {
+        e.u32(n.id);
+        e.str(&n.name);
+    }
+    e.finish()
+}
+
+fn decode_nodes(body: &[u8]) -> Result<Vec<NodeInfo>> {
+    let mut d = Dec::new(body);
+    let n = d.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(NodeInfo { id: d.u32()?, name: d.str()? });
+    }
+    Ok(out)
+}
+
+/// Handle an op that never parks: state lookups, publishes, registry
+/// queries. Runs inline on the connection's request loop. `conn_node` is
+/// the node id this connection registered in `HELLO` (`u32::MAX` for
+/// plain clients) — `DONE` is only accepted for the connection's own id.
+fn handle_immediate(
+    opcode: u8,
+    d: &mut Dec<'_>,
+    store: &MemStore,
+    registry: &NodeRegistry,
+    conn_node: u32,
+) -> Result<Vec<u8>> {
     let mut e = Enc::new();
     match opcode {
         op::PUT_LAYER => {
@@ -144,9 +408,13 @@ fn handle_request(req: &[u8], store: &MemStore) -> Result<Vec<u8>> {
         op::GET_LAYER => {
             let layer = d.u32()? as usize;
             let chapter = d.u32()?;
-            let timeout = Duration::from_millis(d.u64()?);
-            let p = store.get_layer(layer, chapter, timeout)?;
-            e.layer_params(&p);
+            match store.try_layer(layer, chapter) {
+                None => e.u8(0),
+                Some(p) => {
+                    e.u8(1);
+                    e.layer_params(&p);
+                }
+            }
         }
         op::PUT_HEAD => {
             let chapter = d.u32()?;
@@ -155,9 +423,13 @@ fn handle_request(req: &[u8], store: &MemStore) -> Result<Vec<u8>> {
         }
         op::GET_HEAD => {
             let chapter = d.u32()?;
-            let timeout = Duration::from_millis(d.u64()?);
-            let p = store.get_head(chapter, timeout)?;
-            e.head_params(&p);
+            match store.try_head(chapter) {
+                None => e.u8(0),
+                Some(p) => {
+                    e.u8(1);
+                    e.head_params(&p);
+                }
+            }
         }
         op::PUT_NEG => {
             let chapter = d.u32()?;
@@ -166,8 +438,13 @@ fn handle_request(req: &[u8], store: &MemStore) -> Result<Vec<u8>> {
         }
         op::GET_NEG => {
             let chapter = d.u32()?;
-            let timeout = Duration::from_millis(d.u64()?);
-            e.bytes(&store.get_neg(chapter, timeout)?);
+            match store.try_neg(chapter) {
+                None => e.u8(0),
+                Some(v) => {
+                    e.u8(1);
+                    e.bytes(&v);
+                }
+            }
         }
         op::LATEST_LAYER => {
             let layer = d.u32()? as usize;
@@ -195,100 +472,372 @@ fn handle_request(req: &[u8], store: &MemStore) -> Result<Vec<u8>> {
             e.u64(s.bytes_put);
             e.u64(s.bytes_get);
         }
-        other => bail!("unknown opcode {other}"),
+        op::LIST_NODES => return Ok(encode_nodes(&registry.workers())),
+        op::DONE => {
+            let id = d.u32()?;
+            if conn_node == u32::MAX {
+                bail!("DONE from a connection that did not register as a worker");
+            }
+            if id != conn_node {
+                bail!("DONE for node {id} from a connection registered as node {conn_node}");
+            }
+            registry.mark_done(id)?;
+        }
+        other => bail!("unknown opcode {other:#x} (protocol v{PROTOCOL_VERSION})"),
     }
     Ok(e.finish())
 }
 
-/// [`ParamStore`] client over TCP. One connection, serialized by a mutex —
-/// each node owns its own client so contention is nil.
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// A response payload with its 9-byte `(req_id, status)` header still in
+/// place — slicing on access avoids a second multi-MB copy of layer
+/// bodies on the client hot path.
+struct Resp(Vec<u8>);
+
+impl Resp {
+    fn body(&self) -> &[u8] {
+        &self.0[9..]
+    }
+}
+
+/// Pending-response routing table: req_id → the caller's reply channel.
+type PendingMap = Mutex<HashMap<u64, mpsc::Sender<Result<Resp, String>>>>;
+
+struct ClientShared {
+    sock: TcpStream,
+    writer: Mutex<BufWriter<TcpStream>>,
+    pending: PendingMap,
+    next_id: AtomicU64,
+    /// Set by the demux thread when the connection dies; the reason every
+    /// subsequent call fails with.
+    dead: Mutex<Option<String>>,
+}
+
+impl ClientShared {
+    /// Issue one request and block for its (possibly out-of-order)
+    /// response. `wait_timeout` is Some for `WAIT_*` ops — the server owns
+    /// that deadline; the client only adds grace on top.
+    fn request(
+        &self,
+        opcode: u8,
+        wait_timeout: Option<Duration>,
+        build: impl FnOnce(&mut Enc),
+    ) -> Result<Resp> {
+        if let Some(reason) = self.dead.lock().unwrap().clone() {
+            bail!("store connection is down: {reason}");
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut e = Enc::new();
+        e.req_header(id, opcode);
+        build(&mut e);
+        let payload = e.finish();
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(id, tx);
+        {
+            let mut w = self.writer.lock().unwrap();
+            if let Err(err) = write_frame(&mut *w, &payload) {
+                self.pending.lock().unwrap().remove(&id);
+                return Err(err).context("writing request frame");
+            }
+        }
+        // Close the race with fail_all: if the connection died between the
+        // dead-check above and the pending insert, nobody drained our
+        // entry — detect it now instead of stalling out the full deadline.
+        if let Some(reason) = self.dead.lock().unwrap().clone() {
+            if self.pending.lock().unwrap().remove(&id).is_some() {
+                bail!("store connection is down: {reason}");
+            }
+            // else: fail_all drained us; the channel already holds the error.
+        }
+        let deadline = wait_timeout.map_or(RPC_TIMEOUT, |t| t + WAIT_GRACE);
+        match rx.recv_timeout(deadline) {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => bail!("{msg}"),
+            Err(_) => {
+                self.pending.lock().unwrap().remove(&id);
+                bail!("store server did not reply within {deadline:?} (opcode {opcode:#x})");
+            }
+        }
+    }
+}
+
+/// Demultiplex response frames to their waiting callers by req_id. Runs on
+/// a dedicated thread for the lifetime of the connection; on connection
+/// loss it fails every in-flight call with the reason.
+fn demux_loop(shared: &ClientShared) {
+    let mut reader = match shared.sock.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(e) => {
+            fail_all(shared, format!("cloning socket: {e}"));
+            return;
+        }
+    };
+    loop {
+        let frame = match read_frame(&mut reader, MAX_FRAME) {
+            Ok(f) => f,
+            Err(e) => {
+                fail_all(shared, format!("connection lost: {e:#}"));
+                return;
+            }
+        };
+        if frame.len() < 9 {
+            fail_all(shared, "malformed response frame (short header)".into());
+            return;
+        }
+        let req_id = u64::from_le_bytes(frame[0..8].try_into().expect("length checked above"));
+        let status = frame[8];
+        let res = if status == ST_OK {
+            Ok(Resp(frame))
+        } else {
+            match Dec::new(&frame[9..]).str() {
+                Ok(msg) => Err(format!("store server error: {msg}")),
+                Err(_) => Err("store server error (malformed error frame)".into()),
+            }
+        };
+        // Unknown req_id = response to a call that already timed out
+        // client-side; drop it.
+        if let Some(tx) = shared.pending.lock().unwrap().remove(&req_id) {
+            let _ = tx.send(res);
+        }
+    }
+}
+
+fn fail_all(shared: &ClientShared, reason: String) {
+    *shared.dead.lock().unwrap() = Some(reason.clone());
+    for (_, tx) in shared.pending.lock().unwrap().drain() {
+        let _ = tx.send(Err(reason.clone()));
+    }
+}
+
+/// [`ParamStore`] client over TCP, protocol v2.
+///
+/// One connection carries any number of concurrent in-flight requests
+/// (requests are tagged with a `u64 req_id`; a demux thread routes the
+/// responses), so the client is freely shareable across threads — a node
+/// can publish while another of its threads is parked on a dependency.
 pub struct TcpStoreClient {
-    conn: Mutex<(BufReader<TcpStream>, BufWriter<TcpStream>)>,
+    shared: Arc<ClientShared>,
+    node_id: u32,
+    demux: Option<std::thread::JoinHandle<()>>,
 }
 
 impl TcpStoreClient {
-    /// Connect to a [`StoreServer`].
-    pub fn connect(addr: std::net::SocketAddr) -> Result<TcpStoreClient> {
-        let sock = TcpStream::connect(addr).context("connecting to store server")?;
-        sock.set_nodelay(true).ok();
-        let reader = BufReader::new(sock.try_clone()?);
-        let writer = BufWriter::new(sock);
-        Ok(TcpStoreClient { conn: Mutex::new((reader, writer)) })
+    /// Connect to a [`StoreServer`] as a plain store client.
+    pub fn connect(addr: SocketAddr) -> Result<TcpStoreClient> {
+        TcpStoreClient::connect_as(addr, Role::Client, None, "client")
     }
 
-    fn call(&self, payload: Vec<u8>) -> Result<Vec<u8>> {
-        let mut guard = self.conn.lock().unwrap();
-        let (reader, writer) = &mut *guard;
-        write_frame(writer, &payload)?;
-        let resp = read_frame(reader, MAX_FRAME)?;
-        let mut d = Dec::new(&resp);
-        match d.u8()? {
-            ST_OK => Ok(resp[1..].to_vec()),
-            _ => bail!("store server error: {}", Dec::new(&resp[1..]).str()?),
+    /// Connect and register as a cluster worker. `requested = Some(id)`
+    /// claims a specific node index; `None` lets the leader assign one.
+    pub fn connect_worker(
+        addr: SocketAddr,
+        requested: Option<u32>,
+        name: &str,
+    ) -> Result<TcpStoreClient> {
+        TcpStoreClient::connect_as(addr, Role::Worker, requested, name)
+    }
+
+    /// [`TcpStoreClient::connect_worker`] with startup retry: worker
+    /// processes are typically launched alongside the leader, so refused
+    /// connections are retried with backoff until `wait` elapses. (This is
+    /// connection *establishment* only — dependency waiting is always
+    /// server-side, never a retry loop.)
+    pub fn connect_worker_retry(
+        addr: SocketAddr,
+        requested: Option<u32>,
+        name: &str,
+        wait: Duration,
+    ) -> Result<TcpStoreClient> {
+        let deadline = Instant::now() + wait;
+        let mut delay = Duration::from_millis(10);
+        // Retry only connection establishment. HELLO rejections (taken
+        // node id, version mismatch) are deterministic — surface them
+        // immediately instead of hammering the leader until the deadline.
+        let sock = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() + delay >= deadline {
+                        return Err(e)
+                            .with_context(|| format!("leader at {addr} unreachable for {wait:?}"));
+                    }
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(Duration::from_millis(500));
+                }
+            }
+        };
+        TcpStoreClient::from_stream(sock, Role::Worker, requested, name)
+    }
+
+    fn connect_as(
+        addr: SocketAddr,
+        role: Role,
+        requested: Option<u32>,
+        name: &str,
+    ) -> Result<TcpStoreClient> {
+        let sock = TcpStream::connect(addr).context("connecting to store server")?;
+        TcpStoreClient::from_stream(sock, role, requested, name)
+    }
+
+    /// Handshake an already-established connection.
+    fn from_stream(
+        sock: TcpStream,
+        role: Role,
+        requested: Option<u32>,
+        name: &str,
+    ) -> Result<TcpStoreClient> {
+        sock.set_nodelay(true).ok();
+        let shared = Arc::new(ClientShared {
+            sock: sock.try_clone()?,
+            writer: Mutex::new(BufWriter::new(sock)),
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(0),
+            dead: Mutex::new(None),
+        });
+        let s2 = shared.clone();
+        let demux = std::thread::Builder::new()
+            .name("pff-client-demux".into())
+            .spawn(move || demux_loop(&s2))?;
+
+        let hello = shared.request(op::HELLO, None, |e| {
+            e.u8(PROTOCOL_VERSION);
+            e.u8(match role {
+                Role::Client => ROLE_CLIENT,
+                Role::Worker => ROLE_WORKER,
+            });
+            e.u32(requested.unwrap_or(u32::MAX));
+            e.str(name);
+        });
+        let node_id = hello.and_then(|body| {
+            let mut d = Dec::new(body.body());
+            let version = d.u8()?;
+            if version != PROTOCOL_VERSION {
+                bail!("server replied with protocol v{version}, expected v{PROTOCOL_VERSION}");
+            }
+            d.u32()
+        });
+        match node_id {
+            Ok(node_id) => Ok(TcpStoreClient { shared, node_id, demux: Some(demux) }),
+            Err(e) => {
+                // Unwind the half-open connection so the demux thread exits.
+                let _ = shared.sock.shutdown(Shutdown::Both);
+                let _ = demux.join();
+                Err(e).context("HELLO handshake failed")
+            }
+        }
+    }
+
+    /// The node id the leader assigned in `HELLO` (workers only).
+    pub fn node_id(&self) -> Option<u32> {
+        (self.node_id != u32::MAX).then_some(self.node_id)
+    }
+
+    /// Non-blocking fetch of `(layer, chapter)` — `None` when not yet
+    /// published (the blocking variant is [`ParamStore::get_layer`]).
+    pub fn get_layer_now(&self, layer: usize, chapter: u32) -> Result<Option<LayerParams>> {
+        let body = self.shared.request(op::GET_LAYER, None, |e| {
+            e.u32(layer as u32);
+            e.u32(chapter);
+        })?;
+        let mut d = Dec::new(body.body());
+        if d.u8()? == 0 {
+            return Ok(None);
+        }
+        Ok(Some(d.layer_params()?))
+    }
+
+    /// Registered workers, as the leader currently sees them.
+    pub fn list_nodes(&self) -> Result<Vec<NodeInfo>> {
+        decode_nodes(self.shared.request(op::LIST_NODES, None, |_| {})?.body())
+    }
+
+    /// Park (server-side) until `n` workers have registered.
+    pub fn wait_nodes(&self, n: usize, timeout: Duration) -> Result<Vec<NodeInfo>> {
+        let body = self.shared.request(op::WAIT_NODES, Some(timeout), |e| {
+            e.u32(n as u32);
+            e.u64(timeout.as_millis() as u64);
+        })?;
+        decode_nodes(body.body())
+    }
+
+    /// Report this worker's chapters finished (workers only).
+    pub fn done(&self) -> Result<()> {
+        let id = self
+            .node_id()
+            .context("done(): this connection did not register as a worker")?;
+        self.shared.request(op::DONE, None, |e| e.u32(id)).map(|_| ())
+    }
+}
+
+impl Drop for TcpStoreClient {
+    fn drop(&mut self) {
+        let _ = self.shared.sock.shutdown(Shutdown::Both);
+        if let Some(t) = self.demux.take() {
+            let _ = t.join();
         }
     }
 }
 
 impl ParamStore for TcpStoreClient {
     fn put_layer(&self, layer: usize, chapter: u32, params: LayerParams) -> Result<()> {
-        let mut e = Enc::new();
-        e.u8(op::PUT_LAYER);
-        e.u32(layer as u32);
-        e.u32(chapter);
-        e.layer_params(&params);
-        self.call(e.finish()).map(|_| ())
+        self.shared
+            .request(op::PUT_LAYER, None, |e| {
+                e.u32(layer as u32);
+                e.u32(chapter);
+                e.layer_params(&params);
+            })
+            .map(|_| ())
     }
 
     fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<LayerParams> {
-        let mut e = Enc::new();
-        e.u8(op::GET_LAYER);
-        e.u32(layer as u32);
-        e.u32(chapter);
-        e.u64(timeout.as_millis() as u64);
-        let body = self.call(e.finish())?;
-        Dec::new(&body).layer_params()
+        let body = self.shared.request(op::WAIT_LAYER, Some(timeout), |e| {
+            e.u32(layer as u32);
+            e.u32(chapter);
+            e.u64(timeout.as_millis() as u64);
+        })?;
+        Dec::new(body.body()).layer_params()
     }
 
     fn put_head(&self, chapter: u32, params: HeadParams) -> Result<()> {
-        let mut e = Enc::new();
-        e.u8(op::PUT_HEAD);
-        e.u32(chapter);
-        e.head_params(&params);
-        self.call(e.finish()).map(|_| ())
+        self.shared
+            .request(op::PUT_HEAD, None, |e| {
+                e.u32(chapter);
+                e.head_params(&params);
+            })
+            .map(|_| ())
     }
 
     fn get_head(&self, chapter: u32, timeout: Duration) -> Result<HeadParams> {
-        let mut e = Enc::new();
-        e.u8(op::GET_HEAD);
-        e.u32(chapter);
-        e.u64(timeout.as_millis() as u64);
-        let body = self.call(e.finish())?;
-        Dec::new(&body).head_params()
+        let body = self.shared.request(op::WAIT_HEAD, Some(timeout), |e| {
+            e.u32(chapter);
+            e.u64(timeout.as_millis() as u64);
+        })?;
+        Dec::new(body.body()).head_params()
     }
 
     fn put_neg(&self, chapter: u32, labels: Vec<u8>) -> Result<()> {
-        let mut e = Enc::new();
-        e.u8(op::PUT_NEG);
-        e.u32(chapter);
-        e.bytes(&labels);
-        self.call(e.finish()).map(|_| ())
+        self.shared
+            .request(op::PUT_NEG, None, |e| {
+                e.u32(chapter);
+                e.bytes(&labels);
+            })
+            .map(|_| ())
     }
 
     fn get_neg(&self, chapter: u32, timeout: Duration) -> Result<Vec<u8>> {
-        let mut e = Enc::new();
-        e.u8(op::GET_NEG);
-        e.u32(chapter);
-        e.u64(timeout.as_millis() as u64);
-        let body = self.call(e.finish())?;
-        Dec::new(&body).bytes()
+        let body = self.shared.request(op::WAIT_NEG, Some(timeout), |e| {
+            e.u32(chapter);
+            e.u64(timeout.as_millis() as u64);
+        })?;
+        Dec::new(body.body()).bytes()
     }
 
     fn latest_layer(&self, layer: usize) -> Result<Option<(u32, LayerParams)>> {
-        let mut e = Enc::new();
-        e.u8(op::LATEST_LAYER);
-        e.u32(layer as u32);
-        let body = self.call(e.finish())?;
-        let mut d = Dec::new(&body);
+        let body = self.shared.request(op::LATEST_LAYER, None, |e| e.u32(layer as u32))?;
+        let mut d = Dec::new(body.body());
         if d.u8()? == 0 {
             return Ok(None);
         }
@@ -296,10 +845,8 @@ impl ParamStore for TcpStoreClient {
     }
 
     fn latest_head(&self) -> Result<Option<(u32, HeadParams)>> {
-        let mut e = Enc::new();
-        e.u8(op::LATEST_HEAD);
-        let body = self.call(e.finish())?;
-        let mut d = Dec::new(&body);
+        let body = self.shared.request(op::LATEST_HEAD, None, |_| {})?;
+        let mut d = Dec::new(body.body());
         if d.u8()? == 0 {
             return Ok(None);
         }
@@ -307,11 +854,9 @@ impl ParamStore for TcpStoreClient {
     }
 
     fn comm_stats(&self) -> CommStats {
-        let mut e = Enc::new();
-        e.u8(op::STATS);
-        match self.call(e.finish()) {
+        match self.shared.request(op::STATS, None, |_| {}) {
             Ok(body) => {
-                let mut d = Dec::new(&body);
+                let mut d = Dec::new(body.body());
                 CommStats {
                     puts: d.u64().unwrap_or(0),
                     gets: d.u64().unwrap_or(0),
@@ -358,6 +903,10 @@ mod tests {
         assert_eq!(lp.b, vec![1.0; 4]);
         assert!(client.latest_layer(9).unwrap().is_none());
 
+        // non-blocking probe
+        assert!(client.get_layer_now(2, 7).unwrap().is_some());
+        assert!(client.get_layer_now(2, 8).unwrap().is_none());
+
         let stats = client.comm_stats();
         assert!(stats.puts >= 2);
         server.shutdown();
@@ -366,16 +915,41 @@ mod tests {
     #[test]
     fn blocking_get_across_the_wire() {
         let store = Arc::new(MemStore::new());
-        let server = StoreServer::start(store, 0).unwrap();
+        let server = StoreServer::start(store.clone(), 0).unwrap();
         let addr = server.addr;
 
         let waiter = std::thread::spawn(move || {
             let client = TcpStoreClient::connect(addr).unwrap();
             client.get_layer(0, 0, Duration::from_secs(5))
         });
-        std::thread::sleep(Duration::from_millis(50));
+        // Condvar handoff: the server-side wait thread parks on the
+        // MemStore before we publish — no timing guesswork.
+        store.wait_for_waiters(1, Duration::from_secs(5)).unwrap();
         let publisher = TcpStoreClient::connect(addr).unwrap();
         publisher.put_layer(0, 0, params()).unwrap();
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(got.w.rows, 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiplexed_connection_has_no_head_of_line_blocking() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store.clone(), 0).unwrap();
+        let client = Arc::new(TcpStoreClient::connect(server.addr).unwrap());
+
+        // Park a blocking wait on the shared connection...
+        let c2 = client.clone();
+        let waiter = std::thread::spawn(move || c2.get_layer(3, 9, Duration::from_secs(5)));
+        store.wait_for_waiters(1, Duration::from_secs(5)).unwrap();
+
+        // ...and keep using the SAME connection while it is parked.
+        client.put_neg(0, vec![1, 2]).unwrap();
+        assert_eq!(client.get_neg(0, Duration::from_millis(100)).unwrap(), vec![1, 2]);
+        assert!(client.get_layer_now(3, 9).unwrap().is_none());
+
+        // Publishing through the same connection unblocks the wait.
+        client.put_layer(3, 9, params()).unwrap();
         let got = waiter.join().unwrap().unwrap();
         assert_eq!(got.w.rows, 6);
         server.shutdown();
@@ -388,6 +962,90 @@ mod tests {
         let client = TcpStoreClient::connect(server.addr).unwrap();
         let err = client.get_neg(99, Duration::from_millis(20)).unwrap_err();
         assert!(err.to_string().contains("timed out"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn worker_handshake_assigns_and_rejects_ids() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        let w0 = TcpStoreClient::connect_worker(server.addr, None, "alpha").unwrap();
+        let w1 = TcpStoreClient::connect_worker(server.addr, None, "beta").unwrap();
+        assert_eq!(w0.node_id(), Some(0));
+        assert_eq!(w1.node_id(), Some(1));
+        let err = TcpStoreClient::connect_worker(server.addr, Some(1), "dup").unwrap_err();
+        assert!(format!("{err:#}").contains("already registered"), "{err:#}");
+
+        let nodes = w0.list_nodes().unwrap();
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[1].name, "beta");
+
+        // plain clients get no node id and cannot report DONE
+        let plain = TcpStoreClient::connect(server.addr).unwrap();
+        assert_eq!(plain.node_id(), None);
+        assert!(plain.done().is_err());
+
+        // DONE flows into the registry
+        w0.done().unwrap();
+        w1.done().unwrap();
+        assert_eq!(server.registry().done_count(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn wait_nodes_parks_until_membership() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        let addr = server.addr;
+        let observer = TcpStoreClient::connect(addr).unwrap();
+        let h = std::thread::spawn(move || observer.wait_nodes(2, Duration::from_secs(5)));
+        let _w0 = TcpStoreClient::connect_worker(addr, None, "a").unwrap();
+        let _w1 = TcpStoreClient::connect_worker(addr, None, "b").unwrap();
+        let nodes = h.join().unwrap().unwrap();
+        assert_eq!(nodes.len(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn non_hello_first_frame_is_rejected() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        // Speak raw: a STATS request before HELLO must be refused.
+        let sock = TcpStream::connect(server.addr).unwrap();
+        let mut w = BufWriter::new(sock.try_clone().unwrap());
+        let mut e = Enc::new();
+        e.req_header(0, super::op::STATS);
+        write_frame(&mut w, &e.finish()).unwrap();
+        let mut r = BufReader::new(sock);
+        let resp = read_frame(&mut r, MAX_FRAME).unwrap();
+        let mut d = Dec::new(&resp);
+        let (req_id, status) = d.header().unwrap();
+        assert_eq!(req_id, 0);
+        assert_eq!(status, ST_ERR);
+        assert!(d.str().unwrap().contains("HELLO"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        let sock = TcpStream::connect(server.addr).unwrap();
+        let mut w = BufWriter::new(sock.try_clone().unwrap());
+        let mut e = Enc::new();
+        e.req_header(7, super::op::HELLO);
+        e.u8(PROTOCOL_VERSION + 1); // wrong version
+        e.u8(ROLE_CLIENT);
+        e.u32(u32::MAX);
+        e.str("time-traveler");
+        write_frame(&mut w, &e.finish()).unwrap();
+        let mut r = BufReader::new(sock);
+        let resp = read_frame(&mut r, MAX_FRAME).unwrap();
+        let mut d = Dec::new(&resp);
+        let (req_id, status) = d.header().unwrap();
+        assert_eq!(req_id, 7);
+        assert_eq!(status, ST_ERR);
+        assert!(d.str().unwrap().contains("version mismatch"));
         server.shutdown();
     }
 }

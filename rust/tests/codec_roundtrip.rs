@@ -1,0 +1,261 @@
+//! Property tests for the wire codec: every value the v2 protocol ships
+//! must round-trip bit-exactly through `Enc`/`Dec` and the frame layer —
+//! including degenerate shapes (0×N matrices, empty vectors) and
+//! max-length frames. Uses the `pff::testing` forall harness (seeded, no
+//! shrinking; failures report case index + seed).
+
+use pff::coordinator::store::{HeadParams, LayerParams, OptSnapshot};
+use pff::tensor::{Matrix, Rng};
+use pff::testing::{forall_r, gen_labels, gen_usize};
+use pff::transport::codec::{read_frame, write_frame, Dec, Enc};
+
+/// Matrix with arbitrary f32 *bit patterns* (NaNs, infs, -0.0, denormals)
+/// and dims drawn from `[0, hi]` — degenerate 0×N / N×0 shapes included.
+fn gen_bits_matrix(rng: &mut Rng, hi: usize) -> Matrix {
+    let r = gen_usize(rng, 0, hi);
+    let c = gen_usize(rng, 0, hi);
+    let data: Vec<f32> = (0..r * c).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+    Matrix::from_vec(r, c, data)
+}
+
+fn gen_f32s(rng: &mut Rng, hi: usize) -> Vec<f32> {
+    let n = gen_usize(rng, 0, hi);
+    (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect()
+}
+
+fn gen_opt(rng: &mut Rng) -> Option<OptSnapshot> {
+    if rng.below(2) == 0 {
+        return None;
+    }
+    Some(OptSnapshot {
+        m_w: gen_bits_matrix(rng, 6),
+        v_w: gen_bits_matrix(rng, 6),
+        m_b: gen_f32s(rng, 6),
+        v_b: gen_f32s(rng, 6),
+        t: rng.next_u64() as u32,
+    })
+}
+
+fn gen_layer_params(rng: &mut Rng) -> LayerParams {
+    LayerParams {
+        w: gen_bits_matrix(rng, 8),
+        b: gen_f32s(rng, 8),
+        normalize_input: rng.below(2) == 1,
+        opt: gen_opt(rng),
+    }
+}
+
+/// Bit-exact f32 slice comparison (`==` would reject NaN == NaN).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn matrix_bits_eq(a: &Matrix, b: &Matrix) -> Result<(), String> {
+    if a.rows != b.rows || a.cols != b.cols {
+        return Err(format!("shape {}x{} != {}x{}", a.rows, a.cols, b.rows, b.cols));
+    }
+    if !bits_eq(&a.data, &b.data) {
+        return Err("matrix payload bits differ".into());
+    }
+    Ok(())
+}
+
+fn opt_bits_eq(a: &Option<OptSnapshot>, b: &Option<OptSnapshot>) -> Result<(), String> {
+    match (a, b) {
+        (None, None) => Ok(()),
+        (Some(a), Some(b)) => {
+            matrix_bits_eq(&a.m_w, &b.m_w)?;
+            matrix_bits_eq(&a.v_w, &b.v_w)?;
+            if !bits_eq(&a.m_b, &b.m_b) || !bits_eq(&a.v_b, &b.v_b) {
+                return Err("opt bias moments differ".into());
+            }
+            if a.t != b.t {
+                return Err(format!("opt t {} != {}", a.t, b.t));
+            }
+            Ok(())
+        }
+        _ => Err("opt presence flag flipped".into()),
+    }
+}
+
+#[test]
+fn layer_params_roundtrip_bit_exact() {
+    forall_r(
+        "layer-params-roundtrip",
+        11,
+        96,
+        gen_layer_params,
+        |p| {
+            let mut e = Enc::new();
+            e.layer_params(p);
+            let buf = e.finish();
+            let mut d = Dec::new(&buf);
+            let got = d.layer_params().map_err(|e| format!("decode: {e:#}"))?;
+            if d.remaining() != 0 {
+                return Err(format!("{} trailing bytes", d.remaining()));
+            }
+            matrix_bits_eq(&got.w, &p.w)?;
+            if !bits_eq(&got.b, &p.b) {
+                return Err("bias bits differ".into());
+            }
+            if got.normalize_input != p.normalize_input {
+                return Err("normalize flag flipped".into());
+            }
+            opt_bits_eq(&got.opt, &p.opt)
+        },
+    );
+}
+
+#[test]
+fn head_params_roundtrip_bit_exact() {
+    forall_r(
+        "head-params-roundtrip",
+        13,
+        96,
+        |rng| HeadParams { w: gen_bits_matrix(rng, 8), b: gen_f32s(rng, 8), opt: gen_opt(rng) },
+        |p| {
+            let mut e = Enc::new();
+            e.head_params(p);
+            let buf = e.finish();
+            let got = Dec::new(&buf).head_params().map_err(|e| format!("decode: {e:#}"))?;
+            matrix_bits_eq(&got.w, &p.w)?;
+            if !bits_eq(&got.b, &p.b) {
+                return Err("bias bits differ".into());
+            }
+            opt_bits_eq(&got.opt, &p.opt)
+        },
+    );
+}
+
+#[test]
+fn degenerate_shapes_roundtrip() {
+    for (r, c) in [(0usize, 0usize), (0, 7), (7, 0), (1, 0), (0, 1)] {
+        let p = LayerParams {
+            w: Matrix::from_vec(r, c, vec![]),
+            b: vec![],
+            normalize_input: false,
+            opt: None,
+        };
+        let mut e = Enc::new();
+        e.layer_params(&p);
+        let got = Dec::new(&e.finish()).layer_params().unwrap();
+        assert_eq!((got.w.rows, got.w.cols), (r, c), "{r}x{c} shape lost");
+        assert!(got.b.is_empty());
+        assert!(got.opt.is_none());
+    }
+}
+
+#[test]
+fn random_byte_payloads_frame_roundtrip() {
+    forall_r(
+        "frame-roundtrip",
+        17,
+        64,
+        |rng| {
+            let n = gen_usize(rng, 0, 4096);
+            gen_labels(rng, n, 256)
+        },
+        |payload| {
+            let mut pipe: Vec<u8> = Vec::new();
+            write_frame(&mut pipe, payload).map_err(|e| format!("write: {e:#}"))?;
+            if pipe.len() != payload.len() + 4 {
+                return Err(format!("frame overhead wrong: {} bytes", pipe.len()));
+            }
+            let mut cur = std::io::Cursor::new(pipe);
+            let got = read_frame(&mut cur, 1 << 20).map_err(|e| format!("read: {e:#}"))?;
+            (&got == payload).then_some(()).ok_or_else(|| "payload differs".into())
+        },
+    );
+}
+
+#[test]
+fn back_to_back_frames_preserve_boundaries() {
+    forall_r(
+        "frame-sequence",
+        19,
+        32,
+        |rng| {
+            (0..gen_usize(rng, 1, 5))
+                .map(|_| gen_labels(rng, gen_usize(rng, 0, 64), 256))
+                .collect::<Vec<_>>()
+        },
+        |frames| {
+            let mut pipe: Vec<u8> = Vec::new();
+            for f in frames {
+                write_frame(&mut pipe, f).map_err(|e| format!("{e:#}"))?;
+            }
+            let mut cur = std::io::Cursor::new(pipe);
+            for (i, f) in frames.iter().enumerate() {
+                let got = read_frame(&mut cur, 1 << 20).map_err(|e| format!("frame {i}: {e:#}"))?;
+                if &got != f {
+                    return Err(format!("frame {i} corrupted"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn max_length_frame_boundary() {
+    const CAP: usize = 1 << 20; // 1 MiB test cap (the real one is 1 GiB)
+    let payload = vec![0xA5u8; CAP];
+    let mut pipe: Vec<u8> = Vec::new();
+    write_frame(&mut pipe, &payload).unwrap();
+
+    // exactly at the cap: accepted
+    let got = read_frame(&mut std::io::Cursor::new(pipe.clone()), CAP).unwrap();
+    assert_eq!(got.len(), CAP);
+
+    // one byte over the reader's cap: rejected before allocation
+    let err = read_frame(&mut std::io::Cursor::new(pipe), CAP - 1).unwrap_err();
+    assert!(err.to_string().contains("exceeds cap"), "{err}");
+}
+
+#[test]
+fn v2_request_headers_roundtrip() {
+    forall_r(
+        "v2-header-roundtrip",
+        23,
+        64,
+        |rng| (rng.next_u64(), rng.next_u64() as u8, gen_labels(rng, gen_usize(rng, 0, 32), 256)),
+        |(req_id, opcode, body)| {
+            let mut e = Enc::new();
+            e.req_header(*req_id, *opcode);
+            e.bytes(body);
+            let buf = e.finish();
+            let mut d = Dec::new(&buf);
+            let (id, op) = d.header().map_err(|e| format!("{e:#}"))?;
+            if id != *req_id || op != *opcode {
+                return Err(format!("header ({id}, {op}) != ({req_id}, {opcode})"));
+            }
+            let got = d.bytes().map_err(|e| format!("{e:#}"))?;
+            (&got == body).then_some(()).ok_or_else(|| "body differs".into())
+        },
+    );
+}
+
+#[test]
+fn truncation_always_errors_never_panics() {
+    forall_r(
+        "truncation-is-clean",
+        29,
+        64,
+        |rng| {
+            let p = gen_layer_params(rng);
+            let mut e = Enc::new();
+            e.layer_params(&p);
+            let buf = e.finish();
+            let cut = gen_usize(rng, 0, buf.len().saturating_sub(1));
+            (buf, cut)
+        },
+        |(buf, cut)| {
+            // Decoding any strict prefix must fail cleanly (no panic, no
+            // phantom success with trailing garbage semantics).
+            match Dec::new(&buf[..*cut]).layer_params() {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("decode of {cut}-byte prefix of {} succeeded", buf.len())),
+            }
+        },
+    );
+}

@@ -3,7 +3,7 @@
 //! accuracy claim: "matches the top accuracy of its sequential version"),
 //! and all schedulers must be deterministic in the seed.
 
-use pff::config::{ExperimentConfig, Scheduler};
+use pff::config::{ExperimentConfig, Scheduler, TransportKind};
 use pff::coordinator::run_experiment;
 use pff::ff::{ClassifierMode, NegStrategy};
 
@@ -45,6 +45,29 @@ fn all_layers_bitwise_reproduces_sequential() {
             assert!(d < 1e-5, "layer {i} diverged (N={nodes}): {d}");
         }
     }
+}
+
+/// The TCP transport (protocol v2: multiplexed frames, server-side
+/// blocking waits) is a *bit-faithful* carrier: All-Layers over sockets
+/// reproduces the in-proc weights bitwise (same seeds,
+/// `ship_opt_state = true`, so Adam moments cross the wire too).
+#[test]
+fn tcp_all_layers_bitwise_matches_inproc() {
+    let mut cfg = mech_cfg();
+    cfg.ship_opt_state = true;
+    cfg.scheduler = Scheduler::AllLayers;
+    cfg.nodes = 2;
+    cfg.transport = TransportKind::InProc;
+    let inproc = run_experiment(&cfg).unwrap();
+    cfg.transport = TransportKind::Tcp;
+    let tcp = run_experiment(&cfg).unwrap();
+    assert_eq!(inproc.model.net.layers.len(), tcp.model.net.layers.len());
+    for (i, (a, b)) in inproc.model.net.layers.iter().zip(&tcp.model.net.layers).enumerate() {
+        assert_eq!(a.w.data, b.w.data, "layer {i} weights differ across transports");
+        assert_eq!(a.b, b.b, "layer {i} bias differs across transports");
+    }
+    assert_eq!(inproc.test_accuracy, tcp.test_accuracy);
+    assert!(tcp.comm.bytes_put > 0);
 }
 
 /// Without shipping optimizer state (the paper's wire format), pipelined
