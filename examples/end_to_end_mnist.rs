@@ -16,10 +16,11 @@
 //! [784,256,256,256,256]; it switches automatically.)
 
 use pff::config::{EngineKind, ExperimentConfig, Scheduler};
-use pff::coordinator::run_experiment;
+use pff::coordinator::RunEvent;
 use pff::data::DatasetKind;
 use pff::ff::{ClassifierMode, NegStrategy};
 use pff::metrics::SpanKind;
+use pff::Experiment;
 
 fn main() -> anyhow::Result<()> {
     let use_xla = std::env::args().any(|a| a == "--xla");
@@ -36,7 +37,6 @@ fn main() -> anyhow::Result<()> {
     cfg.classifier = ClassifierMode::Goodness;
     cfg.nodes = 4;
     cfg.batch = 64;
-    cfg.verbose = true;
     if use_xla {
         cfg.engine = EngineKind::Xla;
         cfg.dims = vec![784, 256, 256, 256, 256]; // matches the `reduced` profile
@@ -69,7 +69,15 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let report = run_experiment(&cfg)?;
+    let report = Experiment::builder()
+        .config(cfg)
+        .observer(|ev| {
+            if let RunEvent::ChapterFinished { node, chapter, loss, .. } = ev {
+                eprintln!("[node {node}] chapter {chapter} finished (loss {loss:.4})");
+            }
+        })
+        .launch()?
+        .join()?;
     println!("\n===== RESULT =====");
     println!("{}", report.summary());
     println!("total wall (incl. eval): {:.1}s", t0.elapsed().as_secs_f64());

@@ -8,8 +8,13 @@
 //! ```
 
 use pff::config::{ExperimentConfig, Scheduler};
-use pff::coordinator::run_experiment;
 use pff::ff::NegStrategy;
+use pff::Experiment;
+
+/// One blocking run through the session API.
+fn run(cfg: ExperimentConfig) -> anyhow::Result<pff::ExperimentReport> {
+    Experiment::builder().config(cfg).launch()?.join()
+}
 
 fn base() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -28,21 +33,21 @@ fn main() -> anyhow::Result<()> {
     solo.name = "solo (1/4 data)".into();
     solo.scheduler = Scheduler::Sequential;
     solo.train_n /= 4;
-    let solo_rep = run_experiment(&solo)?;
+    let solo_rep = run(solo)?;
 
     // (b) federated: 4 parties, same 4 quarters, parameters exchanged.
     let mut fed = base();
     fed.name = "federated (4 shards)".into();
     fed.scheduler = Scheduler::Federated;
     fed.nodes = 4;
-    let fed_rep = run_experiment(&fed)?;
+    let fed_rep = run(fed)?;
 
     // (c) centralized All-Layers with the pooled data (upper bound).
     let mut central = base();
     central.name = "centralized".into();
     central.scheduler = Scheduler::AllLayers;
     central.nodes = 4;
-    let central_rep = run_experiment(&central)?;
+    let central_rep = run(central)?;
 
     println!("\n===== Federated PFF: accuracy from private shards =====");
     for r in [&solo_rep, &fed_rep, &central_rep] {

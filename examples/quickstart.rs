@@ -1,13 +1,15 @@
 //! Quickstart: train a small FF network with the All-Layers PFF scheduler
-//! on synthetic MNIST-geometry data and print the report.
+//! on synthetic MNIST-geometry data, following live progress through the
+//! experiment session API (`Experiment::builder()` → `RunHandle`).
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use pff::config::{ExperimentConfig, Scheduler};
-use pff::coordinator::run_experiment;
+use pff::coordinator::RunEvent;
 use pff::ff::NegStrategy;
+use pff::Experiment;
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::reduced_mnist();
@@ -20,7 +22,6 @@ fn main() -> anyhow::Result<()> {
     cfg.test_n = 512;
     cfg.epochs = 64;
     cfg.splits = 8;
-    cfg.verbose = true;
 
     println!(
         "Training a {:?} FF net with {} ({} nodes, {} chapters of {} epoch(s))...",
@@ -30,7 +31,21 @@ fn main() -> anyhow::Result<()> {
         cfg.splits,
         cfg.epochs_per_chapter()
     );
-    let report = run_experiment(&cfg)?;
+
+    // Observers replace the old `verbose` printing: the library is silent,
+    // this callback decides what progress looks like.
+    let handle = Experiment::builder()
+        .config(cfg)
+        .observer(|ev| {
+            if let RunEvent::ChapterFinished { node, chapter, loss, .. } = ev {
+                eprintln!("  node {node}: chapter {chapter} done (loss {loss:.4})");
+            }
+        })
+        .launch()?;
+
+    // The handle is the live view: events() streams RunEvents (with full
+    // replay), cancel() aborts promptly, join() returns the report.
+    let report = handle.join()?;
     println!("\n{}", report.summary());
     println!("\ntraining curve:\n{}", report.curve.render(10));
     println!(

@@ -17,8 +17,22 @@ use std::time::Duration;
 
 use pff::config::{ExperimentConfig, Scheduler, TransportKind};
 use pff::coordinator::node::run_worker;
-use pff::coordinator::{run_experiment, ExperimentReport};
+use pff::coordinator::{Experiment, ExperimentReport, RunEvent};
 use pff::ff::NegStrategy;
+
+/// One blocking run through the session API, printing cluster membership
+/// (the default-observer behavior of the `pff` binary).
+fn run(cfg: ExperimentConfig) -> anyhow::Result<ExperimentReport> {
+    Experiment::builder()
+        .config(cfg)
+        .observer(|ev| {
+            if let RunEvent::WorkersRegistered { .. } = ev {
+                eprintln!("[leader] {ev}");
+            }
+        })
+        .launch()?
+        .join()
+}
 
 /// Locate the `pff` binary next to this example (`target/<profile>/pff`),
 /// overridable via `PFF_BIN`.
@@ -65,7 +79,7 @@ fn run_multiprocess(
     lcfg.name = "tcp-cluster-multiprocess".into();
     lcfg.cluster = true;
     lcfg.tcp_port = port;
-    let report = run_experiment(&lcfg);
+    let report = run(lcfg);
     for mut c in children {
         let status = c.wait()?;
         anyhow::ensure!(status.success(), "worker process exited with {status}");
@@ -82,7 +96,7 @@ fn run_threaded(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
     lcfg.name = "tcp-cluster-threads".into();
     lcfg.cluster = true;
     lcfg.tcp_port = port;
-    let leader = std::thread::spawn(move || run_experiment(&lcfg));
+    let leader = std::thread::spawn(move || run(lcfg));
     let workers: Vec<_> = (0..cfg.nodes as u32)
         .map(|i| {
             let wcfg = cfg.clone();
@@ -130,7 +144,7 @@ fn main() -> anyhow::Result<()> {
     mcfg.transport = TransportKind::InProc;
     mcfg.name = "inproc".into();
     let t1 = std::time::Instant::now();
-    let mem = run_experiment(&mcfg)?;
+    let mem = run(mcfg)?;
     let mem_wall = t1.elapsed().as_secs_f64();
 
     println!("\n===== transport comparison (same experiment) =====");

@@ -113,7 +113,11 @@ mod tests {
         // And the PFF run should beat it — Table 1's story.
         let mut pff_cfg = cfg.clone();
         pff_cfg.neg = crate::ff::NegStrategy::Random;
-        let pff = crate::coordinator::run_experiment_with_data(&pff_cfg, &bundle).unwrap();
+        let pff = crate::coordinator::Experiment::builder()
+            .config(pff_cfg)
+            .data(bundle)
+            .run()
+            .unwrap();
         assert!(
             pff.test_accuracy > rep.test_accuracy,
             "PFF ({:.1}%) must beat DFF ({:.1}%)",

@@ -19,6 +19,12 @@ use crate::ff::perfopt::PerfOptReadout;
 use crate::ff::{ClassifierMode, NegStrategy};
 
 /// Which PFF scheduler runs the experiment (paper §4).
+///
+/// This enum is a *parse-level alias*: config files and CLI flags parse
+/// into it, and the coordinator resolves [`Scheduler::key`] through
+/// [`crate::coordinator::schedulers::SchedulerRegistry`] to obtain the
+/// actual strategy object. Custom strategies registered by name (see
+/// `Experiment::builder().scheduler_named(..)`) bypass the enum entirely.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scheduler {
     /// N=1, layers in sequence — equivalent to original FF (§5.2 baseline).
@@ -29,6 +35,19 @@ pub enum Scheduler {
     AllLayers,
     /// All-Layers over per-node private data shards (§4.3).
     Federated,
+}
+
+impl Scheduler {
+    /// Canonical registry key (the name the built-in strategy factories
+    /// are registered under).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Scheduler::Sequential => "sequential",
+            Scheduler::SingleLayer => "single-layer",
+            Scheduler::AllLayers => "all-layers",
+            Scheduler::Federated => "federated",
+        }
+    }
 }
 
 impl std::fmt::Display for Scheduler {
@@ -95,8 +114,9 @@ impl std::str::FromStr for TransportKind {
     }
 }
 
-/// Full experiment description. One of these drives
-/// [`crate::coordinator::run_experiment`] end to end.
+/// Full experiment description. One of these drives an experiment session
+/// ([`crate::coordinator::Experiment`]) end to end; it is validated once,
+/// at the builder boundary (`ExperimentBuilder::launch`).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Label used in reports/CSV.

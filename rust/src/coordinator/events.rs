@@ -1,0 +1,371 @@
+//! Typed run-progress events and the observer bus.
+//!
+//! Everything a running experiment used to `eprintln!` is now a
+//! [`RunEvent`] emitted on an [`EventBus`]: node chapter progress, layer
+//! publishes (with wire bytes), cluster membership, the final evaluation
+//! and a terminal [`RunEvent::Done`]. The library itself prints nothing —
+//! consumers attach callbacks with [`EventBus::observe`] (or
+//! `ExperimentBuilder::observer`) or pull a replayed stream with
+//! [`EventBus::subscribe`] / `RunHandle::events`.
+//!
+//! Ordering: emissions are serialized through one lock, so every
+//! subscriber channel sees the global emission order (in particular, a
+//! node's `ChapterStarted` always precedes its `ChapterFinished`, and
+//! `Done` is last). Callback observers run outside the lock — they may be
+//! interleaved across concurrently-emitting nodes, but each sees every
+//! event exactly once.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::registry::NodeInfo;
+use crate::metrics::LossCurve;
+
+/// One typed progress event from a running experiment.
+#[derive(Clone, Debug)]
+pub enum RunEvent {
+    /// Cluster mode: the expected workers have all registered.
+    WorkersRegistered {
+        /// The registered roster (id + self-reported name).
+        workers: Vec<NodeInfo>,
+    },
+    /// A node began a chapter. `layer` is the owned layer for
+    /// layer-pinned schedulers (Single-Layer), `None` when the chapter
+    /// spans every layer (Sequential / All-Layers / Federated).
+    ChapterStarted {
+        /// Node index.
+        node: usize,
+        /// Owned layer, when the scheduler pins one per node.
+        layer: Option<usize>,
+        /// Chapter index in `[0, S)`.
+        chapter: u32,
+    },
+    /// A node finished a chapter.
+    ChapterFinished {
+        /// Node index.
+        node: usize,
+        /// Owned layer, when the scheduler pins one per node.
+        layer: Option<usize>,
+        /// Chapter index in `[0, S)`.
+        chapter: u32,
+        /// Mean training loss of the chapter (last layer's, for
+        /// whole-network chapters).
+        loss: f32,
+    },
+    /// A node published layer parameters to the store. `layer` values of
+    /// [`crate::coordinator::schedulers::HEAD_SLOT_BASE`] and above are
+    /// PerfOpt per-layer heads (see `schedulers::head_slot`).
+    LayerPublished {
+        /// Publishing node.
+        node: usize,
+        /// Store layer slot.
+        layer: usize,
+        /// Chapter the parameters belong to.
+        chapter: u32,
+        /// Approximate bytes on the wire (the §6 communication metric).
+        wire_bytes: u64,
+    },
+    /// A node published the full-network softmax head.
+    HeadPublished {
+        /// Publishing node.
+        node: usize,
+        /// Chapter the head belongs to.
+        chapter: u32,
+        /// Approximate bytes on the wire.
+        wire_bytes: u64,
+    },
+    /// Test-set evaluation finished.
+    Eval {
+        /// Accuracy in `[0, 1]`.
+        accuracy: f64,
+    },
+    /// The run is over; no further events follow. Emitted on success,
+    /// failure and cancellation alike.
+    Done {
+        /// Whether the run produced a report.
+        ok: bool,
+    },
+}
+
+impl std::fmt::Display for RunEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunEvent::WorkersRegistered { workers } => {
+                let names: Vec<String> =
+                    workers.iter().map(|w| format!("{}#{}", w.name, w.id)).collect();
+                write!(f, "{} worker(s) registered: {}", workers.len(), names.join(", "))
+            }
+            RunEvent::ChapterStarted { node, layer: Some(l), chapter } => {
+                write!(f, "node {node}: chapter {chapter} started (layer {l})")
+            }
+            RunEvent::ChapterStarted { node, layer: None, chapter } => {
+                write!(f, "node {node}: chapter {chapter} started")
+            }
+            RunEvent::ChapterFinished { node, layer: Some(l), chapter, loss } => {
+                write!(f, "node {node}: chapter {chapter} finished (layer {l}, loss {loss:.4})")
+            }
+            RunEvent::ChapterFinished { node, layer: None, chapter, loss } => {
+                write!(f, "node {node}: chapter {chapter} finished (loss {loss:.4})")
+            }
+            RunEvent::LayerPublished { node, layer, chapter, wire_bytes } => {
+                let b = wire_bytes;
+                write!(f, "node {node}: published layer {layer} @ chapter {chapter} ({b} B)")
+            }
+            RunEvent::HeadPublished { node, chapter, wire_bytes } => {
+                write!(f, "node {node}: published head @ chapter {chapter} ({wire_bytes} B)")
+            }
+            RunEvent::Eval { accuracy } => write!(f, "eval: accuracy {:.2}%", accuracy * 100.0),
+            RunEvent::Done { ok: true } => write!(f, "done"),
+            RunEvent::Done { ok: false } => write!(f, "done (run failed)"),
+        }
+    }
+}
+
+/// Callback observer type (runs on the emitting thread; keep it cheap and
+/// never emit from inside one).
+type Observer = Arc<dyn Fn(&RunEvent) + Send + Sync>;
+
+#[derive(Default)]
+struct BusInner {
+    /// Every event emitted so far, replayed to late subscribers so
+    /// `RunHandle::events()` never misses the start of a run.
+    history: Vec<RunEvent>,
+    senders: Vec<Sender<RunEvent>>,
+    observers: Vec<Observer>,
+}
+
+/// Cheap-to-clone multi-consumer event bus (std `mpsc` fan-out plus
+/// callback observers). All clones share one stream.
+#[derive(Clone, Default)]
+pub struct EventBus {
+    inner: Arc<Mutex<BusInner>>,
+}
+
+impl EventBus {
+    /// Fresh bus with no subscribers.
+    pub fn new() -> Self {
+        EventBus::default()
+    }
+
+    /// Emit an event to every observer and subscriber.
+    pub fn emit(&self, ev: RunEvent) {
+        let observers: Vec<Observer> = {
+            let mut g = self.inner.lock().unwrap();
+            g.history.push(ev.clone());
+            // Channel sends happen under the lock so every subscriber sees
+            // the exact global emission order; a dropped Receiver just
+            // unsubscribes itself here.
+            g.senders.retain(|s| s.send(ev.clone()).is_ok());
+            g.observers.clone()
+        };
+        for obs in observers {
+            obs(&ev);
+        }
+    }
+
+    /// Subscribe a channel. The full event history is replayed first, so
+    /// subscribing after launch loses nothing.
+    pub fn subscribe(&self) -> Receiver<RunEvent> {
+        let (tx, rx) = channel();
+        let mut g = self.inner.lock().unwrap();
+        for ev in &g.history {
+            let _ = tx.send(ev.clone());
+        }
+        g.senders.push(tx);
+        rx
+    }
+
+    /// Attach a callback observer (no replay — attach before launch to see
+    /// everything).
+    pub fn observe(&self, f: impl Fn(&RunEvent) + Send + Sync + 'static) {
+        self.inner.lock().unwrap().observers.push(Arc::new(f));
+    }
+
+    /// Number of events emitted so far.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().history.len()
+    }
+
+    /// True when nothing has been emitted yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Thread-safe event collector: an observer that records every event for
+/// post-run analysis — a chapter-loss [`LossCurve`] or a CSV log (the
+/// `metrics/` consumers the coordinator's ad-hoc printing used to be).
+///
+/// ```no_run
+/// # use std::sync::Arc;
+/// # use pff::coordinator::{EventLog, Experiment};
+/// # use pff::config::ExperimentConfig;
+/// let log = Arc::new(EventLog::new());
+/// let sink = log.clone();
+/// let report = Experiment::builder()
+///     .config(ExperimentConfig::tiny())
+///     .observer(move |ev| sink.record(ev))
+///     .launch()?
+///     .join()?;
+/// log.write_csv("metrics/events.csv")?;
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Default)]
+pub struct EventLog {
+    events: Mutex<Vec<RunEvent>>,
+}
+
+impl EventLog {
+    /// Fresh empty log.
+    pub fn new() -> Self {
+        EventLog::default()
+    }
+
+    /// Record one event (observer body).
+    pub fn record(&self, ev: &RunEvent) {
+        self.events.lock().unwrap().push(ev.clone());
+    }
+
+    /// Snapshot of everything recorded so far.
+    pub fn snapshot(&self) -> Vec<RunEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Fold the recorded `ChapterFinished` losses into a [`LossCurve`]
+    /// (epoch-sorted; concurrent nodes emit out of order).
+    pub fn chapter_curve(&self, epochs_per_chapter: u32) -> LossCurve {
+        let mut curve = LossCurve::default();
+        for ev in self.events.lock().unwrap().iter() {
+            if let RunEvent::ChapterFinished { chapter, loss, .. } = ev {
+                curve.push_chapter(*chapter, epochs_per_chapter, *loss);
+            }
+        }
+        curve.sort_by_epoch();
+        curve
+    }
+
+    /// Write the log as CSV (one row per event, empty cells where a column
+    /// does not apply).
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let header = ["event", "node", "layer", "chapter", "loss", "wire_bytes", "accuracy", "ok"];
+        let rows: Vec<Vec<String>> = self.snapshot().iter().map(csv_row).collect();
+        crate::metrics::csv::write_csv(path, &header, &rows)
+    }
+}
+
+fn csv_row(ev: &RunEvent) -> Vec<String> {
+    let mut row = vec![String::new(); 8];
+    match ev {
+        RunEvent::WorkersRegistered { workers } => {
+            row[0] = "workers_registered".into();
+            row[1] = workers.len().to_string();
+        }
+        RunEvent::ChapterStarted { node, layer, chapter } => {
+            row[0] = "chapter_started".into();
+            row[1] = node.to_string();
+            row[2] = layer.map(|l| l.to_string()).unwrap_or_default();
+            row[3] = chapter.to_string();
+        }
+        RunEvent::ChapterFinished { node, layer, chapter, loss } => {
+            row[0] = "chapter_finished".into();
+            row[1] = node.to_string();
+            row[2] = layer.map(|l| l.to_string()).unwrap_or_default();
+            row[3] = chapter.to_string();
+            row[4] = format!("{loss}");
+        }
+        RunEvent::LayerPublished { node, layer, chapter, wire_bytes } => {
+            row[0] = "layer_published".into();
+            row[1] = node.to_string();
+            row[2] = layer.to_string();
+            row[3] = chapter.to_string();
+            row[5] = wire_bytes.to_string();
+        }
+        RunEvent::HeadPublished { node, chapter, wire_bytes } => {
+            row[0] = "head_published".into();
+            row[1] = node.to_string();
+            row[3] = chapter.to_string();
+            row[5] = wire_bytes.to_string();
+        }
+        RunEvent::Eval { accuracy } => {
+            row[0] = "eval".into();
+            row[6] = format!("{accuracy}");
+        }
+        RunEvent::Done { ok } => {
+            row[0] = "done".into();
+            row[7] = ok.to_string();
+        }
+    }
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subscribe_replays_history() {
+        let bus = EventBus::new();
+        bus.emit(RunEvent::ChapterStarted { node: 0, layer: None, chapter: 0 });
+        bus.emit(RunEvent::ChapterFinished { node: 0, layer: None, chapter: 0, loss: 0.5 });
+        let rx = bus.subscribe();
+        bus.emit(RunEvent::Done { ok: true });
+        let got: Vec<RunEvent> = rx.try_iter().collect();
+        assert_eq!(got.len(), 3, "history replay + live event");
+        assert!(matches!(got[0], RunEvent::ChapterStarted { .. }));
+        assert!(matches!(got[2], RunEvent::Done { ok: true }));
+    }
+
+    #[test]
+    fn dropped_subscriber_is_pruned() {
+        let bus = EventBus::new();
+        drop(bus.subscribe());
+        bus.emit(RunEvent::Done { ok: true });
+        assert_eq!(bus.len(), 1);
+        let rx = bus.subscribe();
+        assert_eq!(rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn observers_see_every_event() {
+        let bus = EventBus::new();
+        let n = Arc::new(Mutex::new(0usize));
+        let n2 = n.clone();
+        bus.observe(move |_| *n2.lock().unwrap() += 1);
+        bus.emit(RunEvent::Eval { accuracy: 0.9 });
+        bus.emit(RunEvent::Done { ok: true });
+        assert_eq!(*n.lock().unwrap(), 2);
+    }
+
+    #[test]
+    fn event_log_curve_and_csv() {
+        let log = EventLog::new();
+        // out-of-order chapters, as concurrent nodes produce them
+        log.record(&RunEvent::ChapterFinished { node: 1, layer: None, chapter: 1, loss: 0.4 });
+        log.record(&RunEvent::ChapterFinished { node: 0, layer: None, chapter: 0, loss: 0.8 });
+        log.record(&RunEvent::LayerPublished { node: 0, layer: 2, chapter: 0, wire_bytes: 64 });
+        log.record(&RunEvent::Eval { accuracy: 0.75 });
+        let curve = log.chapter_curve(4);
+        let epochs: Vec<f32> = curve.points.iter().map(|p| p.epoch).collect();
+        assert_eq!(epochs, vec![4.0, 8.0], "sorted by epoch");
+        assert_eq!(curve.points[0].loss, 0.8);
+
+        let dir = std::env::temp_dir().join(format!("pff_evlog_{}", std::process::id()));
+        let path = dir.join("events.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("event,node,layer,chapter,loss,wire_bytes,accuracy,ok\n"));
+        assert!(text.contains("layer_published,0,2,0,,64,,"));
+        assert!(text.contains("eval,"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn display_is_human_readable() {
+        let s = RunEvent::ChapterFinished { node: 2, layer: Some(1), chapter: 3, loss: 0.25 }
+            .to_string();
+        assert!(s.contains("node 2") && s.contains("chapter 3") && s.contains("0.2500"), "{s}");
+        assert_eq!(RunEvent::Done { ok: true }.to_string(), "done");
+    }
+}

@@ -1,0 +1,451 @@
+//! The experiment session API: [`Experiment::builder`] → [`RunHandle`].
+//!
+//! A session is configured once (`.config`, optionally `.data`, `.store`,
+//! `.scheduler`/`.scheduler_named`, `.observer`), validated **once** at
+//! the builder boundary, and launched onto a supervisor thread.
+//! [`RunHandle`] is the live view: `join()` for the final
+//! [`ExperimentReport`], `events()` for a replayed + live
+//! [`RunEvent`] stream, `cancel()` to abort — cancellation closes the
+//! parameter store and node registry so store-waiting nodes and a parked
+//! cluster leader unblock promptly instead of running out their timeouts.
+//!
+//! The legacy free functions `run_experiment` /
+//! `run_experiment_with_data` are deprecated shims over this builder.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{ExperimentConfig, TransportKind};
+use crate::coordinator::eval;
+use crate::coordinator::events::{EventBus, RunEvent};
+use crate::coordinator::registry::NodeRegistry;
+use crate::coordinator::schedulers::{Scheduler, SchedulerRegistry};
+use crate::coordinator::store::{MemStore, ParamStore};
+use crate::coordinator::{ExperimentReport, NodeCtx};
+use crate::data::{load_dataset, DataBundle};
+use crate::engine::{factory_for, Engine};
+use crate::ff::ClassifierMode;
+use crate::metrics::{makespan, LossCurve, NodeReport, SpanRecorder};
+use crate::transport::tcp::{StoreServer, TcpStoreClient};
+
+type CancelHook = Box<dyn Fn() + Send + Sync>;
+
+#[derive(Default)]
+struct CancelInner {
+    flag: AtomicBool,
+    hooks: Mutex<Vec<CancelHook>>,
+}
+
+/// Cooperative cancellation token shared between a [`RunHandle`] and the
+/// run it supervises. Cloning shares the token.
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    inner: Arc<CancelInner>,
+}
+
+impl CancelToken {
+    /// Trip the token: runs every registered hook (store/registry close)
+    /// exactly once. Idempotent.
+    pub fn cancel(&self) {
+        if self.inner.flag.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let hooks = std::mem::take(&mut *self.inner.hooks.lock().unwrap());
+        for h in hooks {
+            h();
+        }
+    }
+
+    /// Whether [`CancelToken::cancel`] was called.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.flag.load(Ordering::SeqCst)
+    }
+
+    /// Register a hook to run at cancellation (runs immediately if the
+    /// token already tripped). Hooks must be idempotent.
+    pub(crate) fn on_cancel(&self, f: impl Fn() + Send + Sync + 'static) {
+        if self.is_cancelled() {
+            f();
+            return;
+        }
+        self.inner.hooks.lock().unwrap().push(Box::new(f));
+        // Lost-wakeup guard: cancel() may have drained between the check
+        // and the push — drain again under the tripped flag.
+        if self.is_cancelled() {
+            let hooks = std::mem::take(&mut *self.inner.hooks.lock().unwrap());
+            for h in hooks {
+                h();
+            }
+        }
+    }
+}
+
+/// Entry point of the session API. See the module docs and
+/// [`ExperimentBuilder`].
+pub struct Experiment;
+
+impl Experiment {
+    /// Start describing an experiment session.
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder::default()
+    }
+}
+
+enum SchedulerChoice {
+    /// Resolve through [`SchedulerRegistry::global`] at launch.
+    Named(String),
+    /// Use this instance directly.
+    Instance(Arc<dyn Scheduler>),
+}
+
+/// Builder for one experiment session. Configuration methods chain by
+/// value; [`ExperimentBuilder::launch`] takes `&mut self` so a second
+/// launch on the same builder is a clean runtime error rather than a
+/// silent re-run.
+#[derive(Default)]
+pub struct ExperimentBuilder {
+    cfg: Option<ExperimentConfig>,
+    data: Option<Arc<DataBundle>>,
+    store: Option<Arc<dyn ParamStore>>,
+    scheduler: Option<SchedulerChoice>,
+    bus: EventBus,
+    launched: bool,
+}
+
+impl ExperimentBuilder {
+    /// The experiment configuration (required). Validated once, at
+    /// [`ExperimentBuilder::launch`].
+    pub fn config(mut self, cfg: ExperimentConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Pre-loaded data (optional — the session loads `cfg.dataset`
+    /// otherwise). Benches pass one bundle to many sessions.
+    pub fn data(mut self, bundle: impl Into<Arc<DataBundle>>) -> Self {
+        self.data = Some(bundle.into());
+        self
+    }
+
+    /// Inject a parameter store (optional; in-proc transport only — the
+    /// TCP server hosts its own [`MemStore`]). Lets tests pre-seed
+    /// parameters or wrap the store for fault injection.
+    pub fn store(mut self, store: Arc<dyn ParamStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Run a specific scheduler instance instead of resolving
+    /// `cfg.scheduler` through the registry.
+    pub fn scheduler(mut self, scheduler: impl Scheduler + 'static) -> Self {
+        self.scheduler = Some(SchedulerChoice::Instance(Arc::new(scheduler)));
+        self
+    }
+
+    /// Run the scheduler registered under `name` (built-in or custom; see
+    /// [`SchedulerRegistry::register`]).
+    pub fn scheduler_named(mut self, name: impl Into<String>) -> Self {
+        self.scheduler = Some(SchedulerChoice::Named(name.into()));
+        self
+    }
+
+    /// Attach a callback observer for [`RunEvent`]s (called on the
+    /// emitting thread; keep it cheap). Repeatable.
+    pub fn observer(self, f: impl Fn(&RunEvent) + Send + Sync + 'static) -> Self {
+        self.bus.observe(f);
+        self
+    }
+
+    /// Validate, resolve the scheduler, and start the run on a supervisor
+    /// thread. Errors immediately on missing config, double launch,
+    /// invalid config, unknown scheduler name, or a store/transport
+    /// combination that cannot work.
+    pub fn launch(&mut self) -> Result<RunHandle> {
+        if self.launched {
+            bail!(
+                "this ExperimentBuilder was already launched (or a launch was attempted) \
+                 — build a new one per run"
+            );
+        }
+        // Mark consumed up front: a launch that fails below (invalid
+        // config, unknown scheduler) must not leave a half-drained builder
+        // reporting "missing config" on retry.
+        self.launched = true;
+        let cfg = self
+            .cfg
+            .take()
+            .context("Experiment::builder() needs .config(cfg) before .launch()")?;
+        // THE validation point: everything downstream (session, nodes,
+        // shims) trusts the config as-is.
+        let cfg = cfg.validated()?;
+        let scheduler = match self.scheduler.take() {
+            Some(SchedulerChoice::Instance(s)) => s,
+            Some(SchedulerChoice::Named(n)) => SchedulerRegistry::global().resolve(&n)?,
+            None => SchedulerRegistry::global().resolve(cfg.scheduler.key())?,
+        };
+        if self.store.is_some() && (cfg.transport != TransportKind::InProc || cfg.cluster) {
+            bail!(
+                "a custom .store() works with transport = inproc only \
+                 (the TCP server hosts its own MemStore)"
+            );
+        }
+
+        let data = self.data.take();
+        let store = self.store.take();
+        let bus = self.bus.clone();
+        let cancel = CancelToken::default();
+        let (bus2, cancel2) = (bus.clone(), cancel.clone());
+        let thread = std::thread::Builder::new()
+            .name("pff-experiment".into())
+            .spawn(move || {
+                let mut res =
+                    run_session(cfg, data, store, scheduler, bus2.clone(), cancel2.clone());
+                if res.is_err() && cancel2.is_cancelled() {
+                    res = res.context("run cancelled");
+                }
+                bus2.emit(RunEvent::Done { ok: res.is_ok() });
+                res
+            })
+            .context("spawning the experiment supervisor thread")?;
+        Ok(RunHandle { thread, cancel, bus })
+    }
+
+    /// [`ExperimentBuilder::launch`] + [`RunHandle::join`] in one call —
+    /// the blocking path the deprecated `run_experiment` shims use.
+    pub fn run(&mut self) -> Result<ExperimentReport> {
+        self.launch()?.join()
+    }
+}
+
+/// A live experiment run.
+///
+/// Dropping the handle detaches the run (it keeps training); call
+/// [`RunHandle::cancel`] first to abort it.
+pub struct RunHandle {
+    thread: JoinHandle<Result<ExperimentReport>>,
+    cancel: CancelToken,
+    bus: EventBus,
+}
+
+impl RunHandle {
+    /// Block until the run finishes and return its report (or its error;
+    /// a cancelled run reports `run cancelled`).
+    pub fn join(self) -> Result<ExperimentReport> {
+        self.thread
+            .join()
+            .map_err(|_| anyhow!("experiment supervisor thread panicked"))?
+    }
+
+    /// Abort the run: closes the parameter store and node registry so
+    /// blocked waits unblock promptly; nodes also check the token at
+    /// chapter boundaries. Idempotent; safe from any thread.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// Whether [`RunHandle::cancel`] was called.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// Whether the run has finished (successfully or not).
+    pub fn is_finished(&self) -> bool {
+        self.thread.is_finished()
+    }
+
+    /// Subscribe to the event stream. The full history since launch is
+    /// replayed first, so a post-launch subscription misses nothing; the
+    /// channel then carries live events through the terminal
+    /// [`RunEvent::Done`].
+    pub fn events(&self) -> std::sync::mpsc::Receiver<RunEvent> {
+        self.bus.subscribe()
+    }
+}
+
+/// One full experiment, on the supervisor thread. `cfg` is validated.
+fn run_session(
+    cfg: ExperimentConfig,
+    data: Option<Arc<DataBundle>>,
+    custom_store: Option<Arc<dyn ParamStore>>,
+    scheduler: Arc<dyn Scheduler>,
+    bus: EventBus,
+    cancel: CancelToken,
+) -> Result<ExperimentReport> {
+    let bundle = match data {
+        Some(b) => b,
+        None => Arc::new(load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?),
+    };
+    let factory = factory_for(cfg.engine, &cfg.artifact_dir)?;
+    let plan = scheduler.plan(&cfg);
+
+    // --- store + transport ---------------------------------------------------
+    // `store`: what nodes and final assembly read through. `mem`: the
+    // concrete instance we own (absent only when a custom store was
+    // injected) — the TCP server and the cancel hook need it.
+    let (store, mem): (Arc<dyn ParamStore>, Option<Arc<MemStore>>) = match custom_store {
+        Some(s) => (s, None),
+        None => {
+            let m = Arc::new(MemStore::new());
+            (m.clone() as Arc<dyn ParamStore>, Some(m))
+        }
+    };
+    if let Some(m) = mem.clone() {
+        cancel.on_cancel(move || m.close());
+    }
+    // Capacity-bounded: a mis-launched worker with an out-of-range
+    // --node-id is refused at HELLO instead of poisoning membership.
+    let registry = Arc::new(NodeRegistry::with_capacity(cfg.nodes));
+    {
+        let r = registry.clone();
+        cancel.on_cancel(move || r.close());
+    }
+    let server = match cfg.transport {
+        TransportKind::InProc => None,
+        TransportKind::Tcp => {
+            let m = mem.clone().expect("launch() rejects custom stores over tcp");
+            Some(StoreServer::start_with(m, registry.clone(), cfg.tcp_port)?)
+        }
+    };
+
+    let server_addr = server.as_ref().map(|s| s.addr);
+    let origin = Instant::now();
+    let run_result: Result<(Vec<NodeReport>, LossCurve)> = if cfg.cluster {
+        // --- external workers: `pff worker --connect` processes ----------------
+        // Membership and completion both ride the registry's Condvar — the
+        // leader parks exactly like a blocked store read, no polling.
+        (|| {
+            let reg_timeout = Duration::from_secs(cfg.store_timeout_s);
+            // Each chapter's progress is already bounded by the store timeout
+            // (the dependency-wait tripwire), so completion gets S times that.
+            let done_timeout = reg_timeout * cfg.splits.max(1);
+            let workers = registry
+                .wait_for_workers(cfg.nodes, reg_timeout)
+                .context("waiting for cluster workers to register")?;
+            bus.emit(RunEvent::WorkersRegistered { workers });
+            registry
+                .wait_for_done(cfg.nodes, done_timeout)
+                .context("waiting for cluster workers to finish")?;
+            Ok((Vec::new(), LossCurve::default()))
+        })()
+    } else {
+        // --- in-process nodes: one thread per node -----------------------------
+        (|| {
+            let node_store = |_: usize| -> Result<Arc<dyn ParamStore>> {
+                match (cfg.transport, server_addr) {
+                    (TransportKind::InProc, _) => Ok(store.clone()),
+                    (TransportKind::Tcp, Some(addr)) => {
+                        Ok(Arc::new(TcpStoreClient::connect(addr)?) as Arc<dyn ParamStore>)
+                    }
+                    _ => unreachable!(),
+                }
+            };
+
+            // Data placement comes from the scheduler's plan, not from an
+            // enum match — custom schedulers opt into sharding there.
+            let shards: Vec<crate::data::Dataset> = if plan.shard_data {
+                bundle.train.shard(cfg.nodes)
+            } else {
+                vec![bundle.train.clone(); cfg.nodes]
+            };
+
+            let mut handles = Vec::with_capacity(cfg.nodes);
+            for (node_id, data) in shards.into_iter().enumerate() {
+                let cfg_n = cfg.clone();
+                let store = node_store(node_id)?;
+                let factory = factory.clone();
+                let sched = scheduler.clone();
+                let bus_n = bus.clone();
+                let cancel_n = cancel.clone();
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("pff-node-{node_id}"))
+                        .spawn(move || -> Result<(NodeReport, LossCurve)> {
+                            let engine = factory().context("constructing node engine")?;
+                            let mut ctx = NodeCtx {
+                                node_id,
+                                cfg: cfg_n,
+                                store,
+                                engine,
+                                data,
+                                rec: SpanRecorder::new(origin, node_id),
+                                curve: LossCurve::default(),
+                                opt_cache: HashMap::new(),
+                                head_opt: None,
+                                bus: bus_n,
+                                cancel: cancel_n,
+                            };
+                            sched.run_node(&mut ctx)?;
+                            Ok((ctx.rec.finish(), ctx.curve))
+                        })?,
+                );
+            }
+
+            let mut node_reports = Vec::with_capacity(cfg.nodes);
+            let mut curve = LossCurve::default();
+            for (i, h) in handles.into_iter().enumerate() {
+                let (rep, c) = h
+                    .join()
+                    .map_err(|_| anyhow!("node {i} panicked"))?
+                    .with_context(|| format!("node {i} failed"))?;
+                node_reports.push(rep);
+                curve.merge(&c);
+            }
+            Ok((node_reports, curve))
+        })()
+    };
+    let (node_reports, curve) = match run_result {
+        Ok(v) => v,
+        Err(e) => {
+            // Don't leak the listener/accept thread on a failed run — the
+            // fixed cluster port must stay rebindable for a retry.
+            if let Some(srv) = server {
+                srv.shutdown();
+            }
+            return Err(e);
+        }
+    };
+    let wall_s = origin.elapsed().as_secs_f64();
+
+    // --- assemble + post-hoc head + evaluate -----------------------------------
+    // Read through the leader-side store directly (same data the clients
+    // wrote — over TCP, `store` IS the server's MemStore).
+    let mut model = eval::assemble(store.as_ref(), &cfg)?;
+    let comm = store.comm_stats();
+    if let Some(srv) = server {
+        srv.shutdown();
+    }
+
+    let mut leader_engine: Box<dyn Engine> = factory()?;
+    let mut head_posthoc_s = 0.0;
+    if cfg.classifier == ClassifierMode::Softmax && !cfg.perfopt && model.head.is_none() {
+        let (head, secs) =
+            eval::train_head_posthoc(leader_engine.as_mut(), &model, &bundle.train, &cfg)?;
+        model.head = Some(head);
+        head_posthoc_s = secs;
+    }
+
+    let eval_t0 = Instant::now();
+    let test_accuracy = eval::evaluate(leader_engine.as_mut(), &model, &bundle.test, &cfg)?;
+    let eval_s = eval_t0.elapsed().as_secs_f64();
+    bus.emit(RunEvent::Eval { accuracy: test_accuracy });
+
+    let modeled = makespan(&node_reports);
+    Ok(ExperimentReport {
+        name: cfg.name.clone(),
+        scheduler: scheduler.name().to_string(),
+        test_accuracy,
+        wall_s,
+        head_posthoc_s,
+        eval_s,
+        modeled,
+        comm,
+        node_reports,
+        curve,
+        model,
+    })
+}

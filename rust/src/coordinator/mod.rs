@@ -1,13 +1,26 @@
 //! Layer-3 coordinator: the paper's contribution.
 //!
-//! [`run_experiment`] is the single entry point: it loads data, builds the
-//! parameter store (in-process or TCP), spawns one worker thread per node
-//! running the configured scheduler, assembles the final model from the
-//! store, trains the post-hoc head if needed, evaluates, and returns a
-//! full [`ExperimentReport`] (accuracy, wall time, modeled multi-node
-//! makespan, utilization, communication volume, loss curve).
+//! The public surface is the session API in [`experiment`]:
+//! [`Experiment::builder()`] configures a run (config, optional data /
+//! store / scheduler / observers), `.launch()` validates once and returns
+//! a [`RunHandle`] — `join()` for the final [`ExperimentReport`]
+//! (accuracy, wall time, modeled multi-node makespan, utilization,
+//! communication volume, loss curve), `events()` for a typed
+//! [`RunEvent`] stream, `cancel()` to abort promptly.
+//!
+//! Scheduling strategies are open: the four paper schedulers implement
+//! the object-safe [`Scheduler`] trait and live in a
+//! [`SchedulerRegistry`]; the `config::Scheduler` enum is only a
+//! parse-level alias resolved through that registry, so new strategies
+//! (and custom ones registered from binaries/tests) are additions, not
+//! edits to this module.
+//!
+//! [`run_experiment`] / [`run_experiment_with_data`] remain as deprecated
+//! blocking shims over the builder.
 
 pub mod eval;
+pub mod events;
+pub mod experiment;
 pub mod lr;
 pub mod node;
 pub mod registry;
@@ -15,22 +28,17 @@ pub mod schedulers;
 pub mod store;
 
 pub use eval::TrainedModel;
+pub use events::{EventBus, EventLog, RunEvent};
+pub use experiment::{CancelToken, Experiment, ExperimentBuilder, RunHandle};
 pub use node::NodeCtx;
 pub use registry::NodeRegistry;
+pub use schedulers::{SchedulePlan, Scheduler, SchedulerRegistry};
 
-use std::collections::HashMap;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use anyhow::Result;
 
-use anyhow::{Context, Result};
-
-use crate::config::{ExperimentConfig, Scheduler, TransportKind};
-use crate::coordinator::store::{MemStore, ParamStore};
-use crate::data::{load_dataset, DataBundle};
-use crate::engine::{factory_for, Engine, EngineFactory};
-use crate::ff::ClassifierMode;
-use crate::metrics::{makespan, CommStats, LossCurve, MakespanModel, NodeReport, SpanRecorder};
-use crate::transport::tcp::{StoreServer, TcpStoreClient};
+use crate::config::ExperimentConfig;
+use crate::data::DataBundle;
+use crate::metrics::{CommStats, LossCurve, MakespanModel, NodeReport};
 
 /// Everything a finished experiment reports (EXPERIMENTS.md rows are
 /// printed from these).
@@ -38,8 +46,9 @@ use crate::transport::tcp::{StoreServer, TcpStoreClient};
 pub struct ExperimentReport {
     /// Experiment label.
     pub name: String,
-    /// Scheduler used.
-    pub scheduler: Scheduler,
+    /// Scheduler that ran (its registry name, e.g. `"all-layers"` —
+    /// custom schedulers report theirs).
+    pub scheduler: String,
     /// Test-set accuracy in `[0, 1]`.
     pub test_accuracy: f64,
     /// Real wall-clock seconds of the distributed training phase.
@@ -76,183 +85,33 @@ impl ExperimentReport {
     }
 }
 
-/// Resolve the configured backend through the [`crate::engine`] registry
-/// seam (errors immediately — with a rebuild hint — when the binary was
-/// built without the requested backend).
-fn engine_factory(cfg: &ExperimentConfig) -> Result<EngineFactory> {
-    factory_for(cfg.engine, &cfg.artifact_dir)
-}
-
-/// Run a full PFF experiment per `cfg`. See module docs.
+/// Run a full PFF experiment per `cfg`, blocking until done.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Experiment::builder().config(cfg).launch()?.join() — the session \
+            API adds observers, an event stream and cancellation"
+)]
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
-    let cfg = cfg.clone().validated()?;
-    let bundle = load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
-    run_experiment_with_data(&cfg, &bundle)
+    Experiment::builder().config(cfg.clone()).run()
 }
 
-/// Run with pre-loaded data (benches reuse one bundle across many runs).
+/// Run with pre-loaded data, blocking until done.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Experiment::builder().config(cfg).data(bundle).launch()?.join()"
+)]
 pub fn run_experiment_with_data(
     cfg: &ExperimentConfig,
     bundle: &DataBundle,
 ) -> Result<ExperimentReport> {
-    let cfg = cfg.clone().validated()?;
-    let factory = engine_factory(&cfg)?;
-
-    // --- store + transport ---------------------------------------------------
-    let mem = Arc::new(MemStore::new());
-    // Capacity-bounded: a mis-launched worker with an out-of-range
-    // --node-id is refused at HELLO instead of poisoning membership.
-    let registry = Arc::new(NodeRegistry::with_capacity(cfg.nodes));
-    let server = match cfg.transport {
-        TransportKind::InProc => None,
-        TransportKind::Tcp => {
-            Some(StoreServer::start_with(mem.clone(), registry.clone(), cfg.tcp_port)?)
-        }
-    };
-
-    let server_addr = server.as_ref().map(|s| s.addr);
-    let origin = Instant::now();
-    let run_result: Result<(Vec<NodeReport>, LossCurve)> = if cfg.cluster {
-        // --- external workers: `pff worker --connect` processes ----------------
-        // Membership and completion both ride the registry's Condvar — the
-        // leader parks exactly like a blocked store read, no polling.
-        (|| {
-            let reg_timeout = Duration::from_secs(cfg.store_timeout_s);
-            // Each chapter's progress is already bounded by the store timeout
-            // (the dependency-wait tripwire), so completion gets S times that.
-            let done_timeout = reg_timeout * cfg.splits.max(1);
-            let workers = registry
-                .wait_for_workers(cfg.nodes, reg_timeout)
-                .context("waiting for cluster workers to register")?;
-            eprintln!(
-                "[leader] {} worker(s) registered: {}",
-                workers.len(),
-                workers
-                    .iter()
-                    .map(|w| format!("{}#{}", w.name, w.id))
-                    .collect::<Vec<_>>()
-                    .join(", ")
-            );
-            registry
-                .wait_for_done(cfg.nodes, done_timeout)
-                .context("waiting for cluster workers to finish")?;
-            Ok((Vec::new(), LossCurve::default()))
-        })()
-    } else {
-        // --- in-process nodes: one thread per node -----------------------------
-        (|| {
-            let node_store = |_: usize| -> Result<Arc<dyn ParamStore>> {
-                match (cfg.transport, server_addr) {
-                    (TransportKind::InProc, _) => Ok(mem.clone()),
-                    (TransportKind::Tcp, Some(addr)) => {
-                        Ok(Arc::new(TcpStoreClient::connect(addr)?) as Arc<dyn ParamStore>)
-                    }
-                    _ => unreachable!(),
-                }
-            };
-
-            // data placement
-            let shards: Vec<crate::data::Dataset> = if cfg.scheduler == Scheduler::Federated {
-                bundle.train.shard(cfg.nodes)
-            } else {
-                vec![bundle.train.clone(); cfg.nodes]
-            };
-
-            let mut handles = Vec::with_capacity(cfg.nodes);
-            for (node_id, data) in shards.into_iter().enumerate() {
-                let cfg_n = cfg.clone();
-                let store = node_store(node_id)?;
-                let factory = factory.clone();
-                handles.push(
-                    std::thread::Builder::new()
-                        .name(format!("pff-node-{node_id}"))
-                        .spawn(move || -> Result<(NodeReport, LossCurve)> {
-                            let engine = factory().context("constructing node engine")?;
-                            let mut ctx = NodeCtx {
-                                node_id,
-                                cfg: cfg_n,
-                                store,
-                                engine,
-                                data,
-                                rec: SpanRecorder::new(origin, node_id),
-                                curve: LossCurve::default(),
-                                opt_cache: HashMap::new(),
-                                head_opt: None,
-                            };
-                            schedulers::run_node(&mut ctx)?;
-                            Ok((ctx.rec.finish(), ctx.curve))
-                        })?,
-                );
-            }
-
-            let mut node_reports = Vec::with_capacity(cfg.nodes);
-            let mut curve = LossCurve::default();
-            for (i, h) in handles.into_iter().enumerate() {
-                let (rep, c) = h
-                    .join()
-                    .map_err(|_| anyhow::anyhow!("node {i} panicked"))?
-                    .with_context(|| format!("node {i} failed"))?;
-                node_reports.push(rep);
-                curve.merge(&c);
-            }
-            Ok((node_reports, curve))
-        })()
-    };
-    let (node_reports, curve) = match run_result {
-        Ok(v) => v,
-        Err(e) => {
-            // Don't leak the listener/accept thread on a failed run — the
-            // fixed cluster port must stay rebindable for a retry.
-            if let Some(srv) = server {
-                srv.shutdown();
-            }
-            return Err(e);
-        }
-    };
-    let wall_s = origin.elapsed().as_secs_f64();
-
-    // --- assemble + post-hoc head + evaluate -----------------------------------
-    // Read through the mem store directly (same data the clients wrote).
-    let mut model = eval::assemble(mem.as_ref(), &cfg)?;
-    let comm = mem.comm_stats();
-    if let Some(srv) = server {
-        srv.shutdown();
-    }
-
-    let mut leader_engine: Box<dyn Engine> = factory()?;
-    let mut head_posthoc_s = 0.0;
-    if cfg.classifier == ClassifierMode::Softmax && !cfg.perfopt && model.head.is_none() {
-        let (head, secs) =
-            eval::train_head_posthoc(leader_engine.as_mut(), &model, &bundle.train, &cfg)?;
-        model.head = Some(head);
-        head_posthoc_s = secs;
-    }
-
-    let eval_t0 = Instant::now();
-    let test_accuracy = eval::evaluate(leader_engine.as_mut(), &model, &bundle.test, &cfg)?;
-    let eval_s = eval_t0.elapsed().as_secs_f64();
-
-    let modeled = makespan(&node_reports);
-    Ok(ExperimentReport {
-        name: cfg.name.clone(),
-        scheduler: cfg.scheduler,
-        test_accuracy,
-        wall_s,
-        head_posthoc_s,
-        eval_s,
-        modeled,
-        comm,
-        node_reports,
-        curve,
-        model,
-    })
+    Experiment::builder().config(cfg.clone()).data(bundle.clone()).run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Scheduler;
-    use crate::ff::NegStrategy;
+    use crate::config::{Scheduler as SchedulerKind, TransportKind};
+    use crate::ff::{ClassifierMode, NegStrategy};
 
     fn quick_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::tiny();
@@ -260,11 +119,16 @@ mod tests {
         cfg
     }
 
+    /// The one blocking path every test goes through — the builder.
+    fn run(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
+        Experiment::builder().config(cfg.clone()).run()
+    }
+
     #[test]
     fn sequential_beats_chance() {
         let mut cfg = quick_cfg();
-        cfg.scheduler = Scheduler::Sequential;
-        let rep = run_experiment(&cfg).unwrap();
+        cfg.scheduler = SchedulerKind::Sequential;
+        let rep = run(&cfg).unwrap();
         assert!(
             rep.test_accuracy > 0.25,
             "sequential FF should beat 10% chance clearly, got {:.1}%",
@@ -272,6 +136,7 @@ mod tests {
         );
         assert!(rep.modeled.total_busy > 0.0);
         assert_eq!(rep.node_reports.len(), 1);
+        assert_eq!(rep.scheduler, "sequential");
     }
 
     #[test]
@@ -281,11 +146,11 @@ mod tests {
         // opt state is shipped — the trained weights must agree.
         let mut cfg = quick_cfg();
         cfg.ship_opt_state = true;
-        cfg.scheduler = Scheduler::Sequential;
-        let seq = run_experiment(&cfg).unwrap();
-        cfg.scheduler = Scheduler::AllLayers;
+        cfg.scheduler = SchedulerKind::Sequential;
+        let seq = run(&cfg).unwrap();
+        cfg.scheduler = SchedulerKind::AllLayers;
         cfg.nodes = 2;
-        let pff = run_experiment(&cfg).unwrap();
+        let pff = run(&cfg).unwrap();
         for (a, b) in seq.model.net.layers.iter().zip(&pff.model.net.layers) {
             assert!(
                 a.w.max_abs_diff(&b.w) < 1e-5,
@@ -299,9 +164,9 @@ mod tests {
     #[test]
     fn single_layer_runs_and_learns() {
         let mut cfg = quick_cfg();
-        cfg.scheduler = Scheduler::SingleLayer;
+        cfg.scheduler = SchedulerKind::SingleLayer;
         cfg.nodes = 3; // 3 layers
-        let rep = run_experiment(&cfg).unwrap();
+        let rep = run(&cfg).unwrap();
         assert!(rep.test_accuracy > 0.25, "got {:.1}%", rep.test_accuracy * 100.0);
         assert_eq!(rep.node_reports.len(), 3);
         // every node published its layer each chapter (3 nodes × 8 chapters)
@@ -311,10 +176,10 @@ mod tests {
     #[test]
     fn federated_runs_on_shards() {
         let mut cfg = quick_cfg();
-        cfg.scheduler = Scheduler::Federated;
+        cfg.scheduler = SchedulerKind::Federated;
         cfg.nodes = 2;
         cfg.train_n = 768; // 384 per shard — enough to beat chance
-        let rep = run_experiment(&cfg).unwrap();
+        let rep = run(&cfg).unwrap();
         assert!(rep.test_accuracy > 0.15, "got {:.1}%", rep.test_accuracy * 100.0);
     }
 
@@ -322,9 +187,9 @@ mod tests {
     fn perfopt_runs() {
         let mut cfg = quick_cfg();
         cfg.perfopt = true;
-        cfg.scheduler = Scheduler::AllLayers;
+        cfg.scheduler = SchedulerKind::AllLayers;
         cfg.nodes = 2;
-        let rep = run_experiment(&cfg).unwrap();
+        let rep = run(&cfg).unwrap();
         assert!(rep.test_accuracy > 0.3, "got {:.1}%", rep.test_accuracy * 100.0);
         assert_eq!(rep.model.layer_heads.len(), 3);
     }
@@ -333,9 +198,9 @@ mod tests {
     fn softmax_classifier_inline() {
         let mut cfg = quick_cfg();
         cfg.classifier = ClassifierMode::Softmax;
-        cfg.scheduler = Scheduler::AllLayers;
+        cfg.scheduler = SchedulerKind::AllLayers;
         cfg.nodes = 2;
-        let rep = run_experiment(&cfg).unwrap();
+        let rep = run(&cfg).unwrap();
         assert!(rep.model.head.is_some());
         assert!(rep.test_accuracy > 0.25, "got {:.1}%", rep.test_accuracy * 100.0);
         assert_eq!(rep.head_posthoc_s, 0.0);
@@ -345,24 +210,47 @@ mod tests {
     fn tcp_transport_end_to_end() {
         let mut cfg = quick_cfg();
         cfg.transport = TransportKind::Tcp;
-        cfg.scheduler = Scheduler::AllLayers;
+        cfg.scheduler = SchedulerKind::AllLayers;
         cfg.nodes = 2;
-        let rep = run_experiment(&cfg).unwrap();
+        let rep = run(&cfg).unwrap();
         assert!(rep.test_accuracy > 0.25, "got {:.1}%", rep.test_accuracy * 100.0);
         assert!(rep.comm.bytes_put > 0);
+    }
+
+    /// The deprecated shims still work and agree with the builder path
+    /// (they ARE the builder path).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_delegate_to_builder() {
+        let mut cfg = quick_cfg();
+        cfg.train_n = 128;
+        cfg.test_n = 64;
+        cfg.epochs = 8;
+        let via_shim = run_experiment(&cfg).unwrap();
+        let via_builder = run(&cfg).unwrap();
+        assert_eq!(
+            via_shim.model.net.layers[0].w.data, via_builder.model.net.layers[0].w.data,
+            "shim and builder must train identically"
+        );
+
+        let bundle = crate::data::load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)
+            .unwrap();
+        let via_data_shim = run_experiment_with_data(&cfg, &bundle).unwrap();
+        assert_eq!(via_data_shim.test_accuracy, via_builder.test_accuracy);
     }
 
     /// Cluster mode end to end: the leader waits for external workers that
     /// join over TCP (threads here; `pff worker` processes in the example
     /// and CI smoke), and the result matches the in-proc run bitwise when
-    /// opt state is shipped.
+    /// opt state is shipped. The leader's registration report arrives as a
+    /// `WorkersRegistered` event.
     #[test]
     fn cluster_mode_matches_inproc() {
         let mut cfg = quick_cfg();
-        cfg.scheduler = Scheduler::AllLayers;
+        cfg.scheduler = SchedulerKind::AllLayers;
         cfg.nodes = 2;
         cfg.ship_opt_state = true;
-        let inproc = run_experiment(&cfg).unwrap();
+        let inproc = run(&cfg).unwrap();
 
         // free localhost port for the leader
         let port = {
@@ -373,7 +261,8 @@ mod tests {
         lcfg.transport = TransportKind::Tcp;
         lcfg.cluster = true;
         lcfg.tcp_port = port;
-        let leader = std::thread::spawn(move || run_experiment(&lcfg));
+        let leader = Experiment::builder().config(lcfg).launch().unwrap();
+        let events = leader.events();
 
         let addr: std::net::SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
         let mut wcfg = cfg.clone();
@@ -394,7 +283,11 @@ mod tests {
         for w in workers {
             w.join().unwrap().unwrap();
         }
-        let clustered = leader.join().unwrap().unwrap();
+        let clustered = leader.join().unwrap();
+        let registered = events.try_iter().any(|ev| {
+            matches!(&ev, RunEvent::WorkersRegistered { workers } if workers.len() == 2)
+        });
+        assert!(registered, "leader must announce worker registration on the event bus");
         for (a, b) in inproc.model.net.layers.iter().zip(&clustered.model.net.layers) {
             assert_eq!(a.w.data, b.w.data, "cluster run must reproduce in-proc weights bitwise");
         }

@@ -12,11 +12,13 @@ use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::config::{ExperimentConfig, Scheduler, TransportKind};
+use crate::config::{ExperimentConfig, TransportKind};
+use crate::coordinator::events::{EventBus, RunEvent};
+use crate::coordinator::experiment::CancelToken;
 use crate::coordinator::lr::cooldown;
-use crate::coordinator::store::{LayerParams, ParamStore};
+use crate::coordinator::store::{HeadParams, LayerParams, ParamStore};
 use crate::data::{load_dataset, Dataset};
 use crate::engine::{factory_for, Engine};
 use crate::ff::negative::{adaptive_neg_labels, random_wrong_labels};
@@ -54,12 +56,33 @@ pub struct NodeCtx {
     pub opt_cache: HashMap<usize, AdamState>,
     /// Node-local Adam state for the softmax head.
     pub head_opt: Option<AdamState>,
+    /// Run-event bus (chapter progress, publishes). A default bus has no
+    /// subscribers — emission is then a no-op beyond a history push.
+    pub bus: EventBus,
+    /// Cooperative cancellation token (checked at chapter boundaries;
+    /// `RunHandle::cancel` also closes the store to unblock waits).
+    pub cancel: CancelToken,
 }
 
 impl NodeCtx {
     /// Blocking-get timeout from config.
     pub fn timeout(&self) -> Duration {
         Duration::from_secs(self.cfg.store_timeout_s)
+    }
+
+    /// Emit a run event on this node's bus.
+    pub fn emit(&self, ev: RunEvent) {
+        self.bus.emit(ev);
+    }
+
+    /// Error out if the run was cancelled (scheduler chapter-boundary
+    /// check — the prompt path is the store close, but custom stores only
+    /// get this cooperative check).
+    pub fn ensure_live(&self) -> Result<()> {
+        if self.cancel.is_cancelled() {
+            bail!("node {}: run cancelled", self.node_id);
+        }
+        Ok(())
     }
 
     /// Deterministic fresh layer `l` — *identical across nodes and
@@ -314,7 +337,8 @@ impl NodeCtx {
             .time(SpanKind::WaitLayer, layer, chapter, || store.get_layer(layer, chapter, to))
     }
 
-    /// Publish a layer (timed as Publish).
+    /// Publish a layer (timed as Publish; emits
+    /// [`RunEvent::LayerPublished`] with the wire size).
     pub fn publish_layer(
         &mut self,
         layer_idx: usize,
@@ -323,9 +347,34 @@ impl NodeCtx {
         opt: Option<&AdamState>,
     ) -> Result<()> {
         let params = LayerParams::from_layer(layer, if self.cfg.ship_opt_state { opt } else { None });
+        let wire_bytes = params.wire_bytes();
         let store = self.store.clone();
         self.rec
-            .time(SpanKind::Publish, layer_idx, chapter, || store.put_layer(layer_idx, chapter, params))
+            .time(SpanKind::Publish, layer_idx, chapter, || store.put_layer(layer_idx, chapter, params))?;
+        self.emit(RunEvent::LayerPublished {
+            node: self.node_id,
+            layer: layer_idx,
+            chapter,
+            wire_bytes,
+        });
+        Ok(())
+    }
+
+    /// Publish the full-network softmax head (timed as Publish; emits
+    /// [`RunEvent::HeadPublished`]).
+    pub fn publish_head(
+        &mut self,
+        chapter: u32,
+        head: &LinearHead,
+        opt: Option<&AdamState>,
+    ) -> Result<()> {
+        let params = HeadParams::from_head(head, if self.cfg.ship_opt_state { opt } else { None });
+        let wire_bytes = params.wire_bytes();
+        let store = self.store.clone();
+        self.rec
+            .time(SpanKind::Publish, usize::MAX, chapter, || store.put_head(chapter, params))?;
+        self.emit(RunEvent::HeadPublished { node: self.node_id, chapter, wire_bytes });
+        Ok(())
     }
 
     /// Take (or create) the node-local Adam state for store slot `slot`
@@ -379,7 +428,10 @@ pub struct WorkerRun {
 /// The worker loads its data locally (synthetic sets derive
 /// deterministically from `cfg.seed`, so every process sees identical
 /// examples without shipping them); Federated runs carve the node's shard
-/// from the leader-assigned node id.
+/// from the leader-assigned node id. The scheduler resolves through the
+/// [`crate::coordinator::schedulers::SchedulerRegistry`]; progress events
+/// print to stderr only when `cfg.verbose` is set (library silence
+/// otherwise).
 pub fn run_worker(
     cfg: &ExperimentConfig,
     addr: SocketAddr,
@@ -392,6 +444,7 @@ pub fn run_worker(
         "worker mode needs transport = tcp (got {:?})",
         cfg.transport
     );
+    let scheduler = crate::coordinator::schedulers::for_config(&cfg)?;
     let name = format!("worker-{}", std::process::id());
     let client = TcpStoreClient::connect_worker_retry(addr, requested_id, &name, connect_wait)?;
     let node_id = client.node_id().context("leader did not assign a node id")? as usize;
@@ -402,7 +455,9 @@ pub fn run_worker(
     );
 
     let bundle = load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
-    let data = if cfg.scheduler == Scheduler::Federated {
+    // Same placement seam as the in-proc coordinator: the scheduler's
+    // plan decides sharding, not the config enum.
+    let data = if scheduler.plan(&cfg).shard_data {
         bundle.train.shard(cfg.nodes).swap_remove(node_id)
     } else {
         bundle.train
@@ -410,6 +465,10 @@ pub fn run_worker(
     let factory = factory_for(cfg.engine, &cfg.artifact_dir)?;
     let engine = factory().context("constructing worker engine")?;
 
+    let bus = EventBus::new();
+    if cfg.verbose {
+        bus.observe(|ev| eprintln!("[pff-worker] {ev}"));
+    }
     let client = Arc::new(client);
     let origin = Instant::now();
     let mut ctx = NodeCtx {
@@ -422,8 +481,10 @@ pub fn run_worker(
         curve: LossCurve::default(),
         opt_cache: HashMap::new(),
         head_opt: None,
+        bus,
+        cancel: CancelToken::default(),
     };
-    crate::coordinator::schedulers::run_node(&mut ctx)?;
+    scheduler.run_node(&mut ctx)?;
     client.done().context("reporting DONE to the leader")?;
     Ok(WorkerRun {
         node_id,
@@ -456,6 +517,8 @@ mod tests {
             curve: LossCurve::default(),
             opt_cache: HashMap::new(),
             head_opt: None,
+            bus: EventBus::new(),
+            cancel: CancelToken::default(),
         }
     }
 

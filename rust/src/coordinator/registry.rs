@@ -34,6 +34,9 @@ struct WorkerEntry {
 #[derive(Default)]
 struct RegistryInner {
     workers: Vec<WorkerEntry>,
+    /// Set by [`NodeRegistry::close`]: parked leaders wake with an error
+    /// and new registrations are refused (run cancellation).
+    closed: bool,
 }
 
 /// Membership + completion tracking for one training run.
@@ -70,6 +73,9 @@ impl NodeRegistry {
     /// smallest free index.
     pub fn register(&self, requested: Option<u32>, name: &str) -> Result<u32> {
         let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            bail!("registry closed (run cancelled or finished)");
+        }
         if let Some(cap) = self.capacity {
             if let Some(id) = requested {
                 if id as usize >= cap {
@@ -128,6 +134,15 @@ impl NodeRegistry {
         }
     }
 
+    /// Close the registry: parked [`NodeRegistry::wait_for_workers`] /
+    /// [`NodeRegistry::wait_for_done`] callers wake with an error and new
+    /// registrations are refused. Idempotent; `RunHandle::cancel` uses
+    /// this to unpark a cluster leader promptly.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
     /// Snapshot of the registered workers.
     pub fn workers(&self) -> Vec<NodeInfo> {
         self.inner.lock().unwrap().workers.iter().map(|w| w.info.clone()).collect()
@@ -166,6 +181,9 @@ impl NodeRegistry {
         let mut guard = self.inner.lock().unwrap();
         let deadline = Instant::now() + timeout;
         loop {
+            if guard.closed {
+                bail!("registry closed while waiting for {what}");
+            }
             if let Some(v) = probe(&guard) {
                 return Ok(v);
             }
@@ -236,6 +254,23 @@ mod tests {
         r.wait_for_done(1, Duration::from_millis(10)).unwrap();
         let err = r.wait_for_done(2, Duration::from_millis(20)).unwrap_err();
         assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn close_unparks_waiters_and_refuses_registration() {
+        let r = Arc::new(NodeRegistry::new());
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || r2.wait_for_workers(1, Duration::from_secs(60)));
+        let t0 = std::time::Instant::now();
+        // Give the waiter a moment to park, then close under it.
+        while !h.is_finished() && t0.elapsed() < Duration::from_millis(50) {
+            std::thread::yield_now();
+        }
+        r.close();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("closed"), "{err}");
+        let err = r.register(None, "late").unwrap_err();
+        assert!(err.to_string().contains("closed"), "{err}");
     }
 
     #[test]

@@ -8,12 +8,16 @@
 //! the chapter it refreshes its own negative labels (AdaptiveNEG computes
 //! them locally with the just-trained network — the paper's §5.2 note on
 //! why All-Layers beats Single-Layer for AdaptiveNEG).
+//!
+//! Progress surfaces as [`RunEvent`]s on `ctx.bus` (chapter start/finish
+//! with the chapter's mean loss, plus per-publish wire accounting from
+//! `NodeCtx::publish_layer`) — no printing in the library.
 
 use anyhow::Result;
 
+use crate::coordinator::events::RunEvent;
 use crate::coordinator::node::NodeCtx;
 use crate::coordinator::schedulers::head_slot;
-use crate::coordinator::store::{HeadParams, LayerParams};
 use crate::ff::classifier::head_features;
 use crate::ff::{ClassifierMode, FFNetwork, NegStrategy};
 use crate::metrics::SpanKind;
@@ -32,19 +36,14 @@ pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
     let mut pending_adaptive: Option<Vec<u8>> = None;
 
     for &chapter in &my_chapters {
-        if ctx.cfg.perfopt {
-            run_chapter_perfopt(ctx, chapter, n_layers)?;
+        ctx.ensure_live()?;
+        ctx.emit(RunEvent::ChapterStarted { node: ctx.node_id, layer: None, chapter });
+        let loss = if ctx.cfg.perfopt {
+            run_chapter_perfopt(ctx, chapter, n_layers)?
         } else {
-            run_chapter_ff(ctx, chapter, n_layers, &mut pending_adaptive)?;
-        }
-        if ctx.cfg.verbose {
-            eprintln!(
-                "[node {}] finished chapter {chapter}/{} ({})",
-                ctx.node_id,
-                splits,
-                ctx.cfg.scheduler
-            );
-        }
+            run_chapter_ff(ctx, chapter, n_layers, &mut pending_adaptive)?
+        };
+        ctx.emit(RunEvent::ChapterFinished { node: ctx.node_id, layer: None, chapter, loss });
     }
     Ok(())
 }
@@ -54,7 +53,7 @@ fn run_chapter_ff(
     chapter: u32,
     n_layers: usize,
     pending_adaptive: &mut Option<Vec<u8>>,
-) -> Result<()> {
+) -> Result<f32> {
     // --- negative labels for this chapter ---------------------------------
     let neg_labels = match ctx.cfg.neg {
         NegStrategy::Adaptive => {
@@ -66,6 +65,7 @@ fn run_chapter_ff(
     let mut x_pos = ctx.positive_inputs();
     let mut x_neg = ctx.negative_inputs(&neg_labels);
     let mut trained: Vec<crate::ff::FFLayer> = Vec::with_capacity(n_layers);
+    let mut last_loss = 0.0f32;
 
     for l in 0..n_layers {
         // Fetch the pipeline predecessor's version (or fresh at chapter 0).
@@ -77,7 +77,7 @@ fn run_chapter_ff(
             (layer, opt)
         };
         let mut opt = ctx.take_opt(l, shipped);
-        ctx.train_ff_layer_chapter(&mut layer, &mut opt, l, chapter, &x_pos, &x_neg)?;
+        last_loss = ctx.train_ff_layer_chapter(&mut layer, &mut opt, l, chapter, &x_pos, &x_neg)?;
         ctx.publish_layer(l, chapter, &layer, Some(&opt))?;
         let (np, nn) = ctx.forward_pair(&layer, l, chapter, x_pos, x_neg)?;
         x_pos = np;
@@ -100,14 +100,15 @@ fn run_chapter_ff(
             *pending_adaptive = Some(ctx.local_neg_labels(next, Some(&net))?);
         }
     }
-    Ok(())
+    Ok(last_loss)
 }
 
-fn run_chapter_perfopt(ctx: &mut NodeCtx, chapter: u32, n_layers: usize) -> Result<()> {
+fn run_chapter_perfopt(ctx: &mut NodeCtx, chapter: u32, n_layers: usize) -> Result<f32> {
     // PerfOpt (§4.4): neutral overlay, no negatives; each layer trains
     // jointly with its private head by local backprop.
     let mut x = ctx.neutral_inputs();
     let labels = ctx.data.y.clone();
+    let mut last_loss = 0.0f32;
 
     for l in 0..n_layers {
         let (mut layer, shipped) = if chapter == 0 {
@@ -131,7 +132,7 @@ fn run_chapter_perfopt(ctx: &mut NodeCtx, chapter: u32, n_layers: usize) -> Resu
             head.w.rows,
             head.w.cols,
         );
-        ctx.train_perfopt_layer_chapter(
+        last_loss = ctx.train_perfopt_layer_chapter(
             &mut layer, &mut head, &mut opt_layer, &mut opt_head, l, chapter, &x, &labels,
         )?;
         ctx.publish_layer(l, chapter, &layer, Some(&opt_layer))?;
@@ -141,20 +142,13 @@ fn run_chapter_perfopt(ctx: &mut NodeCtx, chapter: u32, n_layers: usize) -> Resu
             b: head.b.clone(),
             normalize_input: false,
         };
-        let params = LayerParams::from_layer(
-            &head_as_layer,
-            if ctx.cfg.ship_opt_state { Some(&opt_head) } else { None },
-        );
-        let store = ctx.store.clone();
-        ctx.rec.time(SpanKind::Publish, head_slot(l), chapter, || {
-            store.put_layer(head_slot(l), chapter, params)
-        })?;
+        ctx.publish_layer(head_slot(l), chapter, &head_as_layer, Some(&opt_head))?;
         let eng = ctx.engine.as_mut();
         x = ctx.rec.time(SpanKind::Forward, l, chapter, || eng.layer_forward(&layer, &x))?;
         ctx.put_opt(l, opt_layer);
         ctx.put_opt(head_slot(l), opt_head);
     }
-    Ok(())
+    Ok(last_loss)
 }
 
 /// Train the full-network softmax head for one chapter and publish it.
@@ -184,10 +178,7 @@ fn train_and_publish_head(ctx: &mut NodeCtx, chapter: u32, net: &FFNetwork) -> R
     let labels = ctx.data.y.clone();
     ctx.train_head_chapter(&mut head, &mut opt, chapter, &feats, &labels)?;
 
-    let params = HeadParams::from_head(&head, if ctx.cfg.ship_opt_state { Some(&opt) } else { None });
-    let store = ctx.store.clone();
-    ctx.rec
-        .time(SpanKind::Publish, usize::MAX, chapter, || store.put_head(chapter, params))?;
+    ctx.publish_head(chapter, &head, Some(&opt))?;
     ctx.head_opt = Some(opt);
     Ok(())
 }

@@ -1,5 +1,4 @@
-//! The PFF schedulers (§4): what each node does, in terms of the
-//! primitives in [`crate::coordinator::node`].
+//! The PFF schedulers (§4) as an open, object-safe abstraction.
 //!
 //! | Scheduler | node→work mapping | neg-label flow |
 //! |---|---|---|
@@ -10,13 +9,25 @@
 //!
 //! PerfOpt (§4.4) is orthogonal: the same mappings, with the FF two-pass
 //! step replaced by the local-BP (layer, head) CE step and no negatives.
+//!
+//! Each strategy implements the [`Scheduler`] trait and registers a
+//! factory in the [`SchedulerRegistry`] under a canonical name. The
+//! [`crate::config::Scheduler`] enum is now a *parse-level alias*: the
+//! coordinator resolves `cfg.scheduler.key()` through the registry (see
+//! [`for_config`]), so adding a scheduler means registering a factory —
+//! from `main.rs`, a bench or a test — not editing a `match` in the
+//! coordinator core. Custom schedulers reach a run via
+//! `Experiment::builder().scheduler(..)` / `.scheduler_named(..)`.
 
 pub mod all_layers;
 pub mod single_layer;
 
-use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::config::Scheduler;
+use anyhow::{bail, Result};
+
+use crate::config::{ExperimentConfig, Scheduler as SchedulerKind};
 use crate::coordinator::node::NodeCtx;
 
 /// Store "layer index" namespace for PerfOpt per-layer heads: head of FF
@@ -29,16 +40,278 @@ pub fn head_slot(l: usize) -> usize {
     HEAD_SLOT_BASE + l
 }
 
-/// Run one node's script for the configured scheduler. Blocks until the
-/// node has finished all its chapters.
-pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
-    match ctx.cfg.scheduler {
-        // Sequential is All-Layers with N = 1 — identical dependency
-        // structure, no pipeline partner. Federated differs from
-        // All-Layers only in the data each ctx carries (leader shards it).
-        Scheduler::Sequential | Scheduler::AllLayers | Scheduler::Federated => {
-            all_layers::run_node(ctx)
+/// What a scheduler intends to do with a (validated) configuration —
+/// node→chapter and node→layer assignments plus data placement. The
+/// coordinator uses [`SchedulePlan::shard_data`] for data placement;
+/// harnesses and dashboards can render the rest.
+#[derive(Clone, Debug)]
+pub struct SchedulePlan {
+    /// Scheduler name (matches [`Scheduler::name`]).
+    pub scheduler: String,
+    /// Number of nodes the plan spans.
+    pub nodes: usize,
+    /// Chapters node `i` executes, in order.
+    pub chapters: Vec<Vec<u32>>,
+    /// Layers node `i` trains within one of its chapters.
+    pub layers: Vec<Vec<usize>>,
+    /// Whether each node trains on a private shard (Federated) instead of
+    /// the full dataset.
+    pub shard_data: bool,
+}
+
+impl SchedulePlan {
+    /// Round-robin whole-network plan (Sequential / All-Layers /
+    /// Federated): node `i` runs chapters `i, i+N, …`, training every
+    /// layer. Reusable by custom schedulers with the same shape.
+    pub fn round_robin(name: &str, cfg: &ExperimentConfig, shard_data: bool) -> Self {
+        let n = cfg.nodes.max(1);
+        let all_layers: Vec<usize> = (0..cfg.num_layers()).collect();
+        SchedulePlan {
+            scheduler: name.into(),
+            nodes: n,
+            chapters: (0..n)
+                .map(|i| (i as u32..cfg.splits).step_by(n).collect())
+                .collect(),
+            layers: vec![all_layers; n],
+            shard_data,
         }
-        Scheduler::SingleLayer => single_layer::run_node(ctx),
+    }
+
+    /// Layer-ownership plan (Single-Layer): node `i` owns layer `i` and
+    /// runs every chapter on it.
+    pub fn layer_owner(name: &str, cfg: &ExperimentConfig) -> Self {
+        let n = cfg.nodes.max(1);
+        SchedulePlan {
+            scheduler: name.into(),
+            nodes: n,
+            chapters: vec![(0..cfg.splits).collect(); n],
+            layers: (0..n).map(|i| vec![i]).collect(),
+            shard_data: false,
+        }
+    }
+
+    /// Total chapter executions across all nodes.
+    pub fn total_chapters(&self) -> usize {
+        self.chapters.iter().map(Vec::len).sum()
+    }
+}
+
+/// One PFF scheduling strategy: what a single node does for the whole run.
+///
+/// Object-safe by design — the coordinator, the CLI and the cluster
+/// worker all drive `Arc<dyn Scheduler>`, and new strategies plug in
+/// through the [`SchedulerRegistry`] without touching the coordinator.
+/// Implementations compose the chapter primitives on [`NodeCtx`]
+/// (fetch/train/publish/forward) and emit progress on `ctx.bus`.
+pub trait Scheduler: Send + Sync {
+    /// Canonical (registry) name, e.g. `"all-layers"`.
+    fn name(&self) -> &str;
+
+    /// The node→work mapping this scheduler will execute for `cfg`.
+    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan;
+
+    /// Run one node's full script. Blocks until the node has finished all
+    /// its chapters (or fails / is cancelled).
+    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()>;
+}
+
+/// Sequential FF (§5.2 baseline): one node, every chapter in order —
+/// All-Layers with N = 1 (identical dependency structure, no partner).
+pub struct Sequential;
+
+impl Scheduler for Sequential {
+    fn name(&self) -> &str {
+        "sequential"
+    }
+    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
+        SchedulePlan::round_robin(self.name(), cfg, false)
+    }
+    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
+        all_layers::run_node(ctx)
+    }
+}
+
+/// Single-Layer PFF (§4.1): node *i* permanently owns layer *i*.
+pub struct SingleLayer;
+
+impl Scheduler for SingleLayer {
+    fn name(&self) -> &str {
+        "single-layer"
+    }
+    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
+        SchedulePlan::layer_owner(self.name(), cfg)
+    }
+    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
+        single_layer::run_node(ctx)
+    }
+}
+
+/// All-Layers PFF (§4.2): rotating whole-network pipeline.
+pub struct AllLayers;
+
+impl Scheduler for AllLayers {
+    fn name(&self) -> &str {
+        "all-layers"
+    }
+    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
+        SchedulePlan::round_robin(self.name(), cfg, false)
+    }
+    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
+        all_layers::run_node(ctx)
+    }
+}
+
+/// Federated PFF (§4.3): All-Layers over per-node private data shards —
+/// the only difference is data placement (`shard_data`).
+pub struct Federated;
+
+impl Scheduler for Federated {
+    fn name(&self) -> &str {
+        "federated"
+    }
+    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
+        SchedulePlan::round_robin(self.name(), cfg, true)
+    }
+    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
+        all_layers::run_node(ctx)
+    }
+}
+
+type SchedulerFactory = Box<dyn Fn() -> Arc<dyn Scheduler> + Send + Sync>;
+
+/// Name → factory registry of scheduling strategies.
+///
+/// The process-wide [`SchedulerRegistry::global`] instance is pre-seeded
+/// with the paper's four strategies; anything with access to the crate
+/// (binaries, benches, tests) can [`SchedulerRegistry::register`] more and
+/// select them via `Experiment::builder().scheduler_named(..)`.
+#[derive(Default)]
+pub struct SchedulerRegistry {
+    inner: Mutex<HashMap<String, SchedulerFactory>>,
+}
+
+impl SchedulerRegistry {
+    /// Fresh empty registry (tests; production code uses [`global`]).
+    ///
+    /// [`global`]: SchedulerRegistry::global
+    pub fn new() -> Self {
+        SchedulerRegistry::default()
+    }
+
+    /// The process-wide registry, seeded with the four built-ins.
+    pub fn global() -> &'static SchedulerRegistry {
+        static GLOBAL: OnceLock<SchedulerRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let r = SchedulerRegistry::new();
+            r.register(SchedulerKind::Sequential.key(), || Arc::new(Sequential));
+            r.register(SchedulerKind::SingleLayer.key(), || Arc::new(SingleLayer));
+            r.register(SchedulerKind::AllLayers.key(), || Arc::new(AllLayers));
+            r.register(SchedulerKind::Federated.key(), || Arc::new(Federated));
+            r
+        })
+    }
+
+    /// Register (or replace) a factory under `name` (case-insensitive).
+    pub fn register<F>(&self, name: &str, factory: F)
+    where
+        F: Fn() -> Arc<dyn Scheduler> + Send + Sync + 'static,
+    {
+        self.inner
+            .lock()
+            .unwrap()
+            .insert(name.to_ascii_lowercase(), Box::new(factory));
+    }
+
+    /// Construct the scheduler registered under `name`. An exact
+    /// (case-insensitive) registration always wins; only unregistered
+    /// names fall back to the parse-level aliases of the built-ins
+    /// (`"seq"`, `"all"`, …) via [`crate::config::Scheduler`]'s parser —
+    /// so registering a custom scheduler under an alias is honored, not
+    /// silently shadowed by the enum.
+    pub fn resolve(&self, name: &str) -> Result<Arc<dyn Scheduler>> {
+        let g = self.inner.lock().unwrap();
+        if let Some(f) = g.get(&name.to_ascii_lowercase()) {
+            return Ok(f());
+        }
+        if let Ok(kind) = name.parse::<SchedulerKind>() {
+            if let Some(f) = g.get(kind.key()) {
+                return Ok(f());
+            }
+        }
+        let mut known: Vec<&str> = g.keys().map(String::as_str).collect();
+        known.sort_unstable();
+        bail!("unknown scheduler '{name}' (registered: {})", known.join(", "))
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.lock().unwrap().keys().cloned().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Resolve the scheduler a configuration names, through the global
+/// registry — the parse-level enum's single exit into runtime behavior.
+pub fn for_config(cfg: &ExperimentConfig) -> Result<Arc<dyn Scheduler>> {
+    SchedulerRegistry::global().resolve(cfg.scheduler.key())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_resolves_builtins_and_aliases() {
+        let reg = SchedulerRegistry::global();
+        for name in ["sequential", "single-layer", "all-layers", "federated", "seq", "all"] {
+            reg.resolve(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert_eq!(reg.resolve("all_layers").unwrap().name(), "all-layers");
+        let err = reg.resolve("no-such-strategy").unwrap_err();
+        assert!(err.to_string().contains("registered:"), "{err}");
+    }
+
+    #[test]
+    fn for_config_follows_the_enum() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.scheduler = SchedulerKind::SingleLayer;
+        assert_eq!(for_config(&cfg).unwrap().name(), "single-layer");
+    }
+
+    #[test]
+    fn round_robin_plan_partitions_chapters() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.scheduler = SchedulerKind::AllLayers;
+        cfg.nodes = 2;
+        let cfg = cfg.validated().unwrap();
+        let plan = AllLayers.plan(&cfg);
+        assert_eq!(plan.nodes, 2);
+        assert_eq!(plan.chapters[0], vec![0, 2, 4, 6]);
+        assert_eq!(plan.chapters[1], vec![1, 3, 5, 7]);
+        assert_eq!(plan.total_chapters() as u32, cfg.splits);
+        assert_eq!(plan.layers[0], vec![0, 1, 2]);
+        assert!(!plan.shard_data);
+        assert!(Federated.plan(&cfg).shard_data);
+    }
+
+    #[test]
+    fn layer_owner_plan_pins_layers() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.scheduler = SchedulerKind::SingleLayer;
+        cfg.nodes = 3;
+        let cfg = cfg.validated().unwrap();
+        let plan = SingleLayer.plan(&cfg);
+        assert_eq!(plan.layers, vec![vec![0], vec![1], vec![2]]);
+        assert!(plan.chapters.iter().all(|c| c.len() == cfg.splits as usize));
+    }
+
+    #[test]
+    fn local_registry_is_isolated() {
+        let reg = SchedulerRegistry::new();
+        assert!(reg.resolve("sequential").is_err());
+        reg.register("MyCustom", || Arc::new(Sequential));
+        assert_eq!(reg.resolve("mycustom").unwrap().name(), "sequential");
+        assert_eq!(reg.names(), vec!["mycustom".to_string()]);
     }
 }

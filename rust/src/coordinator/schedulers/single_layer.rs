@@ -7,12 +7,15 @@
 //! for the next chapter ("the last node generates and publishes the
 //! generated labels", §5.2) and — in Softmax mode — trains the classifier
 //! head as an extra pipeline stage (§5.4's "only adds a small delay").
+//!
+//! Progress surfaces as [`RunEvent`]s on `ctx.bus` with `layer` set to the
+//! node's owned layer.
 
 use anyhow::Result;
 
+use crate::coordinator::events::RunEvent;
 use crate::coordinator::node::NodeCtx;
 use crate::coordinator::schedulers::head_slot;
-use crate::coordinator::store::{HeadParams, LayerParams};
 use crate::ff::classifier::head_features;
 use crate::ff::{ClassifierMode, FFLayer, FFNetwork, LinearHead, NegStrategy};
 use crate::metrics::SpanKind;
@@ -39,7 +42,9 @@ pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
     let mut cls_opt: Option<AdamState> = None;
 
     for chapter in 0..splits {
-        if ctx.cfg.perfopt {
+        ctx.ensure_live()?;
+        ctx.emit(RunEvent::ChapterStarted { node: ctx.node_id, layer: Some(my_layer), chapter });
+        let loss = if ctx.cfg.perfopt {
             run_chapter_perfopt(
                 ctx,
                 chapter,
@@ -48,7 +53,7 @@ pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
                 &mut opt,
                 po_head.as_mut().unwrap(),
                 po_head_opt.as_mut().unwrap(),
-            )?;
+            )?
         } else {
             run_chapter_ff(
                 ctx,
@@ -59,11 +64,14 @@ pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
                 &mut opt,
                 &mut cls_head,
                 &mut cls_opt,
-            )?;
-        }
-        if ctx.cfg.verbose {
-            eprintln!("[node {}] finished chapter {chapter}/{splits} (Single-Layer)", ctx.node_id);
-        }
+            )?
+        };
+        ctx.emit(RunEvent::ChapterFinished {
+            node: ctx.node_id,
+            layer: Some(my_layer),
+            chapter,
+            loss,
+        });
     }
     Ok(())
 }
@@ -78,7 +86,7 @@ fn run_chapter_ff(
     opt: &mut AdamState,
     cls_head: &mut Option<LinearHead>,
     cls_opt: &mut Option<AdamState>,
-) -> Result<()> {
+) -> Result<f32> {
     // --- negative labels ---------------------------------------------------
     // AdaptiveNEG: published by the last node with a TWO-chapter lag
     // (labels for chapter c are generated after chapter c-2 finishes).
@@ -112,7 +120,7 @@ fn run_chapter_ff(
     }
 
     // --- train + publish own layer -----------------------------------------
-    ctx.train_ff_layer_chapter(layer, opt, my_layer, chapter, &x_pos, &x_neg)?;
+    let loss = ctx.train_ff_layer_chapter(layer, opt, my_layer, chapter, &x_pos, &x_neg)?;
     ctx.publish_layer(my_layer, chapter, layer, Some(opt))?;
 
     // --- last-node duties ----------------------------------------------------
@@ -144,18 +152,12 @@ fn run_chapter_ff(
             let mut head_owned = head.clone();
             let mut opt_owned = opt_h.clone();
             ctx.train_head_chapter(&mut head_owned, &mut opt_owned, chapter, &feats, &labels)?;
-            let params = HeadParams::from_head(
-                &head_owned,
-                if ctx.cfg.ship_opt_state { Some(&opt_owned) } else { None },
-            );
-            let store = ctx.store.clone();
-            ctx.rec
-                .time(SpanKind::Publish, usize::MAX, chapter, || store.put_head(chapter, params))?;
+            ctx.publish_head(chapter, &head_owned, Some(&opt_owned))?;
             *cls_head = Some(head_owned);
             *cls_opt = Some(opt_owned);
         }
     }
-    Ok(())
+    Ok(loss)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -167,7 +169,7 @@ fn run_chapter_perfopt(
     opt: &mut AdamState,
     head: &mut LinearHead,
     head_opt: &mut AdamState,
-) -> Result<()> {
+) -> Result<f32> {
     let mut x = ctx.neutral_inputs();
     for l in 0..my_layer {
         let params = ctx.fetch_layer(l, chapter)?;
@@ -176,17 +178,11 @@ fn run_chapter_perfopt(
         x = ctx.rec.time(SpanKind::Forward, l, chapter, || eng.layer_forward(&pl, &x))?;
     }
     let labels = ctx.data.y.clone();
-    ctx.train_perfopt_layer_chapter(layer, head, opt, head_opt, my_layer, chapter, &x, &labels)?;
+    let loss = ctx
+        .train_perfopt_layer_chapter(layer, head, opt, head_opt, my_layer, chapter, &x, &labels)?;
     ctx.publish_layer(my_layer, chapter, layer, Some(opt))?;
     let head_as_layer =
         FFLayer { w: head.w.clone(), b: head.b.clone(), normalize_input: false };
-    let params = LayerParams::from_layer(
-        &head_as_layer,
-        if ctx.cfg.ship_opt_state { Some(head_opt) } else { None },
-    );
-    let store = ctx.store.clone();
-    ctx.rec.time(SpanKind::Publish, head_slot(my_layer), chapter, || {
-        store.put_layer(head_slot(my_layer), chapter, params)
-    })?;
-    Ok(())
+    ctx.publish_layer(head_slot(my_layer), chapter, &head_as_layer, Some(head_opt))?;
+    Ok(loss)
 }

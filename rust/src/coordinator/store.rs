@@ -160,6 +160,10 @@ struct MemInner {
     /// and benchmarks synchronize on "the reader is actually blocked"
     /// without sleep-based handoffs (see [`MemStore::wait_for_waiters`]).
     waiting: usize,
+    /// Set by [`MemStore::close`]: every blocking read — parked or future
+    /// — errors out immediately. `RunHandle::cancel` uses this to unblock
+    /// store-waiting nodes promptly.
+    closed: bool,
 }
 
 /// In-process [`ParamStore`] (Mutex + Condvar).
@@ -175,6 +179,20 @@ impl MemStore {
         MemStore::default()
     }
 
+    /// Close the store: every parked blocking read wakes with an error,
+    /// and future blocking reads fail immediately. Idempotent; publishes
+    /// and non-blocking probes keep working (final assembly still reads
+    /// whatever was published before the close).
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Whether [`MemStore::close`] was called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
     fn wait_for<T>(
         &self,
         timeout: Duration,
@@ -182,6 +200,9 @@ impl MemStore {
         mut probe: impl FnMut(&mut MemInner) -> Option<T>,
     ) -> Result<T> {
         let mut guard = self.inner.lock().unwrap();
+        if guard.closed {
+            anyhow::bail!("store closed while waiting for {what}");
+        }
         if let Some(v) = probe(&mut guard) {
             return Ok(v);
         }
@@ -196,6 +217,9 @@ impl MemStore {
             }
             let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
             guard = g;
+            if guard.closed {
+                break Err(anyhow::anyhow!("store closed while waiting for {what}"));
+            }
             if let Some(v) = probe(&mut guard) {
                 break Ok(v);
             }
@@ -387,6 +411,24 @@ mod tests {
         let got = h.join().unwrap().unwrap();
         assert_eq!(got.w.rows, 4);
         assert_eq!(s.waiter_count(), 0);
+    }
+
+    #[test]
+    fn close_wakes_parked_readers_and_fails_new_ones() {
+        let s = Arc::new(MemStore::new());
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.get_layer(0, 0, Duration::from_secs(60)));
+        s.wait_for_waiters(1, Duration::from_secs(5)).unwrap();
+        let t0 = std::time::Instant::now();
+        s.close();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "close must wake promptly");
+        assert!(err.to_string().contains("closed"), "{err}");
+        // future blocking reads fail fast; probes and puts still work
+        assert!(s.get_layer(1, 1, Duration::from_secs(60)).is_err());
+        s.put_layer(1, 1, params(9)).unwrap();
+        assert!(s.try_layer(1, 1).is_some());
+        assert!(s.is_closed());
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Shared harness plumbing: scales, measured-run helper, DES helper.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::{EngineKind, ExperimentConfig, Scheduler};
-use crate::coordinator::{run_experiment_with_data, ExperimentReport};
+use crate::coordinator::{Experiment, ExperimentReport};
 use crate::data::{load_dataset, DataBundle, DatasetKind};
 use crate::ff::{ClassifierMode, NegStrategy};
 use crate::sim::schedules::{SimParams, SimVariant};
@@ -109,7 +111,7 @@ pub fn apply_impl(cfg: &mut ExperimentConfig, implementation: Scheduler) {
 
 /// Run one measured variant.
 pub fn run_measured(
-    bundle: &DataBundle,
+    bundle: &Arc<DataBundle>,
     base: &ExperimentConfig,
     model: &str,
     implementation: Scheduler,
@@ -123,7 +125,9 @@ pub fn run_measured(
     cfg.classifier = classifier;
     cfg.perfopt = perfopt;
     apply_impl(&mut cfg, implementation);
-    let report = run_experiment_with_data(&cfg, bundle)?;
+    // Arc clone — the tables run many variants off one loaded bundle and
+    // must not deep-copy the data per run.
+    let report = Experiment::builder().config(cfg).data(bundle.clone()).run()?;
     Ok(MeasuredRun {
         model: model.to_string(),
         implementation: implementation.to_string(),
@@ -131,9 +135,9 @@ pub fn run_measured(
     })
 }
 
-/// Load the bundle for a scale once.
-pub fn load_bundle(scale: &Scale, dataset: DatasetKind, seed: u64) -> Result<DataBundle> {
-    load_dataset(dataset, scale.train_n, scale.test_n, seed)
+/// Load the bundle for a scale once (shared: sessions take `Arc` clones).
+pub fn load_bundle(scale: &Scale, dataset: DatasetKind, seed: u64) -> Result<Arc<DataBundle>> {
+    load_dataset(dataset, scale.train_n, scale.test_n, seed).map(Arc::new)
 }
 
 /// DES makespan (seconds) of a variant at the paper's full scale.

@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use crate::config::{EngineKind, ExperimentConfig, Scheduler};
-use crate::coordinator::run_experiment_with_data;
+use crate::coordinator::Experiment;
 use crate::data::DatasetKind;
 use crate::ff::NegStrategy;
 use crate::harness::common::{load_bundle, Scale};
@@ -80,7 +80,7 @@ pub fn figure3_measured(
         if cfg.epochs % s != 0 {
             cfg.epochs = s * (cfg.epochs / s + 1);
         }
-        let rep = run_experiment_with_data(&cfg, &bundle)?;
+        let rep = Experiment::builder().config(cfg).data(bundle.clone()).run()?;
         out.push((s, rep.test_accuracy));
     }
     Ok(out)

@@ -29,8 +29,10 @@
 //!   PJRT-backed `engine::XlaEngine` (behind the off-by-default `xla`
 //!   cargo feature; see README "Build matrix").
 //! * [`coordinator`] — the paper's contribution: Sequential / Single-Layer
-//!   / All-Layers / Federated PFF schedulers over a chapter-versioned
-//!   parameter store, with per-node busy/idle metrics.
+//!   / All-Layers / Federated PFF schedulers (an open
+//!   [`coordinator::Scheduler`] trait + registry) over a chapter-versioned
+//!   parameter store, driven through the [`Experiment`] session API with a
+//!   typed [`coordinator::RunEvent`] stream and per-node busy/idle metrics.
 //! * [`transport`] — in-process channels and a real TCP wire (length-
 //!   prefixed, hand-rolled codec) for the parameter store.
 //! * [`sim`] — discrete-event pipeline simulator regenerating the paper's
@@ -38,17 +40,31 @@
 //! * [`baselines`] — DFF [11] and backpropagation-pipeline comparators.
 //! * [`harness`] — drivers that regenerate every table and figure.
 //!
-//! ## Example
+//! ## Quickstart
+//!
+//! Describe a session with [`Experiment::builder`], launch it, and either
+//! watch the typed event stream or just join for the report:
 //!
 //! ```no_run
-//! use pff::config::ExperimentConfig;
-//! use pff::coordinator::run_experiment;
+//! use pff::coordinator::RunEvent;
+//! use pff::{Experiment, ExperimentConfig};
 //!
 //! let mut cfg = ExperimentConfig::reduced_mnist();
 //! cfg.scheduler = pff::config::Scheduler::AllLayers;
 //! cfg.nodes = 4;
-//! let report = run_experiment(&cfg).unwrap();
+//!
+//! let handle = Experiment::builder()
+//!     .config(cfg)
+//!     .observer(|ev| {
+//!         if let RunEvent::ChapterFinished { node, chapter, loss, .. } = ev {
+//!             eprintln!("node {node}: chapter {chapter} done (loss {loss:.4})");
+//!         }
+//!     })
+//!     .launch()?;
+//! // handle.cancel() would abort promptly; handle.events() streams RunEvents.
+//! let report = handle.join()?;
 //! println!("accuracy = {:.2}%", report.test_accuracy * 100.0);
+//! # Ok::<(), anyhow::Error>(())
 //! ```
 
 pub mod bench_util;
@@ -68,4 +84,6 @@ pub mod testing;
 pub mod transport;
 
 pub use config::ExperimentConfig;
+pub use coordinator::{Experiment, ExperimentReport, RunHandle};
+#[allow(deprecated)]
 pub use coordinator::run_experiment;

@@ -1,7 +1,7 @@
 //! `pff` — launcher CLI for the Pipeline Forward-Forward framework.
 //!
 //! ```text
-//! pff train   [--config FILE] [--key value ...]   run one experiment
+//! pff train   [--config FILE] [--follow] [--event-csv PATH] [--key value ...]
 //! pff worker  --connect HOST:PORT [--node-id K]   join a cluster leader
 //! pff table1..table5 [--scale quick|reduced] [--engine native|xla]
 //! pff figures                                     render Figures 1–6
@@ -11,14 +11,21 @@
 //! pff help
 //! ```
 //!
+//! The library is silent; this binary attaches the stderr observer to the
+//! run's event bus (`--follow` or `verbose = true` streams per-chapter
+//! progress; cluster registration always prints). `--event-csv PATH`
+//! additionally records every [`pff::coordinator::RunEvent`] to a CSV.
+//!
 //! Cluster mode: the leader runs `pff train --transport tcp --cluster true
 //! --tcp_port P --nodes N ...` and parks until `N` `pff worker` processes
 //! (same config flags, plus `--connect`) register, train, and report DONE.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use pff::config::{EngineKind, ExperimentConfig};
-use pff::coordinator::run_experiment;
+use pff::coordinator::{EventLog, Experiment, RunEvent};
 use pff::ff::NegStrategy;
 use pff::harness::{figures, table1, table2, table3, table4, table5, Scale};
 use pff::sim::schedules::{SimParams, SimVariant};
@@ -66,6 +73,8 @@ fn print_help() {
         "pff — Pipeline Forward-Forward distributed training\n\n\
          commands:\n\
          \u{20}  train              run one experiment (--config FILE, --key value overrides;\n\
+         \u{20}                     --follow streams per-chapter progress, --event-csv PATH\n\
+         \u{20}                     logs the run's event stream;\n\
          \u{20}                     --cluster true parks the leader for external workers)\n\
          \u{20}  worker             join a cluster leader (--connect HOST:PORT, optional --node-id K,\n\
          \u{20}                     --connect-wait-s S, plus the same config flags as train)\n\
@@ -96,13 +105,49 @@ fn split_config(args: &[String]) -> Result<(Option<String>, Vec<String>)> {
     Ok((cfg_file, rest))
 }
 
+/// The CLI's default event observer: the library prints nothing, so this
+/// is where run progress reaches stderr. Cluster registration always
+/// prints (the old leader log line); everything else only with
+/// `--follow` / `verbose = true`.
+fn stderr_observer(progress: bool) -> impl Fn(&RunEvent) + Send + Sync + 'static {
+    move |ev: &RunEvent| {
+        let show = matches!(ev, RunEvent::WorkersRegistered { .. }) || progress;
+        if show {
+            eprintln!("[pff] {ev}");
+        }
+    }
+}
+
 fn cmd_train(args: &[String]) -> Result<()> {
     let (cfg_file, rest) = split_config(args)?;
+    // Strip the binary-level flags before the remainder hits the config
+    // parser (which rejects unknown keys).
+    let mut follow = false;
+    let mut event_csv: Option<String> = None;
+    let mut cfg_args = Vec::new();
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--follow" => {
+                follow = true;
+                i += 1;
+            }
+            "--event-csv" => {
+                event_csv =
+                    Some(rest.get(i + 1).context("--event-csv needs a path")?.clone());
+                i += 2;
+            }
+            _ => {
+                cfg_args.push(rest[i].clone());
+                i += 1;
+            }
+        }
+    }
     let mut cfg = match cfg_file {
         Some(path) => ExperimentConfig::from_file(path)?,
         None => ExperimentConfig::reduced_mnist(),
     };
-    cfg.apply_cli(&rest)?;
+    cfg.apply_cli(&cfg_args)?;
     if cfg.cluster {
         eprintln!(
             "[leader] hosting store on 127.0.0.1:{}, waiting for {} worker(s) \
@@ -110,7 +155,20 @@ fn cmd_train(args: &[String]) -> Result<()> {
             cfg.tcp_port, cfg.nodes, cfg.tcp_port
         );
     }
-    let report = run_experiment(&cfg)?;
+
+    let mut builder = Experiment::builder()
+        .config(cfg.clone())
+        .observer(stderr_observer(follow || cfg.verbose));
+    let log = event_csv.as_ref().map(|_| Arc::new(EventLog::new()));
+    if let Some(log) = &log {
+        let sink = log.clone();
+        builder = builder.observer(move |ev| sink.record(ev));
+    }
+    let report = builder.launch()?.join()?;
+    if let (Some(path), Some(log)) = (&event_csv, &log) {
+        log.write_csv(path)?;
+        eprintln!("[pff] event log written to {path}");
+    }
     println!("{}", report.summary());
     println!("\ntraining curve:\n{}", report.curve.render(12));
     for n in &report.node_reports {

@@ -29,10 +29,23 @@ impl LossCurve {
         self.points.push(CurvePoint { epoch, loss, accuracy });
     }
 
+    /// Log one finished chapter's loss at its end-of-chapter epoch — the
+    /// event-stream entry point (`RunEvent::ChapterFinished` consumers
+    /// build curves with this; see `coordinator::EventLog::chapter_curve`).
+    pub fn push_chapter(&mut self, chapter: u32, epochs_per_chapter: u32, loss: f32) {
+        self.push_loss((chapter + 1) as f32 * epochs_per_chapter as f32, loss);
+    }
+
+    /// Restore epoch order after out-of-order pushes (concurrent nodes
+    /// finish chapters out of sequence).
+    pub fn sort_by_epoch(&mut self) {
+        self.points.sort_by(|a, b| a.epoch.partial_cmp(&b.epoch).unwrap());
+    }
+
     /// Merge another curve (e.g. from another node), keeping epoch order.
     pub fn merge(&mut self, other: &LossCurve) {
         self.points.extend_from_slice(&other.points);
-        self.points.sort_by(|a, b| a.epoch.partial_cmp(&b.epoch).unwrap());
+        self.sort_by_epoch();
     }
 
     /// Final loss (last point), if any.

@@ -44,14 +44,14 @@ fn xla_kind_fails_fast_with_rebuild_hint() {
 #[cfg(not(feature = "xla"))]
 #[test]
 fn experiment_with_xla_engine_reports_rebuild_hint() {
-    // End to end through run_experiment: the error must surface from the
+    // End to end through the session API: the error must surface from the
     // leader's factory resolution, not from a hung or panicked worker.
     let mut cfg = pff::config::ExperimentConfig::tiny();
     cfg.train_n = 32;
     cfg.test_n = 16;
     cfg.epochs = 8;
     cfg.engine = EngineKind::Xla;
-    let err = pff::coordinator::run_experiment(&cfg).unwrap_err();
+    let err = pff::coordinator::Experiment::builder().config(cfg).run().unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("--features xla"), "missing rebuild hint: {msg}");
 }

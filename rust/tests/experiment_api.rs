@@ -1,0 +1,276 @@
+//! The experiment session API: builder misuse, event-stream ordering,
+//! prompt cancellation, store injection, and custom schedulers through
+//! the registry.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use pff::config::{ExperimentConfig, Scheduler as SchedulerKind, TransportKind};
+use pff::coordinator::store::{MemStore, ParamStore};
+use pff::coordinator::{
+    schedulers, Experiment, NodeCtx, RunEvent, SchedulePlan, Scheduler, SchedulerRegistry,
+};
+use pff::ff::NegStrategy;
+
+/// Small, fast, deterministic config (pure mechanics, no accuracy bars).
+fn mech_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.neg = NegStrategy::Random;
+    cfg.train_n = 128;
+    cfg.test_n = 64;
+    cfg.epochs = 8;
+    cfg.splits = 8;
+    cfg
+}
+
+// --- builder misuse ---------------------------------------------------------
+
+#[test]
+fn launch_without_config_errors() {
+    let err = Experiment::builder().launch().unwrap_err();
+    assert!(err.to_string().contains(".config("), "unhelpful error: {err}");
+}
+
+#[test]
+fn double_launch_errors() {
+    let mut builder = Experiment::builder().config(mech_cfg());
+    let handle = builder.launch().unwrap();
+    let err = builder.launch().unwrap_err();
+    assert!(err.to_string().contains("already launched"), "{err}");
+    handle.join().unwrap();
+}
+
+#[test]
+fn invalid_config_fails_at_the_builder_boundary() {
+    // Validation happens exactly once, in launch() — no thread is spawned
+    // for a config that cannot run.
+    let mut cfg = mech_cfg();
+    cfg.epochs = 3;
+    cfg.splits = 2;
+    let err = Experiment::builder().config(cfg).launch().unwrap_err();
+    assert!(err.to_string().contains("divisible"), "{err}");
+}
+
+#[test]
+fn unknown_scheduler_name_fails_at_launch() {
+    let err = Experiment::builder()
+        .config(mech_cfg())
+        .scheduler_named("definitely-not-registered")
+        .launch()
+        .unwrap_err();
+    assert!(err.to_string().contains("registered:"), "{err}");
+}
+
+#[test]
+fn custom_store_over_tcp_is_rejected() {
+    let mut cfg = mech_cfg();
+    cfg.transport = TransportKind::Tcp;
+    cfg.scheduler = SchedulerKind::AllLayers;
+    cfg.nodes = 2;
+    let err = Experiment::builder()
+        .config(cfg)
+        .store(Arc::new(MemStore::new()))
+        .launch()
+        .unwrap_err();
+    assert!(err.to_string().contains("inproc"), "{err}");
+}
+
+// --- event stream -----------------------------------------------------------
+
+#[test]
+fn event_stream_is_ordered_and_done_is_terminal() {
+    let mut cfg = mech_cfg();
+    cfg.scheduler = SchedulerKind::AllLayers;
+    cfg.nodes = 2;
+    let handle = Experiment::builder().config(cfg.clone()).launch().unwrap();
+    // Subscribing AFTER launch must lose nothing (history replay).
+    let rx = handle.events();
+    handle.join().unwrap();
+
+    let events: Vec<RunEvent> = rx.try_iter().collect();
+    assert!(!events.is_empty());
+
+    // Done is terminal and unique.
+    assert!(matches!(events.last().unwrap(), RunEvent::Done { ok: true }));
+    let dones = events.iter().filter(|e| matches!(e, RunEvent::Done { .. })).count();
+    assert_eq!(dones, 1, "exactly one Done");
+
+    // Eval precedes Done.
+    let eval_pos = events.iter().position(|e| matches!(e, RunEvent::Eval { .. }));
+    assert!(eval_pos.is_some(), "an Eval event must be emitted");
+
+    // Every ChapterStarted precedes its ChapterFinished, pairwise per
+    // (node, chapter); every scheduled chapter appears exactly once.
+    let mut started: HashMap<(usize, u32), usize> = HashMap::new();
+    let mut finished = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        match ev {
+            RunEvent::ChapterStarted { node, chapter, .. } => {
+                assert!(
+                    started.insert((*node, *chapter), i).is_none(),
+                    "chapter ({node}, {chapter}) started twice"
+                );
+            }
+            RunEvent::ChapterFinished { node, chapter, .. } => {
+                let s = started
+                    .get(&(*node, *chapter))
+                    .unwrap_or_else(|| panic!("({node}, {chapter}) finished before starting"));
+                assert!(*s < i);
+                finished += 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(finished as u32, cfg.splits, "one finish per scheduled chapter");
+    assert_eq!(started.len() as u32, cfg.splits);
+
+    // Publishes carry wire accounting.
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, RunEvent::LayerPublished { wire_bytes, .. } if *wire_bytes > 0)));
+}
+
+#[test]
+fn observer_and_subscriber_see_the_same_stream() {
+    let seen = Arc::new(std::sync::Mutex::new(0usize));
+    let seen2 = seen.clone();
+    let handle = Experiment::builder()
+        .config(mech_cfg())
+        .observer(move |_| *seen2.lock().unwrap() += 1)
+        .launch()
+        .unwrap();
+    let rx = handle.events();
+    handle.join().unwrap();
+    let subscribed = rx.try_iter().count();
+    assert_eq!(*seen.lock().unwrap(), subscribed, "observer and channel diverged");
+}
+
+// --- cancellation -----------------------------------------------------------
+
+/// A scheduler that parks forever on a dependency nobody will publish —
+/// the shape of a wedged pipeline.
+struct Blocker;
+
+impl Scheduler for Blocker {
+    fn name(&self) -> &str {
+        "blocker"
+    }
+    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
+        SchedulePlan::round_robin(self.name(), cfg, false)
+    }
+    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
+        ctx.store.get_layer(999, 999, Duration::from_secs(600))?;
+        Ok(())
+    }
+}
+
+#[test]
+fn cancel_unblocks_a_store_waiting_run_promptly() {
+    let mut cfg = mech_cfg();
+    cfg.store_timeout_s = 600; // cancellation, not the timeout, must end this
+    let mut builder = Experiment::builder().config(cfg).scheduler(Blocker);
+    let handle = builder.launch().unwrap();
+    // Let the node actually park in the blocking get.
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(!handle.is_finished(), "blocker must still be parked");
+
+    let t0 = Instant::now();
+    handle.cancel();
+    assert!(handle.is_cancelled());
+    let err = handle.join().unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "cancel took {:?} — the store close should unblock immediately",
+        t0.elapsed()
+    );
+    assert!(format!("{err:#}").contains("cancelled"), "{err:#}");
+}
+
+#[test]
+fn cancelled_run_still_emits_terminal_done() {
+    let mut cfg = mech_cfg();
+    cfg.store_timeout_s = 600;
+    let handle = Experiment::builder().config(cfg).scheduler(Blocker).launch().unwrap();
+    let rx = handle.events();
+    std::thread::sleep(Duration::from_millis(50));
+    handle.cancel();
+    handle.join().unwrap_err();
+    let events: Vec<RunEvent> = rx.try_iter().collect();
+    assert!(
+        matches!(events.last(), Some(RunEvent::Done { ok: false })),
+        "cancelled run must close its stream with Done {{ ok: false }}: {events:?}"
+    );
+}
+
+// --- store injection --------------------------------------------------------
+
+#[test]
+fn injected_store_receives_the_published_model() {
+    let store = Arc::new(MemStore::new());
+    let mut cfg = mech_cfg();
+    cfg.scheduler = SchedulerKind::AllLayers;
+    cfg.nodes = 2;
+    let rep = Experiment::builder()
+        .config(cfg.clone())
+        .store(store.clone())
+        .run()
+        .unwrap();
+    // The injected store is the one the run wrote through.
+    let (chapter, params) = store.latest_layer(0).unwrap().unwrap();
+    assert_eq!(chapter, cfg.splits - 1);
+    assert_eq!(params.into_layer().0.w.data, rep.model.net.layers[0].w.data);
+    assert!(store.comm_stats().puts > 0);
+}
+
+// --- scheduler registry -----------------------------------------------------
+
+/// A custom strategy registered by name: delegates to the stock
+/// All-Layers node script but reports its own identity — the "new
+/// scheduler as an addition" path of the redesign.
+struct EchoAllLayers;
+
+impl Scheduler for EchoAllLayers {
+    fn name(&self) -> &str {
+        "echo-all-layers"
+    }
+    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
+        SchedulePlan::round_robin(self.name(), cfg, false)
+    }
+    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
+        schedulers::all_layers::run_node(ctx)
+    }
+}
+
+#[test]
+fn custom_scheduler_registered_by_name_runs_through_the_builder() {
+    SchedulerRegistry::global().register("echo-all-layers", || Arc::new(EchoAllLayers));
+
+    let mut cfg = mech_cfg();
+    cfg.scheduler = SchedulerKind::AllLayers; // parse-level alias stays valid
+    cfg.nodes = 2;
+    let stock = Experiment::builder().config(cfg.clone()).run().unwrap();
+    let custom = Experiment::builder()
+        .config(cfg)
+        .scheduler_named("echo-all-layers")
+        .run()
+        .unwrap();
+
+    assert_eq!(custom.scheduler, "echo-all-layers", "report carries the custom name");
+    assert_eq!(stock.scheduler, "all-layers");
+    // Identical node script + seeds ⇒ identical model, through either path.
+    for (a, b) in stock.model.net.layers.iter().zip(&custom.model.net.layers) {
+        assert_eq!(a.w.data, b.w.data, "custom registration must not change training");
+    }
+}
+
+#[test]
+fn scheduler_instance_overrides_the_config_enum() {
+    let mut cfg = mech_cfg();
+    cfg.scheduler = SchedulerKind::Sequential; // enum says sequential...
+    let rep = Experiment::builder().config(cfg).scheduler(EchoAllLayers).run().unwrap();
+    // ...but the instance wins (Sequential validation pins nodes = 1, so
+    // the round-robin plan degenerates to the same chapter order).
+    assert_eq!(rep.scheduler, "echo-all-layers");
+}

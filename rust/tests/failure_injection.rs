@@ -6,8 +6,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use pff::config::{ExperimentConfig, Scheduler};
-use pff::coordinator::run_experiment;
 use pff::coordinator::store::{MemStore, ParamStore};
+use pff::coordinator::Experiment;
 use pff::data::dataset::Dataset;
 use pff::data::synth::synth_mnist;
 use pff::engine::{Engine, NativeEngine};
@@ -60,7 +60,7 @@ fn all_zero_data_trains_without_nans() {
     let mut bundle = synth_mnist(64, 32, 1);
     bundle.train.x = Matrix::zeros(64, 784);
     bundle.test.x = Matrix::zeros(32, 784);
-    let rep = pff::coordinator::run_experiment_with_data(&cfg, &bundle).unwrap();
+    let rep = Experiment::builder().config(cfg).data(bundle).run().unwrap();
     for layer in &rep.model.net.layers {
         assert!(layer.w.data.iter().all(|v| v.is_finite()), "NaN weights on zero data");
     }
@@ -76,7 +76,7 @@ fn tiny_dataset_runs() {
     cfg.test_n = 10;
     cfg.batch = 64; // batch > n: one short batch per epoch
     cfg.neg = NegStrategy::Random;
-    let rep = run_experiment(&cfg).unwrap();
+    let rep = Experiment::builder().config(cfg).run().unwrap();
     assert!(rep.test_accuracy.is_finite());
 }
 

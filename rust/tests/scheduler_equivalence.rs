@@ -4,8 +4,14 @@
 //! and all schedulers must be deterministic in the seed.
 
 use pff::config::{ExperimentConfig, Scheduler, TransportKind};
-use pff::coordinator::run_experiment;
+use pff::coordinator::{Experiment, ExperimentReport};
 use pff::ff::{ClassifierMode, NegStrategy};
+
+/// Every run in this suite goes through the session API — the bitwise
+/// guarantees below therefore pin `Experiment::builder()` itself.
+fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
+    Experiment::builder().config(cfg.clone()).launch()?.join()
+}
 
 fn base_cfg() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::tiny();

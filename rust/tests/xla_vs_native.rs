@@ -184,7 +184,7 @@ fn end_to_end_xla_experiment_learns() {
     cfg.neg = pff::ff::NegStrategy::Random;
     cfg.scheduler = pff::config::Scheduler::AllLayers;
     cfg.nodes = 2;
-    let rep = pff::coordinator::run_experiment(&cfg).unwrap();
+    let rep = pff::coordinator::Experiment::builder().config(cfg).run().unwrap();
     assert!(
         rep.test_accuracy > 0.12,
         "XLA end-to-end should reach ≥ chance, got {:.1}%",
