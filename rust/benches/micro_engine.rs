@@ -12,7 +12,7 @@
 use pff::bench_util::{bench, fmt_s, BenchStats};
 use pff::engine::{Engine, NativeEngine};
 use pff::ff::{negative, FFLayer, FFNetwork, LinearHead};
-use pff::tensor::{AdamState, Matrix, Rng};
+use pff::tensor::{ops, pool, AdamState, Matrix, Rng};
 
 /// One named measurement, accumulated for the optional JSON artifact.
 struct Record {
@@ -20,10 +20,26 @@ struct Record {
     stats: BenchStats,
 }
 
+/// One thread-sweep measurement (the `threads` key of the artifact).
+struct ThreadRecord {
+    name: String,
+    threads: usize,
+    stats: BenchStats,
+}
+
 /// Collects records and mirrors them to stdout.
 #[derive(Default)]
 struct Report {
     records: Vec<Record>,
+    threads: Vec<ThreadRecord>,
+}
+
+fn record_json(name: &str, s: &BenchStats, extra: &str) -> String {
+    format!(
+        "{{\"name\": {name:?}, {extra}\"mean_s\": {:.9}, \"min_s\": {:.9}, \
+         \"p50_s\": {:.9}, \"iters\": {}}}",
+        s.mean_s, s.min_s, s.p50_s, s.iters
+    )
 }
 
 impl Report {
@@ -32,19 +48,31 @@ impl Report {
         self.records.push(Record { name, stats });
     }
 
-    /// Hand-rolled JSON (no serde offline): one object per record.
+    /// Record one sweep point. `name` stays free of measured values so
+    /// the artifact's `threads` records join across runs/PRs; the
+    /// throughput only decorates the stdout line.
+    fn add_threads(&mut self, name: String, threads: usize, gflops: f64, stats: BenchStats) {
+        println!("{}", stats.line(&format!("{name} ({gflops:.2} GFLOP/s)")));
+        self.threads.push(ThreadRecord { name, threads, stats });
+    }
+
+    /// Hand-rolled JSON (no serde offline): one object per record, plus
+    /// the `threads` sweep tracking parallel-kernel scaling over PRs.
     fn to_json(&self) -> String {
         let mut out = String::from("{\n  \"bench\": \"micro_engine\",\n  \"records\": [\n");
         for (i, r) in self.records.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"name\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \
-                 \"p50_s\": {:.9}, \"iters\": {}}}{}\n",
-                r.name,
-                r.stats.mean_s,
-                r.stats.min_s,
-                r.stats.p50_s,
-                r.stats.iters,
+                "    {}{}\n",
+                record_json(&r.name, &r.stats, ""),
                 if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n  \"threads\": [\n");
+        for (i, r) in self.threads.iter().enumerate() {
+            out.push_str(&format!(
+                "    {}{}\n",
+                record_json(&r.name, &r.stats, &format!("\"threads\": {}, ", r.threads)),
+                if i + 1 < self.threads.len() { "," } else { "" }
             ));
         }
         out.push_str("  ]\n}\n");
@@ -163,6 +191,51 @@ fn xla_micro(_report: &mut Report, _warmup: u32, _iters: u32) {
     println!("\n(xla feature disabled — rebuild with `--features xla` for XLA micro-benches)");
 }
 
+/// Thread-count sweep over the paper-shape kernels (784×2000) and the
+/// full FF train step. Kernels are bit-identical at every count, so this
+/// measures pure scaling; the records land under the artifact's `threads`
+/// key so CI tracks the parallel-runtime trajectory from this PR onward.
+fn threads_sweep(report: &mut Report, quick: bool) {
+    println!("\n── micro: thread-count sweep (bit-deterministic parallel kernels) ──");
+    let (mm_warmup, mm_iters, step_iters) = if quick { (1, 2, 2) } else { (2, 8, 4) };
+    let counts = [1usize, 2, 4, 8];
+    let mut rng = Rng::new(42);
+    let w = Matrix::rand_uniform(784, 2000, -0.05, 0.05, &mut rng);
+    for batch in [128usize, 512] {
+        let a = Matrix::rand_uniform(batch, 784, 0.0, 1.0, &mut rng);
+        let flops = 2.0 * batch as f64 * 784.0 * 2000.0;
+        for t in counts {
+            pool::set_threads(t);
+            let s = bench(mm_warmup, mm_iters, || {
+                std::hint::black_box(ops::matmul(&a, &w));
+            });
+            let gflops = flops / s.min_s / 1e9;
+            report.add_threads(format!("matmul 784x2000 b{batch} t{t}"), t, gflops, s);
+        }
+    }
+
+    let batch = 128usize;
+    let x_pos = Matrix::rand_uniform(batch, 784, 0.0, 1.0, &mut rng);
+    let x_neg = Matrix::rand_uniform(batch, 784, 0.0, 1.0, &mut rng);
+    let flops = 4.0 * (2 * batch) as f64 * 784.0 * 2000.0;
+    for t in counts {
+        // Fresh identically-seeded layer/opt/engine per count so every
+        // sweep point measures the same work (same weights, same ReLU
+        // sparsity, workspace warmed by the warmup iteration) and the
+        // artifact's t=1 vs t=N ratio is pure scaling.
+        let mut step_rng = Rng::new(7);
+        let mut layer = FFLayer::new(784, 2000, false, &mut step_rng);
+        let mut opt = AdamState::new(784, 2000);
+        let mut eng = NativeEngine::new();
+        pool::set_threads(t);
+        let s = bench(1, step_iters, || {
+            eng.ff_train_step(&mut layer, &mut opt, &x_pos, &x_neg, 2.0, 0.01).unwrap();
+        });
+        report.add_threads(format!("ff_step 784x2000 b{batch} t{t}"), t, flops / s.min_s / 1e9, s);
+    }
+    pool::set_threads(0); // back to the env/auto default for later sections
+}
+
 fn main() {
     let opts = parse_opts();
     let mut report = Report::default();
@@ -194,6 +267,8 @@ fn main() {
         "        per-sample cost {} — vs one ff_step costing ~the same per 128 samples",
         fmt_s(per_sample)
     );
+
+    threads_sweep(&mut report, opts.quick);
 
     xla_micro(&mut report, warmup, iters);
 

@@ -183,6 +183,10 @@ pub struct ExperimentConfig {
     pub tcp_port: u16,
     /// Blocking-get timeout (seconds) — deadlock tripwire.
     pub store_timeout_s: u64,
+    /// Kernel worker threads per process for the parallel tensor runtime
+    /// (`--threads`). 0 = auto: `PFF_THREADS` env, else all cores. Results
+    /// are bit-identical at every value — only wall-clock changes.
+    pub threads: usize,
     /// Print per-chapter progress lines.
     pub verbose: bool,
 }
@@ -219,6 +223,7 @@ impl Default for ExperimentConfig {
             cluster: false,
             tcp_port: 0,
             store_timeout_s: 300,
+            threads: 0,
             verbose: false,
         }
     }
@@ -384,6 +389,7 @@ impl ExperimentConfig {
             "cluster" => self.cluster = parse_bool(v)?,
             "tcp_port" => self.tcp_port = v.parse()?,
             "store_timeout_s" => self.store_timeout_s = v.parse()?,
+            "threads" => self.threads = v.parse()?,
             "verbose" => self.verbose = parse_bool(v)?,
             other => bail!("unknown config key '{other}'"),
         }
@@ -461,6 +467,7 @@ impl ExperimentConfig {
         kv(&mut out, "cluster", self.cluster);
         kv(&mut out, "tcp_port", self.tcp_port);
         kv(&mut out, "store_timeout_s", self.store_timeout_s);
+        kv(&mut out, "threads", self.threads);
         kv(&mut out, "verbose", self.verbose);
         out
     }
@@ -569,6 +576,7 @@ mod tests {
         cfg.cluster = true;
         cfg.tcp_port = 7441;
         cfg.lr_head = 0.00025;
+        cfg.threads = 6;
         cfg.verbose = true;
 
         let mut parsed = ExperimentConfig::default();

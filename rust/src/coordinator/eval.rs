@@ -83,19 +83,26 @@ pub fn train_head_posthoc(
 }
 
 /// Evaluate the model on `data` (chunked), per the configured classifier.
+///
+/// Batched + parallel: the per-chunk gather is one contiguous memcpy
+/// ([`crate::tensor::Matrix::rows_range`]) and the chunk size scales with
+/// the kernel thread count, so the big stacked goodness matmuls inside
+/// keep every worker busy. Rows are scored independently, so neither the
+/// chunk size nor the thread count changes a single output bit.
 pub fn evaluate(
     eng: &mut dyn Engine,
     model: &TrainedModel,
     data: &Dataset,
     cfg: &ExperimentConfig,
 ) -> Result<f64> {
-    let chunk = cfg.eval_chunk.max(1);
+    // Batch factor capped at 8: past that the stacked goodness tensor's
+    // footprint grows faster than the parallel win.
+    let chunk = cfg.eval_chunk.max(1) * crate::tensor::pool::current_threads().clamp(1, 8);
     let mut preds: Vec<u8> = Vec::with_capacity(data.len());
     let mut r0 = 0;
     while r0 < data.len() {
         let r1 = (r0 + chunk).min(data.len());
-        let rows: Vec<usize> = (r0..r1).collect();
-        let xb = data.x.gather_rows(&rows);
+        let xb = data.x.rows_range(r0, r1);
         let mut p = if cfg.perfopt {
             perfopt_predict(eng, &model.net, &model.layer_heads, &xb, cfg.perfopt_readout)?
         } else {

@@ -53,6 +53,12 @@ pub enum RunEvent {
         /// Mean training loss of the chapter (last layer's, for
         /// whole-network chapters).
         loss: f32,
+        /// Seconds of compute (train/forward/publish/neg-gen spans) inside
+        /// the chapter — the kernel-time half of the perf split.
+        busy_s: f64,
+        /// Seconds blocked on store dependencies (wait spans) inside the
+        /// chapter — the coordination half of the perf split.
+        wait_s: f64,
     },
     /// A node published layer parameters to the store. `layer` values of
     /// [`crate::coordinator::schedulers::HEAD_SLOT_BASE`] and above are
@@ -103,11 +109,19 @@ impl std::fmt::Display for RunEvent {
             RunEvent::ChapterStarted { node, layer: None, chapter } => {
                 write!(f, "node {node}: chapter {chapter} started")
             }
-            RunEvent::ChapterFinished { node, layer: Some(l), chapter, loss } => {
-                write!(f, "node {node}: chapter {chapter} finished (layer {l}, loss {loss:.4})")
+            RunEvent::ChapterFinished { node, layer: Some(l), chapter, loss, busy_s, wait_s } => {
+                write!(
+                    f,
+                    "node {node}: chapter {chapter} finished (layer {l}, loss {loss:.4}, \
+                     busy {busy_s:.2}s, wait {wait_s:.2}s)"
+                )
             }
-            RunEvent::ChapterFinished { node, layer: None, chapter, loss } => {
-                write!(f, "node {node}: chapter {chapter} finished (loss {loss:.4})")
+            RunEvent::ChapterFinished { node, layer: None, chapter, loss, busy_s, wait_s } => {
+                write!(
+                    f,
+                    "node {node}: chapter {chapter} finished (loss {loss:.4}, \
+                     busy {busy_s:.2}s, wait {wait_s:.2}s)"
+                )
             }
             RunEvent::LayerPublished { node, layer, chapter, wire_bytes } => {
                 let b = wire_bytes;
@@ -247,16 +261,21 @@ impl EventLog {
     }
 
     /// Write the log as CSV (one row per event, empty cells where a column
-    /// does not apply).
+    /// does not apply). `busy_s`/`wait_s` carry the per-chapter
+    /// compute/wait split so perf analyses can separate kernel time from
+    /// store-wait time straight from `--event-csv` output.
     pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        let header = ["event", "node", "layer", "chapter", "loss", "wire_bytes", "accuracy", "ok"];
+        let header = [
+            "event", "node", "layer", "chapter", "loss", "wire_bytes", "accuracy", "ok", "busy_s",
+            "wait_s",
+        ];
         let rows: Vec<Vec<String>> = self.snapshot().iter().map(csv_row).collect();
         crate::metrics::csv::write_csv(path, &header, &rows)
     }
 }
 
 fn csv_row(ev: &RunEvent) -> Vec<String> {
-    let mut row = vec![String::new(); 8];
+    let mut row = vec![String::new(); 10];
     match ev {
         RunEvent::WorkersRegistered { workers } => {
             row[0] = "workers_registered".into();
@@ -268,12 +287,14 @@ fn csv_row(ev: &RunEvent) -> Vec<String> {
             row[2] = layer.map(|l| l.to_string()).unwrap_or_default();
             row[3] = chapter.to_string();
         }
-        RunEvent::ChapterFinished { node, layer, chapter, loss } => {
+        RunEvent::ChapterFinished { node, layer, chapter, loss, busy_s, wait_s } => {
             row[0] = "chapter_finished".into();
             row[1] = node.to_string();
             row[2] = layer.map(|l| l.to_string()).unwrap_or_default();
             row[3] = chapter.to_string();
             row[4] = format!("{loss}");
+            row[8] = format!("{busy_s:.6}");
+            row[9] = format!("{wait_s:.6}");
         }
         RunEvent::LayerPublished { node, layer, chapter, wire_bytes } => {
             row[0] = "layer_published".into();
@@ -304,11 +325,22 @@ fn csv_row(ev: &RunEvent) -> Vec<String> {
 mod tests {
     use super::*;
 
+    fn finished(node: usize, chapter: u32, loss: f32) -> RunEvent {
+        RunEvent::ChapterFinished {
+            node,
+            layer: None,
+            chapter,
+            loss,
+            busy_s: 0.25,
+            wait_s: 0.05,
+        }
+    }
+
     #[test]
     fn subscribe_replays_history() {
         let bus = EventBus::new();
         bus.emit(RunEvent::ChapterStarted { node: 0, layer: None, chapter: 0 });
-        bus.emit(RunEvent::ChapterFinished { node: 0, layer: None, chapter: 0, loss: 0.5 });
+        bus.emit(finished(0, 0, 0.5));
         let rx = bus.subscribe();
         bus.emit(RunEvent::Done { ok: true });
         let got: Vec<RunEvent> = rx.try_iter().collect();
@@ -342,8 +374,8 @@ mod tests {
     fn event_log_curve_and_csv() {
         let log = EventLog::new();
         // out-of-order chapters, as concurrent nodes produce them
-        log.record(&RunEvent::ChapterFinished { node: 1, layer: None, chapter: 1, loss: 0.4 });
-        log.record(&RunEvent::ChapterFinished { node: 0, layer: None, chapter: 0, loss: 0.8 });
+        log.record(&finished(1, 1, 0.4));
+        log.record(&finished(0, 0, 0.8));
         log.record(&RunEvent::LayerPublished { node: 0, layer: 2, chapter: 0, wire_bytes: 64 });
         log.record(&RunEvent::Eval { accuracy: 0.75 });
         let curve = log.chapter_curve(4);
@@ -355,17 +387,28 @@ mod tests {
         let path = dir.join("events.csv");
         log.write_csv(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.starts_with("event,node,layer,chapter,loss,wire_bytes,accuracy,ok\n"));
-        assert!(text.contains("layer_published,0,2,0,,64,,"));
+        assert!(
+            text.starts_with("event,node,layer,chapter,loss,wire_bytes,accuracy,ok,busy_s,wait_s\n")
+        );
+        assert!(text.contains("layer_published,0,2,0,,64,,,,"));
+        assert!(text.contains("chapter_finished,0,,0,0.8,,,,0.250000,0.050000"));
         assert!(text.contains("eval,"));
         std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]
     fn display_is_human_readable() {
-        let s = RunEvent::ChapterFinished { node: 2, layer: Some(1), chapter: 3, loss: 0.25 }
-            .to_string();
+        let s = RunEvent::ChapterFinished {
+            node: 2,
+            layer: Some(1),
+            chapter: 3,
+            loss: 0.25,
+            busy_s: 1.5,
+            wait_s: 0.25,
+        }
+        .to_string();
         assert!(s.contains("node 2") && s.contains("chapter 3") && s.contains("0.2500"), "{s}");
+        assert!(s.contains("busy 1.50s") && s.contains("wait 0.25s"), "{s}");
         assert_eq!(RunEvent::Done { ok: true }.to_string(), "done");
     }
 }

@@ -276,6 +276,10 @@ fn run_session(
     bus: EventBus,
     cancel: CancelToken,
 ) -> Result<ExperimentReport> {
+    // Size the parallel kernel runtime for this run (0 = PFF_THREADS env,
+    // else all cores). Kernels are bit-identical at every thread count,
+    // so this only moves wall-clock.
+    crate::tensor::pool::set_threads(cfg.threads);
     let bundle = match data {
         Some(b) => b,
         None => Arc::new(load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?),

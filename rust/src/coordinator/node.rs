@@ -444,6 +444,9 @@ pub fn run_worker(
         "worker mode needs transport = tcp (got {:?})",
         cfg.transport
     );
+    // Workers size their kernel runtime from the shared config, exactly
+    // like the in-proc session path.
+    crate::tensor::pool::set_threads(cfg.threads);
     let scheduler = crate::coordinator::schedulers::for_config(&cfg)?;
     let name = format!("worker-{}", std::process::id());
     let client = TcpStoreClient::connect_worker_retry(addr, requested_id, &name, connect_wait)?;

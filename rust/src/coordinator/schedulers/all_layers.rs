@@ -38,12 +38,21 @@ pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
     for &chapter in &my_chapters {
         ctx.ensure_live()?;
         ctx.emit(RunEvent::ChapterStarted { node: ctx.node_id, layer: None, chapter });
+        let mark = ctx.rec.mark();
         let loss = if ctx.cfg.perfopt {
             run_chapter_perfopt(ctx, chapter, n_layers)?
         } else {
             run_chapter_ff(ctx, chapter, n_layers, &mut pending_adaptive)?
         };
-        ctx.emit(RunEvent::ChapterFinished { node: ctx.node_id, layer: None, chapter, loss });
+        let (busy_s, wait_s) = ctx.rec.split_since(mark);
+        ctx.emit(RunEvent::ChapterFinished {
+            node: ctx.node_id,
+            layer: None,
+            chapter,
+            loss,
+            busy_s,
+            wait_s,
+        });
     }
     Ok(())
 }

@@ -44,6 +44,7 @@ pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
     for chapter in 0..splits {
         ctx.ensure_live()?;
         ctx.emit(RunEvent::ChapterStarted { node: ctx.node_id, layer: Some(my_layer), chapter });
+        let mark = ctx.rec.mark();
         let loss = if ctx.cfg.perfopt {
             run_chapter_perfopt(
                 ctx,
@@ -66,11 +67,14 @@ pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
                 &mut cls_opt,
             )?
         };
+        let (busy_s, wait_s) = ctx.rec.split_since(mark);
         ctx.emit(RunEvent::ChapterFinished {
             node: ctx.node_id,
             layer: Some(my_layer),
             chapter,
             loss,
+            busy_s,
+            wait_s,
         });
     }
     Ok(())

@@ -11,7 +11,11 @@
 //!   Python is never involved at run time.
 //!
 //! Engines are deliberately `&mut self`: the XLA engine caches compiled
-//! executables and scratch buffers keyed by shape.
+//! executables and scratch buffers keyed by shape, and the native engine
+//! owns a [`crate::tensor::Workspace`] buffer arena so its steady-state
+//! train steps allocate nothing. Native kernels run multi-threaded over
+//! [`crate::tensor::pool`] (`--threads` / `PFF_THREADS`) and are
+//! bit-identical at every thread count.
 
 pub mod native;
 #[cfg(feature = "xla")]

@@ -5,12 +5,22 @@
 //! pins the two against each other through the AOT artifacts, and
 //! `python/tests/test_kernel.py` pins the Pallas kernels against the jnp
 //! oracle — so all three implementations agree.
+//!
+//! Compute runs through the multi-threaded kernels in
+//! [`crate::tensor::ops`] (bit-identical at every thread count), and every
+//! per-step scratch tensor comes from a [`Workspace`] arena the engine
+//! owns: steady-state `ff_train_step` / `head_train_step` /
+//! `perfopt_train_step` perform **zero heap allocation** (pinned by the
+//! workspace-reuse test below). When `normalize_input` is off the input is
+//! borrowed (`Cow::Borrowed`) instead of cloned.
+
+use std::borrow::Cow;
 
 use anyhow::Result;
 
 use crate::engine::Engine;
 use crate::ff::layer::{FFLayer, FFStepStats, LinearHead};
-use crate::tensor::{ops, AdamState, Matrix};
+use crate::tensor::{ops, AdamState, Matrix, Workspace};
 
 /// Epsilon for length normalization — matches `kernels/ref.py::EPS`.
 pub const NORM_EPS: f32 = 1e-8;
@@ -18,22 +28,47 @@ pub const NORM_EPS: f32 = 1e-8;
 /// Pure-Rust [`Engine`].
 #[derive(Default, Debug, Clone)]
 pub struct NativeEngine {
-    _private: (),
+    ws: Workspace,
 }
 
 impl NativeEngine {
-    /// Construct (stateless; cheap).
+    /// Construct (cheap; the workspace arena fills lazily).
     pub fn new() -> Self {
-        NativeEngine { _private: () }
+        NativeEngine { ws: Workspace::default() }
+    }
+
+    /// Times the workspace could not serve a buffer from its free list —
+    /// must stop growing once training reaches steady state (the
+    /// zero-alloc acceptance knob).
+    pub fn workspace_fresh_allocs(&self) -> usize {
+        self.ws.fresh_allocs()
+    }
+
+    /// Park every scratch buffer of a step back into the arena.
+    fn recycle_xn(&mut self, xn: Cow<'_, Matrix>) {
+        if let Cow::Owned(m) = xn {
+            self.ws.recycle(m);
+        }
     }
 }
 
-/// Forward pass returning both the (possibly normalized) input actually fed
-/// to the matmul and the ReLU output — the train step needs `x̂` for the
-/// weight gradient.
-fn forward_parts(layer: &FFLayer, x: &Matrix) -> (Matrix, Matrix) {
-    let xn = if layer.normalize_input { ops::normalize_rows(x, NORM_EPS) } else { x.clone() };
-    let mut z = ops::matmul(&xn, &layer.w);
+/// Forward pass returning both the input actually fed to the matmul —
+/// borrowed when no normalization is needed, arena-backed otherwise — and
+/// the ReLU output; the train step needs `x̂` for the weight gradient.
+fn forward_parts<'a>(
+    ws: &mut Workspace,
+    layer: &FFLayer,
+    x: &'a Matrix,
+) -> (Cow<'a, Matrix>, Matrix) {
+    let xn: Cow<'a, Matrix> = if layer.normalize_input {
+        let mut n = ws.matrix(x.rows, x.cols);
+        ops::normalize_rows_into(&mut n, x, NORM_EPS);
+        Cow::Owned(n)
+    } else {
+        Cow::Borrowed(x)
+    };
+    let mut z = ws.matrix(x.rows, layer.d_out());
+    ops::matmul_into(&mut z, xn.as_ref(), &layer.w);
     ops::add_bias(&mut z, &layer.b);
     ops::relu_inplace(&mut z);
     (xn, z)
@@ -45,7 +80,9 @@ impl Engine for NativeEngine {
     }
 
     fn layer_forward(&mut self, layer: &FFLayer, x: &Matrix) -> Result<Matrix> {
-        Ok(forward_parts(layer, x).1)
+        let (xn, z) = forward_parts(&mut self.ws, layer, x);
+        self.recycle_xn(xn);
+        Ok(z)
     }
 
     fn ff_train_step(
@@ -61,8 +98,10 @@ impl Engine for NativeEngine {
         let b = x_pos.rows as f32;
         // One fused batch: rows [0, B) positive, [B, 2B) negative — same
         // layout the L1 kernel uses so a single matmul covers both passes.
-        let x = x_pos.vcat(x_neg);
-        let (xn, y) = forward_parts(layer, &x);
+        let mut x = self.ws.matrix(x_pos.rows * 2, x_pos.cols);
+        x.data[..x_pos.data.len()].copy_from_slice(&x_pos.data);
+        x.data[x_pos.data.len()..].copy_from_slice(&x_neg.data);
+        let (xn, y) = forward_parts(&mut self.ws, layer, &x);
         // Goodness = MEAN of squared activations (paper Eq. 1 with the
         // 1/D "threshold coefficient" folded in). Mean — not sum — so a
         // fresh layer starts with g ≪ θ and the positive pass dominates
@@ -71,13 +110,17 @@ impl Engine for NativeEngine {
         // whole layer (dead-ReLU collapse). Matches the reference FF
         // implementations.
         let d_out = layer.d_out() as f32;
-        let g: Vec<f32> = ops::row_sumsq(&y).into_iter().map(|v| v / d_out).collect();
+        let n_rows = x.rows;
+        let mut g = self.ws.vec(n_rows);
+        ops::row_sumsq_into(&mut g, &y);
+        for v in &mut g {
+            *v /= d_out;
+        }
 
         let mut stats = FFStepStats::default();
         // dL/dg per row, with the 1/(2B) batch-mean and the dg/dy = 2y/D
         // chain factor folded in below.
-        let n_rows = x.rows;
-        let mut coef = vec![0.0f32; n_rows];
+        let mut coef = self.ws.vec(n_rows);
         for (i, &gi) in g.iter().enumerate() {
             if i < x_pos.rows {
                 // positive: L = softplus(θ - g), dL/dg = -σ(θ - g)
@@ -105,14 +148,24 @@ impl Engine for NativeEngine {
                 *v *= c;
             }
         }
-        let dw = ops::matmul_at_b(&xn, &dz);
-        let db = ops::col_sum(&dz);
+        let mut dw = self.ws.matrix(layer.d_in(), layer.d_out());
+        ops::matmul_at_b_into(&mut dw, xn.as_ref(), &dz);
+        let mut db = self.ws.vec(layer.d_out());
+        ops::col_sum_into(&mut db, &dz);
         opt.step(&mut layer.w, &mut layer.b, &dw, &db, lr);
+        self.recycle_xn(xn);
+        self.ws.recycle(x);
+        self.ws.recycle(dz);
+        self.ws.recycle(dw);
+        self.ws.recycle_vec(db);
+        self.ws.recycle_vec(g);
+        self.ws.recycle_vec(coef);
         Ok(stats)
     }
 
     fn head_logits(&mut self, head: &LinearHead, x: &Matrix) -> Result<Matrix> {
-        let mut z = ops::matmul(x, &head.w);
+        let mut z = self.ws.matrix(x.rows, head.w.cols);
+        ops::matmul_into(&mut z, x, &head.w);
         ops::add_bias(&mut z, &head.b);
         Ok(z)
     }
@@ -126,11 +179,10 @@ impl Engine for NativeEngine {
         lr: f32,
     ) -> Result<f32> {
         assert_eq!(x.rows, labels.len());
-        let logits = self.head_logits(head, x)?;
-        let p = ops::softmax_rows(&logits);
-        let loss = ops::cross_entropy(&p, labels);
+        let mut dlogits = self.head_logits(head, x)?;
+        ops::softmax_rows_inplace(&mut dlogits);
+        let loss = ops::cross_entropy(&dlogits, labels);
         // dlogits = (p - onehot) / B
-        let mut dlogits = p;
         let inv_b = 1.0 / x.rows as f32;
         for (r, &l) in labels.iter().enumerate() {
             let row = dlogits.row_mut(r);
@@ -139,9 +191,14 @@ impl Engine for NativeEngine {
                 *v *= inv_b;
             }
         }
-        let dw = ops::matmul_at_b(x, &dlogits);
-        let db = ops::col_sum(&dlogits);
+        let mut dw = self.ws.matrix(head.w.rows, head.w.cols);
+        ops::matmul_at_b_into(&mut dw, x, &dlogits);
+        let mut db = self.ws.vec(head.w.cols);
+        ops::col_sum_into(&mut db, &dlogits);
         opt.step(&mut head.w, &mut head.b, &dw, &db, lr);
+        self.ws.recycle(dlogits);
+        self.ws.recycle(dw);
+        self.ws.recycle_vec(db);
         Ok(loss)
     }
 
@@ -156,13 +213,13 @@ impl Engine for NativeEngine {
         lr: f32,
     ) -> Result<f32> {
         assert_eq!(x.rows, labels.len());
-        let (xn, y) = forward_parts(layer, x);
-        let mut logits = ops::matmul(&y, &head.w);
-        ops::add_bias(&mut logits, &head.b);
-        let p = ops::softmax_rows(&logits);
-        let loss = ops::cross_entropy(&p, labels);
+        let (xn, y) = forward_parts(&mut self.ws, layer, x);
+        let mut dlogits = self.ws.matrix(x.rows, head.w.cols);
+        ops::matmul_into(&mut dlogits, &y, &head.w);
+        ops::add_bias(&mut dlogits, &head.b);
+        ops::softmax_rows_inplace(&mut dlogits);
+        let loss = ops::cross_entropy(&dlogits, labels);
 
-        let mut dlogits = p;
         let inv_b = 1.0 / x.rows as f32;
         for (r, &l) in labels.iter().enumerate() {
             let row = dlogits.row_mut(r);
@@ -172,20 +229,33 @@ impl Engine for NativeEngine {
             }
         }
         // Head gradients.
-        let dwh = ops::matmul_at_b(&y, &dlogits);
-        let dbh = ops::col_sum(&dlogits);
+        let mut dwh = self.ws.matrix(head.w.rows, head.w.cols);
+        ops::matmul_at_b_into(&mut dwh, &y, &dlogits);
+        let mut dbh = self.ws.vec(head.w.cols);
+        ops::col_sum_into(&mut dbh, &dlogits);
         // Layer gradients through ReLU: dz = (dlogits · Wᵀ) ⊙ [y > 0].
-        let mut dz = ops::matmul_a_bt(&dlogits, &head.w);
+        let mut dz = self.ws.matrix(x.rows, head.w.rows);
+        ops::matmul_a_bt_into(&mut dz, &dlogits, &head.w);
         for (dv, yv) in dz.data.iter_mut().zip(&y.data) {
             if *yv <= 0.0 {
                 *dv = 0.0;
             }
         }
-        let dwl = ops::matmul_at_b(&xn, &dz);
-        let dbl = ops::col_sum(&dz);
+        let mut dwl = self.ws.matrix(layer.d_in(), layer.d_out());
+        ops::matmul_at_b_into(&mut dwl, xn.as_ref(), &dz);
+        let mut dbl = self.ws.vec(layer.d_out());
+        ops::col_sum_into(&mut dbl, &dz);
         // Gradients stop here — x̂'s producer is never touched (§4.4).
         opt_head.step(&mut head.w, &mut head.b, &dwh, &dbh, lr);
         opt_layer.step(&mut layer.w, &mut layer.b, &dwl, &dbl, lr);
+        self.recycle_xn(xn);
+        self.ws.recycle(y);
+        self.ws.recycle(dlogits);
+        self.ws.recycle(dwh);
+        self.ws.recycle(dz);
+        self.ws.recycle(dwl);
+        self.ws.recycle_vec(dbh);
+        self.ws.recycle_vec(dbl);
         Ok(loss)
     }
 }
@@ -239,6 +309,46 @@ mod tests {
             last.margin()
         );
         assert!(last.loss() < first.loss(), "loss should fall");
+    }
+
+    /// Steady-state training must not touch the allocator: after a warmup
+    /// step per shape, every scratch buffer comes from the workspace arena
+    /// (the PR's zero-alloc acceptance criterion).
+    #[test]
+    fn train_steps_are_zero_alloc_in_steady_state() {
+        let (mut layer, mut opt, mut rng) = setup(24, 40, true, 8);
+        let mut eng = NativeEngine::new();
+        let x_pos = Matrix::rand_uniform(16, 24, 0.0, 1.0, &mut rng);
+        let x_neg = Matrix::rand_uniform(16, 24, 0.0, 1.0, &mut rng);
+        let labels: Vec<u8> = (0..16).map(|i| (i % 4) as u8).collect();
+        let mut head = LinearHead::new(24, 4, &mut rng);
+        let mut hopt = AdamState::new(24, 4);
+        let mut po_layer = FFLayer::new(24, 40, false, &mut rng);
+        let mut po_head = LinearHead::new(40, 4, &mut rng);
+        let (mut po_lo, mut po_ho) = (AdamState::new(24, 40), AdamState::new(40, 4));
+
+        for _ in 0..3 {
+            eng.ff_train_step(&mut layer, &mut opt, &x_pos, &x_neg, 2.0, 0.01).unwrap();
+            eng.head_train_step(&mut head, &mut hopt, &x_pos, &labels, 0.01).unwrap();
+            eng.perfopt_train_step(
+                &mut po_layer, &mut po_head, &mut po_lo, &mut po_ho, &x_pos, &labels, 0.01,
+            )
+            .unwrap();
+        }
+        let baseline = eng.workspace_fresh_allocs();
+        for _ in 0..32 {
+            eng.ff_train_step(&mut layer, &mut opt, &x_pos, &x_neg, 2.0, 0.01).unwrap();
+            eng.head_train_step(&mut head, &mut hopt, &x_pos, &labels, 0.01).unwrap();
+            eng.perfopt_train_step(
+                &mut po_layer, &mut po_head, &mut po_lo, &mut po_ho, &x_pos, &labels, 0.01,
+            )
+            .unwrap();
+        }
+        assert_eq!(
+            eng.workspace_fresh_allocs(),
+            baseline,
+            "steady-state train steps must reuse arena buffers, not allocate"
+        );
     }
 
     /// Without normalization a layer could pass goodness straight through;
@@ -312,7 +422,8 @@ mod tests {
 
         let d_out = 5.0f32;
         let loss_of = |l: &FFLayer| -> f64 {
-            let (_, y) = forward_parts(l, &x_pos.vcat(&x_neg));
+            let mut ws = Workspace::new();
+            let (_, y) = forward_parts(&mut ws, l, &x_pos.vcat(&x_neg));
             let g: Vec<f32> = ops::row_sumsq(&y).iter().map(|v| v / d_out).collect();
             let b = x_pos.rows as f64;
             let mut loss = 0.0f64;
@@ -324,7 +435,9 @@ mod tests {
         };
 
         // Analytic gradient via the same code path the engine uses.
-        let (xn, y) = forward_parts(&layer, &x_pos.vcat(&x_neg));
+        let mut ws = Workspace::new();
+        let x = x_pos.vcat(&x_neg); // bound: xn borrows it past this statement
+        let (xn, y) = forward_parts(&mut ws, &layer, &x);
         let g: Vec<f32> = ops::row_sumsq(&y).iter().map(|v| v / d_out).collect();
         let mut dz = y.clone();
         let scale = 1.0 / (2.0 * x_pos.rows as f32 * d_out);
@@ -339,7 +452,7 @@ mod tests {
                 *v *= c;
             }
         }
-        let dw = ops::matmul_at_b(&xn, &dz);
+        let dw = ops::matmul_at_b(xn.as_ref(), &dz);
 
         // Finite differences on a handful of entries.
         let h = 1e-3f32;

@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::engine::Engine;
 use crate::ff::network::FFNetwork;
-use crate::ff::overlay::{overlay_neutral, overlay_uniform_label};
+use crate::ff::overlay::overlay_neutral;
 use crate::ff::LinearHead;
 use crate::tensor::{ops, Matrix};
 
@@ -46,12 +46,20 @@ impl std::fmt::Display for ClassifierMode {
 pub fn goodness_scores(eng: &mut dyn Engine, net: &FFNetwork, x: &Matrix) -> Result<Matrix> {
     let n = x.rows;
     let classes = net.classes;
-    // rows [c*n, (c+1)*n) hold overlay class c.
-    let mut stacked = Matrix::zeros(n * classes, x.cols);
+    assert!(x.cols >= classes, "input dim {} < classes {classes}", x.cols);
+    // rows [c*n, (c+1)*n) hold overlay class c — appended straight into
+    // reserved capacity (no zero-fill pass, no per-class intermediate).
+    let mut data = Vec::with_capacity(n * classes * x.cols);
     for c in 0..classes {
-        let block = overlay_uniform_label(x, c as u8, classes);
-        stacked.data[c * n * x.cols..(c + 1) * n * x.cols].copy_from_slice(&block.data);
+        let start = data.len();
+        data.extend_from_slice(&x.data);
+        for r in 0..n {
+            let overlay = &mut data[start + r * x.cols..start + r * x.cols + classes];
+            overlay.fill(0.0);
+            overlay[c] = 1.0;
+        }
     }
+    let stacked = Matrix::from_vec(n * classes, x.cols, data);
     let mut scores = Matrix::zeros(n, classes);
     let mut h = stacked;
     for (l, layer) in net.layers.iter().enumerate() {

@@ -66,8 +66,7 @@ pub fn adaptive_neg_labels(
     let mut r0 = 0;
     while r0 < x.rows {
         let r1 = (r0 + chunk).min(x.rows);
-        let rows: Vec<usize> = (r0..r1).collect();
-        let xb = x.gather_rows(&rows);
+        let xb = x.rows_range(r0, r1);
         let scores = goodness_scores(eng, net, &xb)?;
         for (i, &t) in truth[r0..r1].iter().enumerate() {
             let row = scores.row(i);

@@ -84,7 +84,9 @@ fn print_help() {
          \u{20}  simulate           DES one schedule at paper scale (--variant, --nodes, --neg)\n\
          \u{20}  inspect-artifacts  list AOT artifacts and compile them\n\n\
          config keys (train): scheduler, neg, classifier, perfopt, dims, epochs, splits,\n\
-         \u{20}  nodes, batch, dataset, engine, transport, seed, theta, lr_ff, lr_head, ...\n"
+         \u{20}  nodes, batch, dataset, engine, transport, seed, theta, lr_ff, lr_head,\n\
+         \u{20}  threads (kernel worker threads; 0 = auto via PFF_THREADS env or all cores;\n\
+         \u{20}  results are bit-identical at any value), ...\n"
     );
 }
 

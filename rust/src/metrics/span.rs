@@ -88,6 +88,27 @@ impl SpanRecorder {
         out
     }
 
+    /// Position marker for [`SpanRecorder::split_since`] — call before a
+    /// chapter, pass back after it to get that chapter's timing split.
+    pub fn mark(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// `(busy_s, wait_s)` accumulated over spans recorded since `mark` —
+    /// the per-chapter compute/wait split surfaced on
+    /// `RunEvent::ChapterFinished`.
+    pub fn split_since(&self, mark: usize) -> (f64, f64) {
+        let (mut busy, mut wait) = (0.0, 0.0);
+        for s in &self.spans[mark.min(self.spans.len())..] {
+            if s.kind.is_busy() {
+                busy += s.dur();
+            } else {
+                wait += s.dur();
+            }
+        }
+        (busy, wait)
+    }
+
     /// Finish, producing the node's report.
     pub fn finish(self) -> NodeReport {
         NodeReport { node: self.node, spans: self.spans }
@@ -195,6 +216,22 @@ mod tests {
         assert!((m.modeled_makespan - 4.0).abs() < 1e-9);
         assert!((m.total_busy - 7.0).abs() < 1e-9);
         assert!((m.utilization - 7.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_since_separates_busy_and_wait() {
+        let mut rec = SpanRecorder::new(Instant::now(), 0);
+        rec.time(SpanKind::Train, 0, 0, || {});
+        let mark = rec.mark();
+        let nap = || std::thread::sleep(std::time::Duration::from_millis(2));
+        rec.time(SpanKind::Train, 0, 1, nap);
+        rec.time(SpanKind::WaitLayer, 0, 1, nap);
+        let (busy, wait) = rec.split_since(mark);
+        assert!(busy >= 0.001, "busy {busy}");
+        assert!(wait >= 0.001, "wait {wait}");
+        let (all_busy, _) = rec.split_since(0);
+        assert!(all_busy >= busy);
+        assert_eq!(rec.split_since(usize::MAX), (0.0, 0.0), "future mark is empty");
     }
 
     #[test]

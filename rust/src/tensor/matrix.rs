@@ -67,12 +67,24 @@ impl Matrix {
     }
 
     /// Copy rows `idx` (in order) into a new matrix — minibatch gather.
+    /// Appends into reserved capacity (no zero-fill-then-overwrite pass).
     pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
-        let mut out = Matrix::zeros(idx.len(), self.cols);
-        for (o, &r) in idx.iter().enumerate() {
-            out.row_mut(o).copy_from_slice(self.row(r));
+        let mut data = Vec::with_capacity(idx.len() * self.cols);
+        for &r in idx {
+            data.extend_from_slice(self.row(r));
         }
-        out
+        Matrix { rows: idx.len(), cols: self.cols, data }
+    }
+
+    /// Copy the contiguous row range `[r0, r1)` — the chunked-eval gather,
+    /// one memcpy instead of a per-row index walk.
+    ///
+    /// # Panics
+    /// If `r0 > r1` or `r1 > self.rows`.
+    pub fn rows_range(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows, "rows_range: bad range {r0}..{r1} of {}", self.rows);
+        let data = self.data[r0 * self.cols..r1 * self.cols].to_vec();
+        Matrix { rows: r1 - r0, cols: self.cols, data }
     }
 
     /// Vertical concatenation `[self; other]`.
@@ -93,12 +105,13 @@ impl Matrix {
     /// If row counts differ.
     pub fn hcat(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.rows, other.rows, "hcat: row mismatch");
-        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        let cols = self.cols + other.cols;
+        let mut data = Vec::with_capacity(self.rows * cols);
         for r in 0..self.rows {
-            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
-            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+            data.extend_from_slice(self.row(r));
+            data.extend_from_slice(other.row(r));
         }
-        out
+        Matrix { rows: self.rows, cols, data }
     }
 
     /// Transposed copy.
@@ -152,6 +165,15 @@ mod tests {
         let m = Matrix::from_vec(3, 2, vec![0., 0., 1., 1., 2., 2.]);
         let g = m.gather_rows(&[2, 0]);
         assert_eq!(g.data, vec![2., 2., 0., 0.]);
+    }
+
+    #[test]
+    fn rows_range_is_contiguous_slice() {
+        let m = Matrix::from_vec(4, 2, (0..8).map(|i| i as f32).collect());
+        let s = m.rows_range(1, 3);
+        assert_eq!((s.rows, s.cols), (2, 2));
+        assert_eq!(s.data, vec![2., 3., 4., 5.]);
+        assert_eq!(m.rows_range(2, 2).rows, 0);
     }
 
     #[test]

@@ -5,12 +5,20 @@
 //! this inside AOT-compiled XLA modules; this module is the pure-Rust
 //! equivalent used by [`crate::engine::NativeEngine`] for tests, oracles and
 //! artifact-free benchmarks, plus the RNG and Adam state shared everywhere.
+//!
+//! Kernels run multi-threaded over the scoped worker pool in [`pool`]
+//! (sized by `--threads` / `PFF_THREADS`, bit-identical at every thread
+//! count) and draw scratch buffers from a [`Workspace`] arena so the
+//! engine hot path is allocation-free in steady state.
 
 pub mod adam;
 pub mod matrix;
 pub mod ops;
+pub mod pool;
 pub mod rng;
+pub mod workspace;
 
 pub use adam::AdamState;
 pub use matrix::Matrix;
 pub use rng::Rng;
+pub use workspace::Workspace;

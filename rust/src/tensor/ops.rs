@@ -4,7 +4,21 @@
 //! `python/compile/kernels/ff_layer.py`; the integration test
 //! `rust/tests/xla_vs_native.rs` pins the two implementations against each
 //! other through the AOT artifacts.
+//!
+//! The heavy kernels (`matmul` family, `normalize_rows`, the elementwise
+//! sweeps) run multi-threaded over [`pool::parallel_rows`], partitioned
+//! strictly over **output rows**: every output element is produced by one
+//! span with the exact accumulation order of the serial loop, so results
+//! are **bit-identical at every thread count** (§Perf iteration 8; pinned
+//! by `tests/kernel_determinism.rs`). Shapes too small to amortize a
+//! dispatch take the serial path — same code, one span.
+//!
+//! `*_into` variants write into caller-provided (usually
+//! [`crate::tensor::Workspace`]-recycled) buffers so the engine hot path
+//! allocates nothing per step; the allocating wrappers remain for tests,
+//! baselines and one-shot callers.
 
+use crate::tensor::pool::{self, RowsMut};
 use crate::tensor::Matrix;
 
 /// K-tile edge for the blocked matmul (per-(i, k0) pass streams `NTILE`
@@ -13,37 +27,63 @@ const TILE: usize = 32;
 /// N-tile edge: a 32×256 f32 B-panel is 32 KB — L1-resident, so the k-loop
 /// re-reads it from L1 instead of L2 (§Perf iteration 4).
 const NTILE: usize = 256;
+/// Row-span quantum handed to the pool by the row-parallel matmuls.
+const MM_CHUNK: usize = 8;
+/// Below this many multiply-adds a parallel dispatch costs more than the
+/// kernel; run the same code as one span. Purely a shape function, so the
+/// serial/parallel decision never depends on runtime state.
+const PAR_MIN_MACS: usize = 1 << 17;
+/// Elementwise/row-sweep ops parallelize above this many elements.
+const PAR_MIN_ELEMS: usize = 1 << 16;
 
 /// `C = A · B` — blocked i/k/n matmul, row-major everywhere.
 ///
 /// # Panics
 /// On inner-dimension mismatch.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(&mut c, a, b);
+    c
+}
+
+/// [`matmul`] into a pre-shaped `(a.rows, b.cols)` output (contents are
+/// overwritten; prior values do not matter).
+pub fn matmul_into(c: &mut Matrix, a: &Matrix, b: &Matrix) {
     assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_into: bad output shape");
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
-    for n0 in (0..n).step_by(NTILE) {
-        let n1 = (n0 + NTILE).min(n);
-        for k0 in (0..k).step_by(TILE) {
-            let k1 = (k0 + TILE).min(k);
-            for i in 0..m {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n + n0..i * n + n1];
-                for kk in k0..k1 {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue; // ReLU outputs are ~50% zeros — real win
-                    }
-                    let brow = &b.data[kk * n + n0..kk * n + n1];
-                    // autovectorizes: contiguous fused multiply-add sweep
-                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                        *cv += aik * bv;
+    c.data.fill(0.0);
+    let out = RowsMut::of(c);
+    let kernel = |lo: usize, hi: usize| {
+        // SAFETY: spans are disjoint row ranges.
+        let cdata = unsafe { out.rows(lo, hi) };
+        for n0 in (0..n).step_by(NTILE) {
+            let n1 = (n0 + NTILE).min(n);
+            for k0 in (0..k).step_by(TILE) {
+                let k1 = (k0 + TILE).min(k);
+                for i in 0..(hi - lo) {
+                    let arow = &a.data[(lo + i) * k..(lo + i + 1) * k];
+                    let crow = &mut cdata[i * n + n0..i * n + n1];
+                    for kk in k0..k1 {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue; // ReLU outputs are ~50% zeros — real win
+                        }
+                        let brow = &b.data[kk * n + n0..kk * n + n1];
+                        // autovectorizes: contiguous fused multiply-add sweep
+                        for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += aik * bv;
+                        }
                     }
                 }
             }
         }
+    };
+    if m * k * n < PAR_MIN_MACS {
+        kernel(0, m);
+    } else {
+        pool::parallel_rows(m, MM_CHUNK, kernel);
     }
-    c
 }
 
 /// `C = Aᵀ · B` without materializing the transpose (gradient `dW = x̂ᵀ·dz`).
@@ -51,69 +91,128 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// Output-panel tiled: C is (d_in × d_out) — far larger than cache — so
 /// sweeping all of it per sample row thrashes L2. Restricting each pass
 /// to an `ITILE`-row C panel keeps the panel resident across the whole
-/// batch (§Perf iteration 5).
+/// batch (§Perf iteration 5). Spans are `ITILE`-aligned, so the panel
+/// walk is identical at every thread count.
 pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols, b.cols);
+    matmul_at_b_into(&mut c, a, b);
+    c
+}
+
+/// C-panel rows per `matmul_at_b` pass: 64×256 f32 = 64 KB, L2-resident.
+const ITILE: usize = 64;
+
+/// [`matmul_at_b`] into a pre-shaped `(a.cols, b.cols)` output.
+pub fn matmul_at_b_into(c: &mut Matrix, a: &Matrix, b: &Matrix) {
     assert_eq!(a.rows, b.rows, "matmul_at_b: {}x{}ᵀ · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "matmul_at_b_into: bad output shape");
     let (m, k, n) = (a.cols, a.rows, b.cols);
-    /// C-panel rows per pass: 64×256 f32 = 64 KB, L2-resident.
-    const ITILE: usize = 64;
-    let mut c = Matrix::zeros(m, n);
-    for i0 in (0..m).step_by(ITILE) {
-        let i1 = (i0 + ITILE).min(m);
-        for kk in 0..k {
-            let arow = &a.data[kk * m + i0..kk * m + i1];
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for (i, &aik) in (i0..i1).zip(arow.iter()) {
-                if aik == 0.0 {
-                    continue;
-                }
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                    *cv += aik * bv;
+    c.data.fill(0.0);
+    let out = RowsMut::of(c);
+    let kernel = |lo: usize, hi: usize| {
+        // SAFETY: spans are disjoint row ranges.
+        let cdata = unsafe { out.rows(lo, hi) };
+        for i0 in (lo..hi).step_by(ITILE) {
+            let i1 = (i0 + ITILE).min(hi);
+            for kk in 0..k {
+                let arow = &a.data[kk * m + i0..kk * m + i1];
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for (i, &aik) in (i0..i1).zip(arow.iter()) {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut cdata[(i - lo) * n..(i - lo + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += aik * bv;
+                    }
                 }
             }
         }
+    };
+    if m * k * n < PAR_MIN_MACS {
+        kernel(0, m);
+    } else {
+        pool::parallel_rows(m, ITILE, kernel);
     }
-    c
 }
 
 /// `C = A · Bᵀ` (used by backprop baselines: `dx = dz · Wᵀ`).
 pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.cols, "matmul_a_bt: {}x{} · {}x{}ᵀ", a.rows, a.cols, b.rows, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
-        for (j, cv) in crow.iter_mut().enumerate() {
-            let brow = &b.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (av, bv) in arow.iter().zip(brow.iter()) {
-                acc += av * bv;
-            }
-            *cv = acc;
-        }
-    }
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_a_bt_into(&mut c, a, b);
     c
+}
+
+/// [`matmul_a_bt`] into a pre-shaped `(a.rows, b.rows)` output.
+pub fn matmul_a_bt_into(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt: {}x{} · {}x{}ᵀ", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_a_bt_into: bad output shape");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let out = RowsMut::of(c);
+    let kernel = |lo: usize, hi: usize| {
+        // SAFETY: spans are disjoint row ranges.
+        let cdata = unsafe { out.rows(lo, hi) };
+        for i in lo..hi {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut cdata[(i - lo) * n..(i - lo + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow.iter()) {
+                    acc += av * bv;
+                }
+                *cv = acc;
+            }
+        }
+    };
+    if m * k * n < PAR_MIN_MACS {
+        kernel(0, m);
+    } else {
+        pool::parallel_rows(m, MM_CHUNK, kernel);
+    }
 }
 
 /// Add a row-vector bias to every row, in place.
 pub fn add_bias(m: &mut Matrix, bias: &[f32]) {
     assert_eq!(m.cols, bias.len());
-    for r in 0..m.rows {
-        for (v, b) in m.row_mut(r).iter_mut().zip(bias.iter()) {
-            *v += b;
+    let (rows, cols) = (m.rows, m.cols);
+    let out = RowsMut::of(m);
+    let kernel = |lo: usize, hi: usize| {
+        // SAFETY: spans are disjoint row ranges.
+        let data = unsafe { out.rows(lo, hi) };
+        for r in 0..(hi - lo) {
+            for (v, b) in data[r * cols..(r + 1) * cols].iter_mut().zip(bias.iter()) {
+                *v += b;
+            }
         }
+    };
+    if rows * cols < PAR_MIN_ELEMS {
+        kernel(0, rows);
+    } else {
+        pool::parallel_rows(rows, 32, kernel);
     }
 }
 
 /// In-place ReLU.
 pub fn relu_inplace(m: &mut Matrix) {
-    for v in &mut m.data {
-        if *v < 0.0 {
-            *v = 0.0;
+    let (rows, cols) = (m.rows, m.cols);
+    if rows * cols < PAR_MIN_ELEMS {
+        for v in &mut m.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
         }
+        return;
     }
+    let out = RowsMut::of(m);
+    pool::parallel_rows(rows, 32, |lo, hi| {
+        // SAFETY: spans are disjoint row ranges.
+        for v in unsafe { out.rows(lo, hi) } {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    });
 }
 
 /// Row-wise L2 length normalization: `x / (‖x‖₂ + eps)`.
@@ -122,15 +221,50 @@ pub fn relu_inplace(m: &mut Matrix) {
 /// layer's activity, destroying the goodness magnitude so the next layer
 /// can't trivially reuse it.
 pub fn normalize_rows(m: &Matrix, eps: f32) -> Matrix {
-    let mut out = m.clone();
-    normalize_rows_inplace(&mut out, eps);
+    let mut out = Matrix::zeros(m.rows, m.cols);
+    normalize_rows_into(&mut out, m, eps);
     out
+}
+
+/// [`normalize_rows`] into a pre-shaped output (single fused copy+scale
+/// pass per row instead of whole-matrix clone then rescale).
+pub fn normalize_rows_into(out: &mut Matrix, m: &Matrix, eps: f32) {
+    assert_eq!((out.rows, out.cols), (m.rows, m.cols), "normalize_rows_into: bad output shape");
+    let (rows, cols) = (m.rows, m.cols);
+    let dst = RowsMut::of(out);
+    let kernel = |lo: usize, hi: usize| {
+        // SAFETY: spans are disjoint row ranges.
+        let d = unsafe { dst.rows(lo, hi) };
+        d.copy_from_slice(&m.data[lo * cols..hi * cols]);
+        normalize_row_span(d, cols, eps);
+    };
+    if rows * cols < PAR_MIN_ELEMS {
+        kernel(0, rows);
+    } else {
+        pool::parallel_rows(rows, 32, kernel);
+    }
 }
 
 /// In-place variant of [`normalize_rows`].
 pub fn normalize_rows_inplace(m: &mut Matrix, eps: f32) {
-    for r in 0..m.rows {
-        let row = m.row_mut(r);
+    let (rows, cols) = (m.rows, m.cols);
+    if rows * cols < PAR_MIN_ELEMS {
+        normalize_row_span(&mut m.data, cols, eps);
+        return;
+    }
+    let dst = RowsMut::of(m);
+    pool::parallel_rows(rows, 32, |lo, hi| {
+        // SAFETY: spans are disjoint row ranges.
+        normalize_row_span(unsafe { dst.rows(lo, hi) }, cols, eps);
+    });
+}
+
+/// Normalize each `cols`-wide row of a contiguous span.
+fn normalize_row_span(data: &mut [f32], cols: usize, eps: f32) {
+    if cols == 0 {
+        return;
+    }
+    for row in data.chunks_exact_mut(cols) {
         let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
         let inv = 1.0 / (norm + eps);
         for v in row {
@@ -141,18 +275,39 @@ pub fn normalize_rows_inplace(m: &mut Matrix, eps: f32) {
 
 /// Per-row goodness `g_i = Σ_j y_ij²` (paper Eq. 1's inner sum).
 pub fn row_sumsq(m: &Matrix) -> Vec<f32> {
-    (0..m.rows).map(|r| m.row(r).iter().map(|v| v * v).sum()).collect()
+    let mut out = vec![0.0f32; m.rows];
+    row_sumsq_into(&mut out, m);
+    out
 }
 
-/// Column-wise sum — bias gradient `db_j = Σ_i dz_ij`.
+/// [`row_sumsq`] into a pre-sized `m.rows` slice.
+pub fn row_sumsq_into(out: &mut [f32], m: &Matrix) {
+    assert_eq!(out.len(), m.rows);
+    for (o, row) in out.iter_mut().zip(m.data.chunks_exact(m.cols.max(1))) {
+        *o = row.iter().map(|v| v * v).sum();
+    }
+    if m.cols == 0 {
+        out.fill(0.0);
+    }
+}
+
+/// Column-wise sum — bias gradient `db_j = Σ_i dz_ij`. Serial on purpose:
+/// it reduces *across* rows, so a row partition would reorder the adds.
 pub fn col_sum(m: &Matrix) -> Vec<f32> {
     let mut out = vec![0.0f32; m.cols];
+    col_sum_into(&mut out, m);
+    out
+}
+
+/// [`col_sum`] into a pre-sized `m.cols` slice.
+pub fn col_sum_into(out: &mut [f32], m: &Matrix) {
+    assert_eq!(out.len(), m.cols);
+    out.fill(0.0);
     for r in 0..m.rows {
         for (o, v) in out.iter_mut().zip(m.row(r)) {
             *o += v;
         }
     }
-    out
 }
 
 /// Numerically-stable logistic `σ(x)`.
@@ -182,20 +337,39 @@ pub fn softplus(x: f32) -> f32 {
 /// Row-wise softmax (stable: max-shifted).
 pub fn softmax_rows(m: &Matrix) -> Matrix {
     let mut out = m.clone();
-    for r in 0..out.rows {
-        let row = out.row_mut(r);
-        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
-        for v in row.iter_mut() {
-            *v = (*v - mx).exp();
-            sum += *v;
-        }
-        let inv = 1.0 / sum;
-        for v in row {
-            *v *= inv;
-        }
-    }
+    softmax_rows_inplace(&mut out);
     out
+}
+
+/// In-place variant of [`softmax_rows`].
+pub fn softmax_rows_inplace(m: &mut Matrix) {
+    let (rows, cols) = (m.rows, m.cols);
+    if cols == 0 {
+        return;
+    }
+    let soften = |data: &mut [f32]| {
+        for row in data.chunks_exact_mut(cols) {
+            let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row {
+                *v *= inv;
+            }
+        }
+    };
+    if rows * cols < PAR_MIN_ELEMS {
+        soften(&mut m.data);
+        return;
+    }
+    let dst = RowsMut::of(m);
+    pool::parallel_rows(rows, 32, |lo, hi| {
+        // SAFETY: spans are disjoint row ranges.
+        soften(unsafe { dst.rows(lo, hi) });
+    });
 }
 
 /// Mean cross-entropy of softmax rows `p` against integer labels.
@@ -253,6 +427,30 @@ mod tests {
             let want = naive_matmul(&a, &b);
             assert!(got.max_abs_diff(&want) < 1e-4, "({m},{k},{n})");
         }
+    }
+
+    #[test]
+    fn into_variants_overwrite_garbage() {
+        let mut rng = Rng::new(15);
+        let a = Matrix::rand_uniform(9, 12, -1.0, 1.0, &mut rng);
+        let b = Matrix::rand_uniform(12, 7, -1.0, 1.0, &mut rng);
+        let mut c = Matrix::full(9, 7, f32::NAN);
+        matmul_into(&mut c, &a, &b);
+        assert_eq!(c.data, matmul(&a, &b).data, "prior contents must not leak");
+
+        let bt = Matrix::rand_uniform(5, 12, -1.0, 1.0, &mut rng);
+        let mut c = Matrix::full(9, 5, f32::NAN);
+        matmul_a_bt_into(&mut c, &a, &bt);
+        assert_eq!(c.data, matmul_a_bt(&a, &bt).data);
+
+        let b2 = Matrix::rand_uniform(9, 4, -1.0, 1.0, &mut rng);
+        let mut c = Matrix::full(12, 4, f32::NAN);
+        matmul_at_b_into(&mut c, &a, &b2);
+        assert_eq!(c.data, matmul_at_b(&a, &b2).data);
+
+        let mut n = Matrix::full(9, 12, f32::NAN);
+        normalize_rows_into(&mut n, &a, 1e-8);
+        assert_eq!(n.data, normalize_rows(&a, 1e-8).data);
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! Scoped worker pool for the parallel tensor kernels.
+//!
+//! Dependency-free (std `thread` + `Mutex`/`Condvar`): persistent worker
+//! threads drain a shared job queue, and [`parallel_rows`] splits a row
+//! range into contiguous spans that borrow the caller's closure for the
+//! duration of the call — a completion latch guarantees every span
+//! finishes before the call returns, so the borrow is sound even though
+//! the queue itself is `'static`.
+//!
+//! **Determinism contract**: work is partitioned over *output rows only*.
+//! Each output element is produced by exactly one span, with the same
+//! inner-loop accumulation order the serial kernel uses, so results are
+//! bit-identical at every thread count (pinned by
+//! `tests/kernel_determinism.rs`). Thread count only changes wall-clock.
+//!
+//! Sizing: the effective thread count resolves, in priority order, from
+//! [`set_threads`] (driven by `ExperimentConfig.threads` / the `--threads`
+//! CLI key), the `PFF_THREADS` environment variable, then
+//! `std::thread::available_parallelism()`. `threads = 1` takes a
+//! zero-overhead serial path (no queue, no synchronization).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::tensor::Matrix;
+
+// ---------------------------------------------------------------------------
+// completion latch
+// ---------------------------------------------------------------------------
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+/// Counts outstanding spans of one `parallel_rows` call; the caller parks
+/// on it until every span has run (or panicked).
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch {
+            state: Mutex::new(LatchState { remaining: count, panicked: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn count_down(&self, panicked: bool) {
+        let mut g = self.state.lock().unwrap();
+        g.remaining -= 1;
+        g.panicked |= panicked;
+        if g.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until all spans completed; returns whether any panicked.
+    fn wait(&self) -> bool {
+        let mut g = self.state.lock().unwrap();
+        while g.remaining > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.panicked
+    }
+}
+
+// ---------------------------------------------------------------------------
+// jobs + worker loop
+// ---------------------------------------------------------------------------
+
+/// One row span of one `parallel_rows` call.
+struct Job {
+    lo: usize,
+    hi: usize,
+    /// Borrow of the caller's closure, lifetime-erased. Sound because the
+    /// issuing `parallel_rows` call blocks on `latch` until this job has
+    /// run — the borrow can never outlive the closure.
+    task: &'static (dyn Fn(usize, usize) + Sync),
+    latch: Arc<Latch>,
+}
+
+fn run_job(job: Job) {
+    let panicked = catch_unwind(AssertUnwindSafe(|| (job.task)(job.lo, job.hi))).is_err();
+    job.latch.count_down(panicked);
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    work: Condvar,
+    shutdown: AtomicBool,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => run_job(j),
+            None => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the pool
+// ---------------------------------------------------------------------------
+
+/// A worker pool executing row-partitioned tasks. Most code uses the
+/// process-global pool through the module-level [`parallel_rows`]; tests
+/// and tools can build private pools with a fixed size.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Target parallelism including the calling thread.
+    threads: usize,
+    /// Helper threads spawned so far (grown on demand, never shrunk).
+    spawned: Mutex<usize>,
+}
+
+impl WorkerPool {
+    /// Pool with a total parallelism of `threads` (callers count as one;
+    /// `threads - 1` helper workers are spawned lazily).
+    pub fn new(threads: usize) -> Self {
+        WorkerPool {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                work: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+            }),
+            threads: threads.max(1),
+            spawned: Mutex::new(0),
+        }
+    }
+
+    /// Total parallelism this pool targets.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn ensure_workers(&self, helpers: usize) {
+        let mut n = self.spawned.lock().unwrap();
+        while *n < helpers {
+            let shared = self.shared.clone();
+            std::thread::Builder::new()
+                .name(format!("pff-pool-{n}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawning pool worker");
+            *n += 1;
+        }
+    }
+
+    /// Split rows `[0, m)` into at most `self.threads()` contiguous spans
+    /// (each a multiple of `chunk` rows, except the last) and run `f` on
+    /// every span. See [`parallel_rows`] for the determinism contract.
+    pub fn parallel_rows(&self, m: usize, chunk: usize, f: impl Fn(usize, usize) + Sync) {
+        self.run(self.threads, m, chunk, &f);
+    }
+
+    fn run(&self, threads: usize, m: usize, chunk: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        let chunk = chunk.max(1);
+        let jobs = threads.min(m.div_ceil(chunk)).max(1);
+        if jobs <= 1 {
+            if m > 0 {
+                f(0, m);
+            }
+            return;
+        }
+        self.ensure_workers(jobs - 1);
+        // Span length: ceil(m / jobs) rounded up to a chunk multiple, so
+        // span boundaries stay aligned with the kernels' tile edges.
+        let span = m.div_ceil(jobs).div_ceil(chunk) * chunk;
+        let njobs = m.div_ceil(span);
+        let latch = Arc::new(Latch::new(njobs.saturating_sub(1)));
+        // SAFETY: the latch wait below blocks until every queued job has
+        // run, so the erased borrow never outlives `f`.
+        let task = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize, usize) + Sync),
+                &'static (dyn Fn(usize, usize) + Sync),
+            >(f)
+        };
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for j in 1..njobs {
+                q.push_back(Job {
+                    lo: j * span,
+                    hi: ((j + 1) * span).min(m),
+                    task,
+                    latch: latch.clone(),
+                });
+            }
+        }
+        self.shared.work.notify_all();
+        // The caller runs the first span itself, then helps drain the
+        // queue (its own spans or a concurrent call's — work conserving),
+        // then parks until its last span lands on a worker.
+        let own_panic = catch_unwind(AssertUnwindSafe(|| f(0, span.min(m)))).is_err();
+        loop {
+            let job = self.shared.queue.lock().unwrap().pop_front();
+            match job {
+                Some(j) => run_job(j),
+                None => break,
+            }
+        }
+        if latch.wait() || own_panic {
+            panic!("pff worker pool: a parallel_rows task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Take the queue lock before notifying: a worker between its
+        // shutdown check and its wait holds that lock, so this can't slip
+        // into the gap and strand it.
+        let _g = self.shared.queue.lock().unwrap();
+        self.shared.work.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process-global pool + thread-count resolution
+// ---------------------------------------------------------------------------
+
+static EFFECTIVE: AtomicUsize = AtomicUsize::new(0); // 0 = not resolved yet
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+fn global_pool() -> &'static WorkerPool {
+    // Workers grow on demand inside run(); the initial size is irrelevant.
+    GLOBAL.get_or_init(|| WorkerPool::new(1))
+}
+
+/// Hardware parallelism (`available_parallelism`, 1 when unknown).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn env_threads() -> Option<usize> {
+    std::env::var("PFF_THREADS").ok()?.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// Set the effective kernel thread count. `0` re-resolves the default
+/// (`PFF_THREADS` env, else all cores). Returns the resolved count.
+/// Results never depend on this value — only wall-clock does.
+pub fn set_threads(threads: usize) -> usize {
+    let n = if threads == 0 { env_threads().unwrap_or_else(available_threads) } else { threads };
+    let n = n.max(1);
+    EFFECTIVE.store(n, Ordering::Relaxed);
+    n
+}
+
+/// The effective kernel thread count (resolving the default on first use).
+pub fn current_threads() -> usize {
+    match EFFECTIVE.load(Ordering::Relaxed) {
+        0 => set_threads(0),
+        n => n,
+    }
+}
+
+/// Run `f(lo, hi)` over disjoint contiguous spans covering rows `[0, m)`,
+/// on the process-global pool at the current effective thread count.
+///
+/// Spans are multiples of `chunk` rows (except the last), so kernels can
+/// align spans with their tile edges. At `threads == 1`, or when `m`
+/// fits one chunk, `f(0, m)` runs inline with zero synchronization.
+pub fn parallel_rows(m: usize, chunk: usize, f: impl Fn(usize, usize) + Sync) {
+    let t = current_threads();
+    if t <= 1 || m <= chunk.max(1) {
+        if m > 0 {
+            f(0, m);
+        }
+        return;
+    }
+    global_pool().run(t, m, chunk, &f);
+}
+
+// ---------------------------------------------------------------------------
+// shared-output helper
+// ---------------------------------------------------------------------------
+
+/// Row-major output buffer shared across `parallel_rows` spans. Each span
+/// may only touch rows inside its own `[lo, hi)` range — ranges are
+/// disjoint by construction, so the aliasing is sound.
+pub struct RowsMut {
+    ptr: *mut f32,
+    cols: usize,
+}
+
+unsafe impl Send for RowsMut {}
+unsafe impl Sync for RowsMut {}
+
+impl RowsMut {
+    /// Wrap a matrix whose rows will be written by disjoint spans.
+    pub fn of(m: &mut Matrix) -> Self {
+        RowsMut { ptr: m.data.as_mut_ptr(), cols: m.cols }
+    }
+
+    /// Rows `[lo, hi)` as one mutable slice.
+    ///
+    /// # Safety
+    /// Concurrent callers must use disjoint row ranges (which
+    /// `parallel_rows` spans are).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn rows(&self, lo: usize, hi: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.ptr.add(lo * self.cols), (hi - lo) * self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn covers_every_row_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for &(m, chunk) in &[(1usize, 1usize), (5, 2), (64, 8), (97, 16), (1000, 7)] {
+            let hits: Vec<AtomicU32> = (0..m).map(|_| AtomicU32::new(0)).collect();
+            pool.parallel_rows(m, chunk, |lo, hi| {
+                for h in &hits[lo..hi] {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "({m},{chunk}): some row not covered exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rows_is_a_noop() {
+        let pool = WorkerPool::new(4);
+        pool.parallel_rows(0, 8, |_, _| panic!("must not run"));
+        parallel_rows(0, 8, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let tid = std::thread::current().id();
+        pool.parallel_rows(100, 8, |lo, hi| {
+            assert_eq!(std::thread::current().id(), tid, "threads=1 must stay on the caller");
+            assert_eq!((lo, hi), (0, 100), "threads=1 must take one span");
+        });
+    }
+
+    #[test]
+    fn spans_align_to_chunk() {
+        let pool = WorkerPool::new(3);
+        pool.parallel_rows(100, 16, |lo, hi| {
+            assert_eq!(lo % 16, 0, "span start {lo} not chunk-aligned");
+            assert!(hi == 100 || hi % 16 == 0, "span end {hi} not chunk-aligned");
+        });
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_rows(64, 4, |lo, _| {
+                if lo == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "task panic must surface to the caller");
+        // the pool is still usable afterwards
+        let n = AtomicU32::new(0);
+        pool.parallel_rows(64, 4, |lo, hi| {
+            n.fetch_add((hi - lo) as u32, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn set_threads_resolves() {
+        let prev = current_threads();
+        assert_eq!(set_threads(3), 3);
+        assert_eq!(current_threads(), 3);
+        assert!(set_threads(0) >= 1, "0 must re-resolve a sane default");
+        set_threads(prev);
+    }
+
+    #[test]
+    fn rows_mut_disjoint_writes() {
+        let mut m = Matrix::zeros(32, 4);
+        let out = RowsMut::of(&mut m);
+        let pool = WorkerPool::new(4);
+        pool.parallel_rows(32, 4, |lo, hi| {
+            let rows = unsafe { out.rows(lo, hi) };
+            for (i, v) in rows.iter_mut().enumerate() {
+                *v = (lo * 4 + i) as f32;
+            }
+        });
+        assert!(m.data.iter().enumerate().all(|(i, &v)| v == i as f32));
+    }
+}

@@ -1,0 +1,153 @@
+//! Reusable buffer arena for the engine hot path.
+//!
+//! Every FF train step needs the same handful of scratch tensors (fused
+//! pos/neg batch, normalized input, activations, gradients). Allocating
+//! them fresh per step puts the allocator on the hot path; a [`Workspace`]
+//! parks the buffers between steps instead, so steady-state training does
+//! **zero** heap allocation per step (pinned by the workspace-reuse test
+//! in `engine::native`). Buffers are matched best-fit by capacity, so the
+//! arena reaches a fixed point after one step of each shape.
+
+use crate::tensor::Matrix;
+
+/// A pool of reusable `f32` buffers. Take with [`Workspace::matrix`] /
+/// [`Workspace::vec`], return with [`Workspace::recycle`] /
+/// [`Workspace::recycle_vec`].
+#[derive(Clone, Debug, Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+    fresh_allocs: usize,
+}
+
+impl Workspace {
+    /// Empty arena.
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// A `(rows, cols)` matrix with **unspecified contents** (see
+    /// [`Workspace::vec`]), backed by a recycled buffer when one with
+    /// enough capacity is parked. Callers must fully overwrite it.
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.vec(rows * cols))
+    }
+
+    /// A length-`len` vector with **unspecified contents** — recycled
+    /// buffers keep their stale values so a steady-state take does no
+    /// memset (fresh growth is zero-filled; stale data is initialized
+    /// memory, so this is safe). Every engine consumer fully overwrites
+    /// its buffer; callers needing zeros must fill themselves. Matching
+    /// is best fit: the smallest parked buffer with sufficient capacity.
+    pub fn vec(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            let beats = best.map_or(true, |j: usize| b.capacity() < self.free[j].capacity());
+            if b.capacity() >= len && beats {
+                best = Some(i);
+            }
+        }
+        let mut buf = match best {
+            Some(i) => self.free.swap_remove(i),
+            None => {
+                self.fresh_allocs += 1;
+                Vec::with_capacity(len)
+            }
+        };
+        if buf.len() > len {
+            buf.truncate(len);
+        } else {
+            buf.resize(len, 0.0); // fills only the shortfall
+        }
+        buf
+    }
+
+    /// Park a matrix's buffer for reuse.
+    pub fn recycle(&mut self, m: Matrix) {
+        self.recycle_vec(m.data);
+    }
+
+    /// Park a vector for reuse.
+    pub fn recycle_vec(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.free.push(v);
+        }
+    }
+
+    /// How many requests could not be served from the free list — the
+    /// steady-state hot path must stop growing this.
+    pub fn fresh_allocs(&self) -> usize {
+        self.fresh_allocs
+    }
+
+    /// Buffers currently parked.
+    pub fn parked(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_matrix_is_zero_filled_and_shaped() {
+        let mut ws = Workspace::new();
+        let m = ws.matrix(3, 5);
+        assert_eq!((m.rows, m.cols, m.data.len()), (3, 5, 15));
+        assert!(m.data.iter().all(|&v| v == 0.0), "fresh growth is zero-filled");
+        assert_eq!(ws.fresh_allocs(), 1);
+    }
+
+    #[test]
+    fn recycled_buffer_is_reused_without_memset() {
+        let mut ws = Workspace::new();
+        let mut m = ws.matrix(4, 4);
+        m.data.fill(7.0);
+        ws.recycle(m);
+        assert_eq!(ws.parked(), 1);
+        let m2 = ws.matrix(4, 4);
+        assert_eq!((m2.rows, m2.cols, m2.data.len()), (4, 4, 16));
+        // Contents are unspecified by contract; same-size reuse keeps the
+        // stale values — the proof no memset happened on the hot path.
+        assert!(m2.data.iter().all(|&v| v == 7.0));
+        assert_eq!(ws.fresh_allocs(), 1, "same-shape take must not allocate");
+        assert_eq!(ws.parked(), 0);
+    }
+
+    #[test]
+    fn shrinking_reuse_truncates_and_growing_reuse_fills_tail() {
+        let mut ws = Workspace::new();
+        let mut v = ws.vec(8);
+        v.fill(3.0);
+        ws.recycle_vec(v);
+        let small = ws.vec(4);
+        assert_eq!(small.len(), 4);
+        ws.recycle_vec(small);
+        let grown = ws.vec(8);
+        assert_eq!(grown.len(), 8);
+        assert!(grown[4..].iter().all(|&v| v == 0.0), "regrown tail is zero-filled");
+        assert_eq!(ws.fresh_allocs(), 1, "capacity-8 buffer serves every take");
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut ws = Workspace::new();
+        let big = ws.matrix(10, 10);
+        let small = ws.matrix(2, 2);
+        ws.recycle(big);
+        ws.recycle(small);
+        let take = ws.vec(4);
+        assert!(take.capacity() < 100, "must pick the 4-cap buffer, not the 100-cap one");
+        assert_eq!(ws.fresh_allocs(), 2);
+    }
+
+    #[test]
+    fn too_small_buffers_do_not_satisfy() {
+        let mut ws = Workspace::new();
+        ws.recycle_vec(Vec::with_capacity(4));
+        let v = ws.vec(100);
+        assert_eq!(v.len(), 100);
+        assert_eq!(ws.fresh_allocs(), 1, "undersized park must not be taken");
+        assert_eq!(ws.parked(), 1);
+    }
+}

@@ -1,0 +1,141 @@
+//! The parallel tensor runtime's central guarantee: every kernel is
+//! **bit-identical at every thread count**, because work is partitioned
+//! over output rows with the serial accumulation order preserved per
+//! element. Property tests sweep threads ∈ {1, 2, 3, 8} over regular and
+//! ragged shapes (rows < threads, zero-row matrices), and an end-to-end
+//! test pins a 2-chapter training run at `threads = 4` against
+//! `threads = 1` bitwise.
+//!
+//! The thread count is process-global state, so the kernel property tests
+//! serialize behind one mutex; the e2e test drives the knob through
+//! `ExperimentConfig.threads` like real callers do.
+
+use std::sync::Mutex;
+
+use pff::config::{ExperimentConfig, Scheduler};
+use pff::coordinator::Experiment;
+use pff::tensor::{ops, pool, Matrix, Rng};
+
+/// Serializes tests that flip the global thread count.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Run `f` at threads=1 for a reference, then re-run at 2/3/8 and demand
+/// bit equality.
+fn assert_thread_invariant(label: &str, f: impl Fn() -> Matrix) {
+    pool::set_threads(1);
+    let reference = f();
+    for t in [2usize, 3, 8] {
+        pool::set_threads(t);
+        let got = f();
+        assert_eq!(
+            (got.rows, got.cols),
+            (reference.rows, reference.cols),
+            "{label}: shape changed at t={t}"
+        );
+        assert_eq!(bits(&got), bits(&reference), "{label}: bits changed at t={t}");
+    }
+    pool::set_threads(0);
+}
+
+#[test]
+fn matmul_family_bit_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap();
+    // (m, k, n): tiny, ragged (rows < threads), zero-row, odd, and a
+    // shape big enough to actually cross the parallel-dispatch threshold.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (5, 64, 3),
+        (0, 7, 5),
+        (33, 65, 17),
+        (97, 131, 64),
+        (256, 784, 200),
+    ];
+    for (m, k, n) in shapes {
+        let mut rng = Rng::new(0xD15C ^ (m * 31 + k * 7 + n) as u64);
+        let a = Matrix::rand_uniform(m, k, -1.0, 1.0, &mut rng);
+        let b = Matrix::rand_uniform(k, n, -1.0, 1.0, &mut rng);
+        assert_thread_invariant(&format!("matmul {m}x{k}x{n}"), || ops::matmul(&a, &b));
+
+        let at = Matrix::rand_uniform(k, m.max(1), -1.0, 1.0, &mut rng);
+        let bt = Matrix::rand_uniform(k, n, -1.0, 1.0, &mut rng);
+        assert_thread_invariant(&format!("matmul_at_b {k}x{m}x{n}"), || ops::matmul_at_b(&at, &bt));
+
+        let r = Matrix::rand_uniform(n, k, -1.0, 1.0, &mut rng);
+        assert_thread_invariant(&format!("matmul_a_bt {m}x{k}x{n}"), || ops::matmul_a_bt(&a, &r));
+    }
+}
+
+#[test]
+fn rowwise_kernels_bit_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap();
+    for (m, n) in [(1usize, 8usize), (3, 512), (0, 16), (300, 257), (1024, 96)] {
+        let mut rng = Rng::new(0xA110 ^ (m * 13 + n) as u64);
+        let x = Matrix::rand_uniform(m, n, -2.0, 2.0, &mut rng);
+        assert_thread_invariant(&format!("normalize_rows {m}x{n}"), || {
+            ops::normalize_rows(&x, 1e-8)
+        });
+        assert_thread_invariant(&format!("softmax_rows {m}x{n}"), || ops::softmax_rows(&x));
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.01 - 1.0).collect();
+        assert_thread_invariant(&format!("add_bias+relu {m}x{n}"), || {
+            let mut y = x.clone();
+            ops::add_bias(&mut y, &bias);
+            ops::relu_inplace(&mut y);
+            y
+        });
+    }
+}
+
+/// ReLU-style sparsity hits the kernels' zero-skip branch; make sure the
+/// skip is also partition-invariant.
+#[test]
+fn sparse_inputs_bit_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap();
+    let mut rng = Rng::new(0x5A55);
+    let mut a = Matrix::rand_uniform(130, 96, -1.0, 1.0, &mut rng);
+    for v in &mut a.data {
+        if *v < 0.0 {
+            *v = 0.0; // ~half zeros, like real ReLU activations
+        }
+    }
+    let b = Matrix::rand_uniform(96, 70, -1.0, 1.0, &mut rng);
+    assert_thread_invariant("matmul sparse", || ops::matmul(&a, &b));
+    let b2 = Matrix::rand_uniform(130, 70, -1.0, 1.0, &mut rng);
+    assert_thread_invariant("matmul_at_b sparse", || ops::matmul_at_b(&a, &b2));
+}
+
+/// End to end: a short training run reproduces its `threads = 1` final
+/// weights bitwise at `threads = 4` (the scheduler path sets the global
+/// knob from `ExperimentConfig.threads`, exactly like the CLI).
+#[test]
+fn two_chapter_run_bitwise_identical_at_four_threads() {
+    // run_session mutates the global thread knob; hold the lock so the
+    // property tests' serial references are computed at the count they set.
+    let _g = THREADS_LOCK.lock().unwrap();
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.train_n = 128;
+    cfg.test_n = 64;
+    cfg.dims = vec![784, 48, 48, 48];
+    cfg.epochs = 2;
+    cfg.splits = 2;
+    cfg.scheduler = Scheduler::Sequential;
+    cfg.neg = pff::ff::NegStrategy::Random;
+
+    cfg.threads = 1;
+    let serial = Experiment::builder().config(cfg.clone()).launch().unwrap().join().unwrap();
+    cfg.threads = 4;
+    let parallel = Experiment::builder().config(cfg).launch().unwrap().join().unwrap();
+
+    assert_eq!(serial.model.net.layers.len(), parallel.model.net.layers.len());
+    for (i, (a, b)) in serial.model.net.layers.iter().zip(&parallel.model.net.layers).enumerate() {
+        assert_eq!(bits(&a.w), bits(&b.w), "layer {i} weights differ across thread counts");
+        assert_eq!(a.b, b.b, "layer {i} bias differs across thread counts");
+    }
+    assert_eq!(
+        serial.test_accuracy, parallel.test_accuracy,
+        "evaluation must not depend on the thread count either"
+    );
+}

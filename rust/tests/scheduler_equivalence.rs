@@ -76,6 +76,27 @@ fn tcp_all_layers_bitwise_matches_inproc() {
     assert!(tcp.comm.bytes_put > 0);
 }
 
+/// The parallel tensor runtime must be invisible to training semantics:
+/// the same pipelined experiment lands on bit-identical weights whether
+/// the kernels run on 1 thread or 4 (the PR-4 determinism guarantee, at
+/// the full-scheduler level).
+#[test]
+fn all_layers_bitwise_identical_across_thread_counts() {
+    let mut cfg = mech_cfg();
+    cfg.ship_opt_state = true;
+    cfg.scheduler = Scheduler::AllLayers;
+    cfg.nodes = 2;
+    cfg.threads = 1;
+    let serial = run_experiment(&cfg).unwrap();
+    cfg.threads = 4;
+    let threaded = run_experiment(&cfg).unwrap();
+    for (i, (a, b)) in serial.model.net.layers.iter().zip(&threaded.model.net.layers).enumerate() {
+        assert_eq!(a.w.data, b.w.data, "layer {i} weights differ between threads=1 and threads=4");
+        assert_eq!(a.b, b.b, "layer {i} bias differs between threads=1 and threads=4");
+    }
+    assert_eq!(serial.test_accuracy, threaded.test_accuracy);
+}
+
 /// Without shipping optimizer state (the paper's wire format), pipelined
 /// training still reaches equivalent accuracy.
 #[test]
