@@ -6,19 +6,29 @@
 //! has not been built yet. Finishes by comparing against the pure
 //! in-process transport — the wire must not change what is learned.
 //!
+//! `--kill-one` exercises crash recovery: one worker is SIGKILLed
+//! mid-run, a replacement process adopts its vacated node id through the
+//! registry's reconnect lease, fast-forwards past the chapters the store
+//! already holds, and the run still reproduces the in-process result
+//! (bitwise on the store contents — `ship_opt_state` keeps Adam moments
+//! in the published layers, so the replacement resumes exactly).
+//!
 //! ```bash
 //! cargo build --release                      # builds the pff binary
 //! cargo run --release --example tcp_cluster
+//! cargo run --release --example tcp_cluster -- --kill-one
 //! ```
 
+use std::net::SocketAddr;
 use std::path::PathBuf;
-use std::process::Command;
+use std::process::{Child, Command};
 use std::time::Duration;
 
 use pff::config::{ExperimentConfig, Scheduler, TransportKind};
 use pff::coordinator::node::run_worker;
 use pff::coordinator::{Experiment, ExperimentReport, RunEvent};
 use pff::ff::NegStrategy;
+use pff::transport::tcp::TcpStoreClient;
 
 /// One blocking run through the session API, printing cluster membership
 /// (the default-observer behavior of the `pff` binary).
@@ -52,34 +62,100 @@ fn free_port() -> anyhow::Result<u16> {
     Ok(l.local_addr()?.port())
 }
 
+/// Spawn one `pff worker` process against the leader at `addr`.
+fn spawn_worker(
+    bin: &std::path::Path,
+    addr: &str,
+    cfg_path: &str,
+    node_id: usize,
+) -> anyhow::Result<Child> {
+    Ok(Command::new(bin)
+        .arg("worker")
+        .args(["--connect", addr, "--node-id", &node_id.to_string(), "--connect-wait-s", "60"])
+        .args(["--config", cfg_path])
+        .spawn()?)
+}
+
 /// Leader in this process, N workers as real OS processes. The workers
 /// receive the leader's FULL config through a `--config` file rendered by
 /// `ExperimentConfig::to_kv_string`, so leader and workers cannot drift.
+///
+/// With `kill_one`, worker 0 is SIGKILLed once the pipeline is provably
+/// mid-run (chapter 1's layer 0 published), and a replacement process
+/// adopts the vacated node id — the crash-recovery path end to end.
 fn run_multiprocess(
     cfg: &ExperimentConfig,
     bin: &std::path::Path,
+    kill_one: bool,
 ) -> anyhow::Result<ExperimentReport> {
     let port = free_port()?;
     let addr = format!("127.0.0.1:{port}");
+    let sock_addr: SocketAddr = addr.parse()?;
     let cfg_path = std::env::temp_dir().join(format!("pff-cluster-{}.cfg", std::process::id()));
     std::fs::write(&cfg_path, cfg.to_kv_string())?;
     let cfg_path_s = cfg_path.display().to_string();
 
     let mut children = Vec::new();
     for i in 0..cfg.nodes {
-        children.push(
-            Command::new(bin)
-                .arg("worker")
-                .args(["--connect", &addr, "--node-id", &i.to_string(), "--connect-wait-s", "60"])
-                .args(["--config", &cfg_path_s])
-                .spawn()?,
-        );
+        children.push(spawn_worker(bin, &addr, &cfg_path_s, i)?);
     }
+
+    // Chaos thread: wait until the run is provably underway, then SIGKILL
+    // worker 0 and spawn its replacement. Runs alongside the parked leader.
+    let chaos = if kill_one {
+        let mut victim = children.remove(0);
+        let bin = bin.to_path_buf();
+        let (addr2, cfg_path2) = (addr.clone(), cfg_path_s.clone());
+        Some(std::thread::spawn(move || -> anyhow::Result<Child> {
+            // The leader binds its port inside run(); retry until it is up.
+            let observer = {
+                let mut tries = 0;
+                loop {
+                    match TcpStoreClient::connect(sock_addr) {
+                        Ok(c) => break c,
+                        Err(e) => {
+                            tries += 1;
+                            anyhow::ensure!(tries < 300, "leader never came up: {e:#}");
+                            std::thread::sleep(Duration::from_millis(100));
+                        }
+                    }
+                }
+            };
+            // Chapter 1's layer 0 published ⇒ the pipeline is mid-run.
+            observer.get_layer(0, 1, Duration::from_secs(120))?;
+            victim.kill()?; // SIGKILL on unix
+            let status = victim.wait()?;
+            anyhow::ensure!(!status.success(), "victim was supposed to die mid-run");
+            println!("[chaos] SIGKILLed worker 0 ({status}); waiting for the vacancy");
+            // Spawn the replacement only once the leader has processed the
+            // dead socket and vacated node 0 — a HELLO for a still-registered
+            // id would be refused outright (HELLO rejections do not retry).
+            let deadline = std::time::Instant::now() + Duration::from_secs(30);
+            while observer.list_nodes()?.iter().any(|n| n.id == 0) {
+                anyhow::ensure!(
+                    std::time::Instant::now() < deadline,
+                    "leader never vacated node 0 after the SIGKILL"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            println!("[chaos] node 0 vacated; spawning replacement");
+            spawn_worker(&bin, &addr2, &cfg_path2, 0)
+        }))
+    } else {
+        None
+    };
+
     let mut lcfg = cfg.clone();
     lcfg.name = "tcp-cluster-multiprocess".into();
     lcfg.cluster = true;
     lcfg.tcp_port = port;
     let report = run(lcfg);
+    if let Some(h) = chaos {
+        let mut replacement = h.join().expect("chaos thread panicked")?;
+        let status = replacement.wait()?;
+        anyhow::ensure!(status.success(), "replacement worker exited with {status}");
+        println!("[chaos] replacement worker 0 finished cleanly");
+    }
     for mut c in children {
         let status = c.wait()?;
         anyhow::ensure!(status.success(), "worker process exited with {status}");
@@ -110,6 +186,7 @@ fn run_threaded(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
 }
 
 fn main() -> anyhow::Result<()> {
+    let kill_one = std::env::args().any(|a| a == "--kill-one");
     let mut cfg = ExperimentConfig::default();
     cfg.name = "tcp-cluster".into();
     cfg.dims = vec![784, 96, 96, 96];
@@ -121,14 +198,22 @@ fn main() -> anyhow::Result<()> {
     cfg.scheduler = Scheduler::AllLayers;
     cfg.nodes = 2;
     cfg.transport = TransportKind::Tcp;
+    // Adam moments travel with the published layers, so a replacement
+    // worker resumes the crashed node's optimizer state exactly — the
+    // crash-recovery run reproduces the in-proc weights bitwise.
+    cfg.ship_opt_state = true;
 
     // --- cluster run: N OS processes (or threads, without the binary) -----
     let t0 = std::time::Instant::now();
     let (cluster, mode) = match pff_binary() {
         Some(bin) => {
             println!("spawning {} worker process(es) of {}", cfg.nodes, bin.display());
-            (run_multiprocess(&cfg, &bin)?, "multi-process")
+            let mode = if kill_one { "multi-process, kill-one" } else { "multi-process" };
+            (run_multiprocess(&cfg, &bin, kill_one)?, mode)
         }
+        None if kill_one => anyhow::bail!(
+            "--kill-one needs the pff binary (run `cargo build --release` first, or set PFF_BIN)"
+        ),
         None => {
             eprintln!(
                 "note: pff binary not found (run `cargo build --release` first, or set \

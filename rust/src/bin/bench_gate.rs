@@ -1,0 +1,224 @@
+//! `bench_gate` — CI guard comparing a fresh `BENCH_*.json` artifact
+//! against a committed baseline and failing on throughput regression.
+//!
+//! ```bash
+//! bench_gate --baseline ci/baselines/micro_engine.json \
+//!            --fresh rust/BENCH_micro_engine.json [--max-regress 0.25]
+//! ```
+//!
+//! Every record in the artifacts measures seconds per iteration
+//! (`min_s`), so "throughput regression" means time growth: the gate
+//! fails when `fresh.min_s > baseline.min_s * (1 + max_regress)` for any
+//! record present in the baseline, or when a baseline record disappears
+//! from the fresh run (coverage loss). `min_s` is the comparison metric —
+//! it is the least noisy statistic on shared CI runners.
+//!
+//! Record names are matched after stripping the trailing parenthesized
+//! decoration the benches append (measured GFLOP/s / MB/s values change
+//! every run; the shape prefix is the stable identity). A missing
+//! baseline file is a clean skip — the gate bootstraps itself the first
+//! time CI uploads an artifact worth committing.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+/// One normalized bench record.
+#[derive(Clone, Debug, PartialEq)]
+struct Record {
+    name: String,
+    min_s: f64,
+}
+
+/// Strip a trailing `(...)` decoration (and surrounding whitespace) from a
+/// record name: `"ff_step 784x64 b32  (3.1 GFLOP/s)"` → `"ff_step 784x64 b32"`.
+/// Inner parenthesized groups (shape labels) survive.
+fn normalize(name: &str) -> String {
+    let trimmed = name.trim_end();
+    if trimmed.ends_with(')') {
+        if let Some(open) = trimmed.rfind('(') {
+            return trimmed[..open].trim_end().to_string();
+        }
+    }
+    trimmed.to_string()
+}
+
+/// Extract the quoted string value following `"name":` in `obj`.
+fn field_str(obj: &str, key: &str) -> Option<String> {
+    let tag = format!("\"{key}\":");
+    let at = obj.find(&tag)? + tag.len();
+    let rest = obj[at..].trim_start();
+    let rest = rest.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+/// Extract the numeric value following `"min_s":` (etc.) in `obj`.
+fn field_num(obj: &str, key: &str) -> Option<f64> {
+    let tag = format!("\"{key}\":");
+    let at = obj.find(&tag)? + tag.len();
+    let rest = obj[at..].trim_start();
+    let numeric =
+        |c: char| c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == 'E' || c == '+';
+    let end = rest.find(|c: char| !numeric(c)).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Parse every record object out of a `JsonReport`/`micro_engine`-style
+/// artifact: any `{...}` containing both a `"name"` string and a
+/// `"min_s"` number (the `threads` sweep entries qualify too).
+fn parse_records(json: &str) -> Vec<Record> {
+    let mut out = Vec::new();
+    // Record objects never nest, so splitting on '{' and reading up to the
+    // matching '}' per segment is exact for this writer.
+    for seg in json.split('{').skip(1) {
+        let obj = seg.split('}').next().unwrap_or("");
+        if let (Some(name), Some(min_s)) = (field_str(obj, "name"), field_num(obj, "min_s")) {
+            out.push(Record { name: normalize(&name), min_s });
+        }
+    }
+    out
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: bench_gate --baseline FILE --fresh FILE [--max-regress FRACTION]\n\
+         fails (exit 1) when any baseline record runs >FRACTION slower (default 0.25)\n\
+         or disappears from the fresh artifact; missing baseline FILE = clean skip"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut baseline: Option<String> = None;
+    let mut fresh: Option<String> = None;
+    let mut max_regress = 0.25f64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--baseline" => {
+                baseline = args.get(i + 1).cloned();
+                i += 2;
+            }
+            "--fresh" => {
+                fresh = args.get(i + 1).cloned();
+                i += 2;
+            }
+            "--max-regress" => {
+                max_regress = match args.get(i + 1).and_then(|v| v.parse().ok()) {
+                    Some(v) => v,
+                    None => usage(),
+                };
+                i += 2;
+            }
+            _ => usage(),
+        }
+    }
+    let (Some(baseline_path), Some(fresh_path)) = (baseline, fresh) else { usage() };
+
+    let baseline_text = match std::fs::read_to_string(&baseline_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!(
+                "bench_gate: no baseline at {baseline_path} — skipping (commit one from a \
+                 CI artifact to arm the gate)"
+            );
+            return ExitCode::SUCCESS;
+        }
+    };
+    let fresh_text = match std::fs::read_to_string(&fresh_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench_gate: cannot read fresh artifact {fresh_path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let base: BTreeMap<String, f64> =
+        parse_records(&baseline_text).into_iter().map(|r| (r.name, r.min_s)).collect();
+    let fresh: BTreeMap<String, f64> =
+        parse_records(&fresh_text).into_iter().map(|r| (r.name, r.min_s)).collect();
+    if base.is_empty() {
+        eprintln!("bench_gate: baseline {baseline_path} contains no records");
+        return ExitCode::FAILURE;
+    }
+
+    let mut failures = Vec::new();
+    println!("bench_gate: {} baseline records, threshold +{:.0}%", base.len(), max_regress * 100.0);
+    for (name, &base_min) in &base {
+        match fresh.get(name) {
+            None => failures.push(format!("'{name}': present in baseline, missing from fresh run")),
+            Some(&fresh_min) => {
+                let ratio = fresh_min / base_min;
+                let verdict = if ratio > 1.0 + max_regress { "REGRESSED" } else { "ok" };
+                println!(
+                    "  {verdict:<9} {name}  base {base_min:.6}s → fresh {fresh_min:.6}s \
+                     ({:+.1}%)",
+                    (ratio - 1.0) * 100.0
+                );
+                if ratio > 1.0 + max_regress {
+                    failures.push(format!(
+                        "'{name}': {:.1}% slower than baseline ({base_min:.6}s → {fresh_min:.6}s)",
+                        (ratio - 1.0) * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    for name in fresh.keys().filter(|n| !base.contains_key(*n)) {
+        println!("  new       {name} (not in baseline — consider refreshing it)");
+    }
+
+    if failures.is_empty() {
+        println!("bench_gate: PASS");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("bench_gate: FAIL — {} regression(s):", failures.len());
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_strips_only_the_trailing_decoration() {
+        assert_eq!(normalize("ff_step 784x64 b32  (3.14 GFLOP/s)"), "ff_step 784x64 b32");
+        assert_eq!(
+            normalize("[tcp]    put+get reduced layer (256x256, 256 KB)  (123 MB/s)"),
+            "[tcp]    put+get reduced layer (256x256, 256 KB)"
+        );
+        assert_eq!(normalize("matmul 784x2000 b128 t4"), "matmul 784x2000 b128 t4");
+        assert_eq!(normalize("[tcp]    blocking-wait wake latency (p50 0.4 ms)"),
+            "[tcp]    blocking-wait wake latency");
+    }
+
+    #[test]
+    fn parses_records_and_threads_sweep_entries() {
+        let json = r#"{
+  "bench": "micro_engine",
+  "records": [
+    {"name": "[native] ff_step 784x64 b32  (3.1 GFLOP/s)", "mean_s": 0.002, "min_s": 0.001500000, "p50_s": 0.002, "iters": 5}
+  ],
+  "threads": [
+    {"name": "matmul 784x2000 b128 t4", "threads": 4, "mean_s": 0.05, "min_s": 0.040000000, "p50_s": 0.05, "iters": 2}
+  ]
+}"#;
+        let recs = parse_records(json);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0], Record { name: "[native] ff_step 784x64 b32".into(), min_s: 0.0015 });
+        assert_eq!(recs[1].name, "matmul 784x2000 b128 t4");
+        assert!((recs[1].min_s - 0.04).abs() < 1e-12);
+    }
+
+    #[test]
+    fn field_num_handles_scientific_and_negative() {
+        assert_eq!(field_num(r#""min_s": 1.5e-3, "x": 1"#, "min_s"), Some(0.0015));
+        assert_eq!(field_num(r#""min_s": -2"#, "min_s"), Some(-2.0));
+        assert_eq!(field_num(r#""other": 1"#, "min_s"), None);
+    }
+}

@@ -8,7 +8,7 @@
 
 mod parse;
 
-pub use parse::parse_kv_file;
+pub use parse::{parse_kv_file, parse_kv_str};
 
 use std::path::PathBuf;
 
@@ -187,6 +187,14 @@ pub struct ExperimentConfig {
     /// (`--threads`). 0 = auto: `PFF_THREADS` env, else all cores. Results
     /// are bit-identical at every value — only wall-clock changes.
     pub threads: usize,
+    /// Directory for durable `RunCheckpoint` files (`--checkpoint_dir`).
+    /// Empty (the default) disables checkpointing. The supervisor writes
+    /// `latest.ckpt` there atomically (tmp + rename) and `pff train
+    /// --resume PATH` rehydrates a run from it.
+    pub checkpoint_dir: PathBuf,
+    /// Completed chapters between checkpoint writes (`--checkpoint_every`,
+    /// ≥ 1). Only meaningful when `checkpoint_dir` is set.
+    pub checkpoint_every: u32,
     /// Print per-chapter progress lines.
     pub verbose: bool,
 }
@@ -224,6 +232,8 @@ impl Default for ExperimentConfig {
             tcp_port: 0,
             store_timeout_s: 300,
             threads: 0,
+            checkpoint_dir: PathBuf::new(),
+            checkpoint_every: 1,
             verbose: false,
         }
     }
@@ -321,6 +331,9 @@ impl ExperimentConfig {
         if self.batch == 0 {
             bail!("batch must be ≥1");
         }
+        if self.checkpoint_every == 0 {
+            bail!("checkpoint_every must be ≥1 (completed chapters between checkpoint writes)");
+        }
         if self.cluster {
             if self.transport != TransportKind::Tcp {
                 bail!("cluster mode needs transport = tcp (workers are separate processes)");
@@ -390,6 +403,8 @@ impl ExperimentConfig {
             "tcp_port" => self.tcp_port = v.parse()?,
             "store_timeout_s" => self.store_timeout_s = v.parse()?,
             "threads" => self.threads = v.parse()?,
+            "checkpoint_dir" => self.checkpoint_dir = PathBuf::from(v),
+            "checkpoint_every" => self.checkpoint_every = v.parse()?,
             "verbose" => self.verbose = parse_bool(v)?,
             other => bail!("unknown config key '{other}'"),
         }
@@ -468,6 +483,8 @@ impl ExperimentConfig {
         kv(&mut out, "tcp_port", self.tcp_port);
         kv(&mut out, "store_timeout_s", self.store_timeout_s);
         kv(&mut out, "threads", self.threads);
+        kv(&mut out, "checkpoint_dir", self.checkpoint_dir.display());
+        kv(&mut out, "checkpoint_every", self.checkpoint_every);
         kv(&mut out, "verbose", self.verbose);
         out
     }
@@ -577,6 +594,8 @@ mod tests {
         cfg.tcp_port = 7441;
         cfg.lr_head = 0.00025;
         cfg.threads = 6;
+        cfg.checkpoint_dir = PathBuf::from("ckpts/run1");
+        cfg.checkpoint_every = 3;
         cfg.verbose = true;
 
         let mut parsed = ExperimentConfig::default();
@@ -595,6 +614,27 @@ mod tests {
         assert!(cfg.clone().validated().is_err(), "cluster needs a fixed port");
         cfg.tcp_port = 7441;
         cfg.validated().unwrap();
+    }
+
+    #[test]
+    fn checkpoint_keys_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("checkpoint_dir", "ckpt").unwrap();
+        cfg.set("checkpoint_every", "4").unwrap();
+        assert_eq!(cfg.checkpoint_dir, PathBuf::from("ckpt"));
+        assert_eq!(cfg.checkpoint_every, 4);
+        cfg.clone().validated().unwrap();
+        cfg.checkpoint_every = 0;
+        let err = cfg.validated().unwrap_err();
+        assert!(err.to_string().contains("checkpoint_every"), "{err}");
+        // An empty dir (checkpointing off) round-trips through the kv form.
+        let off = ExperimentConfig::default();
+        let mut parsed = ExperimentConfig::default();
+        parsed.checkpoint_dir = PathBuf::from("stale");
+        for (k, v) in parse::parse_kv_str(&off.to_kv_string()).unwrap() {
+            parsed.set(&k, &v).unwrap();
+        }
+        assert_eq!(parsed.checkpoint_dir, PathBuf::new());
     }
 
     #[test]

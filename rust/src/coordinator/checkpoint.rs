@@ -1,0 +1,780 @@
+//! Durable run checkpoints and the change-driven checkpoint writer.
+//!
+//! Pipelined FF is unusually checkpointable: the *only* live state of a
+//! run is what the chapter-versioned store already holds (published
+//! `LayerParams`/`HeadParams` with optional Adam snapshots, negative
+//! labels) plus a per-node chapter cursor — everything else re-derives
+//! deterministically from the seed. A [`RunCheckpoint`] captures exactly
+//! that, serialized **through the transport codec** (`transport::codec`),
+//! so the disk format and the wire format share one tested
+//! encoder/decoder, and writes it atomically (tmp + rename): a `SIGKILL`
+//! at any instant leaves either the previous or the next valid file,
+//! never a torn one.
+//!
+//! Resume (`Experiment::builder().resume_from(path)` /
+//! `pff train --resume PATH`) rehydrates the `MemStore` from the dump and
+//! launches normally; the schedulers fast-forward past the longest
+//! complete prefix of each node's chapter assignment by probing the store
+//! ([`crate::coordinator::Scheduler::chapter_complete`]). Because the
+//! kernels are bit-deterministic, an interrupted-then-resumed run
+//! reproduces the uninterrupted run's weights **bitwise** whenever Adam
+//! moments ride with the published layers (`ship_opt_state = true`); the
+//! sorted dump then makes the final checkpoint files byte-comparable —
+//! CI's chaos gate literally `cmp`s them.
+//!
+//! The [`CheckpointWriter`] runs on its own thread, parked on the store's
+//! change counter ([`MemStore::wait_version_change`]) — change-driven
+//! like everything else in the control plane, no poll interval — and
+//! emits a [`RunEvent::CheckpointWritten`] per landed file.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{parse_kv_str, ExperimentConfig};
+use crate::coordinator::events::{EventBus, RunEvent};
+use crate::coordinator::schedulers::Scheduler;
+use crate::coordinator::store::{HeadParams, LayerParams, MemStore, ParamStore, StoreDump};
+use crate::metrics::CommStats;
+use crate::tensor::{Rng, RngState};
+use crate::transport::codec::{read_frame, write_frame, Dec, Enc};
+
+/// File magic: the bytes `PFFC` (written little-endian as a `u32`).
+pub const CHECKPOINT_MAGIC: u32 = 0x4346_4650;
+
+/// On-disk format version. Bump on any layout change; readers refuse
+/// versions they do not speak with a clear error.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// Default checkpoint file name inside `checkpoint_dir`.
+pub const CHECKPOINT_FILE: &str = "latest.ckpt";
+
+/// Size guard when reading checkpoint files (matches the wire frame cap).
+const MAX_CHECKPOINT: usize = 1 << 30;
+
+/// Config keys that must match between a checkpoint and a resumed run —
+/// everything that shapes the training trajectory. Deployment knobs
+/// (transport, ports, timeouts, thread count, checkpoint settings,
+/// eval-only keys) may differ freely.
+const STRICT_KEYS: &[&str] = &[
+    "dataset",
+    "train_n",
+    "dims",
+    "classes",
+    "epochs",
+    "splits",
+    "batch",
+    "nodes",
+    "scheduler",
+    "neg",
+    "classifier",
+    "perfopt",
+    "theta",
+    "lr_ff",
+    "lr_head",
+    "seed",
+    "engine",
+    "ship_opt_state",
+    "head_inline",
+    "neg_subsample",
+];
+
+/// A versioned, durable snapshot of one training run.
+#[derive(Clone, Debug)]
+pub struct RunCheckpoint {
+    /// The validated [`ExperimentConfig`], in its canonical `key = value`
+    /// form (the same rendering cluster launchers ship to workers).
+    pub config_kv: String,
+    /// Registry name of the scheduler that ran (custom schedulers record
+    /// theirs, not the parse-level enum).
+    pub scheduler: String,
+    /// Per-node chapter cursor: how many of node *i*'s assigned chapters
+    /// were fully published when this snapshot was taken.
+    pub completed: Vec<u32>,
+    /// State of the master RNG stream (`Rng::new(cfg.seed)`). The
+    /// built-in schedulers re-derive every stream from
+    /// `(seed, chapter, purpose)` tags, so there is no live mid-run
+    /// generator to capture — this records the root state so the format
+    /// can transport live generator state (`Rng::state` /
+    /// `Rng::from_state`) for consumers that do hold one.
+    pub rng: RngState,
+    /// Sorted dump of the parameter store (see [`StoreDump`]).
+    pub store: StoreDump,
+}
+
+impl RunCheckpoint {
+    /// Snapshot the current run state: sorted store dump + the chapter
+    /// cursor (works identically for in-proc nodes and external cluster
+    /// workers — both publish into the same leader-side store). The
+    /// cursor is computed **from the dump itself**, not from a second
+    /// look at the live store, so `completed` exactly matches what the
+    /// checkpoint contains even while nodes keep publishing.
+    pub fn capture(
+        cfg: &ExperimentConfig,
+        scheduler: &dyn Scheduler,
+        store: &MemStore,
+    ) -> Result<RunCheckpoint> {
+        let dump = store.dump();
+        let completed = completed_chapters(scheduler, &DumpView::new(&dump), cfg)?;
+        Ok(RunCheckpoint {
+            config_kv: cfg.to_kv_string(),
+            scheduler: scheduler.name().to_string(),
+            completed,
+            rng: Rng::new(cfg.seed).state(),
+            store: dump,
+        })
+    }
+
+    /// Total completed chapter-assignments across all nodes.
+    pub fn total_completed(&self) -> u32 {
+        self.completed.iter().sum()
+    }
+
+    /// Reconstruct the [`ExperimentConfig`] this checkpoint embeds.
+    pub fn experiment_config(&self) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        for (k, v) in parse_kv_str(&self.config_kv)? {
+            cfg.set(&k, &v).with_context(|| format!("checkpoint config key '{k}'"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Verify `cfg` is a legal configuration to resume this checkpoint
+    /// under: every training-relevant key must match (see the module
+    /// docs for which keys are deployment-only and may differ).
+    pub fn check_compat(&self, cfg: &ExperimentConfig) -> Result<()> {
+        let theirs: HashMap<String, String> = parse_kv_str(&self.config_kv)?.into_iter().collect();
+        let ours: HashMap<String, String> =
+            parse_kv_str(&cfg.to_kv_string())?.into_iter().collect();
+        for key in STRICT_KEYS {
+            let (a, b) = (theirs.get(*key), ours.get(*key));
+            if a != b {
+                bail!(
+                    "resume config mismatch on '{key}': checkpoint has {}, run has {} — \
+                     a resumed run must keep the training-relevant configuration",
+                    a.map_or("<unset>".into(), |v| format!("'{v}'")),
+                    b.map_or("<unset>".into(), |v| format!("'{v}'")),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the versioned payload (no outer frame).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u32(CHECKPOINT_MAGIC);
+        e.u32(CHECKPOINT_VERSION);
+        e.str(&self.config_kv);
+        e.str(&self.scheduler);
+        e.u32(self.completed.len() as u32);
+        for &c in &self.completed {
+            e.u32(c);
+        }
+        e.u64(self.rng.state);
+        match self.rng.spare_normal {
+            None => e.u8(0),
+            Some(v) => {
+                e.u8(1);
+                e.f32(v);
+            }
+        }
+        e.u32(self.store.layers.len() as u32);
+        for (slot, chapter, p) in &self.store.layers {
+            e.u32(*slot as u32);
+            e.u32(*chapter);
+            e.layer_params(p);
+        }
+        e.u32(self.store.heads.len() as u32);
+        for (chapter, p) in &self.store.heads {
+            e.u32(*chapter);
+            e.head_params(p);
+        }
+        e.u32(self.store.negs.len() as u32);
+        for (chapter, labels) in &self.store.negs {
+            e.u32(*chapter);
+            e.bytes(labels);
+        }
+        e.finish()
+    }
+
+    /// Decode a payload produced by [`RunCheckpoint::encode`]. Rejects
+    /// wrong magic, unsupported versions, truncation, and trailing bytes
+    /// with distinct, actionable errors.
+    pub fn decode(buf: &[u8]) -> Result<RunCheckpoint> {
+        let mut d = Dec::new(buf);
+        let magic = d.u32().context("checkpoint too short for the magic header")?;
+        if magic != CHECKPOINT_MAGIC {
+            bail!("not a pff checkpoint (bad magic {magic:#010x}, want {CHECKPOINT_MAGIC:#010x})");
+        }
+        let version = d.u32()?;
+        if version != CHECKPOINT_VERSION {
+            bail!(
+                "checkpoint format v{version} is not supported \
+                 (this build reads v{CHECKPOINT_VERSION})"
+            );
+        }
+        let config_kv = d.str().context("checkpoint config block")?;
+        let scheduler = d.str().context("checkpoint scheduler name")?;
+        let n = d.u32()? as usize;
+        let mut completed = Vec::with_capacity(n);
+        for _ in 0..n {
+            completed.push(d.u32()?);
+        }
+        let rng_state = d.u64()?;
+        let spare_normal = if d.u8()? != 0 { Some(d.f32()?) } else { None };
+        let rng = RngState { state: rng_state, spare_normal };
+        let n = d.u32()? as usize;
+        let mut layers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let slot = d.u32()? as usize;
+            let chapter = d.u32()?;
+            layers.push((slot, chapter, d.layer_params().context("checkpoint layer entry")?));
+        }
+        let n = d.u32()? as usize;
+        let mut heads = Vec::with_capacity(n);
+        for _ in 0..n {
+            let chapter = d.u32()?;
+            heads.push((chapter, d.head_params().context("checkpoint head entry")?));
+        }
+        let n = d.u32()? as usize;
+        let mut negs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let chapter = d.u32()?;
+            negs.push((chapter, d.bytes()?));
+        }
+        if d.remaining() != 0 {
+            bail!("checkpoint has {} trailing bytes (corrupt or mismatched format)", d.remaining());
+        }
+        Ok(RunCheckpoint {
+            config_kv,
+            scheduler,
+            completed,
+            rng,
+            store: StoreDump { layers, heads, negs },
+        })
+    }
+
+    /// Write atomically to `path` (frame into a sibling `.tmp`, then
+    /// rename over). Returns the file size in bytes.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        let payload = self.encode();
+        let mut file_bytes = Vec::with_capacity(payload.len() + 4);
+        write_frame(&mut file_bytes, &payload)?;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+            }
+        }
+        let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+        std::fs::write(&tmp, &file_bytes)
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        Ok(file_bytes.len() as u64)
+    }
+
+    /// Load and validate a checkpoint file written by
+    /// [`RunCheckpoint::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<RunCheckpoint> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let mut cur = std::io::Cursor::new(&bytes[..]);
+        let payload = read_frame(&mut cur, MAX_CHECKPOINT)
+            .with_context(|| format!("checkpoint {} is truncated or corrupt", path.display()))?;
+        if (cur.position() as usize) != bytes.len() {
+            bail!("checkpoint {} has data past the frame (corrupt)", path.display());
+        }
+        RunCheckpoint::decode(&payload)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+}
+
+/// Per-node chapter cursor, derived from what the store actually holds:
+/// the longest prefix of each node's planned chapters whose outputs are
+/// all published ([`Scheduler::chapter_complete`]). Chapters of a node
+/// are only ever published by that node, so a cursor computed while other
+/// nodes keep publishing is still exact.
+pub fn completed_chapters(
+    scheduler: &dyn Scheduler,
+    store: &dyn ParamStore,
+    cfg: &ExperimentConfig,
+) -> Result<Vec<u32>> {
+    let plan = scheduler.plan(cfg);
+    let mut out = Vec::with_capacity(plan.chapters.len());
+    for (node, chapters) in plan.chapters.iter().enumerate() {
+        let mut n = 0u32;
+        for &c in chapters {
+            if !scheduler.chapter_complete(store, cfg, node, c)? {
+                break;
+            }
+            n += 1;
+        }
+        out.push(n);
+    }
+    Ok(out)
+}
+
+/// Probe-only [`ParamStore`] view over a [`StoreDump`]: the chapter
+/// cursor is computed against the SAME snapshot the checkpoint persists
+/// (one lock acquisition produced both), so `completed` can never lag
+/// the dump's actual contents. Only the `has_*` probes are answerable;
+/// everything else is a hard error — `chapter_complete` implementations
+/// must stay presence-only.
+struct DumpView {
+    layers: HashSet<(usize, u32)>,
+    heads: HashSet<u32>,
+    negs: HashSet<u32>,
+}
+
+impl DumpView {
+    fn new(dump: &StoreDump) -> Self {
+        DumpView {
+            layers: dump.layers.iter().map(|&(l, c, _)| (l, c)).collect(),
+            heads: dump.heads.iter().map(|&(c, _)| c).collect(),
+            negs: dump.negs.iter().map(|&(c, _)| c).collect(),
+        }
+    }
+}
+
+impl ParamStore for DumpView {
+    fn put_layer(&self, _layer: usize, _chapter: u32, _params: LayerParams) -> Result<()> {
+        bail!("checkpoint dump view is presence-probe-only")
+    }
+    fn get_layer(&self, _layer: usize, _chapter: u32, _t: Duration) -> Result<LayerParams> {
+        bail!("checkpoint dump view is presence-probe-only")
+    }
+    fn put_head(&self, _chapter: u32, _params: HeadParams) -> Result<()> {
+        bail!("checkpoint dump view is presence-probe-only")
+    }
+    fn get_head(&self, _chapter: u32, _t: Duration) -> Result<HeadParams> {
+        bail!("checkpoint dump view is presence-probe-only")
+    }
+    fn put_neg(&self, _chapter: u32, _labels: Vec<u8>) -> Result<()> {
+        bail!("checkpoint dump view is presence-probe-only")
+    }
+    fn get_neg(&self, _chapter: u32, _t: Duration) -> Result<Vec<u8>> {
+        bail!("checkpoint dump view is presence-probe-only")
+    }
+    fn latest_layer(&self, _layer: usize) -> Result<Option<(u32, LayerParams)>> {
+        bail!("checkpoint dump view is presence-probe-only")
+    }
+    fn latest_head(&self) -> Result<Option<(u32, HeadParams)>> {
+        bail!("checkpoint dump view is presence-probe-only")
+    }
+    fn comm_stats(&self) -> CommStats {
+        CommStats::default()
+    }
+    fn has_layer(&self, layer: usize, chapter: u32) -> Result<bool> {
+        Ok(self.layers.contains(&(layer, chapter)))
+    }
+    fn has_head(&self, chapter: u32) -> Result<bool> {
+        Ok(self.heads.contains(&chapter))
+    }
+    fn has_neg(&self, chapter: u32) -> Result<bool> {
+        Ok(self.negs.contains(&chapter))
+    }
+}
+
+/// Everything one checkpoint write needs; shared between the writer
+/// thread (periodic) and `finish` (final snapshot).
+struct WriterCtx {
+    cfg: ExperimentConfig,
+    scheduler: Arc<dyn Scheduler>,
+    store: Arc<MemStore>,
+    bus: EventBus,
+    path: PathBuf,
+    every: u32,
+}
+
+impl WriterCtx {
+    /// Capture + save + announce. Returns the total completed-chapter
+    /// count the snapshot recorded.
+    fn write_now(&self) -> Result<u32> {
+        let ck = RunCheckpoint::capture(&self.cfg, self.scheduler.as_ref(), &self.store)?;
+        let total = ck.total_completed();
+        let wire_bytes = ck.save(&self.path)?;
+        self.bus.emit(RunEvent::CheckpointWritten {
+            path: self.path.display().to_string(),
+            wire_bytes,
+        });
+        Ok(total)
+    }
+}
+
+/// Background checkpoint writer for one run.
+///
+/// Parks on the store's change counter; whenever publishes land it
+/// recomputes the chapter cursor and writes a fresh checkpoint once
+/// `checkpoint_every` more chapter-assignments have completed since the
+/// last write. An initial checkpoint is written at spawn (so a kill at
+/// any point after launch finds a resumable file), and
+/// [`CheckpointWriter::finish`] writes the final end-of-run snapshot.
+pub struct CheckpointWriter {
+    stop: Arc<AtomicBool>,
+    store: Arc<MemStore>,
+    ctx: Arc<WriterCtx>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CheckpointWriter {
+    /// Start the writer for a run whose `cfg.checkpoint_dir` is set.
+    /// Writes the initial checkpoint synchronously (a launch error here
+    /// surfaces immediately rather than mid-run).
+    ///
+    /// `resuming` declares whether this run rehydrated from a checkpoint:
+    /// a FRESH run pointed at a directory that already holds a
+    /// `latest.ckpt` is refused — the initial write would clobber the
+    /// previous run's only resume point (the classic "re-ran the command
+    /// but forgot --resume" data loss).
+    pub fn spawn(
+        cfg: &ExperimentConfig,
+        scheduler: Arc<dyn Scheduler>,
+        store: Arc<MemStore>,
+        bus: EventBus,
+        resuming: bool,
+    ) -> Result<CheckpointWriter> {
+        let path = cfg.checkpoint_dir.join(CHECKPOINT_FILE);
+        if !resuming && path.exists() {
+            bail!(
+                "refusing to overwrite existing checkpoint {}: resume it with \
+                 `--resume {}` (or `.resume_from(..)`), or point checkpoint_dir \
+                 elsewhere / remove the file to start fresh",
+                path.display(),
+                path.display(),
+            );
+        }
+        let ctx = Arc::new(WriterCtx {
+            path,
+            every: cfg.checkpoint_every.max(1),
+            cfg: cfg.clone(),
+            scheduler,
+            store: store.clone(),
+            bus,
+        });
+        // Baseline BEFORE the initial write: a publish landing while that
+        // write runs must still wake the thread (a spurious wake that
+        // finds nothing new is harmless; a swallowed one loses a chapter
+        // from the last periodic checkpoint).
+        let baseline = store.version();
+        let mut last_total = ctx.write_now().context("writing the initial checkpoint")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (ctx2, stop2) = (ctx.clone(), stop.clone());
+        let thread = std::thread::Builder::new()
+            .name("pff-checkpoint".into())
+            .spawn(move || {
+                let mut seen = baseline;
+                loop {
+                    if stop2.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    // Change-driven park: wakes on any publish, on
+                    // MemStore::touch (finish), or on store close (cancel).
+                    match ctx2.store.wait_version_change(seen, Duration::from_secs(3600)) {
+                        Ok(v) if v == seen => continue,
+                        Ok(v) => seen = v,
+                        Err(_) => return, // store closed — run is over
+                    }
+                    if stop2.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let total = match completed_chapters(
+                        ctx2.scheduler.as_ref(),
+                        ctx2.store.as_ref(),
+                        &ctx2.cfg,
+                    ) {
+                        Ok(c) => c.iter().sum::<u32>(),
+                        Err(_) => continue,
+                    };
+                    if total >= last_total.saturating_add(ctx2.every) {
+                        match ctx2.write_now() {
+                            Ok(t) => last_total = t,
+                            // Disk trouble must not kill the run; the next
+                            // publish retries. (Printing is the accept-loop
+                            // precedent for unreportable background errors.)
+                            Err(e) => eprintln!("[pff-checkpoint] write failed: {e:#}"),
+                        }
+                    }
+                }
+            })
+            .context("spawning the checkpoint writer thread")?;
+        Ok(CheckpointWriter { stop, store, ctx, thread: Some(thread) })
+    }
+
+    /// Stop the writer thread. With `write_final`, capture one last
+    /// checkpoint of the store's end-of-run state on the calling thread —
+    /// the file CI's chaos gate byte-compares between an interrupted and
+    /// an uninterrupted run.
+    pub fn finish(mut self, write_final: bool) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.store.touch();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        if write_final {
+            self.ctx.write_now().context("writing the final checkpoint")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::schedulers::{head_slot, AllLayers, SingleLayer};
+    use crate::coordinator::store::{HeadParams, LayerParams, OptSnapshot};
+    use crate::tensor::Matrix;
+
+    fn layer_with_opt(seed: u64) -> LayerParams {
+        let mut rng = Rng::new(seed);
+        LayerParams {
+            w: Matrix::randn_scaled(3, 2, &mut rng),
+            b: vec![0.5, -0.5],
+            normalize_input: true,
+            opt: Some(OptSnapshot {
+                m_w: Matrix::randn_scaled(3, 2, &mut rng),
+                v_w: Matrix::randn_scaled(3, 2, &mut rng),
+                m_b: vec![0.1, 0.2],
+                v_b: vec![0.3, 0.4],
+                t: 7,
+            }),
+        }
+    }
+
+    fn sample_checkpoint() -> RunCheckpoint {
+        let mut rng = Rng::new(11);
+        RunCheckpoint {
+            config_kv: ExperimentConfig::tiny().to_kv_string(),
+            scheduler: "all-layers".into(),
+            completed: vec![3, 2],
+            rng: RngState { state: 0xDEAD_BEEF, spare_normal: Some(-0.75) },
+            store: StoreDump {
+                layers: vec![
+                    (0, 0, layer_with_opt(1)),
+                    (
+                        0,
+                        1,
+                        LayerParams {
+                            // NaN payload and a 0×N shape must survive bitwise.
+                            w: Matrix::from_vec(1, 3, vec![f32::NAN, f32::INFINITY, -0.0]),
+                            b: vec![f32::NAN],
+                            normalize_input: false,
+                            opt: None,
+                        },
+                    ),
+                    (
+                        head_slot(1),
+                        2,
+                        LayerParams {
+                            w: Matrix::from_vec(0, 4, vec![]),
+                            b: vec![],
+                            normalize_input: false,
+                            opt: None,
+                        },
+                    ),
+                ],
+                heads: vec![(
+                    1,
+                    HeadParams {
+                        w: Matrix::randn_scaled(2, 4, &mut rng),
+                        b: vec![0.0; 4],
+                        opt: None,
+                    },
+                )],
+                negs: vec![(2, vec![1, 2, 3]), (4, vec![])],
+            },
+        }
+    }
+
+    #[test]
+    fn encode_decode_is_bit_exact_including_nan_and_zero_row_shapes() {
+        let ck = sample_checkpoint();
+        let bytes = ck.encode();
+        let got = RunCheckpoint::decode(&bytes).unwrap();
+        // Re-encoding the decoded value must reproduce the exact bytes —
+        // bit-exactness through NaN payloads included.
+        assert_eq!(got.encode(), bytes);
+        assert_eq!(got.scheduler, "all-layers");
+        assert_eq!(got.completed, vec![3, 2]);
+        assert_eq!(got.rng, ck.rng);
+        assert_eq!(got.store.layers.len(), 3);
+        let (slot, chapter, nan_layer) = &got.store.layers[1];
+        assert_eq!((*slot, *chapter), (0, 1));
+        assert!(nan_layer.w.data[0].is_nan());
+        assert_eq!(nan_layer.w.data[2].to_bits(), (-0.0f32).to_bits());
+        let (_, _, empty) = &got.store.layers[2];
+        assert_eq!((empty.w.rows, empty.w.cols), (0, 4));
+        assert_eq!(got.store.negs[1], (4, vec![]));
+    }
+
+    #[test]
+    fn decode_rejects_bad_magic_version_and_trailing_bytes() {
+        let ck = sample_checkpoint();
+        let bytes = ck.encode();
+
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        let err = RunCheckpoint::decode(&bad_magic).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        let mut bad_version = bytes.clone();
+        bad_version[4] = 99;
+        let err = RunCheckpoint::decode(&bad_version).unwrap_err();
+        assert!(err.to_string().contains("v99"), "{err}");
+
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        let err = RunCheckpoint::decode(&trailing).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+
+        // Truncation anywhere inside the payload fails cleanly.
+        assert!(RunCheckpoint::decode(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_corrupt_file_rejection() {
+        let dir = std::env::temp_dir().join(format!("pff_ckpt_unit_{}", std::process::id()));
+        let path = dir.join("latest.ckpt");
+        let ck = sample_checkpoint();
+        let bytes = ck.save(&path).unwrap();
+        assert!(bytes > 0);
+        let got = RunCheckpoint::load(&path).unwrap();
+        assert_eq!(got.encode(), ck.encode());
+
+        // A torn write (truncated file) is refused with a clear error.
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let err = RunCheckpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated or corrupt"), "{err:#}");
+
+        // Garbage past the frame is also refused.
+        let mut padded = full.clone();
+        padded.extend_from_slice(b"junk");
+        std::fs::write(&path, &padded).unwrap();
+        let err = RunCheckpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("past the frame"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_roundtrip_and_compat_guard() {
+        let cfg = ExperimentConfig::tiny();
+        let ck = RunCheckpoint {
+            config_kv: cfg.to_kv_string(),
+            scheduler: "sequential".into(),
+            completed: vec![0],
+            rng: Rng::new(cfg.seed).state(),
+            store: StoreDump::default(),
+        };
+        let parsed = ck.experiment_config().unwrap();
+        assert_eq!(format!("{parsed:?}"), format!("{cfg:?}"));
+        ck.check_compat(&cfg).unwrap();
+
+        // Deployment knobs may differ...
+        let mut moved = cfg.clone();
+        moved.threads = 7;
+        moved.checkpoint_dir = PathBuf::from("elsewhere");
+        moved.store_timeout_s = 5;
+        ck.check_compat(&moved).unwrap();
+
+        // ...training-relevant keys may not.
+        let mut reseeded = cfg.clone();
+        reseeded.seed = 1;
+        let err = ck.check_compat(&reseeded).unwrap_err();
+        assert!(err.to_string().contains("'seed'"), "{err}");
+    }
+
+    #[test]
+    fn completed_chapters_tracks_store_prefixes() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.scheduler = crate::config::Scheduler::AllLayers;
+        cfg.nodes = 2;
+        let cfg = cfg.validated().unwrap();
+        let store = MemStore::new();
+        let p = || LayerParams {
+            w: Matrix::zeros(2, 2),
+            b: vec![0.0; 2],
+            normalize_input: false,
+            opt: None,
+        };
+        // Node 0 owns chapters 0,2,4,..; node 1 owns 1,3,5,..
+        // Publish all layers for chapters 0 and 1, plus a partial chapter 2.
+        for c in [0u32, 1] {
+            for l in 0..cfg.num_layers() {
+                store.put_layer(l, c, p()).unwrap();
+            }
+        }
+        store.put_layer(0, 2, p()).unwrap();
+        let done = completed_chapters(&AllLayers, &store, &cfg).unwrap();
+        assert_eq!(done, vec![1, 1], "partial chapter 2 must not count");
+
+        // Single-Layer cursor: node i's prefix over slot i.
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.scheduler = crate::config::Scheduler::SingleLayer;
+        cfg.nodes = 3;
+        let cfg = cfg.validated().unwrap();
+        let store = MemStore::new();
+        for c in 0..3u32 {
+            store.put_layer(0, c, p()).unwrap();
+        }
+        store.put_layer(1, 0, p()).unwrap();
+        let done = completed_chapters(&SingleLayer, &store, &cfg).unwrap();
+        assert_eq!(done, vec![3, 1, 0]);
+    }
+
+    #[test]
+    fn writer_emits_initial_checkpoint_and_final_snapshot() {
+        let dir = std::env::temp_dir().join(format!("pff_ckpt_writer_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.checkpoint_dir = dir.clone();
+        let cfg = cfg.validated().unwrap();
+        let store = Arc::new(MemStore::new());
+        let bus = EventBus::new();
+        let rx = bus.subscribe();
+        let writer =
+            CheckpointWriter::spawn(&cfg, Arc::new(AllLayers), store.clone(), bus.clone(), false)
+                .unwrap();
+        // Initial write landed synchronously.
+        let ev = rx.try_iter().next().expect("initial CheckpointWritten");
+        let RunEvent::CheckpointWritten { path, wire_bytes } = ev else {
+            panic!("expected CheckpointWritten, got {ev}");
+        };
+        assert!(wire_bytes > 0);
+        assert!(std::path::Path::new(&path).exists());
+
+        store
+            .put_layer(
+                0,
+                0,
+                LayerParams {
+                    w: Matrix::zeros(2, 2),
+                    b: vec![0.0; 2],
+                    normalize_input: false,
+                    opt: None,
+                },
+            )
+            .unwrap();
+        writer.finish(true).unwrap();
+        let ck = RunCheckpoint::load(dir.join(CHECKPOINT_FILE)).unwrap();
+        assert_eq!(ck.store.layers.len(), 1, "final snapshot must include late publishes");
+
+        // A fresh (non-resume) writer aimed at this directory must refuse
+        // to clobber the existing resume point; a resuming one may.
+        let err =
+            CheckpointWriter::spawn(&cfg, Arc::new(AllLayers), store.clone(), bus.clone(), false)
+                .unwrap_err();
+        assert!(err.to_string().contains("--resume"), "{err}");
+        CheckpointWriter::spawn(&cfg, Arc::new(AllLayers), store, bus, true)
+            .unwrap()
+            .finish(false)
+            .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

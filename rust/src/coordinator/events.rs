@@ -82,6 +82,13 @@ pub enum RunEvent {
         /// Approximate bytes on the wire.
         wire_bytes: u64,
     },
+    /// A durable run checkpoint landed on disk (atomic write + rename).
+    CheckpointWritten {
+        /// Path of the checkpoint file.
+        path: String,
+        /// Serialized size in bytes (same codec as the wire format).
+        wire_bytes: u64,
+    },
     /// Test-set evaluation finished.
     Eval {
         /// Accuracy in `[0, 1]`.
@@ -129,6 +136,9 @@ impl std::fmt::Display for RunEvent {
             }
             RunEvent::HeadPublished { node, chapter, wire_bytes } => {
                 write!(f, "node {node}: published head @ chapter {chapter} ({wire_bytes} B)")
+            }
+            RunEvent::CheckpointWritten { path, wire_bytes } => {
+                write!(f, "checkpoint written: {path} ({wire_bytes} B)")
             }
             RunEvent::Eval { accuracy } => write!(f, "eval: accuracy {:.2}%", accuracy * 100.0),
             RunEvent::Done { ok: true } => write!(f, "done"),
@@ -307,6 +317,10 @@ fn csv_row(ev: &RunEvent) -> Vec<String> {
             row[0] = "head_published".into();
             row[1] = node.to_string();
             row[3] = chapter.to_string();
+            row[5] = wire_bytes.to_string();
+        }
+        RunEvent::CheckpointWritten { wire_bytes, .. } => {
+            row[0] = "checkpoint_written".into();
             row[5] = wire_bytes.to_string();
         }
         RunEvent::Eval { accuracy } => {

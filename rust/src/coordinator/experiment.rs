@@ -13,6 +13,7 @@
 //! `run_experiment_with_data` are deprecated shims over this builder.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -21,6 +22,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{ExperimentConfig, TransportKind};
+use crate::coordinator::checkpoint::{CheckpointWriter, RunCheckpoint};
 use crate::coordinator::eval;
 use crate::coordinator::events::{EventBus, RunEvent};
 use crate::coordinator::registry::NodeRegistry;
@@ -103,6 +105,15 @@ enum SchedulerChoice {
     Instance(Arc<dyn Scheduler>),
 }
 
+enum ResumeSource {
+    /// Load (and validate) the file at launch.
+    Path(PathBuf),
+    /// Use this already-loaded checkpoint — the CLI loads the file once
+    /// to extract the embedded config and must not decode the (possibly
+    /// hundreds of MB) store dump a second time.
+    Loaded(Box<RunCheckpoint>),
+}
+
 /// Builder for one experiment session. Configuration methods chain by
 /// value; [`ExperimentBuilder::launch`] takes `&mut self` so a second
 /// launch on the same builder is a clean runtime error rather than a
@@ -113,6 +124,7 @@ pub struct ExperimentBuilder {
     data: Option<Arc<DataBundle>>,
     store: Option<Arc<dyn ParamStore>>,
     scheduler: Option<SchedulerChoice>,
+    resume: Option<ResumeSource>,
     bus: EventBus,
     launched: bool,
 }
@@ -161,6 +173,28 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Resume from a [`RunCheckpoint`] file: the session rehydrates the
+    /// parameter store from the checkpoint before launching, and every
+    /// node fast-forwards past the chapters whose outputs are already
+    /// published. With `.config()` omitted the checkpoint's embedded
+    /// config is used; an explicit config must agree with the checkpoint
+    /// on every training-relevant key (deployment knobs may differ).
+    /// Because kernels are bit-deterministic, a resumed run reproduces
+    /// the uninterrupted run's weights bitwise when Adam moments ship
+    /// with the layers (`ship_opt_state = true`).
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(ResumeSource::Path(path.into()));
+        self
+    }
+
+    /// [`ExperimentBuilder::resume_from`] with an already-loaded
+    /// [`RunCheckpoint`] — skips re-reading and re-decoding the file when
+    /// the caller just loaded it (e.g. to extract the embedded config).
+    pub fn resume_from_checkpoint(mut self, ck: RunCheckpoint) -> Self {
+        self.resume = Some(ResumeSource::Loaded(Box::new(ck)));
+        self
+    }
+
     /// Validate, resolve the scheduler, and start the run on a supervisor
     /// thread. Errors immediately on missing config, double launch,
     /// invalid config, unknown scheduler name, or a store/transport
@@ -176,22 +210,54 @@ impl ExperimentBuilder {
         // config, unknown scheduler) must not leave a half-drained builder
         // reporting "missing config" on retry.
         self.launched = true;
-        let cfg = self
-            .cfg
-            .take()
-            .context("Experiment::builder() needs .config(cfg) before .launch()")?;
+        let resume = match self.resume.take() {
+            Some(ResumeSource::Path(path)) => Some(
+                RunCheckpoint::load(&path)
+                    .with_context(|| format!("loading resume checkpoint {}", path.display()))?,
+            ),
+            Some(ResumeSource::Loaded(ck)) => Some(*ck),
+            None => None,
+        };
+        let cfg = match self.cfg.take() {
+            Some(cfg) => cfg,
+            None => match &resume {
+                // Resume-only launch: the checkpoint embeds its config.
+                Some(ck) => ck.experiment_config()?,
+                None => bail!(
+                    "Experiment::builder() needs .config(cfg) (or .resume_from(path)) \
+                     before .launch()"
+                ),
+            },
+        };
         // THE validation point: everything downstream (session, nodes,
         // shims) trusts the config as-is.
         let cfg = cfg.validated()?;
+        if let Some(ck) = &resume {
+            ck.check_compat(&cfg)?;
+        }
         let scheduler = match self.scheduler.take() {
             Some(SchedulerChoice::Instance(s)) => s,
             Some(SchedulerChoice::Named(n)) => SchedulerRegistry::global().resolve(&n)?,
-            None => SchedulerRegistry::global().resolve(cfg.scheduler.key())?,
+            // A checkpoint records the *registry* name of whatever ran —
+            // resolving it (rather than the parse-level enum) keeps custom
+            // named schedulers resumable.
+            None => match &resume {
+                Some(ck) => SchedulerRegistry::global().resolve(&ck.scheduler)?,
+                None => SchedulerRegistry::global().resolve(cfg.scheduler.key())?,
+            },
         };
         if self.store.is_some() && (cfg.transport != TransportKind::InProc || cfg.cluster) {
             bail!(
                 "a custom .store() works with transport = inproc only \
                  (the TCP server hosts its own MemStore)"
+            );
+        }
+        if self.store.is_some()
+            && (resume.is_some() || !cfg.checkpoint_dir.as_os_str().is_empty())
+        {
+            bail!(
+                "checkpoint/resume needs the built-in MemStore — remove .store(..) \
+                 or the checkpoint/resume options"
             );
         }
 
@@ -204,7 +270,7 @@ impl ExperimentBuilder {
             .name("pff-experiment".into())
             .spawn(move || {
                 let mut res =
-                    run_session(cfg, data, store, scheduler, bus2.clone(), cancel2.clone());
+                    run_session(cfg, data, store, scheduler, resume, bus2.clone(), cancel2.clone());
                 if res.is_err() && cancel2.is_cancelled() {
                     res = res.context("run cancelled");
                 }
@@ -267,12 +333,15 @@ impl RunHandle {
     }
 }
 
-/// One full experiment, on the supervisor thread. `cfg` is validated.
+/// One full experiment, on the supervisor thread. `cfg` is validated;
+/// `resume` (when present) was loaded and compatibility-checked at the
+/// builder boundary.
 fn run_session(
     cfg: ExperimentConfig,
     data: Option<Arc<DataBundle>>,
     custom_store: Option<Arc<dyn ParamStore>>,
     scheduler: Arc<dyn Scheduler>,
+    resume: Option<RunCheckpoint>,
     bus: EventBus,
     cancel: CancelToken,
 ) -> Result<ExperimentReport> {
@@ -301,13 +370,36 @@ fn run_session(
     if let Some(m) = mem.clone() {
         cancel.on_cancel(move || m.close());
     }
+    // Resume: rehydrate the store from the checkpoint BEFORE anything can
+    // read it (nodes, workers, the checkpoint writer). The schedulers then
+    // fast-forward past whatever the dump already covers.
+    let resuming = resume.is_some();
+    if let Some(ck) = resume {
+        let m = mem.as_ref().expect("launch() guards resume against custom stores");
+        m.restore(ck.store);
+    }
     // Capacity-bounded: a mis-launched worker with an out-of-range
     // --node-id is refused at HELLO instead of poisoning membership.
     let registry = Arc::new(NodeRegistry::with_capacity(cfg.nodes));
+    // Reconnect lease: a worker that drops mid-chapter must be replaced
+    // within the store-timeout window or the leader's completion park
+    // fails fast, naming the dropped node.
+    registry.set_lease(Duration::from_secs(cfg.store_timeout_s));
     {
         let r = registry.clone();
         cancel.on_cancel(move || r.close());
     }
+    // Durable checkpoints: a change-driven writer thread snapshots the
+    // store every `checkpoint_every` completed chapters (and once at
+    // launch, so a kill at any point finds a resumable file). A fresh run
+    // aimed at a directory that already holds a checkpoint is refused
+    // inside spawn — only a resume may overwrite a resume point.
+    let ckpt = if !cfg.checkpoint_dir.as_os_str().is_empty() {
+        let m = mem.clone().expect("launch() guards checkpointing against custom stores");
+        Some(CheckpointWriter::spawn(&cfg, scheduler.clone(), m, bus.clone(), resuming)?)
+    } else {
+        None
+    };
     let server = match cfg.transport {
         TransportKind::InProc => None,
         TransportKind::Tcp => {
@@ -405,6 +497,11 @@ fn run_session(
     let (node_reports, curve) = match run_result {
         Ok(v) => v,
         Err(e) => {
+            // Stop the checkpoint writer without a final write: the last
+            // periodic checkpoint on disk is the resume point.
+            if let Some(w) = ckpt {
+                let _ = w.finish(false);
+            }
             // Don't leak the listener/accept thread on a failed run — the
             // fixed cluster port must stay rebindable for a retry.
             if let Some(srv) = server {
@@ -414,6 +511,18 @@ fn run_session(
         }
     };
     let wall_s = origin.elapsed().as_secs_f64();
+    // Final checkpoint: the complete end-of-run store state. Written after
+    // wall-clock stops so checkpoint IO never skews the timing numbers. A
+    // failed write must not leak the accept thread / bound cluster port
+    // (the same invariant the training error path protects).
+    if let Some(w) = ckpt {
+        if let Err(e) = w.finish(true) {
+            if let Some(srv) = server {
+                srv.shutdown();
+            }
+            return Err(e);
+        }
+    }
 
     // --- assemble + post-hoc head + evaluate -----------------------------------
     // Read through the leader-side store directly (same data the clients

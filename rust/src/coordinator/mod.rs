@@ -18,6 +18,7 @@
 //! [`run_experiment`] / [`run_experiment_with_data`] remain as deprecated
 //! blocking shims over the builder.
 
+pub mod checkpoint;
 pub mod eval;
 pub mod events;
 pub mod experiment;
@@ -27,6 +28,7 @@ pub mod registry;
 pub mod schedulers;
 pub mod store;
 
+pub use checkpoint::{CheckpointWriter, RunCheckpoint};
 pub use eval::TrainedModel;
 pub use events::{EventBus, EventLog, RunEvent};
 pub use experiment::{CancelToken, Experiment, ExperimentBuilder, RunHandle};

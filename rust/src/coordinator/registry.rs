@@ -10,7 +10,12 @@
 //!
 //! Membership is crash-tolerant: a worker whose connection drops before
 //! its `DONE` is deregistered (freeing its node id for a restarted
-//! process); completed workers stay on the roster.
+//! process); completed workers stay on the roster. Each such drop opens a
+//! **reconnect lease**: the vacated id is held for adoption by a
+//! replacement `pff worker` for a configurable window
+//! ([`NodeRegistry::set_lease`]); when the lease expires with nobody
+//! adopting, [`NodeRegistry::wait_for_done`] fails fast, naming the
+//! dropped node, instead of hanging the leader until the full timeout.
 
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -31,9 +36,20 @@ struct WorkerEntry {
     done: bool,
 }
 
+/// A node id vacated by a mid-run disconnect, awaiting adoption by a
+/// replacement worker (reconnect lease).
+struct Vacancy {
+    info: NodeInfo,
+    since: Instant,
+}
+
 #[derive(Default)]
 struct RegistryInner {
     workers: Vec<WorkerEntry>,
+    /// Ids vacated by crashed (pre-`DONE`) workers, with drop timestamps.
+    vacancies: Vec<Vacancy>,
+    /// Reconnect-lease window; `None` = wait out the caller's timeout.
+    lease: Option<Duration>,
     /// Set by [`NodeRegistry::close`]: parked leaders wake with an error
     /// and new registrations are refused (run cancellation).
     closed: bool,
@@ -101,9 +117,25 @@ impl NodeRegistry {
             }
         };
         g.workers.push(WorkerEntry { info: NodeInfo { id, name: name.into() }, done: false });
+        // A registration adopting a vacated id settles its reconnect lease.
+        g.vacancies.retain(|v| v.info.id != id);
         drop(g);
         self.cv.notify_all();
         Ok(id)
+    }
+
+    /// Set the reconnect-lease window: how long a mid-run disconnect may
+    /// stay vacant before [`NodeRegistry::wait_for_done`] gives up on the
+    /// run. Unset, a dropped worker simply runs out the caller's timeout.
+    pub fn set_lease(&self, lease: Duration) {
+        self.inner.lock().unwrap().lease = Some(lease);
+        self.cv.notify_all();
+    }
+
+    /// Node ids currently vacated by mid-run disconnects (awaiting a
+    /// replacement under the reconnect lease).
+    pub fn vacancies(&self) -> Vec<NodeInfo> {
+        self.inner.lock().unwrap().vacancies.iter().map(|v| v.info.clone()).collect()
     }
 
     /// Record node `id`'s `DONE`. Duplicate DONEs are an error — the
@@ -123,12 +155,14 @@ impl NodeRegistry {
     }
 
     /// A worker's connection dropped. Unfinished workers are removed
-    /// (their id becomes claimable by a restarted process); finished ones
-    /// stay on the roster.
+    /// (their id becomes claimable by a restarted process) and a
+    /// reconnect lease opens on the vacated id; finished ones stay on
+    /// the roster.
     pub fn disconnect(&self, id: u32) {
         let mut g = self.inner.lock().unwrap();
         if let Some(pos) = g.workers.iter().position(|w| w.info.id == id && !w.done) {
-            g.workers.remove(pos);
+            let entry = g.workers.remove(pos);
+            g.vacancies.push(Vacancy { info: entry.info, since: Instant::now() });
             drop(g);
             self.cv.notify_all();
         }
@@ -166,10 +200,51 @@ impl NodeRegistry {
     }
 
     /// Park until at least `n` workers have reported `DONE`.
+    ///
+    /// Lease-aware: when a worker dropped mid-run and its vacated id was
+    /// not adopted by a replacement within the reconnect lease
+    /// ([`NodeRegistry::set_lease`]), this fails fast naming the dropped
+    /// node — the leader does not sit out the full timeout for a node
+    /// that provably is not coming back.
     pub fn wait_for_done(&self, n: usize, timeout: Duration) -> Result<()> {
-        self.wait_until(timeout, &format!("{n} workers to finish"), |g| {
-            (g.workers.iter().filter(|w| w.done).count() >= n).then_some(())
-        })
+        let mut guard = self.inner.lock().unwrap();
+        let deadline = Instant::now() + timeout;
+        loop {
+            if guard.closed {
+                bail!("registry closed while waiting for {n} workers to finish");
+            }
+            if guard.workers.iter().filter(|w| w.done).count() >= n {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if let Some(lease) = guard.lease {
+                if let Some(v) =
+                    guard.vacancies.iter().find(|v| now.duration_since(v.since) >= lease)
+                {
+                    bail!(
+                        "node {} ({}) disconnected before DONE and no replacement adopted \
+                         its id within the {:?} reconnect lease",
+                        v.info.id,
+                        v.info.name,
+                        lease
+                    );
+                }
+            }
+            if now >= deadline {
+                bail!("registry: timed out after {timeout:?} waiting for {n} workers to finish");
+            }
+            // Wake at the earliest of the overall deadline and the next
+            // lease expiry, so an expired lease is noticed promptly.
+            let mut wake = deadline;
+            if let Some(lease) = guard.lease {
+                for v in &guard.vacancies {
+                    wake = wake.min(v.since + lease);
+                }
+            }
+            let dur = wake.saturating_duration_since(now).max(Duration::from_millis(1));
+            let (g, _) = self.cv.wait_timeout(guard, dur).unwrap();
+            guard = g;
+        }
     }
 
     fn wait_until<T>(
@@ -271,6 +346,42 @@ mod tests {
         assert!(err.to_string().contains("closed"), "{err}");
         let err = r.register(None, "late").unwrap_err();
         assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn expired_lease_fails_wait_for_done_fast_and_names_the_node() {
+        let r = NodeRegistry::with_capacity(2);
+        r.set_lease(Duration::from_millis(30));
+        r.register(Some(0), "survivor").unwrap();
+        r.register(Some(1), "crasher").unwrap();
+        r.mark_done(0).unwrap();
+        r.disconnect(1);
+        assert_eq!(r.vacancies().len(), 1);
+        let t0 = Instant::now();
+        let err = r.wait_for_done(2, Duration::from_secs(60)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(10), "lease expiry must act early");
+        let msg = err.to_string();
+        assert!(msg.contains("node 1") && msg.contains("crasher"), "{msg}");
+        assert!(msg.contains("lease"), "{msg}");
+    }
+
+    #[test]
+    fn replacement_adoption_settles_the_lease() {
+        let r = Arc::new(NodeRegistry::with_capacity(2));
+        r.set_lease(Duration::from_secs(60));
+        r.register(Some(0), "a").unwrap();
+        r.register(Some(1), "doomed").unwrap();
+        r.mark_done(0).unwrap();
+        r.disconnect(1);
+
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || r2.wait_for_done(2, Duration::from_secs(30)));
+        // Replacement adopts the vacated id: the lease settles and the
+        // leader's park completes once the replacement reports DONE.
+        r.register(Some(1), "replacement").unwrap();
+        assert!(r.vacancies().is_empty(), "adoption must clear the vacancy");
+        r.mark_done(1).unwrap();
+        h.join().unwrap().unwrap();
     }
 
     #[test]

@@ -15,15 +15,50 @@
 
 use anyhow::Result;
 
+use crate::config::ExperimentConfig;
 use crate::coordinator::events::RunEvent;
 use crate::coordinator::node::NodeCtx;
 use crate::coordinator::schedulers::head_slot;
+use crate::coordinator::store::ParamStore;
 use crate::ff::classifier::head_features;
 use crate::ff::{ClassifierMode, FFNetwork, NegStrategy};
 use crate::metrics::SpanKind;
 use crate::tensor::AdamState;
 
+/// Everything a whole-network chapter publishes (every layer, the PerfOpt
+/// heads, and — in inline-Softmax mode — the classifier head) is already
+/// in `store`. This is the resume/fast-forward probe for the
+/// Sequential / All-Layers / Federated mappings.
+pub fn chapter_complete(
+    store: &dyn ParamStore,
+    cfg: &ExperimentConfig,
+    chapter: u32,
+) -> Result<bool> {
+    for l in 0..cfg.num_layers() {
+        if !store.has_layer(l, chapter)? {
+            return Ok(false);
+        }
+        if cfg.perfopt && !store.has_layer(head_slot(l), chapter)? {
+            return Ok(false);
+        }
+    }
+    if !cfg.perfopt
+        && cfg.head_inline
+        && cfg.classifier == ClassifierMode::Softmax
+        && !store.has_head(chapter)?
+    {
+        return Ok(false);
+    }
+    Ok(true)
+}
+
 /// Run one All-Layers node to completion.
+///
+/// Resume-aware: before training, the node skips the longest prefix of
+/// its chapter assignment whose outputs are already fully published
+/// (rehydrated checkpoint, or surviving leader store after a worker
+/// crash). Only this node ever publishes its assigned chapters, so the
+/// probe cannot race other nodes' progress.
 pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
     let n_nodes = ctx.cfg.nodes as u32;
     let splits = ctx.cfg.splits;
@@ -31,11 +66,35 @@ pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
     let my_chapters: Vec<u32> =
         (ctx.node_id as u32..splits).step_by(n_nodes as usize).collect();
 
+    // --- resume fast-forward -----------------------------------------------
+    let mut done = 0usize;
+    for &c in &my_chapters {
+        if !chapter_complete(ctx.store.as_ref(), &ctx.cfg, c)? {
+            break;
+        }
+        done += 1;
+    }
+
     // AdaptiveNEG labels for the node's next chapter, computed after each
     // finished chapter with the then-current network.
     let mut pending_adaptive: Option<Vec<u8>> = None;
+    if done > 0 && !ctx.cfg.perfopt && ctx.cfg.neg == NegStrategy::Adaptive {
+        if let (Some(&last), Some(&next)) = (my_chapters.get(done - 1), my_chapters.get(done)) {
+            // Rebuild exactly the labels the interrupted run computed after
+            // its last completed chapter: the network as published at that
+            // chapter is in the store, and the label sweep is
+            // bit-deterministic, so the resumed stream continues bitwise.
+            let mut layers = Vec::with_capacity(n_layers);
+            for l in 0..n_layers {
+                let (layer, _) = ctx.fetch_layer(l, last)?.into_layer();
+                layers.push(layer);
+            }
+            let net = FFNetwork { layers, classes: ctx.cfg.classes };
+            pending_adaptive = Some(ctx.local_neg_labels(next, Some(&net))?);
+        }
+    }
 
-    for &chapter in &my_chapters {
+    for &chapter in &my_chapters[done..] {
         ctx.ensure_live()?;
         ctx.emit(RunEvent::ChapterStarted { node: ctx.node_id, layer: None, chapter });
         let mark = ctx.rec.mark();

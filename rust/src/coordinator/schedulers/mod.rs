@@ -29,6 +29,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{ExperimentConfig, Scheduler as SchedulerKind};
 use crate::coordinator::node::NodeCtx;
+use crate::coordinator::store::ParamStore;
 
 /// Store "layer index" namespace for PerfOpt per-layer heads: head of FF
 /// layer `l` is published under slot `HEAD_SLOT_BASE + l`. Keeps the store
@@ -113,6 +114,22 @@ pub trait Scheduler: Send + Sync {
     /// Run one node's full script. Blocks until the node has finished all
     /// its chapters (or fails / is cancelled).
     fn run_node(&self, ctx: &mut NodeCtx) -> Result<()>;
+
+    /// Whether everything node `node` publishes for `chapter` is already
+    /// in `store` — the resume/fast-forward probe. Checkpoint cursors and
+    /// (re)joining workers skip the longest complete prefix of a node's
+    /// chapter assignment using this. The conservative default answers
+    /// `false` ("never skip"), so custom schedulers that don't implement
+    /// it redo work instead of losing it.
+    fn chapter_complete(
+        &self,
+        _store: &dyn ParamStore,
+        _cfg: &ExperimentConfig,
+        _node: usize,
+        _chapter: u32,
+    ) -> Result<bool> {
+        Ok(false)
+    }
 }
 
 /// Sequential FF (§5.2 baseline): one node, every chapter in order —
@@ -129,6 +146,15 @@ impl Scheduler for Sequential {
     fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
         all_layers::run_node(ctx)
     }
+    fn chapter_complete(
+        &self,
+        store: &dyn ParamStore,
+        cfg: &ExperimentConfig,
+        _node: usize,
+        chapter: u32,
+    ) -> Result<bool> {
+        all_layers::chapter_complete(store, cfg, chapter)
+    }
 }
 
 /// Single-Layer PFF (§4.1): node *i* permanently owns layer *i*.
@@ -143,6 +169,15 @@ impl Scheduler for SingleLayer {
     }
     fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
         single_layer::run_node(ctx)
+    }
+    fn chapter_complete(
+        &self,
+        store: &dyn ParamStore,
+        cfg: &ExperimentConfig,
+        node: usize,
+        chapter: u32,
+    ) -> Result<bool> {
+        single_layer::chapter_complete(store, cfg, node, chapter)
     }
 }
 
@@ -159,6 +194,15 @@ impl Scheduler for AllLayers {
     fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
         all_layers::run_node(ctx)
     }
+    fn chapter_complete(
+        &self,
+        store: &dyn ParamStore,
+        cfg: &ExperimentConfig,
+        _node: usize,
+        chapter: u32,
+    ) -> Result<bool> {
+        all_layers::chapter_complete(store, cfg, chapter)
+    }
 }
 
 /// Federated PFF (§4.3): All-Layers over per-node private data shards —
@@ -174,6 +218,15 @@ impl Scheduler for Federated {
     }
     fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
         all_layers::run_node(ctx)
+    }
+    fn chapter_complete(
+        &self,
+        store: &dyn ParamStore,
+        cfg: &ExperimentConfig,
+        _node: usize,
+        chapter: u32,
+    ) -> Result<bool> {
+        all_layers::chapter_complete(store, cfg, chapter)
     }
 }
 

@@ -13,15 +13,57 @@
 
 use anyhow::Result;
 
+use crate::config::ExperimentConfig;
 use crate::coordinator::events::RunEvent;
 use crate::coordinator::node::NodeCtx;
 use crate::coordinator::schedulers::head_slot;
+use crate::coordinator::store::ParamStore;
 use crate::ff::classifier::head_features;
 use crate::ff::{ClassifierMode, FFLayer, FFNetwork, LinearHead, NegStrategy};
 use crate::metrics::SpanKind;
 use crate::tensor::AdamState;
 
+/// Everything node `node` (owner of layer `node`) publishes for `chapter`
+/// is already in `store` — the Single-Layer resume/fast-forward probe.
+/// The last node also publishes the AdaptiveNEG labels (two chapters
+/// ahead) and, in inline-Softmax mode, the classifier head.
+pub fn chapter_complete(
+    store: &dyn ParamStore,
+    cfg: &ExperimentConfig,
+    node: usize,
+    chapter: u32,
+) -> Result<bool> {
+    let my_layer = node;
+    if !store.has_layer(my_layer, chapter)? {
+        return Ok(false);
+    }
+    if cfg.perfopt && !store.has_layer(head_slot(my_layer), chapter)? {
+        return Ok(false);
+    }
+    if my_layer == cfg.num_layers() - 1 && !cfg.perfopt {
+        if cfg.neg == NegStrategy::Adaptive
+            && chapter + 2 < cfg.splits
+            && !store.has_neg(chapter + 2)?
+        {
+            return Ok(false);
+        }
+        if cfg.head_inline && cfg.classifier == ClassifierMode::Softmax && !store.has_head(chapter)?
+        {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
 /// Run one Single-Layer node (owning layer `ctx.node_id`) to completion.
+///
+/// Resume-aware: the node skips chapters whose outputs it already finds
+/// published (rehydrated checkpoint / surviving leader store) and
+/// rehydrates its working state — the owned layer, its PerfOpt head and,
+/// on the last node, the classifier head — from the last completed
+/// chapter's published version. Adam moments come back exactly when
+/// `ship_opt_state` is on (making resume bitwise); otherwise they restart
+/// from the published weights.
 pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
     let my_layer = ctx.node_id;
     let n_layers = ctx.cfg.num_layers();
@@ -41,7 +83,45 @@ pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
     let mut cls_head: Option<LinearHead> = None;
     let mut cls_opt: Option<AdamState> = None;
 
-    for chapter in 0..splits {
+    // --- resume fast-forward -----------------------------------------------
+    let mut start = 0u32;
+    while start < splits
+        && chapter_complete(ctx.store.as_ref(), &ctx.cfg, my_layer, start)?
+    {
+        start += 1;
+    }
+    if start > 0 {
+        let last = start - 1;
+        let (l2, shipped) = ctx.fetch_layer(my_layer, last)?.into_layer();
+        layer = l2;
+        if ctx.cfg.ship_opt_state {
+            if let Some(s) = shipped {
+                opt = s;
+            }
+        }
+        if let Some(h) = po_head.as_mut() {
+            let (hl, hopt) = ctx.fetch_layer(head_slot(my_layer), last)?.into_layer();
+            *h = LinearHead { w: hl.w, b: hl.b };
+            if ctx.cfg.ship_opt_state {
+                if let Some(s) = hopt {
+                    po_head_opt = Some(s);
+                }
+            }
+        }
+        if is_last
+            && !ctx.cfg.perfopt
+            && ctx.cfg.head_inline
+            && ctx.cfg.classifier == ClassifierMode::Softmax
+        {
+            let store = ctx.store.clone();
+            let to = ctx.timeout();
+            let (h, hopt) = store.get_head(last, to)?.into_head();
+            cls_head = Some(h);
+            cls_opt = if ctx.cfg.ship_opt_state { hopt } else { None };
+        }
+    }
+
+    for chapter in start..splits {
         ctx.ensure_live()?;
         ctx.emit(RunEvent::ChapterStarted { node: ctx.node_id, layer: Some(my_layer), chapter });
         let mark = ctx.rec.mark();

@@ -148,6 +148,43 @@ pub trait ParamStore: Send + Sync {
     fn latest_head(&self) -> Result<Option<(u32, HeadParams)>>;
     /// Communication counters.
     fn comm_stats(&self) -> CommStats;
+
+    /// Non-blocking presence probe: is `(layer, chapter)` published?
+    /// Resume fast-forward uses this to skip chapters whose outputs are
+    /// already in the store. The conservative default answers `false`
+    /// ("not provably published"), so wrapper stores that don't implement
+    /// it never cause completed work to be skipped — they just redo it.
+    fn has_layer(&self, _layer: usize, _chapter: u32) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Non-blocking presence probe for the head at `chapter` (see
+    /// [`ParamStore::has_layer`] for the conservative default).
+    fn has_head(&self, _chapter: u32) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Non-blocking presence probe for negative labels at `chapter` (see
+    /// [`ParamStore::has_layer`] for the conservative default).
+    fn has_neg(&self, _chapter: u32) -> Result<bool> {
+        Ok(false)
+    }
+}
+
+/// A consistent snapshot of everything a [`MemStore`] holds — the store
+/// half of a `RunCheckpoint`. Entries are **sorted** (layers by
+/// `(slot, chapter)`, heads/negs by chapter), so identical store contents
+/// always serialize to identical bytes and "resumed run matches
+/// uninterrupted run" can be checked with a plain file compare.
+#[derive(Clone, Debug, Default)]
+pub struct StoreDump {
+    /// `(slot, chapter, params)` for every published layer (PerfOpt heads
+    /// ride in the high-slot namespace, see `schedulers::head_slot`).
+    pub layers: Vec<(usize, u32, LayerParams)>,
+    /// `(chapter, params)` for every published full-network head.
+    pub heads: Vec<(u32, HeadParams)>,
+    /// `(chapter, labels)` for every published negative-label set.
+    pub negs: Vec<(u32, Vec<u8>)>,
 }
 
 #[derive(Default)]
@@ -164,6 +201,10 @@ struct MemInner {
     /// — errors out immediately. `RunHandle::cancel` uses this to unblock
     /// store-waiting nodes promptly.
     closed: bool,
+    /// Monotonic change counter, bumped by every publish (and by
+    /// [`MemStore::touch`]). Checkpoint writers park on it via
+    /// [`MemStore::wait_version_change`] — change-driven, no poll loop.
+    version: u64,
 }
 
 /// In-process [`ParamStore`] (Mutex + Condvar).
@@ -256,6 +297,77 @@ impl MemStore {
         self.inner.lock().unwrap().waiting
     }
 
+    /// Current change-counter value (see [`MemStore::wait_version_change`]).
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    /// Bump the change counter without publishing anything — wakes
+    /// [`MemStore::wait_version_change`] parkers. The checkpoint writer's
+    /// `finish()` uses this to unpark its thread promptly.
+    pub fn touch(&self) {
+        self.inner.lock().unwrap().version += 1;
+        self.cv.notify_all();
+    }
+
+    /// Park until the change counter moves past `seen` (any publish or
+    /// [`MemStore::touch`]), the store closes (error), or `timeout`
+    /// elapses (returns the unchanged counter). This is the checkpoint
+    /// writer's wait primitive: strictly change-driven, no poll interval.
+    pub fn wait_version_change(&self, seen: u64, timeout: Duration) -> Result<u64> {
+        let mut guard = self.inner.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        while guard.version == seen && !guard.closed {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(guard.version);
+            }
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+        if guard.closed {
+            bail!("store closed while waiting for a version change");
+        }
+        Ok(guard.version)
+    }
+
+    /// Consistent snapshot of the full store contents, sorted (see
+    /// [`StoreDump`]). Taken under one lock, so a dump never interleaves
+    /// with a publish. Does not count toward [`CommStats`].
+    pub fn dump(&self) -> StoreDump {
+        let g = self.inner.lock().unwrap();
+        let mut layers: Vec<(usize, u32, LayerParams)> =
+            g.layers.iter().map(|(&(l, c), p)| (l, c, p.clone())).collect();
+        layers.sort_by_key(|&(l, c, _)| (l, c));
+        let mut heads: Vec<(u32, HeadParams)> =
+            g.heads.iter().map(|(&c, p)| (c, p.clone())).collect();
+        heads.sort_by_key(|&(c, _)| c);
+        let mut negs: Vec<(u32, Vec<u8>)> =
+            g.negs.iter().map(|(&c, v)| (c, v.clone())).collect();
+        negs.sort_by_key(|&(c, _)| c);
+        StoreDump { layers, heads, negs }
+    }
+
+    /// Rehydrate the store from a checkpoint dump (resume path). Entries
+    /// overwrite any existing keys; [`CommStats`] is untouched — restored
+    /// parameters were never on the wire in this run. Wakes every waiter,
+    /// exactly like a publish.
+    pub fn restore(&self, dump: StoreDump) {
+        let mut g = self.inner.lock().unwrap();
+        for (l, c, p) in dump.layers {
+            g.layers.insert((l, c), p);
+        }
+        for (c, p) in dump.heads {
+            g.heads.insert(c, p);
+        }
+        for (c, v) in dump.negs {
+            g.negs.insert(c, v);
+        }
+        g.version += 1;
+        drop(g);
+        self.cv.notify_all();
+    }
+
     /// Non-blocking fetch: `(layer, chapter)` if already published (a hit
     /// counts as a get in [`CommStats`], exactly like the blocking path).
     /// Backs the v2 wire protocol's immediate `GET_LAYER` and the
@@ -293,6 +405,7 @@ impl ParamStore for MemStore {
         g.stats.puts += 1;
         g.stats.bytes_put += params.wire_bytes();
         g.layers.insert((layer, chapter), params);
+        g.version += 1;
         drop(g);
         self.cv.notify_all();
         Ok(())
@@ -313,6 +426,7 @@ impl ParamStore for MemStore {
         g.stats.puts += 1;
         g.stats.bytes_put += params.wire_bytes();
         g.heads.insert(chapter, params);
+        g.version += 1;
         drop(g);
         self.cv.notify_all();
         Ok(())
@@ -333,6 +447,7 @@ impl ParamStore for MemStore {
         g.stats.puts += 1;
         g.stats.bytes_put += labels.len() as u64;
         g.negs.insert(chapter, labels);
+        g.version += 1;
         drop(g);
         self.cv.notify_all();
         Ok(())
@@ -364,6 +479,19 @@ impl ParamStore for MemStore {
 
     fn comm_stats(&self) -> CommStats {
         self.inner.lock().unwrap().stats
+    }
+
+    // Exact presence probes (no clone, no stats — nothing ships).
+    fn has_layer(&self, layer: usize, chapter: u32) -> Result<bool> {
+        Ok(self.inner.lock().unwrap().layers.contains_key(&(layer, chapter)))
+    }
+
+    fn has_head(&self, chapter: u32) -> Result<bool> {
+        Ok(self.inner.lock().unwrap().heads.contains_key(&chapter))
+    }
+
+    fn has_neg(&self, chapter: u32) -> Result<bool> {
+        Ok(self.inner.lock().unwrap().negs.contains_key(&chapter))
     }
 }
 
@@ -480,6 +608,65 @@ mod tests {
         assert_eq!(st.gets, 1);
         assert_eq!(st.bytes_put, bytes);
         assert_eq!(st.bytes_get, bytes);
+    }
+
+    #[test]
+    fn has_probes_answer_exactly_and_ship_nothing() {
+        let s = MemStore::new();
+        assert!(!s.has_layer(0, 0).unwrap());
+        assert!(!s.has_head(1).unwrap());
+        assert!(!s.has_neg(2).unwrap());
+        s.put_layer(0, 0, params(1)).unwrap();
+        s.put_neg(2, vec![3]).unwrap();
+        assert!(s.has_layer(0, 0).unwrap());
+        assert!(!s.has_layer(0, 1).unwrap());
+        assert!(s.has_neg(2).unwrap());
+        // probes are free: no gets counted, no bytes moved
+        let st = s.comm_stats();
+        assert_eq!(st.gets, 0);
+        assert_eq!(st.bytes_get, 0);
+    }
+
+    #[test]
+    fn dump_is_sorted_and_restore_rehydrates() {
+        let s = MemStore::new();
+        s.put_layer(1, 2, params(1)).unwrap();
+        s.put_layer(0, 1, params(2)).unwrap();
+        s.put_layer(0, 0, params(3)).unwrap();
+        s.put_neg(5, vec![9]).unwrap();
+        let dump = s.dump();
+        let keys: Vec<(usize, u32)> = dump.layers.iter().map(|&(l, c, _)| (l, c)).collect();
+        assert_eq!(keys, vec![(0, 0), (0, 1), (1, 2)], "dump must sort by (slot, chapter)");
+
+        let fresh = MemStore::new();
+        fresh.restore(dump);
+        assert!(fresh.has_layer(1, 2).unwrap());
+        assert!(fresh.has_neg(5).unwrap());
+        let got = fresh.get_layer(0, 1, Duration::from_millis(10)).unwrap();
+        assert_eq!(got.w, params(2).w);
+        // restore is not communication
+        assert_eq!(fresh.comm_stats().puts, 0);
+    }
+
+    #[test]
+    fn version_changes_wake_waiters_and_touch_counts() {
+        let s = Arc::new(MemStore::new());
+        let v0 = s.version();
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.wait_version_change(v0, Duration::from_secs(5)));
+        s.put_layer(0, 0, params(1)).unwrap();
+        let v1 = h.join().unwrap().unwrap();
+        assert!(v1 > v0, "publish must advance the version");
+        // touch also advances it (writer shutdown path)
+        s.touch();
+        assert!(s.version() > v1);
+        // timeout returns the unchanged counter, not an error
+        let same = s.wait_version_change(s.version(), Duration::from_millis(10)).unwrap();
+        assert_eq!(same, s.version());
+        // close fails the wait
+        s.close();
+        let err = s.wait_version_change(s.version(), Duration::from_secs(5)).unwrap_err();
+        assert!(err.to_string().contains("closed"), "{err}");
     }
 
     #[test]

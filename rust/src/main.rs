@@ -1,7 +1,7 @@
 //! `pff` — launcher CLI for the Pipeline Forward-Forward framework.
 //!
 //! ```text
-//! pff train   [--config FILE] [--follow] [--event-csv PATH] [--key value ...]
+//! pff train   [--config FILE] [--follow] [--event-csv PATH] [--resume CKPT] [--key value ...]
 //! pff worker  --connect HOST:PORT [--node-id K]   join a cluster leader
 //! pff table1..table5 [--scale quick|reduced] [--engine native|xla]
 //! pff figures                                     render Figures 1–6
@@ -25,7 +25,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use pff::config::{EngineKind, ExperimentConfig};
-use pff::coordinator::{EventLog, Experiment, RunEvent};
+use pff::coordinator::{EventLog, Experiment, RunCheckpoint, RunEvent};
 use pff::ff::NegStrategy;
 use pff::harness::{figures, table1, table2, table3, table4, table5, Scale};
 use pff::sim::schedules::{SimParams, SimVariant};
@@ -75,6 +75,8 @@ fn print_help() {
          \u{20}  train              run one experiment (--config FILE, --key value overrides;\n\
          \u{20}                     --follow streams per-chapter progress, --event-csv PATH\n\
          \u{20}                     logs the run's event stream;\n\
+         \u{20}                     --checkpoint_dir DIR writes durable checkpoints,\n\
+         \u{20}                     --resume PATH continues an interrupted run from one;\n\
          \u{20}                     --cluster true parks the leader for external workers)\n\
          \u{20}  worker             join a cluster leader (--connect HOST:PORT, optional --node-id K,\n\
          \u{20}                     --connect-wait-s S, plus the same config flags as train)\n\
@@ -86,7 +88,9 @@ fn print_help() {
          config keys (train): scheduler, neg, classifier, perfopt, dims, epochs, splits,\n\
          \u{20}  nodes, batch, dataset, engine, transport, seed, theta, lr_ff, lr_head,\n\
          \u{20}  threads (kernel worker threads; 0 = auto via PFF_THREADS env or all cores;\n\
-         \u{20}  results are bit-identical at any value), ...\n"
+         \u{20}  results are bit-identical at any value),\n\
+         \u{20}  checkpoint_dir (durable RunCheckpoint dir; empty = off),\n\
+         \u{20}  checkpoint_every (chapters between checkpoint writes), ...\n"
     );
 }
 
@@ -126,6 +130,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     // parser (which rejects unknown keys).
     let mut follow = false;
     let mut event_csv: Option<String> = None;
+    let mut resume: Option<String> = None;
     let mut cfg_args = Vec::new();
     let mut i = 0;
     while i < rest.len() {
@@ -139,15 +144,35 @@ fn cmd_train(args: &[String]) -> Result<()> {
                     Some(rest.get(i + 1).context("--event-csv needs a path")?.clone());
                 i += 2;
             }
+            "--resume" => {
+                resume = Some(rest.get(i + 1).context("--resume needs a checkpoint path")?.clone());
+                i += 2;
+            }
             _ => {
                 cfg_args.push(rest[i].clone());
                 i += 1;
             }
         }
     }
-    let mut cfg = match cfg_file {
-        Some(path) => ExperimentConfig::from_file(path)?,
-        None => ExperimentConfig::reduced_mnist(),
+    // Resuming starts from the checkpoint's embedded config, so plain
+    // `pff train --resume PATH` continues the run exactly as launched;
+    // CLI overrides still apply (training-relevant keys are guarded at
+    // launch). The file is loaded ONCE and handed to the builder — the
+    // store dump inside can be large.
+    let mut loaded: Option<RunCheckpoint> = None;
+    let mut cfg = match (&resume, cfg_file) {
+        (Some(_), Some(_)) => bail!(
+            "--resume and --config are mutually exclusive: the checkpoint embeds its \
+             config (apply --key value overrides on top if needed)"
+        ),
+        (Some(path), None) => {
+            let ck = RunCheckpoint::load(path)?;
+            let cfg = ck.experiment_config()?;
+            loaded = Some(ck);
+            cfg
+        }
+        (None, Some(path)) => ExperimentConfig::from_file(path)?,
+        (None, None) => ExperimentConfig::reduced_mnist(),
     };
     cfg.apply_cli(&cfg_args)?;
     if cfg.cluster {
@@ -161,6 +186,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let mut builder = Experiment::builder()
         .config(cfg.clone())
         .observer(stderr_observer(follow || cfg.verbose));
+    if let Some(ck) = loaded {
+        builder = builder.resume_from_checkpoint(ck);
+    }
     let log = event_csv.as_ref().map(|_| Arc::new(EventLog::new()));
     if let Some(log) = &log {
         let sink = log.clone();

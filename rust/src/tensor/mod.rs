@@ -20,5 +20,5 @@ pub mod workspace;
 
 pub use adam::AdamState;
 pub use matrix::Matrix;
-pub use rng::Rng;
+pub use rng::{Rng, RngState};
 pub use workspace::Workspace;

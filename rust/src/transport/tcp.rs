@@ -63,6 +63,9 @@ mod op {
     pub const LATEST_LAYER: u8 = 0x19;
     pub const LATEST_HEAD: u8 = 0x1a;
     pub const STATS: u8 = 0x1b;
+    pub const HAS_LAYER: u8 = 0x1c;
+    pub const HAS_HEAD: u8 = 0x1d;
+    pub const HAS_NEG: u8 = 0x1e;
     pub const LIST_NODES: u8 = 0x20;
     pub const WAIT_NODES: u8 = 0x21;
     pub const DONE: u8 = 0x22;
@@ -472,6 +475,22 @@ fn handle_immediate(
             e.u64(s.bytes_put);
             e.u64(s.bytes_get);
         }
+        // Presence probes: one boolean on the wire, no payload. Replacement
+        // workers fast-forward past already-published chapters with these
+        // instead of re-downloading every layer (crash recovery).
+        op::HAS_LAYER => {
+            let layer = d.u32()? as usize;
+            let chapter = d.u32()?;
+            e.u8(u8::from(store.has_layer(layer, chapter)?));
+        }
+        op::HAS_HEAD => {
+            let chapter = d.u32()?;
+            e.u8(u8::from(store.has_head(chapter)?));
+        }
+        op::HAS_NEG => {
+            let chapter = d.u32()?;
+            e.u8(u8::from(store.has_neg(chapter)?));
+        }
         op::LIST_NODES => return Ok(encode_nodes(&registry.workers())),
         op::DONE => {
             let id = d.u32()?;
@@ -853,6 +872,24 @@ impl ParamStore for TcpStoreClient {
         Ok(Some((d.u32()?, d.head_params()?)))
     }
 
+    fn has_layer(&self, layer: usize, chapter: u32) -> Result<bool> {
+        let body = self.shared.request(op::HAS_LAYER, None, |e| {
+            e.u32(layer as u32);
+            e.u32(chapter);
+        })?;
+        Ok(Dec::new(body.body()).u8()? != 0)
+    }
+
+    fn has_head(&self, chapter: u32) -> Result<bool> {
+        let body = self.shared.request(op::HAS_HEAD, None, |e| e.u32(chapter))?;
+        Ok(Dec::new(body.body()).u8()? != 0)
+    }
+
+    fn has_neg(&self, chapter: u32) -> Result<bool> {
+        let body = self.shared.request(op::HAS_NEG, None, |e| e.u32(chapter))?;
+        Ok(Dec::new(body.body()).u8()? != 0)
+    }
+
     fn comm_stats(&self) -> CommStats {
         match self.shared.request(op::STATS, None, |_| {}) {
             Ok(body) => {
@@ -952,6 +989,24 @@ mod tests {
         client.put_layer(3, 9, params()).unwrap();
         let got = waiter.join().unwrap().unwrap();
         assert_eq!(got.w.rows, 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn has_probes_answer_across_the_wire() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        let client = TcpStoreClient::connect(server.addr).unwrap();
+        assert!(!client.has_layer(0, 0).unwrap());
+        assert!(!client.has_head(0).unwrap());
+        assert!(!client.has_neg(0).unwrap());
+        client.put_layer(0, 0, params()).unwrap();
+        client.put_neg(4, vec![1]).unwrap();
+        assert!(client.has_layer(0, 0).unwrap());
+        assert!(!client.has_layer(1, 0).unwrap());
+        assert!(client.has_neg(4).unwrap());
+        // probes ship no parameter payload — gets stay untouched
+        assert_eq!(client.comm_stats().gets, 0);
         server.shutdown();
     }
 

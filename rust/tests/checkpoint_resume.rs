@@ -1,0 +1,258 @@
+//! Durable checkpoint/resume guarantees.
+//!
+//! The acceptance bar: train N chapters → kill → resume → the final
+//! weights are **bit-identical** to an uninterrupted run — at one kernel
+//! thread and at four. The bitwise claim holds because (1) kernels are
+//! bit-deterministic at every thread count, (2) the checkpoint rehydrates
+//! the store exactly (the wire codec is the disk codec), and (3) with
+//! `ship_opt_state = true` the Adam moments ride inside the published
+//! layers, so a fast-forwarded node resumes the optimizer mid-stream.
+//!
+//! CI's `chaos-smoke` job exercises the same path with a real `SIGKILL`
+//! of the `pff train` process plus a worker `SIGKILL` in cluster mode
+//! (`tcp_cluster --kill-one`).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use pff::config::{ExperimentConfig, Scheduler};
+use pff::coordinator::checkpoint::CHECKPOINT_FILE;
+use pff::coordinator::{Experiment, ExperimentReport, RunCheckpoint, RunEvent};
+use pff::ff::NegStrategy;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pff_ckpt_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Mechanics-scale config: small enough to run in seconds, pipelined
+/// enough (8 chapters, 2 nodes) to make resume meaningful.
+fn base_cfg(threads: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.train_n = 128;
+    cfg.test_n = 64;
+    cfg.epochs = 8;
+    cfg.splits = 8;
+    cfg.scheduler = Scheduler::AllLayers;
+    cfg.nodes = 2;
+    cfg.neg = NegStrategy::Adaptive; // exercises pending-label reconstruction
+    cfg.ship_opt_state = true; // Adam moments ride with the layers → bitwise resume
+    cfg.threads = threads;
+    cfg
+}
+
+fn assert_models_bitwise(a: &ExperimentReport, b: &ExperimentReport, what: &str) {
+    assert_eq!(a.model.net.layers.len(), b.model.net.layers.len());
+    for (i, (x, y)) in a.model.net.layers.iter().zip(&b.model.net.layers).enumerate() {
+        assert_eq!(x.w.data, y.w.data, "{what}: layer {i} weights differ");
+        assert_eq!(x.b, y.b, "{what}: layer {i} bias differs");
+    }
+    match (&a.model.head, &b.model.head) {
+        (Some(x), Some(y)) => assert_eq!(x.w.data, y.w.data, "{what}: head weights differ"),
+        (None, None) => {}
+        _ => panic!("{what}: one run has a head, the other does not"),
+    }
+    assert_eq!(a.test_accuracy, b.test_accuracy, "{what}: accuracy differs");
+}
+
+/// Run to completion with checkpointing on; copy `latest.ckpt` aside
+/// after the `snapshot_after`-th CheckpointWritten event — a
+/// deterministic stand-in for "the file the killed process left behind".
+fn run_with_mid_snapshot(
+    cfg: &ExperimentConfig,
+    snapshot_after: usize,
+) -> anyhow::Result<(ExperimentReport, PathBuf)> {
+    let mid = cfg.checkpoint_dir.join("mid.ckpt");
+    let mid2 = mid.clone();
+    let count = Arc::new(AtomicUsize::new(0));
+    let copy_err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+    let copy_err2 = copy_err.clone();
+    let report = Experiment::builder()
+        .config(cfg.clone())
+        .observer(move |ev| {
+            if let RunEvent::CheckpointWritten { path, .. } = ev {
+                if count.fetch_add(1, Ordering::SeqCst) + 1 == snapshot_after {
+                    if let Err(e) = std::fs::copy(path, &mid2) {
+                        *copy_err2.lock().unwrap() = Some(e.to_string());
+                    }
+                }
+            }
+        })
+        .launch()?
+        .join()?;
+    if let Some(e) = copy_err.lock().unwrap().take() {
+        anyhow::bail!("copying mid-run checkpoint: {e}");
+    }
+    anyhow::ensure!(mid.exists(), "run wrote fewer than {snapshot_after} checkpoints");
+    Ok((report, mid))
+}
+
+fn resume_is_bitwise(threads: usize, tag: &str) {
+    let dir = temp_dir(tag);
+    let mut cfg = base_cfg(threads);
+    cfg.checkpoint_dir = dir.clone();
+    cfg.checkpoint_every = 1;
+
+    // Uninterrupted reference run; the 2nd checkpoint write (the first
+    // one past the initial launch snapshot) is our simulated kill point.
+    // At least two writes always happen (initial + final), so the copy
+    // cannot be missed even under writer-thread starvation.
+    let (full, mid) = run_with_mid_snapshot(&cfg, 2).unwrap();
+
+    // Resume from the mid-run checkpoint. No .config(): the embedded one
+    // drives the run (as `pff train --resume` does); checkpointing is off
+    // for the resumed run so the reference's final file stays untouched.
+    let ck = RunCheckpoint::load(&mid).unwrap();
+    let mut rcfg = ck.experiment_config().unwrap();
+    rcfg.checkpoint_dir = PathBuf::new();
+    let handle = Experiment::builder().config(rcfg).resume_from(&mid).launch().unwrap();
+    let events = handle.events();
+    let resumed = handle.join().unwrap();
+
+    assert_models_bitwise(&full, &resumed, tag);
+
+    // The resumed run must actually have skipped the checkpointed prefix:
+    // chapters started (on the event bus) + chapters already recorded as
+    // complete in the checkpoint must cover exactly the 8 chapters.
+    let started = events
+        .try_iter()
+        .filter(|e| matches!(e, RunEvent::ChapterStarted { .. }))
+        .count() as u32;
+    let skipped = ck.total_completed();
+    assert_eq!(
+        started + skipped,
+        cfg.splits,
+        "{tag}: resumed run must re-run exactly the unfinished chapters \
+         (started {started}, checkpoint covered {skipped})"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Kill-and-resume reproduces the uninterrupted weights bitwise — serial
+/// kernels.
+#[test]
+fn resume_is_bitwise_at_one_thread() {
+    resume_is_bitwise(1, "t1");
+}
+
+/// Same guarantee under the 4-thread parallel tensor runtime: thread
+/// count changes wall-clock only, never the resumed trajectory.
+#[test]
+fn resume_is_bitwise_at_four_threads() {
+    resume_is_bitwise(4, "t4");
+}
+
+/// Resuming a *finished* run's checkpoint trains nothing: every chapter
+/// fast-forwards, and the model comes out identical.
+#[test]
+fn resume_from_final_checkpoint_skips_all_training() {
+    let dir = temp_dir("final");
+    let mut cfg = base_cfg(1);
+    cfg.neg = NegStrategy::Random;
+    cfg.checkpoint_dir = dir.clone();
+    let full = Experiment::builder().config(cfg.clone()).launch().unwrap().join().unwrap();
+
+    let final_ckpt = dir.join(CHECKPOINT_FILE);
+    let ck = RunCheckpoint::load(&final_ckpt).unwrap();
+    assert_eq!(ck.total_completed(), cfg.splits, "final checkpoint must cover the whole run");
+
+    let mut rcfg = ck.experiment_config().unwrap();
+    rcfg.checkpoint_dir = PathBuf::new();
+    let handle = Experiment::builder().config(rcfg).resume_from(&final_ckpt).launch().unwrap();
+    let events = handle.events();
+    let resumed = handle.join().unwrap();
+    assert_models_bitwise(&full, &resumed, "final-resume");
+    assert_eq!(
+        events.try_iter().filter(|e| matches!(e, RunEvent::ChapterStarted { .. })).count(),
+        0,
+        "a fully-covered resume must not start any chapter"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Single-Layer resume: each node rehydrates its owned layer (and the
+/// last node the classifier pipeline state) from the store and continues
+/// bitwise.
+#[test]
+fn single_layer_resume_is_bitwise() {
+    let dir = temp_dir("sl");
+    let mut cfg = base_cfg(1);
+    cfg.scheduler = Scheduler::SingleLayer;
+    cfg.nodes = cfg.dims.len() - 1; // one node per layer
+    cfg.neg = NegStrategy::Random;
+    cfg.checkpoint_dir = dir.clone();
+
+    let (full, mid) = run_with_mid_snapshot(&cfg, 2).unwrap();
+    let ck = RunCheckpoint::load(&mid).unwrap();
+    let mut rcfg = ck.experiment_config().unwrap();
+    rcfg.checkpoint_dir = PathBuf::new();
+    let resumed =
+        Experiment::builder().config(rcfg).resume_from(&mid).launch().unwrap().join().unwrap();
+    assert_models_bitwise(&full, &resumed, "single-layer");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A truncated checkpoint file (torn disk write without the atomic
+/// rename) is rejected at load with an actionable error, and the builder
+/// surfaces it from `.launch()`.
+#[test]
+fn corrupt_checkpoint_is_rejected_with_clear_error() {
+    let dir = temp_dir("corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("broken.ckpt");
+
+    // Garbage that is not even a frame.
+    std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+    let err = RunCheckpoint::load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("truncated or corrupt") || msg.contains("magic"), "{msg}");
+
+    // A real checkpoint truncated mid-payload.
+    let mut cfg = base_cfg(1);
+    cfg.neg = NegStrategy::Random;
+    cfg.splits = 8;
+    cfg.checkpoint_dir = dir.clone();
+    Experiment::builder().config(cfg).launch().unwrap().join().unwrap();
+    let full = std::fs::read(dir.join(CHECKPOINT_FILE)).unwrap();
+    std::fs::write(&path, &full[..full.len() / 3]).unwrap();
+    let err = RunCheckpoint::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated or corrupt"), "{err:#}");
+
+    // .launch() propagates the load failure instead of training garbage.
+    let err = Experiment::builder().resume_from(&path).launch().unwrap_err();
+    assert!(format!("{err:#}").contains("resume checkpoint"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resume refuses a config that disagrees with the checkpoint on a
+/// training-relevant key — silently training a different experiment from
+/// rehydrated state would corrupt both.
+#[test]
+fn resume_rejects_training_config_drift() {
+    let dir = temp_dir("drift");
+    let mut cfg = base_cfg(1);
+    cfg.neg = NegStrategy::Random;
+    cfg.checkpoint_dir = dir.clone();
+    Experiment::builder().config(cfg.clone()).launch().unwrap().join().unwrap();
+    let ckpt = dir.join(CHECKPOINT_FILE);
+
+    let mut drifted = cfg.clone();
+    drifted.seed = cfg.seed + 1;
+    let err = Experiment::builder().config(drifted).resume_from(&ckpt).launch().unwrap_err();
+    assert!(format!("{err:#}").contains("'seed'"), "{err:#}");
+
+    // Deployment-only drift (threads) is fine.
+    let mut moved = cfg.clone();
+    moved.threads = 2;
+    moved.checkpoint_dir = PathBuf::new();
+    Experiment::builder()
+        .config(moved)
+        .resume_from(&ckpt)
+        .launch()
+        .unwrap()
+        .join()
+        .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
