@@ -13,10 +13,17 @@
 //! (bitwise on the store contents — `ship_opt_state` keeps Adam moments
 //! in the published layers, so the replacement resumes exactly).
 //!
+//! `--elastic` exercises the elastic dispatcher: the leader opens the
+//! task graph at `min_workers = 2` (below the 3 logical nodes), a third
+//! worker joins mid-run, one of the originals is SIGKILLed WITHOUT a
+//! replacement — its task leases are requeued to the survivors — and the
+//! run must still complete with the in-process accuracy.
+//!
 //! ```bash
 //! cargo build --release                      # builds the pff binary
 //! cargo run --release --example tcp_cluster
 //! cargo run --release --example tcp_cluster -- --kill-one
+//! cargo run --release --example tcp_cluster -- --elastic
 //! ```
 
 use std::net::SocketAddr;
@@ -164,6 +171,81 @@ fn run_multiprocess(
     report
 }
 
+/// Elastic membership end to end: the leader admits the run at
+/// `min_workers = 2` (of 3 logical nodes — worker affinity buckets are
+/// re-bucketed over whoever is registered), a third worker process joins
+/// once the pipeline is provably mid-run, and then one of the original
+/// workers is SIGKILLed with NO replacement. The dispatcher requeues the
+/// victim's open task leases to the survivors, the registry settles the
+/// vacancy after the graph drains, and the leader completes normally.
+fn run_elastic(cfg: &ExperimentConfig, bin: &std::path::Path) -> anyhow::Result<ExperimentReport> {
+    let port = free_port()?;
+    let addr = format!("127.0.0.1:{port}");
+    let sock_addr: SocketAddr = addr.parse()?;
+    let cfg_path = std::env::temp_dir().join(format!("pff-elastic-{}.cfg", std::process::id()));
+    std::fs::write(&cfg_path, cfg.to_kv_string())?;
+    let cfg_path_s = cfg_path.display().to_string();
+
+    // Only 2 of the 3 logical nodes' worth of workers at admission time.
+    let mut victim = spawn_worker(bin, &addr, &cfg_path_s, 0)?;
+    let mut survivor = spawn_worker(bin, &addr, &cfg_path_s, 1)?;
+
+    // Chaos thread, alongside the parked leader: grow the pool mid-run,
+    // then shrink it by SIGKILL. Owns the victim so the kill and its
+    // status check happen in one place; hands the late joiner back.
+    let chaos = {
+        let bin = bin.to_path_buf();
+        let (addr2, cfg_path2) = (addr.clone(), cfg_path_s.clone());
+        std::thread::spawn(move || -> anyhow::Result<Child> {
+            let observer = {
+                let mut tries = 0;
+                loop {
+                    match TcpStoreClient::connect(sock_addr) {
+                        Ok(c) => break c,
+                        Err(e) => {
+                            tries += 1;
+                            anyhow::ensure!(tries < 300, "leader never came up: {e:#}");
+                            std::thread::sleep(Duration::from_millis(100));
+                        }
+                    }
+                }
+            };
+            // Chapter 1's layer 0 published ⇒ the graph opened with only
+            // two workers and is mid-run. NOW grow the pool.
+            observer.get_layer(0, 1, Duration::from_secs(120))?;
+            println!("[chaos] pipeline is mid-run; joining a third worker");
+            let late = spawn_worker(&bin, &addr2, &cfg_path2, 2)?;
+            let deadline = std::time::Instant::now() + Duration::from_secs(30);
+            while observer.list_nodes()?.len() < 3 {
+                anyhow::ensure!(
+                    std::time::Instant::now() < deadline,
+                    "third worker never registered with the leader"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            println!("[chaos] third worker registered; SIGKILLing worker 0 (no replacement)");
+            victim.kill()?; // SIGKILL on unix; leases requeue to the survivors
+            let vstatus = victim.wait()?;
+            anyhow::ensure!(!vstatus.success(), "victim was supposed to die mid-run: {vstatus}");
+            Ok(late)
+        })
+    };
+
+    let mut lcfg = cfg.clone();
+    lcfg.name = "tcp-cluster-elastic".into();
+    lcfg.cluster = true;
+    lcfg.tcp_port = port;
+    lcfg.min_workers = 2;
+    let report = run(lcfg)?;
+    let mut late = chaos.join().expect("chaos thread panicked")?;
+    for (name, c) in [("survivor", &mut survivor), ("late-joiner", &mut late)] {
+        let status = c.wait()?;
+        anyhow::ensure!(status.success(), "{name} worker exited with {status}");
+    }
+    std::fs::remove_file(&cfg_path).ok();
+    report
+}
+
 /// Same cluster protocol, workers as threads (fallback without the binary).
 fn run_threaded(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
     let port = free_port()?;
@@ -187,6 +269,8 @@ fn run_threaded(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
 
 fn main() -> anyhow::Result<()> {
     let kill_one = std::env::args().any(|a| a == "--kill-one");
+    let elastic = std::env::args().any(|a| a == "--elastic");
+    anyhow::ensure!(!(kill_one && elastic), "--kill-one and --elastic are mutually exclusive");
     let mut cfg = ExperimentConfig::default();
     cfg.name = "tcp-cluster".into();
     cfg.dims = vec![784, 96, 96, 96];
@@ -196,23 +280,29 @@ fn main() -> anyhow::Result<()> {
     cfg.splits = 8;
     cfg.neg = NegStrategy::Random;
     cfg.scheduler = Scheduler::AllLayers;
-    cfg.nodes = 2;
+    cfg.nodes = if elastic { 3 } else { 2 };
     cfg.transport = TransportKind::Tcp;
     // Adam moments travel with the published layers, so a replacement
     // worker resumes the crashed node's optimizer state exactly — the
-    // crash-recovery run reproduces the in-proc weights bitwise.
+    // crash-recovery run reproduces the in-proc weights bitwise. (It also
+    // licenses cross-worker task stealing in the elastic run.)
     cfg.ship_opt_state = true;
 
     // --- cluster run: N OS processes (or threads, without the binary) -----
     let t0 = std::time::Instant::now();
     let (cluster, mode) = match pff_binary() {
+        Some(bin) if elastic => {
+            println!("elastic run: 2 workers at admission, 1 late joiner, 1 SIGKILL");
+            (run_elastic(&cfg, &bin)?, "multi-process, elastic")
+        }
         Some(bin) => {
             println!("spawning {} worker process(es) of {}", cfg.nodes, bin.display());
             let mode = if kill_one { "multi-process, kill-one" } else { "multi-process" };
             (run_multiprocess(&cfg, &bin, kill_one)?, mode)
         }
-        None if kill_one => anyhow::bail!(
-            "--kill-one needs the pff binary (run `cargo build --release` first, or set PFF_BIN)"
+        None if kill_one || elastic => anyhow::bail!(
+            "--kill-one/--elastic need the pff binary (run `cargo build --release` first, \
+             or set PFF_BIN)"
         ),
         None => {
             eprintln!(

@@ -1,0 +1,174 @@
+//! Micro-benchmarks of the task-graph dispatcher: lease/complete
+//! throughput draining a pipeline lattice with 1 and 4 workers, and the
+//! headline elastic-scheduling number — steal wake latency, the time from
+//! a task becoming ready on a busy worker's queue to an idle peer waking
+//! and leasing it (server-side Condvar, no poll interval anywhere).
+//!
+//! ```bash
+//! cargo bench --bench micro_dispatch                       # full scale
+//! cargo bench --bench micro_dispatch -- --quick            # CI smoke
+//! cargo bench --bench micro_dispatch -- --json OUT.json    # perf artifact
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pff::bench_util::{BenchStats, JsonReport};
+use pff::coordinator::{Dispatcher, EventBus, TaskGraph, TaskGraphBuilder};
+
+struct Opts {
+    quick: bool,
+    json: Option<String>,
+}
+
+fn parse_opts() -> Opts {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut opts = Opts { quick: false, json: None };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => {
+                opts.quick = true;
+                i += 1;
+            }
+            "--json" => {
+                opts.json = args.get(i + 1).cloned();
+                i += 2;
+            }
+            // tolerate cargo-bench passthrough flags like --bench
+            _ => i += 1,
+        }
+    }
+    opts
+}
+
+/// Stats from a pre-collected sample vector (seconds).
+fn stats_of(mut samples: Vec<f64>) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        iters: samples.len() as u32,
+        min_s: samples[0],
+        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_s: samples[samples.len() / 2],
+    }
+}
+
+/// The standard pipeline lattice over a `splits × layers` grid,
+/// round-robin homes — the same shape `TaskGraph::pipeline` builds for
+/// the whole-network schedulers, without needing a full config.
+fn lattice(splits: u32, layers: usize, homes: usize) -> TaskGraph {
+    let mut b = TaskGraphBuilder::new(homes, layers, splits, false);
+    for c in 0..splits {
+        for l in 0..layers {
+            b.task(c, l, c as usize % homes).unwrap();
+        }
+    }
+    for c in 0..splits {
+        for l in 0..layers {
+            if l > 0 {
+                b.edge((c, l - 1), (c, l)).unwrap();
+            }
+            if c > 0 {
+                b.edge((c - 1, l), (c, l)).unwrap();
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+/// Wall seconds for `workers` threads to drain `graph` with zero-cost
+/// task bodies — pure dispatcher overhead (lease + complete + wakeups).
+fn drain(graph: &TaskGraph, workers: usize) -> f64 {
+    let d = Arc::new(Dispatcher::new(graph.clone(), EventBus::new(), true, false));
+    for w in 0..workers {
+        d.worker_joined(w as u32, "bench");
+    }
+    d.open();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..workers)
+        .map(|w| {
+            let d = d.clone();
+            std::thread::spawn(move || {
+                while let Some(t) = d.next_task(w as u32, Duration::from_secs(10)).unwrap() {
+                    d.complete(w as u32, t.id, 0.0, 0.0, 0.0).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Steal wake latency: every task is homed on worker 0, and completing
+/// the head fans out TWO ready successors onto worker 0's queue — a
+/// backlog ≥ 2 makes that queue steal-eligible, so the parked idle
+/// worker 1 must wake and STEAL one. Timed from just before the
+/// `complete` to the thief's lease landing.
+fn steal_wake_latency(n: u32) -> BenchStats {
+    let mut samples = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let mut b = TaskGraphBuilder::new(1, 1, 3, false);
+        for c in 0..3 {
+            b.task(c, 0, 0).unwrap();
+        }
+        b.edge((0, 0), (1, 0)).unwrap();
+        b.edge((0, 0), (2, 0)).unwrap();
+        let d = Arc::new(Dispatcher::new(b.build().unwrap(), EventBus::new(), true, false));
+        d.worker_joined(0, "victim");
+        d.worker_joined(1, "thief");
+        d.open();
+        // Only the head is ready; worker 0 leases it before the thief
+        // thread exists, so the thief can only ever park.
+        let head = d.next_task(0, Duration::from_secs(5)).unwrap().unwrap();
+        let d2 = d.clone();
+        let thief = std::thread::spawn(move || {
+            let t = d2.next_task(1, Duration::from_secs(5)).unwrap().unwrap();
+            (t, Instant::now())
+        });
+        // Let the thief provably park before the handoff.
+        std::thread::sleep(Duration::from_millis(2));
+        let t0 = Instant::now();
+        d.complete(0, head.id, 0.0, 0.0, 0.0).unwrap();
+        let (stolen, woke) = thief.join().unwrap();
+        samples.push(woke.duration_since(t0).as_secs_f64());
+        assert!(stolen.chapter > 0, "the thief must have stolen a successor task");
+        d.complete(1, stolen.id, 0.0, 0.0, 0.0).unwrap();
+        let rest = d.next_task(0, Duration::from_secs(5)).unwrap().unwrap();
+        d.complete(0, rest.id, 0.0, 0.0, 0.0).unwrap();
+    }
+    stats_of(samples)
+}
+
+fn main() {
+    let opts = parse_opts();
+    let mut report = JsonReport::new("micro_dispatch");
+
+    let (splits, layers) = if opts.quick { (16u32, 3usize) } else { (64, 3) };
+    let iters = if opts.quick { 5 } else { 20 };
+    let graph = lattice(splits, layers, 2);
+    let tasks = graph.len() as f64;
+
+    for workers in [1usize, 4] {
+        drain(&graph, workers); // warmup
+        let samples: Vec<f64> = (0..iters).map(|_| drain(&graph, workers)).collect();
+        let s = stats_of(samples);
+        let noun = if workers == 1 { "worker" } else { "workers" };
+        report.add(
+            format!(
+                "[dispatch] drain {splits}x{layers} lattice, {workers} {noun}  \
+                 ({:.0} tasks/s)",
+                tasks / s.min_s
+            ),
+            s,
+        );
+    }
+
+    // The elastic-scheduling acceptance number: ready-on-a-busy-peer to
+    // stolen-by-an-idle-worker, through the Condvar park/notify path.
+    let s = steal_wake_latency(if opts.quick { 20 } else { 100 });
+    report.add(format!("[dispatch] steal wake latency (p50 {:.3} ms)", s.p50_s * 1e3), s);
+
+    report.write(opts.json.as_deref());
+}

@@ -69,7 +69,13 @@ impl std::str::FromStr for Scheduler {
             "single-layer" | "single_layer" | "single" => Ok(Scheduler::SingleLayer),
             "all-layers" | "all_layers" | "all" => Ok(Scheduler::AllLayers),
             "federated" | "fed" => Ok(Scheduler::Federated),
-            other => bail!("unknown scheduler '{other}'"),
+            other => {
+                // Registry-driven error: list every name the coordinator
+                // would actually accept, so a typo'd `--scheduler` flag
+                // tells the user what exists (custom strategies included).
+                let known = crate::coordinator::schedulers::SchedulerRegistry::global().names();
+                bail!("unknown scheduler '{other}' (known names: {})", known.join(", "))
+            }
         }
     }
 }
@@ -183,6 +189,16 @@ pub struct ExperimentConfig {
     pub tcp_port: u16,
     /// Blocking-get timeout (seconds) — deadlock tripwire.
     pub store_timeout_s: u64,
+    /// In-proc dispatcher worker threads draining the task graph
+    /// (`--workers`). 0 = auto: one worker per logical node (`nodes`),
+    /// which reproduces the static per-node schedule bit-exactly.
+    /// Deployment-only: any value trains the same weights.
+    pub workers: usize,
+    /// Cluster admission threshold (`--min_workers`): the leader opens
+    /// the task graph once this many workers have registered instead of
+    /// parking until exactly `nodes` arrive; further workers may join
+    /// mid-run and departed workers' leases are requeued. 0 = `nodes`.
+    pub min_workers: usize,
     /// Kernel worker threads per process for the parallel tensor runtime
     /// (`--threads`). 0 = auto: `PFF_THREADS` env, else all cores. Results
     /// are bit-identical at every value — only wall-clock changes.
@@ -231,6 +247,8 @@ impl Default for ExperimentConfig {
             cluster: false,
             tcp_port: 0,
             store_timeout_s: 300,
+            workers: 0,
+            min_workers: 0,
             threads: 0,
             checkpoint_dir: PathBuf::new(),
             checkpoint_every: 1,
@@ -402,6 +420,8 @@ impl ExperimentConfig {
             "cluster" => self.cluster = parse_bool(v)?,
             "tcp_port" => self.tcp_port = v.parse()?,
             "store_timeout_s" => self.store_timeout_s = v.parse()?,
+            "workers" => self.workers = v.parse()?,
+            "min_workers" => self.min_workers = v.parse()?,
             "threads" => self.threads = v.parse()?,
             "checkpoint_dir" => self.checkpoint_dir = PathBuf::from(v),
             "checkpoint_every" => self.checkpoint_every = v.parse()?,
@@ -482,6 +502,8 @@ impl ExperimentConfig {
         kv(&mut out, "cluster", self.cluster);
         kv(&mut out, "tcp_port", self.tcp_port);
         kv(&mut out, "store_timeout_s", self.store_timeout_s);
+        kv(&mut out, "workers", self.workers);
+        kv(&mut out, "min_workers", self.min_workers);
         kv(&mut out, "threads", self.threads);
         kv(&mut out, "checkpoint_dir", self.checkpoint_dir.display());
         kv(&mut out, "checkpoint_every", self.checkpoint_every);
@@ -593,6 +615,8 @@ mod tests {
         cfg.cluster = true;
         cfg.tcp_port = 7441;
         cfg.lr_head = 0.00025;
+        cfg.workers = 5;
+        cfg.min_workers = 2;
         cfg.threads = 6;
         cfg.checkpoint_dir = PathBuf::from("ckpts/run1");
         cfg.checkpoint_every = 3;

@@ -306,7 +306,7 @@ pub fn completed_chapters(
     store: &dyn ParamStore,
     cfg: &ExperimentConfig,
 ) -> Result<Vec<u32>> {
-    let plan = scheduler.plan(cfg);
+    let plan = scheduler.plan(cfg)?;
     let mut out = Vec::with_capacity(plan.chapters.len());
     for (node, chapters) in plan.chapters.iter().enumerate() {
         let mut n = 0u32;

@@ -1,0 +1,642 @@
+//! The work-bucket dispatcher: ready-queue + per-worker deques with
+//! stealing over a [`TaskGraph`].
+//!
+//! Modeled on mmtk-core's packet buckets and the dynec blocker-count
+//! snippet (SNIPPETS.md): every task carries a blocker count (its graph
+//! in-degree); completing a task decrements its dependents' counts, and a
+//! count hitting zero moves the task into the queue of its *assignee* —
+//! the registered worker `workers[home % workers.len()]`, so with worker
+//! count == node count every task queues on its paper-static owner and
+//! the drain order is exactly the static schedule. An idle worker first
+//! drains its own queue in `(chapter, layer)` order, then *steals* the
+//! largest outstanding task from the most loaded peer — the elastic path
+//! that keeps a heterogeneous fleet busy.
+//!
+//! Workers may join and leave mid-run: joining rebalances the ready
+//! queues; leaving requeues the departed worker's leased tasks (the
+//! crash-recovery path, driven by the registry's lease expiry or a
+//! connection drop).
+//!
+//! The dispatcher is also the single emitter of chapter progress events:
+//! it groups tasks by `(chapter, home)` and emits `ChapterStarted` /
+//! `ChapterFinished` exactly as the static per-node scripts did, plus the
+//! per-lease `TaskStarted` / `TaskStolen` and membership
+//! `WorkerJoined` / `WorkerLeft` events. Events are always emitted
+//! *after* releasing the internal lock (observers run on the emitting
+//! thread).
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::events::{EventBus, RunEvent};
+use crate::coordinator::taskgraph::{Task, TaskGraph};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TaskState {
+    /// Blocked on dependencies.
+    Pending,
+    /// All dependencies done; queued for (or awaiting) a worker.
+    Ready,
+    /// Leased to worker `.0`.
+    Leased(u32),
+    /// Completed (or pre-completed by the resume scan).
+    Done,
+}
+
+/// Per-`(chapter, home)` progress group — the unit the static path called
+/// "a chapter on a node", reconstructed for event parity.
+struct Group {
+    total: usize,
+    done: usize,
+    /// Whether any task of the group was actually leased (false for
+    /// fully pre-completed groups, which emit no events).
+    started: bool,
+    busy_s: f64,
+    wait_s: f64,
+    last_loss: f32,
+    last_layer: usize,
+}
+
+/// Queue key: tasks order by `(chapter, layer, id)` so a drain always
+/// takes the earliest cell first (and steals take the latest).
+type Key = (u32, usize, usize);
+
+struct Inner {
+    state: Vec<TaskState>,
+    blockers: Vec<u32>,
+    /// Ready tasks, bucketed by assignee worker.
+    queues: HashMap<u32, BTreeSet<Key>>,
+    /// Registered workers, sorted by id.
+    workers: Vec<u32>,
+    /// Workers currently holding a lease.
+    busy: HashSet<u32>,
+    groups: HashMap<(u32, usize), Group>,
+    /// Ready tasks with no registered worker to hold them yet.
+    limbo: BTreeSet<Key>,
+    /// Whether leasing has begun (false while admission waits for
+    /// `min_workers`).
+    open: bool,
+    closed: Option<String>,
+    done: usize,
+}
+
+/// Result of a non-blocking [`Dispatcher::poll_task`].
+pub enum Poll {
+    /// A task was leased to the polling worker.
+    Task(Task),
+    /// The run is complete — no more tasks will ever be available.
+    Complete,
+    /// Nothing available right now; ask again (or block).
+    Pending,
+}
+
+/// The shared task dispatcher — see the module docs.
+pub struct Dispatcher {
+    graph: TaskGraph,
+    inner: Mutex<Inner>,
+    cond: Condvar,
+    bus: EventBus,
+    /// Whether idle workers may steal from peers' queues. Off for cluster
+    /// runs without `ship_opt_state`: each worker process has a private
+    /// `OptBank`, so moving a home's task across processes would drop its
+    /// Adam moments unless the wire carries them.
+    allow_steal: bool,
+    /// Whether membership changes emit `WorkerJoined`/`WorkerLeft`
+    /// (cluster runs; the in-proc pool joins silently).
+    announce: bool,
+}
+
+impl Dispatcher {
+    /// Build a dispatcher over `graph`, emitting progress on `bus`.
+    pub fn new(graph: TaskGraph, bus: EventBus, allow_steal: bool, announce: bool) -> Self {
+        let n = graph.len();
+        let mut state = Vec::with_capacity(n);
+        let mut blockers = Vec::with_capacity(n);
+        let mut limbo = BTreeSet::new();
+        let mut groups: HashMap<(u32, usize), Group> = HashMap::new();
+        for t in graph.tasks() {
+            let deg = graph.in_degree(t.id);
+            blockers.push(deg);
+            if deg == 0 {
+                state.push(TaskState::Ready);
+                limbo.insert((t.chapter, t.layer, t.id));
+            } else {
+                state.push(TaskState::Pending);
+            }
+            let g = groups.entry((t.chapter, t.home)).or_insert(Group {
+                total: 0,
+                done: 0,
+                started: false,
+                busy_s: 0.0,
+                wait_s: 0.0,
+                last_loss: 0.0,
+                last_layer: 0,
+            });
+            g.total += 1;
+        }
+        Dispatcher {
+            graph,
+            inner: Mutex::new(Inner {
+                state,
+                blockers,
+                queues: HashMap::new(),
+                workers: Vec::new(),
+                busy: HashSet::new(),
+                groups,
+                limbo,
+                open: false,
+                closed: None,
+                done: 0,
+            }),
+            cond: Condvar::new(),
+            bus,
+            allow_steal,
+            announce,
+        }
+    }
+
+    /// The graph this dispatcher drains.
+    pub fn graph(&self) -> &TaskGraph {
+        &self.graph
+    }
+
+    /// Begin leasing tasks (admission gate satisfied).
+    pub fn open(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.open = true;
+        drop(g);
+        self.cond.notify_all();
+    }
+
+    /// Register a worker; its bucket of homed tasks becomes available and
+    /// ready tasks rebalance across the new membership.
+    pub fn worker_joined(&self, id: u32, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        let announce = if g.workers.contains(&id) {
+            false
+        } else {
+            g.workers.push(id);
+            g.workers.sort_unstable();
+            rebuild(&self.graph, &mut g);
+            self.announce
+        };
+        drop(g);
+        self.cond.notify_all();
+        if announce {
+            self.bus.emit(RunEvent::WorkerJoined { worker: id as usize, name: name.to_string() });
+        }
+    }
+
+    /// Deregister a worker: its leased tasks return to Ready and the
+    /// queues rebalance. Returns the `(chapter, layer)` cells that were
+    /// requeued, for lease-expiry attribution.
+    pub fn worker_left(&self, id: u32) -> Vec<(u32, usize)> {
+        let mut g = self.inner.lock().unwrap();
+        let was = g.workers.len();
+        g.workers.retain(|w| *w != id);
+        if g.workers.len() == was {
+            return Vec::new(); // never registered (or already removed)
+        }
+        g.busy.remove(&id);
+        let mut cells = Vec::new();
+        for t in self.graph.tasks() {
+            if g.state[t.id] == TaskState::Leased(id) {
+                g.state[t.id] = TaskState::Ready;
+                cells.push(t.cell());
+            }
+        }
+        rebuild(&self.graph, &mut g);
+        let complete = g.done == self.graph.len();
+        drop(g);
+        self.cond.notify_all();
+        if self.announce && !complete {
+            self.bus.emit(RunEvent::WorkerLeft { worker: id as usize, requeued: cells.len() });
+        }
+        cells
+    }
+
+    /// Blocking task fetch for `worker`: parks until a task leases, the
+    /// run completes (`None`), the dispatcher closes (error), or
+    /// `timeout` elapses (error).
+    pub fn next_task(&self, worker: u32, timeout: Duration) -> Result<Option<Task>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(reason) = &g.closed {
+                bail!("dispatcher closed: {reason}");
+            }
+            if g.done == self.graph.len() {
+                return Ok(None);
+            }
+            if g.open {
+                if let Some((id, stolen_from)) = pick(&self.graph, &mut g, worker, self.allow_steal)
+                {
+                    let (task, events) = lease(&self.graph, &mut g, worker, id, stolen_from);
+                    drop(g);
+                    for ev in events {
+                        self.bus.emit(ev);
+                    }
+                    return Ok(Some(task));
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("worker {worker}: no ready task within {timeout:?} (run stalled)");
+            }
+            let (g2, _) = self.cond.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Non-blocking task fetch (the TCP server's inline try before it
+    /// parks a waiter thread).
+    pub fn poll_task(&self, worker: u32) -> Result<Poll> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(reason) = &g.closed {
+            bail!("dispatcher closed: {reason}");
+        }
+        if g.done == self.graph.len() {
+            return Ok(Poll::Complete);
+        }
+        if g.open {
+            if let Some((id, stolen_from)) = pick(&self.graph, &mut g, worker, self.allow_steal) {
+                let (task, events) = lease(&self.graph, &mut g, worker, id, stolen_from);
+                drop(g);
+                for ev in events {
+                    self.bus.emit(ev);
+                }
+                return Ok(Poll::Task(task));
+            }
+        }
+        Ok(Poll::Pending)
+    }
+
+    /// Report task `id` complete by `worker`: unblocks dependents,
+    /// accounts the `(chapter, home)` group and emits `ChapterFinished`
+    /// when the group closes.
+    pub fn complete(
+        &self,
+        worker: u32,
+        id: usize,
+        loss: f32,
+        busy_s: f64,
+        wait_s: f64,
+    ) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        ensure!(
+            g.state[id] == TaskState::Leased(worker),
+            "task {id} is not leased to worker {worker}"
+        );
+        g.state[id] = TaskState::Done;
+        g.done += 1;
+        g.busy.remove(&worker);
+        let t = self.graph.task(id);
+        let mut events = Vec::new();
+        let group = g.groups.get_mut(&(t.chapter, t.home)).expect("group exists");
+        group.done += 1;
+        group.busy_s += busy_s;
+        group.wait_s += wait_s;
+        group.last_loss = loss;
+        group.last_layer = t.layer;
+        if group.done == group.total && group.started {
+            let layer =
+                if group.total == self.graph.n_layers() { None } else { Some(group.last_layer) };
+            events.push(RunEvent::ChapterFinished {
+                node: t.home,
+                layer,
+                chapter: t.chapter,
+                loss: group.last_loss,
+                busy_s: group.busy_s,
+                wait_s: group.wait_s,
+            });
+        }
+        unblock_dependents(&self.graph, &mut g, id);
+        drop(g);
+        self.cond.notify_all();
+        for ev in events {
+            self.bus.emit(ev);
+        }
+        Ok(())
+    }
+
+    /// Mark task `id` done without executing it (resume fast-forward).
+    /// Only legal while its blockers are already cleared — the scan walks
+    /// the graph in dependency order, so a pre-completable task is always
+    /// Ready. Emits nothing.
+    pub fn precomplete(&self, id: usize) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        ensure!(
+            g.state[id] == TaskState::Ready,
+            "precomplete: task {id} has unfinished dependencies"
+        );
+        let t = self.graph.task(id);
+        remove_ready(&mut g, (t.chapter, t.layer, t.id));
+        g.state[id] = TaskState::Done;
+        g.done += 1;
+        g.groups.get_mut(&(t.chapter, t.home)).expect("group exists").done += 1;
+        unblock_dependents(&self.graph, &mut g, id);
+        drop(g);
+        self.cond.notify_all();
+        Ok(())
+    }
+
+    /// Park until every task is done (Ok), the dispatcher closes (error),
+    /// or `timeout` elapses (error).
+    pub fn wait_complete(&self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(reason) = &g.closed {
+                bail!("dispatcher closed: {reason}");
+            }
+            if g.done == self.graph.len() {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "run incomplete after {timeout:?}: {}/{} tasks done",
+                    g.done,
+                    self.graph.len()
+                );
+            }
+            let (g2, _) = self.cond.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Tasks completed so far.
+    pub fn completed(&self) -> usize {
+        self.inner.lock().unwrap().done
+    }
+
+    /// Abort the run: every parked and future call errors with `reason`
+    /// (first close wins).
+    pub fn close(&self, reason: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed.is_none() {
+            g.closed = Some(reason.to_string());
+        }
+        drop(g);
+        self.cond.notify_all();
+    }
+}
+
+/// Queue the ready task `t` on its assignee (or limbo when no workers).
+fn enqueue_ready(g: &mut Inner, t: Task) {
+    let key = (t.chapter, t.layer, t.id);
+    if g.workers.is_empty() {
+        g.limbo.insert(key);
+    } else {
+        let w = g.workers[t.home % g.workers.len()];
+        g.queues.entry(w).or_default().insert(key);
+    }
+}
+
+/// Remove a ready task's key from wherever it is queued.
+fn remove_ready(g: &mut Inner, key: Key) {
+    if g.limbo.remove(&key) {
+        return;
+    }
+    for q in g.queues.values_mut() {
+        if q.remove(&key) {
+            return;
+        }
+    }
+}
+
+/// Rebuild every queue from scratch for the current membership.
+fn rebuild(graph: &TaskGraph, g: &mut Inner) {
+    g.limbo.clear();
+    let ws = g.workers.clone();
+    g.queues.retain(|w, _| ws.contains(w));
+    for q in g.queues.values_mut() {
+        q.clear();
+    }
+    for &w in &ws {
+        g.queues.entry(w).or_default();
+    }
+    for t in graph.tasks() {
+        if g.state[t.id] == TaskState::Ready {
+            enqueue_ready(g, *t);
+        }
+    }
+}
+
+/// Decrement `id`'s dependents' blocker counts; newly unblocked tasks
+/// become Ready and queue on their assignee.
+fn unblock_dependents(graph: &TaskGraph, g: &mut Inner, id: usize) {
+    for &d in graph.dependents(id) {
+        g.blockers[d] -= 1;
+        if g.blockers[d] == 0 && g.state[d] == TaskState::Pending {
+            g.state[d] = TaskState::Ready;
+            enqueue_ready(g, graph.task(d));
+        }
+    }
+}
+
+/// Choose a task for `worker`: own queue front first, then — when
+/// stealing is allowed — the *back* of the most loaded eligible peer
+/// queue (a peer is eligible when it is busy executing or has ≥ 2 queued
+/// tasks, so we never race an idle peer for its only task).
+fn pick(
+    _graph: &TaskGraph,
+    g: &mut Inner,
+    worker: u32,
+    allow_steal: bool,
+) -> Option<(usize, Option<u32>)> {
+    if let Some(q) = g.queues.get_mut(&worker) {
+        if let Some(&key) = q.iter().next() {
+            q.remove(&key);
+            return Some((key.2, None));
+        }
+    }
+    if allow_steal {
+        let mut best: Option<(usize, u32)> = None;
+        for (&w, q) in &g.queues {
+            if w == worker || q.is_empty() {
+                continue;
+            }
+            if g.busy.contains(&w) || q.len() >= 2 {
+                let better = match best {
+                    None => true,
+                    Some((len, bw)) => q.len() > len || (q.len() == len && w < bw),
+                };
+                if better {
+                    best = Some((q.len(), w));
+                }
+            }
+        }
+        if let Some((_, from)) = best {
+            let q = g.queues.get_mut(&from).expect("best queue exists");
+            let key = *q.iter().next_back().expect("best queue non-empty");
+            q.remove(&key);
+            return Some((key.2, Some(from)));
+        }
+    }
+    None
+}
+
+/// Lease `id` to `worker`, producing the events to emit after unlocking.
+fn lease(
+    graph: &TaskGraph,
+    g: &mut Inner,
+    worker: u32,
+    id: usize,
+    stolen_from: Option<u32>,
+) -> (Task, Vec<RunEvent>) {
+    let t = graph.task(id);
+    g.state[id] = TaskState::Leased(worker);
+    g.busy.insert(worker);
+    let mut events = Vec::new();
+    let group = g.groups.get_mut(&(t.chapter, t.home)).expect("group exists");
+    if !group.started {
+        group.started = true;
+        let layer = if group.total == graph.n_layers() { None } else { Some(t.layer) };
+        events.push(RunEvent::ChapterStarted { node: t.home, layer, chapter: t.chapter });
+    }
+    if let Some(from) = stolen_from {
+        events.push(RunEvent::TaskStolen {
+            worker: worker as usize,
+            from: from as usize,
+            chapter: t.chapter,
+            layer: t.layer,
+        });
+    }
+    events.push(RunEvent::TaskStarted { worker: worker as usize, chapter: t.chapter, layer: t.layer });
+    (t, events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn graph(nodes: usize, splits: u32) -> TaskGraph {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.nodes = nodes;
+        cfg.splits = splits;
+        cfg.epochs = splits;
+        TaskGraph::pipeline(&cfg, false, |c, _| c as usize % nodes)
+            .build()
+            .unwrap()
+    }
+
+    fn drain_single(d: &Dispatcher, worker: u32) -> Vec<(u32, usize)> {
+        let mut order = Vec::new();
+        while let Some(t) = d.next_task(worker, Duration::from_secs(5)).unwrap() {
+            order.push(t.cell());
+            d.complete(worker, t.id, 0.5, 0.0, 0.0).unwrap();
+        }
+        order
+    }
+
+    #[test]
+    fn single_worker_drains_in_serial_order() {
+        let g = graph(2, 3);
+        let want: Vec<(u32, usize)> =
+            g.serial_order().into_iter().map(|id| g.task(id).cell()).collect();
+        let d = Dispatcher::new(g, EventBus::new(), true, false);
+        d.worker_joined(0, "w0");
+        d.open();
+        assert_eq!(drain_single(&d, 0), want);
+        d.wait_complete(Duration::from_millis(10)).unwrap();
+    }
+
+    #[test]
+    fn next_task_blocks_until_open() {
+        let d = Dispatcher::new(graph(1, 2), EventBus::new(), true, false);
+        d.worker_joined(0, "w0");
+        let err = d.next_task(0, Duration::from_millis(20)).unwrap_err();
+        assert!(err.to_string().contains("no ready task"), "{err}");
+        d.open();
+        assert!(d.next_task(0, Duration::from_secs(1)).unwrap().is_some());
+    }
+
+    #[test]
+    fn worker_left_requeues_leases() {
+        let d = Dispatcher::new(graph(2, 2), EventBus::new(), true, false);
+        d.worker_joined(0, "w0");
+        d.worker_joined(1, "w1");
+        d.open();
+        let t = d.next_task(0, Duration::from_secs(1)).unwrap().unwrap();
+        let cells = d.worker_left(0);
+        assert_eq!(cells, vec![t.cell()]);
+        // The survivor can retake and finish everything.
+        assert_eq!(drain_single(&d, 1).len(), d.graph().len());
+    }
+
+    #[test]
+    fn precomplete_skips_without_events() {
+        let g = graph(1, 2);
+        let order = g.serial_order();
+        let bus = EventBus::new();
+        let d = Dispatcher::new(g, bus.clone(), true, false);
+        for id in order {
+            d.precomplete(id).unwrap();
+        }
+        d.wait_complete(Duration::from_millis(10)).unwrap();
+        assert!(bus.history().is_empty(), "precompletion must be silent");
+        d.worker_joined(0, "w0");
+        d.open();
+        assert!(d.next_task(0, Duration::from_secs(1)).unwrap().is_none());
+    }
+
+    #[test]
+    fn precomplete_rejects_blocked_tasks() {
+        let g = graph(1, 2);
+        let blocked = g.id_of(1, 0).unwrap();
+        let d = Dispatcher::new(g, EventBus::new(), true, false);
+        assert!(d.precomplete(blocked).is_err());
+    }
+
+    #[test]
+    fn close_unblocks_with_reason() {
+        let d = Dispatcher::new(graph(1, 2), EventBus::new(), true, false);
+        d.close("boom");
+        let err = d.next_task(0, Duration::from_secs(5)).unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+        let err = d.wait_complete(Duration::from_secs(5)).unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn steal_takes_from_loaded_peer() {
+        // 1 node, so every task homes on worker 0's bucket; worker 1 can
+        // only make progress by stealing.
+        let d = Dispatcher::new(graph(1, 4), EventBus::new(), true, false);
+        d.worker_joined(0, "w0");
+        d.worker_joined(1, "w1");
+        d.open();
+        let a = d.next_task(0, Duration::from_secs(1)).unwrap().unwrap();
+        // Worker 0 is busy; worker 1 steals the next ready task.
+        let b = d.next_task(1, Duration::from_secs(1)).unwrap().unwrap();
+        assert_ne!(a.id, b.id);
+        d.complete(0, a.id, 0.0, 0.0, 0.0).unwrap();
+        d.complete(1, b.id, 0.0, 0.0, 0.0).unwrap();
+    }
+
+    #[test]
+    fn chapter_events_group_by_home() {
+        let g = graph(2, 2);
+        let bus = EventBus::new();
+        let d = Dispatcher::new(g, bus.clone(), true, false);
+        d.worker_joined(0, "w0");
+        d.open();
+        drain_single(&d, 0);
+        let hist = bus.history();
+        let started = hist
+            .iter()
+            .filter(|e| matches!(e, RunEvent::ChapterStarted { .. }))
+            .count();
+        let finished = hist
+            .iter()
+            .filter(|e| matches!(e, RunEvent::ChapterFinished { .. }))
+            .count();
+        assert_eq!(started, 2);
+        assert_eq!(finished, 2);
+    }
+}

@@ -89,6 +89,40 @@ pub enum RunEvent {
         /// Serialized size in bytes (same codec as the wire format).
         wire_bytes: u64,
     },
+    /// The dispatcher leased a `(chapter, layer)` task to a worker.
+    TaskStarted {
+        /// Worker id the lease went to.
+        worker: usize,
+        /// Chapter of the leased cell.
+        chapter: u32,
+        /// Layer of the leased cell.
+        layer: usize,
+    },
+    /// A worker stole a queued task from another worker's deque.
+    TaskStolen {
+        /// The thief.
+        worker: usize,
+        /// The victim whose queue the task came from.
+        from: usize,
+        /// Chapter of the stolen cell.
+        chapter: u32,
+        /// Layer of the stolen cell.
+        layer: usize,
+    },
+    /// A worker joined the dispatcher mid-run (elastic membership).
+    WorkerJoined {
+        /// Worker id.
+        worker: usize,
+        /// Self-reported worker name.
+        name: String,
+    },
+    /// A worker left (or was declared dead); its leased tasks were requeued.
+    WorkerLeft {
+        /// Worker id.
+        worker: usize,
+        /// Number of leased tasks returned to the ready set.
+        requeued: usize,
+    },
     /// Test-set evaluation finished.
     Eval {
         /// Accuracy in `[0, 1]`.
@@ -139,6 +173,21 @@ impl std::fmt::Display for RunEvent {
             }
             RunEvent::CheckpointWritten { path, wire_bytes } => {
                 write!(f, "checkpoint written: {path} ({wire_bytes} B)")
+            }
+            RunEvent::TaskStarted { worker, chapter, layer } => {
+                write!(f, "worker {worker}: task chapter {chapter} / layer {layer} started")
+            }
+            RunEvent::TaskStolen { worker, from, chapter, layer } => {
+                write!(
+                    f,
+                    "worker {worker}: stole task chapter {chapter} / layer {layer} from worker {from}"
+                )
+            }
+            RunEvent::WorkerJoined { worker, name } => {
+                write!(f, "worker {worker} ({name}) joined")
+            }
+            RunEvent::WorkerLeft { worker, requeued } => {
+                write!(f, "worker {worker} left ({requeued} task(s) requeued)")
             }
             RunEvent::Eval { accuracy } => write!(f, "eval: accuracy {:.2}%", accuracy * 100.0),
             RunEvent::Done { ok: true } => write!(f, "done"),
@@ -205,6 +254,11 @@ impl EventBus {
     /// everything).
     pub fn observe(&self, f: impl Fn(&RunEvent) + Send + Sync + 'static) {
         self.inner.lock().unwrap().observers.push(Arc::new(f));
+    }
+
+    /// Snapshot of every event emitted so far (the replay history).
+    pub fn history(&self) -> Vec<RunEvent> {
+        self.inner.lock().unwrap().history.clone()
     }
 
     /// Number of events emitted so far.
@@ -323,6 +377,28 @@ fn csv_row(ev: &RunEvent) -> Vec<String> {
             row[0] = "checkpoint_written".into();
             row[5] = wire_bytes.to_string();
         }
+        RunEvent::TaskStarted { worker, chapter, layer } => {
+            row[0] = "task_started".into();
+            row[1] = worker.to_string();
+            row[2] = layer.to_string();
+            row[3] = chapter.to_string();
+        }
+        RunEvent::TaskStolen { worker, from, chapter, layer } => {
+            row[0] = "task_stolen".into();
+            row[1] = worker.to_string();
+            row[2] = layer.to_string();
+            row[3] = chapter.to_string();
+            row[4] = from.to_string();
+        }
+        RunEvent::WorkerJoined { worker, .. } => {
+            row[0] = "worker_joined".into();
+            row[1] = worker.to_string();
+        }
+        RunEvent::WorkerLeft { worker, requeued } => {
+            row[0] = "worker_left".into();
+            row[1] = worker.to_string();
+            row[5] = requeued.to_string();
+        }
         RunEvent::Eval { accuracy } => {
             row[0] = "eval".into();
             row[6] = format!("{accuracy}");
@@ -408,6 +484,22 @@ mod tests {
         assert!(text.contains("chapter_finished,0,,0,0.8,,,,0.250000,0.050000"));
         assert!(text.contains("eval,"));
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn task_and_membership_events_render() {
+        let s = RunEvent::TaskStolen { worker: 2, from: 0, chapter: 3, layer: 1 }.to_string();
+        assert!(s.contains("worker 2") && s.contains("chapter 3") && s.contains("worker 0"), "{s}");
+        assert_eq!(
+            csv_row(&RunEvent::TaskStarted { worker: 1, chapter: 4, layer: 2 })[..4],
+            ["task_started".to_string(), "1".into(), "2".into(), "4".into()]
+        );
+        let left = csv_row(&RunEvent::WorkerLeft { worker: 1, requeued: 3 });
+        assert_eq!(left[0], "worker_left");
+        assert_eq!(left[5], "3");
+        let bus = EventBus::new();
+        bus.emit(RunEvent::WorkerJoined { worker: 5, name: "late".into() });
+        assert!(matches!(bus.history()[0], RunEvent::WorkerJoined { worker: 5, .. }));
     }
 
     #[test]

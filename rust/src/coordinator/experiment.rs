@@ -6,13 +6,16 @@
 //! [`RunHandle`] is the live view: `join()` for the final
 //! [`ExperimentReport`], `events()` for a replayed + live
 //! [`RunEvent`] stream, `cancel()` to abort — cancellation closes the
-//! parameter store and node registry so store-waiting nodes and a parked
-//! cluster leader unblock promptly instead of running out their timeouts.
+//! parameter store, node registry and task dispatcher so store-waiting
+//! workers and a parked cluster leader unblock promptly instead of
+//! running out their timeouts.
 //!
-//! The legacy free functions `run_experiment` /
-//! `run_experiment_with_data` are deprecated shims over this builder.
+//! Execution is graph-driven: the session builds the scheduler's
+//! [`crate::coordinator::taskgraph::TaskGraph`] once, hands it to a
+//! shared [`Dispatcher`], and runs a pool of workers (`cfg.workers`
+//! threads in-proc, or external `pff worker` processes in cluster mode)
+//! that drain task leases until the graph is done.
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -23,13 +26,15 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{ExperimentConfig, TransportKind};
 use crate::coordinator::checkpoint::{CheckpointWriter, RunCheckpoint};
+use crate::coordinator::dispatch::Dispatcher;
 use crate::coordinator::eval;
 use crate::coordinator::events::{EventBus, RunEvent};
+use crate::coordinator::node::{drain_tasks, DispatcherSource, OptBank, TaskScratch};
 use crate::coordinator::registry::NodeRegistry;
 use crate::coordinator::schedulers::{Scheduler, SchedulerRegistry};
 use crate::coordinator::store::{MemStore, ParamStore};
 use crate::coordinator::{ExperimentReport, NodeCtx};
-use crate::data::{load_dataset, DataBundle};
+use crate::data::{load_dataset, DataBundle, Dataset};
 use crate::engine::{factory_for, Engine};
 use crate::ff::ClassifierMode;
 use crate::metrics::{makespan, LossCurve, NodeReport, SpanRecorder};
@@ -282,7 +287,7 @@ impl ExperimentBuilder {
     }
 
     /// [`ExperimentBuilder::launch`] + [`RunHandle::join`] in one call —
-    /// the blocking path the deprecated `run_experiment` shims use.
+    /// the blocking path most tests and harnesses use.
     pub fn run(&mut self) -> Result<ExperimentReport> {
         self.launch()?.join()
     }
@@ -354,7 +359,7 @@ fn run_session(
         None => Arc::new(load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?),
     };
     let factory = factory_for(cfg.engine, &cfg.artifact_dir)?;
-    let plan = scheduler.plan(&cfg);
+    let graph = scheduler.graph(&cfg).context("building the scheduler's task graph")?;
 
     // --- store + transport ---------------------------------------------------
     // `store`: what nodes and final assembly read through. `mem`: the
@@ -378,9 +383,15 @@ fn run_session(
         let m = mem.as_ref().expect("launch() guards resume against custom stores");
         m.restore(ck.store);
     }
-    // Capacity-bounded: a mis-launched worker with an out-of-range
-    // --node-id is refused at HELLO instead of poisoning membership.
-    let registry = Arc::new(NodeRegistry::with_capacity(cfg.nodes));
+    // Cluster membership is elastic (workers may join mid-run with ids
+    // beyond `cfg.nodes`), so the cluster registry is unbounded; the
+    // non-cluster registry keeps its capacity bound so a mis-launched
+    // worker with an out-of-range --node-id is refused at HELLO.
+    let registry = if cfg.cluster {
+        Arc::new(NodeRegistry::new())
+    } else {
+        Arc::new(NodeRegistry::with_capacity(cfg.nodes))
+    };
     // Reconnect lease: a worker that drops mid-chapter must be replaced
     // within the store-timeout window or the leader's completion park
     // fails fast, naming the dropped node.
@@ -388,6 +399,40 @@ fn run_session(
     {
         let r = registry.clone();
         cancel.on_cancel(move || r.close());
+    }
+    // The work-bucket dispatcher every worker (in-proc thread or remote
+    // process) drains. Stealing moves a home's tasks across workers,
+    // which is only safe when the Adam moments travel with the layer:
+    // in-proc workers share one OptBank, cluster workers need
+    // `ship_opt_state` so the wire carries the moments.
+    let allow_steal = !cfg.cluster || cfg.ship_opt_state;
+    let dispatcher = Arc::new(Dispatcher::new(graph, bus.clone(), allow_steal, cfg.cluster));
+    {
+        let d = dispatcher.clone();
+        cancel.on_cancel(move || d.close("run cancelled"));
+    }
+    // Resume fast-forward: walk the graph in dependency order and mark
+    // done every task whose published outputs the rehydrated store
+    // already holds — but only while its dependencies were themselves
+    // pre-completed, so a half-written frontier re-executes (bitwise
+    // identically) instead of leaving holes behind it.
+    if resuming {
+        let g = dispatcher.graph();
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); g.len()];
+        for id in 0..g.len() {
+            for &d in g.dependents(id) {
+                preds[d].push(id);
+            }
+        }
+        let mut pre = vec![false; g.len()];
+        for id in g.serial_order() {
+            if preds[id].iter().all(|&p| pre[p])
+                && scheduler.task_done(store.as_ref(), &cfg, g.task(id))?
+            {
+                dispatcher.precomplete(id)?;
+                pre[id] = true;
+            }
+        }
     }
     // Durable checkpoints: a change-driven writer thread snapshots the
     // store every `checkpoint_every` completed chapters (and once at
@@ -404,7 +449,10 @@ fn run_session(
         TransportKind::InProc => None,
         TransportKind::Tcp => {
             let m = mem.clone().expect("launch() rejects custom stores over tcp");
-            Some(StoreServer::start_with(m, registry.clone(), cfg.tcp_port)?)
+            // Cluster workers lease tasks over the wire, so the server
+            // needs the dispatcher; plain TCP-store clients don't.
+            let disp = if cfg.cluster { Some(dispatcher.clone()) } else { None };
+            Some(StoreServer::start_full(m, registry.clone(), disp, cfg.tcp_port)?)
         }
     };
 
@@ -412,24 +460,34 @@ fn run_session(
     let origin = Instant::now();
     let run_result: Result<(Vec<NodeReport>, LossCurve)> = if cfg.cluster {
         // --- external workers: `pff worker --connect` processes ----------------
-        // Membership and completion both ride the registry's Condvar — the
-        // leader parks exactly like a blocked store read, no polling.
+        // Admission waits for `min_workers` (default: the node count),
+        // then the dispatcher opens — later joiners pick up leases
+        // mid-run, and leavers' leases requeue (elastic membership).
         (|| {
             let reg_timeout = Duration::from_secs(cfg.store_timeout_s);
             // Each chapter's progress is already bounded by the store timeout
             // (the dependency-wait tripwire), so completion gets S times that.
             let done_timeout = reg_timeout * cfg.splits.max(1);
+            let min_workers = if cfg.min_workers == 0 { cfg.nodes } else { cfg.min_workers };
             let workers = registry
-                .wait_for_workers(cfg.nodes, reg_timeout)
+                .wait_for_workers(min_workers, reg_timeout)
                 .context("waiting for cluster workers to register")?;
             bus.emit(RunEvent::WorkersRegistered { workers });
+            dispatcher.open();
+            dispatcher
+                .wait_complete(done_timeout)
+                .context("waiting for the task graph to drain")?;
+            // All tasks are done: a worker that dropped after its last
+            // completion (but before its DONE frame) must not fail the
+            // final roster park below.
+            registry.settle_vacancies();
             registry
-                .wait_for_done(cfg.nodes, done_timeout)
+                .wait_for_done(registry.worker_count(), reg_timeout)
                 .context("waiting for cluster workers to finish")?;
             Ok((Vec::new(), LossCurve::default()))
         })()
     } else {
-        // --- in-process nodes: one thread per node -----------------------------
+        // --- in-process worker pool: `cfg.workers` threads drain the graph -----
         (|| {
             let node_store = |_: usize| -> Result<Arc<dyn ParamStore>> {
                 match (cfg.transport, server_addr) {
@@ -441,55 +499,95 @@ fn run_session(
                 }
             };
 
-            // Data placement comes from the scheduler's plan, not from an
-            // enum match — custom schedulers opt into sharding there.
-            let shards: Vec<crate::data::Dataset> = if plan.shard_data {
-                bundle.train.shard(cfg.nodes)
+            // Data placement comes from the scheduler's graph, not from an
+            // enum match — custom schedulers opt into sharding there. Every
+            // worker sees every home's shard: a stolen task still trains on
+            // its home's data.
+            let g = dispatcher.graph();
+            let shards: Vec<Arc<Dataset>> = if g.shard_data() {
+                bundle.train.shard(g.nodes()).into_iter().map(Arc::new).collect()
             } else {
-                vec![bundle.train.clone(); cfg.nodes]
+                let full = Arc::new(bundle.train.clone());
+                (0..g.nodes()).map(|_| full.clone()).collect()
             };
 
-            let mut handles = Vec::with_capacity(cfg.nodes);
-            for (node_id, data) in shards.into_iter().enumerate() {
+            // Pool size: one worker per home by default — that makes the
+            // dispatcher's affinity buckets coincide with the static plan,
+            // so the drain IS the paper's schedule. `cfg.workers` scales
+            // the pool elastically in either direction.
+            let pool = if cfg.workers == 0 { g.nodes() } else { cfg.workers };
+            for w in 0..pool {
+                dispatcher.worker_joined(w as u32, &format!("pool-{w}"));
+            }
+            dispatcher.open();
+            // One OptBank for the whole pool: Adam moments key on the
+            // task's home, so a home's per-layer chain sees its own
+            // moments no matter which worker runs each task.
+            let opt_bank = OptBank::new();
+
+            let mut handles = Vec::with_capacity(pool);
+            for w in 0..pool {
                 let cfg_n = cfg.clone();
-                let store = node_store(node_id)?;
+                let store = node_store(w)?;
                 let factory = factory.clone();
                 let sched = scheduler.clone();
                 let bus_n = bus.clone();
                 let cancel_n = cancel.clone();
+                let shards_n = shards.clone();
+                let bank = opt_bank.clone();
+                let disp = dispatcher.clone();
                 handles.push(
                     std::thread::Builder::new()
-                        .name(format!("pff-node-{node_id}"))
+                        .name(format!("pff-worker-{w}"))
                         .spawn(move || -> Result<(NodeReport, LossCurve)> {
-                            let engine = factory().context("constructing node engine")?;
+                            let timeout = Duration::from_secs(cfg_n.store_timeout_s);
+                            let engine = factory().context("constructing worker engine")?;
                             let mut ctx = NodeCtx {
-                                node_id,
+                                node_id: 0,
                                 cfg: cfg_n,
                                 store,
                                 engine,
-                                data,
-                                rec: SpanRecorder::new(origin, node_id),
+                                data: shards_n[0].clone(),
+                                rec: SpanRecorder::new(origin, w),
                                 curve: LossCurve::default(),
-                                opt_cache: HashMap::new(),
-                                head_opt: None,
+                                opt_bank: bank,
+                                scratch: TaskScratch::default(),
                                 bus: bus_n,
                                 cancel: cancel_n,
                             };
-                            sched.run_node(&mut ctx)?;
+                            let source = DispatcherSource { dispatcher: disp, timeout };
+                            drain_tasks(&mut ctx, sched.as_ref(), &source, &shards_n, w as u32)?;
                             Ok((ctx.rec.finish(), ctx.curve))
                         })?,
                 );
             }
 
-            let mut node_reports = Vec::with_capacity(cfg.nodes);
+            let mut node_reports = Vec::with_capacity(pool);
             let mut curve = LossCurve::default();
+            // A failing worker closes the dispatcher, so its peers error
+            // out too ("dispatcher closed: ..."); report the root cause,
+            // not an echo.
+            let mut first_err: Option<(bool, anyhow::Error)> = None;
             for (i, h) in handles.into_iter().enumerate() {
-                let (rep, c) = h
-                    .join()
-                    .map_err(|_| anyhow!("node {i} panicked"))?
-                    .with_context(|| format!("node {i} failed"))?;
-                node_reports.push(rep);
-                curve.merge(&c);
+                match h.join().map_err(|_| anyhow!("worker {i} panicked")) {
+                    Ok(Ok((rep, c))) => {
+                        node_reports.push(rep);
+                        curve.merge(&c);
+                    }
+                    Ok(Err(e)) | Err(e) => {
+                        let root = !format!("{e:#}").contains("dispatcher closed");
+                        let replace = match &first_err {
+                            None => true,
+                            Some((prev_root, _)) => root && !prev_root,
+                        };
+                        if replace {
+                            first_err = Some((root, e.context(format!("worker {i} failed"))));
+                        }
+                    }
+                }
+            }
+            if let Some((_, e)) = first_err {
+                return Err(e);
             }
             Ok((node_reports, curve))
         })()

@@ -15,10 +15,16 @@
 //! (and custom ones registered from binaries/tests) are additions, not
 //! edits to this module.
 //!
-//! [`run_experiment`] / [`run_experiment_with_data`] remain as deprecated
-//! blocking shims over the builder.
+//! Execution is graph-driven: a scheduler describes its run as a
+//! [`TaskGraph`] of `(chapter, layer)` work items (edges = the paper's
+//! §4.1/§4.2 publish dependencies), and the shared [`Dispatcher`] leases
+//! ready tasks to an elastic pool of workers — in-proc threads or
+//! external `pff worker` processes — with per-worker affinity buckets
+//! and work stealing. The static [`SchedulePlan`] survives as a derived
+//! read-only rendering for harnesses and the gantt simulator.
 
 pub mod checkpoint;
+pub mod dispatch;
 pub mod eval;
 pub mod events;
 pub mod experiment;
@@ -27,19 +33,18 @@ pub mod node;
 pub mod registry;
 pub mod schedulers;
 pub mod store;
+pub mod taskgraph;
 
 pub use checkpoint::{CheckpointWriter, RunCheckpoint};
+pub use dispatch::Dispatcher;
 pub use eval::TrainedModel;
 pub use events::{EventBus, EventLog, RunEvent};
 pub use experiment::{CancelToken, Experiment, ExperimentBuilder, RunHandle};
 pub use node::NodeCtx;
 pub use registry::NodeRegistry;
 pub use schedulers::{SchedulePlan, Scheduler, SchedulerRegistry};
+pub use taskgraph::{Task, TaskGraph, TaskGraphBuilder};
 
-use anyhow::Result;
-
-use crate::config::ExperimentConfig;
-use crate::data::DataBundle;
 use crate::metrics::{CommStats, LossCurve, MakespanModel, NodeReport};
 
 /// Everything a finished experiment reports (EXPERIMENTS.md rows are
@@ -87,33 +92,12 @@ impl ExperimentReport {
     }
 }
 
-/// Run a full PFF experiment per `cfg`, blocking until done.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Experiment::builder().config(cfg).launch()?.join() — the session \
-            API adds observers, an event stream and cancellation"
-)]
-pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
-    Experiment::builder().config(cfg.clone()).run()
-}
-
-/// Run with pre-loaded data, blocking until done.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Experiment::builder().config(cfg).data(bundle).launch()?.join()"
-)]
-pub fn run_experiment_with_data(
-    cfg: &ExperimentConfig,
-    bundle: &DataBundle,
-) -> Result<ExperimentReport> {
-    Experiment::builder().config(cfg.clone()).data(bundle.clone()).run()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Scheduler as SchedulerKind, TransportKind};
+    use crate::config::{ExperimentConfig, Scheduler as SchedulerKind, TransportKind};
     use crate::ff::{ClassifierMode, NegStrategy};
+    use anyhow::Result;
 
     fn quick_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::tiny();
@@ -217,28 +201,6 @@ mod tests {
         let rep = run(&cfg).unwrap();
         assert!(rep.test_accuracy > 0.25, "got {:.1}%", rep.test_accuracy * 100.0);
         assert!(rep.comm.bytes_put > 0);
-    }
-
-    /// The deprecated shims still work and agree with the builder path
-    /// (they ARE the builder path).
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_delegate_to_builder() {
-        let mut cfg = quick_cfg();
-        cfg.train_n = 128;
-        cfg.test_n = 64;
-        cfg.epochs = 8;
-        let via_shim = run_experiment(&cfg).unwrap();
-        let via_builder = run(&cfg).unwrap();
-        assert_eq!(
-            via_shim.model.net.layers[0].w.data, via_builder.model.net.layers[0].w.data,
-            "shim and builder must train identically"
-        );
-
-        let bundle = crate::data::load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)
-            .unwrap();
-        let via_data_shim = run_experiment_with_data(&cfg, &bundle).unwrap();
-        assert_eq!(via_data_shim.test_accuracy, via_builder.test_accuracy);
     }
 
     /// Cluster mode end to end: the leader waits for external workers that

@@ -1,24 +1,31 @@
-//! Per-node execution context and the chapter-training primitives shared
-//! by every scheduler.
+//! Per-worker execution context and the chapter-training primitives
+//! shared by every scheduler.
 //!
-//! A *node* is one worker in the distributed system (a thread here; a
-//! machine in the paper's testbed). All schedulers compose the same four
-//! primitives, so their only differences are *which* layer/chapter pairs a
-//! node handles and *where* its negative labels come from — exactly the
-//! deltas the paper describes.
+//! A *worker* is one executor in the distributed system (a thread here; a
+//! machine in the paper's testbed). Since the TaskGraph redesign a worker
+//! drains `(chapter, layer)` tasks from a [`TaskSource`]; each task runs
+//! under the identity of its *home* — the logical node of the paper's
+//! static mapping — so data sharding and optimizer continuity are
+//! placement-independent. All schedulers compose the same primitives, so
+//! their only differences are the dependency graphs they build and where
+//! their negative labels come from — exactly the deltas the paper
+//! describes.
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{ExperimentConfig, TransportKind};
+use crate::coordinator::dispatch::Dispatcher;
 use crate::coordinator::events::{EventBus, RunEvent};
 use crate::coordinator::experiment::CancelToken;
 use crate::coordinator::lr::cooldown;
+use crate::coordinator::schedulers::Scheduler;
 use crate::coordinator::store::{HeadParams, LayerParams, ParamStore};
+use crate::coordinator::taskgraph::Task;
 use crate::data::{load_dataset, Dataset};
 use crate::engine::{factory_for, Engine};
 use crate::ff::negative::{adaptive_neg_labels, random_wrong_labels};
@@ -35,9 +42,86 @@ mod stream {
     pub const SHUFFLE: u64 = 0x5348_5546; // "SHUF"
 }
 
-/// Everything one node needs to run its part of an experiment.
+/// Shared bank of Adam states, keyed by `(home, slot)`.
+///
+/// The paper ships only weights+biases, so moments stay node-local (see
+/// DESIGN.md). With tasks free to land on any worker, "node-local" means
+/// *home-keyed*: every task of one home's per-slot chain is totally
+/// ordered by the graph's layer edges, so a `take` always observes the
+/// matching `put` of the home's previous chapter — bit-identical to the
+/// static per-node caches, under any placement. In-proc all workers share
+/// one bank; a cluster worker process has its own (the dispatcher only
+/// moves tasks across processes when `ship_opt_state` carries the moments
+/// on the wire).
+#[derive(Clone, Default)]
+pub struct OptBank {
+    inner: Arc<Mutex<HashMap<(usize, usize), AdamState>>>,
+}
+
+impl OptBank {
+    /// Fresh empty bank.
+    pub fn new() -> Self {
+        OptBank::default()
+    }
+
+    /// Remove and return the state for `(home, slot)`, if present.
+    pub fn take(&self, home: usize, slot: usize) -> Option<AdamState> {
+        self.inner.lock().unwrap().remove(&(home, slot))
+    }
+
+    /// Store the state for `(home, slot)`.
+    pub fn put(&self, home: usize, slot: usize, opt: AdamState) {
+        self.inner.lock().unwrap().insert((home, slot), opt);
+    }
+}
+
+/// Forwarded FF activations carried between consecutive same-chapter
+/// tasks on one worker: the `(pos, neg)` tensors as they stand entering
+/// `next_layer` of `chapter`, plus the layers forwarded through (for
+/// last-layer duties that need the whole network).
+pub struct FfActCache {
+    /// Chapter the activations belong to.
+    pub chapter: u32,
+    /// Layer these activations are the *input* of.
+    pub next_layer: usize,
+    /// Positive-overlay activations at `next_layer`.
+    pub x_pos: Matrix,
+    /// Negative-overlay activations at `next_layer`.
+    pub x_neg: Matrix,
+    /// Layers `0..next_layer` the inputs were forwarded through.
+    pub layers: Vec<FFLayer>,
+}
+
+/// PerfOpt cousin of [`FfActCache`]: the neutral-overlay tensor entering
+/// `next_layer` of `chapter`.
+pub struct PoActCache {
+    /// Chapter the activations belong to.
+    pub chapter: u32,
+    /// Layer these activations are the *input* of.
+    pub next_layer: usize,
+    /// Neutral-overlay activations at `next_layer`.
+    pub x: Matrix,
+}
+
+/// Per-worker scratch caches. Purely an optimization: every entry is a
+/// bit-exact copy of state reconstructible from the store, so a cache
+/// miss (task landed on a different worker) recomputes identical values.
+#[derive(Default)]
+pub struct TaskScratch {
+    /// Negative labels per chapter (deterministic in the chapter, so
+    /// memoizable across the tasks that share it).
+    pub neg: HashMap<u32, Vec<u8>>,
+    /// FF activation hand-off between consecutive tasks.
+    pub ff: Option<FfActCache>,
+    /// PerfOpt activation hand-off between consecutive tasks.
+    pub po: Option<PoActCache>,
+}
+
+/// Everything one worker needs to run tasks of an experiment.
 pub struct NodeCtx {
-    /// Node index in `[0, N)`.
+    /// The *home* of the task currently executing (set by
+    /// [`drain_tasks`] before each `run_task`) — the logical node of the
+    /// paper's static mapping, in `[0, N)`.
     pub node_id: usize,
     /// Experiment configuration (validated).
     pub cfg: ExperimentConfig,
@@ -45,21 +129,21 @@ pub struct NodeCtx {
     pub store: Arc<dyn ParamStore>,
     /// Compute backend (owned; never crosses threads).
     pub engine: Box<dyn Engine>,
-    /// This node's training data (full set, or its shard for Federated).
-    pub data: Dataset,
+    /// The current home's training data (full set, or its shard for
+    /// Federated) — swapped alongside `node_id`.
+    pub data: Arc<Dataset>,
     /// Span recorder for utilization accounting.
     pub rec: SpanRecorder,
     /// Training curve (merged by the leader afterwards).
     pub curve: LossCurve,
-    /// Node-local Adam states per layer index (the paper ships only
-    /// weights+biases, so moments stay with the node — see DESIGN.md).
-    pub opt_cache: HashMap<usize, AdamState>,
-    /// Node-local Adam state for the softmax head.
-    pub head_opt: Option<AdamState>,
+    /// Home-keyed Adam states (shared across in-proc workers).
+    pub opt_bank: OptBank,
+    /// Worker-local activation/label caches.
+    pub scratch: TaskScratch,
     /// Run-event bus (chapter progress, publishes). A default bus has no
     /// subscribers — emission is then a no-op beyond a history push.
     pub bus: EventBus,
-    /// Cooperative cancellation token (checked at chapter boundaries;
+    /// Cooperative cancellation token (checked at task boundaries;
     /// `RunHandle::cancel` also closes the store to unblock waits).
     pub cancel: CancelToken,
 }
@@ -70,14 +154,14 @@ impl NodeCtx {
         Duration::from_secs(self.cfg.store_timeout_s)
     }
 
-    /// Emit a run event on this node's bus.
+    /// Emit a run event on this worker's bus.
     pub fn emit(&self, ev: RunEvent) {
         self.bus.emit(ev);
     }
 
-    /// Error out if the run was cancelled (scheduler chapter-boundary
-    /// check — the prompt path is the store close, but custom stores only
-    /// get this cooperative check).
+    /// Error out if the run was cancelled (task-boundary check — the
+    /// prompt path is the store close, but custom stores only get this
+    /// cooperative check).
     pub fn ensure_live(&self) -> Result<()> {
         if self.cancel.is_cancelled() {
             bail!("node {}: run cancelled", self.node_id);
@@ -128,10 +212,10 @@ impl NodeCtx {
     }
 
     /// Negative labels to *use* for `chapter` under the configured
-    /// strategy, when the node can evaluate the network locally
+    /// strategy, when the home can evaluate the network locally
     /// (Sequential / All-Layers / Federated).
     ///
-    /// AdaptiveNEG: chapters before the node has a trained network fall
+    /// AdaptiveNEG: chapters before the home has a trained network fall
     /// back to the random derivation; afterwards the caller supplies the
     /// current network via `net` and labels are the most-predicted
     /// incorrect class (§5), computed locally.
@@ -377,10 +461,11 @@ impl NodeCtx {
         Ok(())
     }
 
-    /// Take (or create) the node-local Adam state for store slot `slot`
-    /// (a layer index, or a PerfOpt head slot), preferring a shipped
-    /// snapshot when `ship_opt_state` is on. `(d_in, d_out)` sizes a fresh
-    /// state when neither exists.
+    /// Take (or create) the current home's Adam state for store slot
+    /// `slot` (a layer index, a PerfOpt head slot, or
+    /// [`crate::coordinator::schedulers::CLS_HEAD_SLOT`]), preferring a
+    /// shipped snapshot when `ship_opt_state` is on. `(d_in, d_out)` sizes
+    /// a fresh state when neither exists.
     pub fn take_opt_sized(
         &mut self,
         slot: usize,
@@ -393,7 +478,9 @@ impl NodeCtx {
                 return s;
             }
         }
-        self.opt_cache.remove(&slot).unwrap_or_else(|| AdamState::new(d_in, d_out))
+        self.opt_bank
+            .take(self.node_id, slot)
+            .unwrap_or_else(|| AdamState::new(d_in, d_out))
     }
 
     /// [`NodeCtx::take_opt_sized`] for a plain FF layer index.
@@ -402,16 +489,106 @@ impl NodeCtx {
         self.take_opt_sized(layer_idx, shipped, d_in, d_out)
     }
 
-    /// Return the Adam state to the node-local cache.
-    pub fn put_opt(&mut self, layer_idx: usize, opt: AdamState) {
-        self.opt_cache.insert(layer_idx, opt);
+    /// Return the Adam state to the current home's bank slot.
+    pub fn put_opt(&mut self, slot: usize, opt: AdamState) {
+        self.opt_bank.put(self.node_id, slot, opt);
     }
+}
+
+/// Where a worker's tasks come from: the in-proc [`Dispatcher`] or the
+/// leader over TCP. `next` blocks until a task is ready (or the run
+/// completes → `None`); `done` reports a completed lease; `fail` tells
+/// the source this worker is going down with an error.
+pub trait TaskSource {
+    /// Next task for `worker`, or `None` when the run is complete.
+    fn next(&self, worker: u32) -> Result<Option<Task>>;
+    /// Report `task` complete with its loss and busy/wait split.
+    fn done(&self, worker: u32, task: Task, loss: f32, busy_s: f64, wait_s: f64) -> Result<()>;
+    /// Report this worker failing (best-effort; must not block).
+    fn fail(&self, worker: u32, reason: &str);
+}
+
+/// [`TaskSource`] over the in-proc work-bucket dispatcher.
+pub struct DispatcherSource {
+    /// The shared dispatcher.
+    pub dispatcher: Arc<Dispatcher>,
+    /// Per-`next` park timeout.
+    pub timeout: Duration,
+}
+
+impl TaskSource for DispatcherSource {
+    fn next(&self, worker: u32) -> Result<Option<Task>> {
+        self.dispatcher.next_task(worker, self.timeout)
+    }
+    fn done(&self, worker: u32, task: Task, loss: f32, busy_s: f64, wait_s: f64) -> Result<()> {
+        self.dispatcher.complete(worker, task.id, loss, busy_s, wait_s)
+    }
+    fn fail(&self, _worker: u32, reason: &str) {
+        // Closing the dispatcher unblocks every parked peer with the error.
+        self.dispatcher.close(reason);
+    }
+}
+
+/// [`TaskSource`] over the leader's TCP task frames (cluster worker).
+pub struct TcpTaskSource {
+    /// Connection to the leader.
+    pub client: Arc<TcpStoreClient>,
+    /// Per-`next` server-side wait budget.
+    pub timeout: Duration,
+}
+
+impl TaskSource for TcpTaskSource {
+    fn next(&self, _worker: u32) -> Result<Option<Task>> {
+        self.client.next_task(self.timeout)
+    }
+    fn done(&self, _worker: u32, task: Task, loss: f32, busy_s: f64, wait_s: f64) -> Result<()> {
+        self.client.task_done(task.id as u64, loss, busy_s, wait_s)
+    }
+    fn fail(&self, _worker: u32, _reason: &str) {
+        // The connection drop is the signal: the leader requeues our
+        // leased tasks when the registry notices the disconnect.
+    }
+}
+
+/// Drain tasks from `source` until the run completes: fetch (timed as
+/// WaitTask), assume the task home's identity (node id + data shard),
+/// execute hermetically, report. On a task error the source is notified
+/// (`fail`) before the error propagates, so peers don't park forever on
+/// a dependency that will never publish.
+pub fn drain_tasks(
+    ctx: &mut NodeCtx,
+    scheduler: &dyn Scheduler,
+    source: &dyn TaskSource,
+    shards: &[Arc<Dataset>],
+    worker: u32,
+) -> Result<()> {
+    loop {
+        ctx.ensure_live()?;
+        let task = ctx
+            .rec
+            .time(SpanKind::WaitTask, usize::MAX, 0, || source.next(worker))?;
+        let Some(task) = task else { break };
+        ctx.node_id = task.home;
+        ctx.data = shards[task.home].clone();
+        let mark = ctx.rec.mark();
+        match scheduler.run_task(ctx, task) {
+            Ok(loss) => {
+                let (busy_s, wait_s) = ctx.rec.split_since(mark);
+                source.done(worker, task, loss, busy_s, wait_s)?;
+            }
+            Err(e) => {
+                source.fail(worker, &format!("{e:#}"));
+                return Err(e);
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Outcome of one external worker run ([`run_worker`]).
 #[derive(Debug)]
 pub struct WorkerRun {
-    /// The node id the leader assigned (or confirmed).
+    /// The worker id the leader assigned (or confirmed).
     pub node_id: usize,
     /// Span report (busy/wait accounting) for this worker.
     pub report: NodeReport,
@@ -422,13 +599,15 @@ pub struct WorkerRun {
 }
 
 /// Entry point of the `pff worker --connect <addr>` process: join the
-/// leader's cluster over TCP, run this node's scheduler chapters against
-/// the remote store, and report `DONE`.
+/// leader's cluster over TCP, drain task leases against the remote store,
+/// and report `DONE`.
 ///
 /// The worker loads its data locally (synthetic sets derive
 /// deterministically from `cfg.seed`, so every process sees identical
-/// examples without shipping them); Federated runs carve the node's shard
-/// from the leader-assigned node id. The scheduler resolves through the
+/// examples without shipping them); Federated runs carve every home's
+/// shard up front, since a task of any home may land here. Worker ids are
+/// elastic — a late joiner's id may exceed `cfg.nodes`; tasks still run
+/// under their *home* identity. The scheduler resolves through the
 /// [`crate::coordinator::schedulers::SchedulerRegistry`]; progress events
 /// print to stderr only when `cfg.verbose` is set (library silence
 /// otherwise).
@@ -448,22 +627,19 @@ pub fn run_worker(
     // like the in-proc session path.
     crate::tensor::pool::set_threads(cfg.threads);
     let scheduler = crate::coordinator::schedulers::for_config(&cfg)?;
+    let graph = scheduler.graph(&cfg)?;
     let name = format!("worker-{}", std::process::id());
     let client = TcpStoreClient::connect_worker_retry(addr, requested_id, &name, connect_wait)?;
-    let node_id = client.node_id().context("leader did not assign a node id")? as usize;
-    ensure!(
-        node_id < cfg.nodes,
-        "assigned node id {node_id} out of range for a {}-node experiment",
-        cfg.nodes
-    );
+    let worker_id = client.node_id().context("leader did not assign a worker id")? as usize;
 
     let bundle = load_dataset(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
     // Same placement seam as the in-proc coordinator: the scheduler's
-    // plan decides sharding, not the config enum.
-    let data = if scheduler.plan(&cfg).shard_data {
-        bundle.train.shard(cfg.nodes).swap_remove(node_id)
+    // graph decides sharding, not the config enum.
+    let shards: Vec<Arc<Dataset>> = if graph.shard_data() {
+        bundle.train.shard(graph.nodes()).into_iter().map(Arc::new).collect()
     } else {
-        bundle.train
+        let full = Arc::new(bundle.train);
+        (0..graph.nodes()).map(|_| full.clone()).collect()
     };
     let factory = factory_for(cfg.engine, &cfg.artifact_dir)?;
     let engine = factory().context("constructing worker engine")?;
@@ -473,24 +649,26 @@ pub fn run_worker(
         bus.observe(|ev| eprintln!("[pff-worker] {ev}"));
     }
     let client = Arc::new(client);
+    let task_timeout = Duration::from_secs(cfg.store_timeout_s);
     let origin = Instant::now();
     let mut ctx = NodeCtx {
-        node_id,
+        node_id: 0,
         cfg,
         store: client.clone() as Arc<dyn ParamStore>,
         engine,
-        data,
-        rec: SpanRecorder::new(origin, node_id),
+        data: shards[0].clone(),
+        rec: SpanRecorder::new(origin, worker_id),
         curve: LossCurve::default(),
-        opt_cache: HashMap::new(),
-        head_opt: None,
+        opt_bank: OptBank::new(),
+        scratch: TaskScratch::default(),
         bus,
         cancel: CancelToken::default(),
     };
-    scheduler.run_node(&mut ctx)?;
+    let source = TcpTaskSource { client: client.clone(), timeout: task_timeout };
+    drain_tasks(&mut ctx, scheduler.as_ref(), &source, &shards, worker_id as u32)?;
     client.done().context("reporting DONE to the leader")?;
     Ok(WorkerRun {
-        node_id,
+        node_id: worker_id,
         report: ctx.rec.finish(),
         curve: ctx.curve,
         wall_s: origin.elapsed().as_secs_f64(),
@@ -515,11 +693,11 @@ mod tests {
             cfg,
             store: Arc::new(MemStore::new()),
             engine: Box::new(NativeEngine::new()),
-            data: bundle.train,
+            data: Arc::new(bundle.train),
             rec: SpanRecorder::new(Instant::now(), 0),
             curve: LossCurve::default(),
-            opt_cache: HashMap::new(),
-            head_opt: None,
+            opt_bank: OptBank::new(),
+            scratch: TaskScratch::default(),
             bus: EventBus::new(),
             cancel: CancelToken::default(),
         }
@@ -585,6 +763,20 @@ mod tests {
         let mut shipped = AdamState::new(c.cfg.dims[2], c.cfg.dims[3]);
         shipped.t = 77;
         assert_eq!(c.take_opt(2, Some(shipped)).t, 77);
+    }
+
+    #[test]
+    fn opt_bank_is_home_keyed_and_shared() {
+        let mut c = ctx(2);
+        let mut opt = c.take_opt(1, None);
+        opt.t = 5;
+        c.put_opt(1, opt);
+        // Another worker sharing the bank sees home 0's state under home
+        // 0 only — switching homes yields a fresh state.
+        c.node_id = 1;
+        assert_eq!(c.take_opt(1, None).t, 0);
+        c.node_id = 0;
+        assert_eq!(c.take_opt(1, None).t, 5);
     }
 
     #[test]

@@ -41,6 +41,10 @@ struct WorkerEntry {
 struct Vacancy {
     info: NodeInfo,
     since: Instant,
+    /// `(chapter, layer)` task cells the worker held a dispatcher lease
+    /// on when it dropped — surfaced in the lease-expiry error so the
+    /// operator sees exactly which work was orphaned.
+    tasks: Vec<(u32, usize)>,
 }
 
 #[derive(Default)]
@@ -159,13 +163,29 @@ impl NodeRegistry {
     /// reconnect lease opens on the vacated id; finished ones stay on
     /// the roster.
     pub fn disconnect(&self, id: u32) {
+        self.disconnect_with_tasks(id, Vec::new());
+    }
+
+    /// [`NodeRegistry::disconnect`], recording the `(chapter, layer)`
+    /// task cells the worker held dispatcher leases on at the drop —
+    /// [`NodeRegistry::wait_for_done`]'s lease-expiry error names them.
+    pub fn disconnect_with_tasks(&self, id: u32, tasks: Vec<(u32, usize)>) {
         let mut g = self.inner.lock().unwrap();
         if let Some(pos) = g.workers.iter().position(|w| w.info.id == id && !w.done) {
             let entry = g.workers.remove(pos);
-            g.vacancies.push(Vacancy { info: entry.info, since: Instant::now() });
+            g.vacancies.push(Vacancy { info: entry.info, since: Instant::now(), tasks });
             drop(g);
             self.cv.notify_all();
         }
+    }
+
+    /// Clear every open vacancy. The elastic leader calls this after the
+    /// dispatcher reports all tasks complete: a worker that dropped after
+    /// its last task finished (but before its `DONE` landed) must not
+    /// fail the run's final completion park.
+    pub fn settle_vacancies(&self) {
+        self.inner.lock().unwrap().vacancies.clear();
+        self.cv.notify_all();
     }
 
     /// Close the registry: parked [`NodeRegistry::wait_for_workers`] /
@@ -221,11 +241,19 @@ impl NodeRegistry {
                 if let Some(v) =
                     guard.vacancies.iter().find(|v| now.duration_since(v.since) >= lease)
                 {
+                    let held = if v.tasks.is_empty() {
+                        String::new()
+                    } else {
+                        let cells: Vec<String> =
+                            v.tasks.iter().map(|(c, l)| format!("{c}/{l}")).collect();
+                        format!(" while holding task lease(s) chapter/layer: {}", cells.join(", "))
+                    };
                     bail!(
-                        "node {} ({}) disconnected before DONE and no replacement adopted \
+                        "node {} ({}) disconnected before DONE{} and no replacement adopted \
                          its id within the {:?} reconnect lease",
                         v.info.id,
                         v.info.name,
+                        held,
                         lease
                     );
                 }
@@ -363,6 +391,36 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("node 1") && msg.contains("crasher"), "{msg}");
         assert!(msg.contains("lease"), "{msg}");
+    }
+
+    #[test]
+    fn expired_lease_names_orphaned_task_cells() {
+        let r = NodeRegistry::with_capacity(2);
+        r.set_lease(Duration::from_millis(20));
+        r.register(Some(0), "survivor").unwrap();
+        r.register(Some(1), "crasher").unwrap();
+        r.mark_done(0).unwrap();
+        r.disconnect_with_tasks(1, vec![(3, 1), (4, 0)]);
+        let msg = r.wait_for_done(2, Duration::from_secs(60)).unwrap_err().to_string();
+        assert!(msg.contains("node 1") && msg.contains("crasher"), "{msg}");
+        assert!(msg.contains("task lease"), "{msg}");
+        assert!(msg.contains("3/1") && msg.contains("4/0"), "{msg}");
+    }
+
+    #[test]
+    fn settle_vacancies_clears_open_leases() {
+        let r = NodeRegistry::with_capacity(2);
+        r.set_lease(Duration::from_millis(1));
+        r.register(Some(0), "a").unwrap();
+        r.register(Some(1), "b").unwrap();
+        r.mark_done(0).unwrap();
+        // Pre-done disconnect opens a vacancy whose 1ms lease would fail
+        // the park below; settling clears it so completion succeeds.
+        r.disconnect_with_tasks(1, vec![(0, 0)]);
+        std::thread::sleep(Duration::from_millis(5));
+        r.settle_vacancies();
+        assert!(r.vacancies().is_empty());
+        r.wait_for_done(1, Duration::from_millis(50)).unwrap();
     }
 
     #[test]

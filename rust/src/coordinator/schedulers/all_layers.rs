@@ -1,33 +1,55 @@
 //! All-Layers PFF (§4.2, Algorithm 2, Figure 5) — also Sequential (N=1)
 //! and Federated (sharded data).
 //!
-//! Node *i* executes chapters `i, i+N, 2N+i, …`. Within a chapter it
-//! trains every layer in order: fetch the layer as published at the
-//! *previous* chapter (blocking on the pipeline predecessor), train it for
-//! `C = E/S` epochs, publish, transform the data forward, move on. After
-//! the chapter it refreshes its own negative labels (AdaptiveNEG computes
-//! them locally with the just-trained network — the paper's §5.2 note on
-//! why All-Layers beats Single-Layer for AdaptiveNEG).
+//! Chapter `c` homes on node `c mod N`; the task for `(c, l)` fetches
+//! layer `l` as published at the *previous* chapter (the pipeline
+//! predecessor), trains it for `C = E/S` epochs on the chapter's
+//! activations, publishes, and forwards the activations for `(c, l+1)`.
+//! Under AdaptiveNEG the labels for chapter `c ≥ N` are derived from the
+//! network as published at the home's previous chapter `c − N` (the
+//! paper's §5.2 note on why All-Layers suits AdaptiveNEG), encoded as an
+//! extra graph edge `(c−N, L−1) → (c, 0)`.
 //!
-//! Progress surfaces as [`RunEvent`]s on `ctx.bus` (chapter start/finish
-//! with the chapter's mean loss, plus per-publish wire accounting from
-//! `NodeCtx::publish_layer`) — no printing in the library.
+//! Task bodies are *hermetic*: everything a task consumes comes from the
+//! store or the per-worker [`TaskScratch`] caches (which only ever hold
+//! bit-exact copies of published state), so a task computes identical
+//! weights no matter which worker runs it. Chapter progress events are
+//! emitted by the dispatcher; the bodies only account spans and publish.
+//!
+//! [`TaskScratch`]: crate::coordinator::node::TaskScratch
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::events::RunEvent;
-use crate::coordinator::node::NodeCtx;
-use crate::coordinator::schedulers::head_slot;
+use crate::coordinator::node::{FfActCache, NodeCtx, PoActCache};
+use crate::coordinator::schedulers::{head_slot, CLS_HEAD_SLOT};
 use crate::coordinator::store::ParamStore;
+use crate::coordinator::taskgraph::{Task, TaskGraph};
 use crate::ff::classifier::head_features;
-use crate::ff::{ClassifierMode, FFNetwork, NegStrategy};
+use crate::ff::{ClassifierMode, FFLayer, FFNetwork, LinearHead, NegStrategy};
 use crate::metrics::SpanKind;
-use crate::tensor::AdamState;
+use crate::tensor::Matrix;
+
+/// The All-Layers / Sequential / Federated dependency graph: the pipeline
+/// lattice with `home(c, l) = c mod N`, plus — under AdaptiveNEG — the
+/// label-production edges `(c−N, L−1) → (c, 0)` (chapter `c`'s negatives
+/// are derived from the network as published at the home's previous
+/// chapter).
+pub fn graph(cfg: &ExperimentConfig, shard_data: bool) -> Result<TaskGraph> {
+    let n = cfg.nodes.max(1);
+    let mut b = TaskGraph::pipeline(cfg, shard_data, |c, _| c as usize % n);
+    if !cfg.perfopt && cfg.neg == NegStrategy::Adaptive {
+        let last = cfg.num_layers() - 1;
+        for c in n as u32..cfg.splits {
+            b.edge((c - n as u32, last), (c, 0))?;
+        }
+    }
+    b.build()
+}
 
 /// Everything a whole-network chapter publishes (every layer, the PerfOpt
 /// heads, and — in inline-Softmax mode — the classifier head) is already
-/// in `store`. This is the resume/fast-forward probe for the
+/// in `store`. This is the chapter-granular resume probe for the
 /// Sequential / All-Layers / Federated mappings.
 pub fn chapter_complete(
     store: &dyn ParamStore,
@@ -52,175 +74,153 @@ pub fn chapter_complete(
     Ok(true)
 }
 
-/// Run one All-Layers node to completion.
-///
-/// Resume-aware: before training, the node skips the longest prefix of
-/// its chapter assignment whose outputs are already fully published
-/// (rehydrated checkpoint, or surviving leader store after a worker
-/// crash). Only this node ever publishes its assigned chapters, so the
-/// probe cannot race other nodes' progress.
-pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
-    let n_nodes = ctx.cfg.nodes as u32;
-    let splits = ctx.cfg.splits;
-    let n_layers = ctx.cfg.num_layers();
-    let my_chapters: Vec<u32> =
-        (ctx.node_id as u32..splits).step_by(n_nodes as usize).collect();
-
-    // --- resume fast-forward -----------------------------------------------
-    let mut done = 0usize;
-    for &c in &my_chapters {
-        if !chapter_complete(ctx.store.as_ref(), &ctx.cfg, c)? {
-            break;
-        }
-        done += 1;
+/// Everything `task` publishes is already in `store` — the per-cell
+/// resume probe (layer, PerfOpt head slot, and — on the last layer in
+/// inline-Softmax mode — the classifier head).
+pub fn task_done(store: &dyn ParamStore, cfg: &ExperimentConfig, task: Task) -> Result<bool> {
+    let (c, l) = (task.chapter, task.layer);
+    if !store.has_layer(l, c)? {
+        return Ok(false);
     }
-
-    // AdaptiveNEG labels for the node's next chapter, computed after each
-    // finished chapter with the then-current network.
-    let mut pending_adaptive: Option<Vec<u8>> = None;
-    if done > 0 && !ctx.cfg.perfopt && ctx.cfg.neg == NegStrategy::Adaptive {
-        if let (Some(&last), Some(&next)) = (my_chapters.get(done - 1), my_chapters.get(done)) {
-            // Rebuild exactly the labels the interrupted run computed after
-            // its last completed chapter: the network as published at that
-            // chapter is in the store, and the label sweep is
-            // bit-deterministic, so the resumed stream continues bitwise.
-            let mut layers = Vec::with_capacity(n_layers);
-            for l in 0..n_layers {
-                let (layer, _) = ctx.fetch_layer(l, last)?.into_layer();
-                layers.push(layer);
-            }
-            let net = FFNetwork { layers, classes: ctx.cfg.classes };
-            pending_adaptive = Some(ctx.local_neg_labels(next, Some(&net))?);
-        }
+    if cfg.perfopt && !store.has_layer(head_slot(l), c)? {
+        return Ok(false);
     }
-
-    for &chapter in &my_chapters[done..] {
-        ctx.ensure_live()?;
-        ctx.emit(RunEvent::ChapterStarted { node: ctx.node_id, layer: None, chapter });
-        let mark = ctx.rec.mark();
-        let loss = if ctx.cfg.perfopt {
-            run_chapter_perfopt(ctx, chapter, n_layers)?
-        } else {
-            run_chapter_ff(ctx, chapter, n_layers, &mut pending_adaptive)?
-        };
-        let (busy_s, wait_s) = ctx.rec.split_since(mark);
-        ctx.emit(RunEvent::ChapterFinished {
-            node: ctx.node_id,
-            layer: None,
-            chapter,
-            loss,
-            busy_s,
-            wait_s,
-        });
+    if l == cfg.num_layers() - 1
+        && !cfg.perfopt
+        && cfg.head_inline
+        && cfg.classifier == ClassifierMode::Softmax
+        && !store.has_head(c)?
+    {
+        return Ok(false);
     }
-    Ok(())
+    Ok(true)
 }
 
-fn run_chapter_ff(
-    ctx: &mut NodeCtx,
-    chapter: u32,
-    n_layers: usize,
-    pending_adaptive: &mut Option<Vec<u8>>,
-) -> Result<f32> {
-    // --- negative labels for this chapter ---------------------------------
-    let neg_labels = match ctx.cfg.neg {
+/// Execute one All-Layers `(chapter, layer)` task hermetically.
+pub fn run_task(ctx: &mut NodeCtx, task: Task) -> Result<f32> {
+    if ctx.cfg.perfopt {
+        run_task_perfopt(ctx, task)
+    } else {
+        run_task_ff(ctx, task)
+    }
+}
+
+fn run_task_ff(ctx: &mut NodeCtx, task: Task) -> Result<f32> {
+    let chapter = task.chapter;
+    let l = task.layer;
+    let n_layers = ctx.cfg.num_layers();
+
+    // --- chapter activations at layer l ------------------------------------
+    // Consecutive same-chapter tasks on one worker reuse the forwarded
+    // activations; otherwise rebuild from the store (bit-exact copies of
+    // what the producing worker forwarded through).
+    let hit = ctx
+        .scratch
+        .ff
+        .as_ref()
+        .is_some_and(|c| c.chapter == chapter && c.next_layer == l);
+    let (x_pos, x_neg, below) = if hit {
+        let c = ctx.scratch.ff.take().expect("checked above");
+        (c.x_pos, c.x_neg, c.layers)
+    } else {
+        let neg_labels = neg_labels_for(ctx, chapter)?;
+        rebuild_ff_inputs(ctx, chapter, l, &neg_labels)?
+    };
+
+    // --- own layer at the previous chapter ----------------------------------
+    let (mut layer, shipped) = if chapter == 0 {
+        (ctx.fresh_layer(l), None)
+    } else {
+        ctx.fetch_layer(l, chapter - 1)?.into_layer()
+    };
+    let mut opt = ctx.take_opt(l, shipped);
+    let loss = ctx.train_ff_layer_chapter(&mut layer, &mut opt, l, chapter, &x_pos, &x_neg)?;
+    ctx.publish_layer(l, chapter, &layer, Some(&opt))?;
+
+    if l + 1 < n_layers {
+        let (np, nn) = ctx.forward_pair(&layer, l, chapter, x_pos, x_neg)?;
+        let mut layers = below;
+        layers.push(layer);
+        ctx.scratch.ff =
+            Some(FfActCache { chapter, next_layer: l + 1, x_pos: np, x_neg: nn, layers });
+    } else {
+        ctx.scratch.ff = None;
+        let mut layers = below;
+        layers.push(layer);
+        let net = FFNetwork { layers, classes: ctx.cfg.classes };
+        // --- inline softmax-head stage (§5.3/§5.4 timing analysis) ---------
+        if ctx.cfg.head_inline && ctx.cfg.classifier == ClassifierMode::Softmax {
+            train_and_publish_head(ctx, chapter, &net)?;
+        }
+    }
+    ctx.put_opt(l, opt);
+    Ok(loss)
+}
+
+/// Negative labels for `chapter`, memoized per worker. AdaptiveNEG
+/// derives them from the network as published at the home's previous
+/// chapter `c − N` (chapters `c < N` are each home's first chapter and
+/// fall back to the derived random labels) — bit-identical to the static
+/// path's UpdateXNEG because published layers are exact copies and the
+/// label sweep is deterministic in `(chapter, net, shard)`.
+pub(crate) fn neg_labels_for(ctx: &mut NodeCtx, chapter: u32) -> Result<Vec<u8>> {
+    if let Some(v) = ctx.scratch.neg.get(&chapter) {
+        return Ok(v.clone());
+    }
+    let labels = match ctx.cfg.neg {
         NegStrategy::Adaptive => {
-            pending_adaptive.take().unwrap_or_else(|| ctx.derived_neg_labels(0))
+            let n = ctx.cfg.nodes.max(1) as u32;
+            if chapter < n {
+                ctx.derived_neg_labels(0)
+            } else {
+                let src = chapter - n;
+                let n_layers = ctx.cfg.num_layers();
+                let mut layers = Vec::with_capacity(n_layers);
+                for l in 0..n_layers {
+                    let (layer, _) = ctx.fetch_layer(l, src)?.into_layer();
+                    layers.push(layer);
+                }
+                let net = FFNetwork { layers, classes: ctx.cfg.classes };
+                ctx.local_neg_labels(chapter, Some(&net))?
+            }
         }
         _ => ctx.local_neg_labels(chapter, None)?,
     };
-
-    let mut x_pos = ctx.positive_inputs();
-    let mut x_neg = ctx.negative_inputs(&neg_labels);
-    let mut trained: Vec<crate::ff::FFLayer> = Vec::with_capacity(n_layers);
-    let mut last_loss = 0.0f32;
-
-    for l in 0..n_layers {
-        // Fetch the pipeline predecessor's version (or fresh at chapter 0).
-        let (mut layer, shipped) = if chapter == 0 {
-            (ctx.fresh_layer(l), None)
-        } else {
-            let params = ctx.fetch_layer(l, chapter - 1)?;
-            let (layer, opt) = params.into_layer();
-            (layer, opt)
-        };
-        let mut opt = ctx.take_opt(l, shipped);
-        last_loss = ctx.train_ff_layer_chapter(&mut layer, &mut opt, l, chapter, &x_pos, &x_neg)?;
-        ctx.publish_layer(l, chapter, &layer, Some(&opt))?;
-        let (np, nn) = ctx.forward_pair(&layer, l, chapter, x_pos, x_neg)?;
-        x_pos = np;
-        x_neg = nn;
-        ctx.put_opt(l, opt);
-        trained.push(layer);
-    }
-
-    let net = FFNetwork { layers: trained, classes: ctx.cfg.classes };
-
-    // --- inline softmax-head stage (§5.3/§5.4 timing analysis) ------------
-    if ctx.cfg.head_inline && ctx.cfg.classifier == ClassifierMode::Softmax {
-        train_and_publish_head(ctx, chapter, &net)?;
-    }
-
-    // --- UpdateXNEG: labels for this node's next chapter -------------------
-    if ctx.cfg.neg == NegStrategy::Adaptive {
-        let next = chapter + ctx.cfg.nodes as u32;
-        if next < ctx.cfg.splits {
-            *pending_adaptive = Some(ctx.local_neg_labels(next, Some(&net))?);
-        }
-    }
-    Ok(last_loss)
+    ctx.scratch.neg.insert(chapter, labels.clone());
+    Ok(labels)
 }
 
-fn run_chapter_perfopt(ctx: &mut NodeCtx, chapter: u32, n_layers: usize) -> Result<f32> {
-    // PerfOpt (§4.4): neutral overlay, no negatives; each layer trains
-    // jointly with its private head by local backprop.
-    let mut x = ctx.neutral_inputs();
-    let labels = ctx.data.y.clone();
-    let mut last_loss = 0.0f32;
-
-    for l in 0..n_layers {
-        let (mut layer, shipped) = if chapter == 0 {
-            (ctx.fresh_layer(l), None)
-        } else {
-            let params = ctx.fetch_layer(l, chapter - 1)?;
-            let (layer, opt) = params.into_layer();
-            (layer, opt)
-        };
-        let (mut head, head_shipped) = if chapter == 0 {
-            (ctx.fresh_layer_head(l), None)
-        } else {
-            let params = ctx.fetch_layer(head_slot(l), chapter - 1)?;
-            let (hl, opt) = params.into_layer();
-            (crate::ff::LinearHead { w: hl.w, b: hl.b }, opt)
-        };
-        let mut opt_layer = ctx.take_opt(l, shipped);
-        let mut opt_head = ctx.take_opt_sized(
-            head_slot(l),
-            head_shipped,
-            head.w.rows,
-            head.w.cols,
-        );
-        last_loss = ctx.train_perfopt_layer_chapter(
-            &mut layer, &mut head, &mut opt_layer, &mut opt_head, l, chapter, &x, &labels,
-        )?;
-        ctx.publish_layer(l, chapter, &layer, Some(&opt_layer))?;
-        // Publish the head through the layer namespace (normalize=false).
-        let head_as_layer = crate::ff::FFLayer {
-            w: head.w.clone(),
-            b: head.b.clone(),
-            normalize_input: false,
-        };
-        ctx.publish_layer(head_slot(l), chapter, &head_as_layer, Some(&opt_head))?;
-        let eng = ctx.engine.as_mut();
-        x = ctx.rec.time(SpanKind::Forward, l, chapter, || eng.layer_forward(&layer, &x))?;
-        ctx.put_opt(l, opt_layer);
-        ctx.put_opt(head_slot(l), opt_head);
+/// Cache-miss path of the chapter-activation reuse: overlay the inputs
+/// and forward them through layers `0..layer` as published at THIS
+/// chapter, returning the `(pos, neg)` activations and the forwarded-
+/// through layers (for last-layer duties that need the whole network).
+pub(crate) fn rebuild_ff_inputs(
+    ctx: &mut NodeCtx,
+    chapter: u32,
+    layer: usize,
+    neg_labels: &[u8],
+) -> Result<(Matrix, Matrix, Vec<FFLayer>)> {
+    let mut x_pos = ctx.positive_inputs();
+    let mut x_neg = ctx.negative_inputs(neg_labels);
+    let mut below = Vec::with_capacity(layer);
+    for l in 0..layer {
+        let (pl, _) = ctx.fetch_layer(l, chapter)?.into_layer();
+        let (np, nn) = ctx.forward_pair(&pl, l, chapter, x_pos, x_neg)?;
+        x_pos = np;
+        x_neg = nn;
+        below.push(pl);
     }
-    Ok(last_loss)
+    Ok((x_pos, x_neg, below))
 }
 
 /// Train the full-network softmax head for one chapter and publish it.
-fn train_and_publish_head(ctx: &mut NodeCtx, chapter: u32, net: &FFNetwork) -> Result<()> {
+/// Hermetic: the head comes from the store (previous chapter) or fresh,
+/// its optimizer from the shared bank under [`CLS_HEAD_SLOT`].
+pub(crate) fn train_and_publish_head(
+    ctx: &mut NodeCtx,
+    chapter: u32,
+    net: &FFNetwork,
+) -> Result<()> {
     let (mut head, shipped_opt) = if chapter == 0 {
         (ctx.fresh_full_head(), None)
     } else {
@@ -231,13 +231,9 @@ fn train_and_publish_head(ctx: &mut NodeCtx, chapter: u32, net: &FFNetwork) -> R
             .time(SpanKind::WaitLayer, usize::MAX, chapter, || store.get_head(chapter - 1, to))?;
         params.into_head()
     };
-    let mut opt = if ctx.cfg.ship_opt_state {
-        shipped_opt.unwrap_or_else(|| AdamState::new(head.w.rows, head.w.cols))
-    } else {
-        ctx.head_opt.take().unwrap_or_else(|| AdamState::new(head.w.rows, head.w.cols))
-    };
+    let mut opt = ctx.take_opt_sized(CLS_HEAD_SLOT, shipped_opt, head.w.rows, head.w.cols);
 
-    // Features on this node's data under the current network.
+    // Features on this home's data under the current network.
     let eng = ctx.engine.as_mut();
     let data_x = ctx.data.x.clone();
     let feats = ctx
@@ -247,6 +243,72 @@ fn train_and_publish_head(ctx: &mut NodeCtx, chapter: u32, net: &FFNetwork) -> R
     ctx.train_head_chapter(&mut head, &mut opt, chapter, &feats, &labels)?;
 
     ctx.publish_head(chapter, &head, Some(&opt))?;
-    ctx.head_opt = Some(opt);
+    ctx.put_opt(CLS_HEAD_SLOT, opt);
     Ok(())
+}
+
+/// Execute one PerfOpt (§4.4) task: neutral overlay, no negatives; the
+/// layer trains jointly with its private head by local backprop. Shared
+/// verbatim by All-Layers and Single-Layer — the body only depends on
+/// the cell and the store, not on the home mapping.
+pub(crate) fn run_task_perfopt(ctx: &mut NodeCtx, task: Task) -> Result<f32> {
+    let chapter = task.chapter;
+    let l = task.layer;
+    let n_layers = ctx.cfg.num_layers();
+
+    let x = po_inputs_at(ctx, chapter, l)?;
+
+    let (mut layer, shipped) = if chapter == 0 {
+        (ctx.fresh_layer(l), None)
+    } else {
+        ctx.fetch_layer(l, chapter - 1)?.into_layer()
+    };
+    let (mut head, head_shipped) = if chapter == 0 {
+        (ctx.fresh_layer_head(l), None)
+    } else {
+        let (hl, opt) = ctx.fetch_layer(head_slot(l), chapter - 1)?.into_layer();
+        (LinearHead { w: hl.w, b: hl.b }, opt)
+    };
+    let mut opt_layer = ctx.take_opt(l, shipped);
+    let mut opt_head = ctx.take_opt_sized(head_slot(l), head_shipped, head.w.rows, head.w.cols);
+    let labels = ctx.data.y.clone();
+    let loss = ctx.train_perfopt_layer_chapter(
+        &mut layer, &mut head, &mut opt_layer, &mut opt_head, l, chapter, &x, &labels,
+    )?;
+    ctx.publish_layer(l, chapter, &layer, Some(&opt_layer))?;
+    // Publish the head through the layer namespace (normalize=false).
+    let head_as_layer = FFLayer { w: head.w.clone(), b: head.b.clone(), normalize_input: false };
+    ctx.publish_layer(head_slot(l), chapter, &head_as_layer, Some(&opt_head))?;
+
+    if l + 1 < n_layers {
+        let eng = ctx.engine.as_mut();
+        let nx = ctx.rec.time(SpanKind::Forward, l, chapter, || eng.layer_forward(&layer, &x))?;
+        ctx.scratch.po = Some(PoActCache { chapter, next_layer: l + 1, x: nx });
+    } else {
+        ctx.scratch.po = None;
+    }
+    ctx.put_opt(l, opt_layer);
+    ctx.put_opt(head_slot(l), opt_head);
+    Ok(loss)
+}
+
+/// PerfOpt activation reuse: the neutral overlay forwarded through layers
+/// `0..layer` as published at THIS chapter (cache hit on consecutive
+/// same-chapter tasks, store rebuild otherwise).
+pub(crate) fn po_inputs_at(ctx: &mut NodeCtx, chapter: u32, layer: usize) -> Result<Matrix> {
+    let hit = ctx
+        .scratch
+        .po
+        .as_ref()
+        .is_some_and(|c| c.chapter == chapter && c.next_layer == layer);
+    if hit {
+        return Ok(ctx.scratch.po.take().expect("checked above").x);
+    }
+    let mut x = ctx.neutral_inputs();
+    for l in 0..layer {
+        let (pl, _) = ctx.fetch_layer(l, chapter)?.into_layer();
+        let eng = ctx.engine.as_mut();
+        x = ctx.rec.time(SpanKind::Forward, l, chapter, || eng.layer_forward(&pl, &x))?;
+    }
+    Ok(x)
 }

@@ -1,23 +1,51 @@
-//! The PFF schedulers (§4) as an open, object-safe abstraction.
+//! The PFF schedulers (§4) as graph builders over the `(chapter, layer)`
+//! task lattice.
 //!
-//! | Scheduler | node→work mapping | neg-label flow |
-//! |---|---|---|
-//! | Sequential | 1 node runs every chapter (≡ original FF) | local |
-//! | Single-Layer (§4.1) | node *i* owns layer *i*, every chapter | last node publishes (AdaptiveNEG) |
-//! | All-Layers (§4.2) | node *i* runs chapters `i, i+N, …` whole-network | each node computes its own |
-//! | Federated (§4.3) | All-Layers over private data shards | local (per shard) |
+//! | Scheduler | task homes | extra edges | neg-label flow |
+//! |---|---|---|---|
+//! | Sequential | every cell homes on node 0 (≡ original FF) | — | local |
+//! | Single-Layer (§4.1) | `(c, l)` homes on node `l` | `(c−2, L−1) → (c, 0)` under AdaptiveNEG | last layer publishes |
+//! | All-Layers (§4.2) | `(c, l)` homes on node `c mod N` | `(c−N, L−1) → (c, 0)` under AdaptiveNEG | each home computes its own |
+//! | Federated (§4.3) | as All-Layers, over private shards | as All-Layers | local (per shard) |
 //!
-//! PerfOpt (§4.4) is orthogonal: the same mappings, with the FF two-pass
-//! step replaced by the local-BP (layer, head) CE step and no negatives.
+//! PerfOpt (§4.4) is orthogonal: the same graphs, with the FF two-pass
+//! task body replaced by the local-BP (layer, head) CE step and no
+//! negatives (and no Adaptive edges — there are no negatives to derive).
 //!
-//! Each strategy implements the [`Scheduler`] trait and registers a
-//! factory in the [`SchedulerRegistry`] under a canonical name. The
-//! [`crate::config::Scheduler`] enum is now a *parse-level alias*: the
-//! coordinator resolves `cfg.scheduler.key()` through the registry (see
-//! [`for_config`]), so adding a scheduler means registering a factory —
-//! from `main.rs`, a bench or a test — not editing a `match` in the
-//! coordinator core. Custom schedulers reach a run via
+//! Since the TaskGraph redesign a scheduler is two things: a
+//! [`Scheduler::graph`] that emits the dependency graph of
+//! `(chapter, layer)` work items, and a [`Scheduler::run_task`] that
+//! executes one of those items hermetically (fetching everything it needs
+//! from the store / per-worker caches, publishing everything it produces).
+//! The dispatcher ([`crate::coordinator::dispatch`]) drains the graph with
+//! any number of workers; [`SchedulePlan`] survives as a *derived*,
+//! read-only rendering for harnesses and `sim::gantt`.
+//!
+//! Each strategy registers a factory in the [`SchedulerRegistry`] under a
+//! canonical name. The [`crate::config::Scheduler`] enum is a parse-level
+//! alias: the coordinator resolves `cfg.scheduler.key()` through the
+//! registry (see [`for_config`]), so adding a scheduler means registering
+//! a factory — from `main.rs`, a bench or a test — not editing a `match`
+//! in the coordinator core. Custom schedulers reach a run via
 //! `Experiment::builder().scheduler(..)` / `.scheduler_named(..)`.
+//!
+//! # Migrating a custom scheduler (pre-TaskGraph → TaskGraph)
+//!
+//! Custom schedulers registered via `.scheduler_named(..)` implement
+//! `graph()` + `run_task()` instead of `plan()` + `run_node()`:
+//!
+//! - `plan()` → `graph()`: return a [`crate::coordinator::TaskGraph`].
+//!   For the common shapes, start from
+//!   `TaskGraph::pipeline(cfg, shard_data, home_of)` (the §4.1/§4.2
+//!   lattice), add any extra edges, then `.build()`. A derived
+//!   `SchedulePlan` is synthesized automatically from the homes.
+//! - `run_node()` (a whole node's script) → `run_task()` (one
+//!   `(chapter, layer)` cell). The task body must be *hermetic*: fetch
+//!   predecessor layers through `ctx` / the store rather than assuming
+//!   earlier state lives in local variables, and key persistent optimizer
+//!   state through `ctx.take_opt*` / `ctx.put_opt` (backed by the shared
+//!   [`crate::coordinator::node::OptBank`], keyed by the task's *home* so
+//!   moments survive the task landing on any worker).
 
 pub mod all_layers;
 pub mod single_layer;
@@ -30,6 +58,7 @@ use anyhow::{bail, Result};
 use crate::config::{ExperimentConfig, Scheduler as SchedulerKind};
 use crate::coordinator::node::NodeCtx;
 use crate::coordinator::store::ParamStore;
+use crate::coordinator::taskgraph::{Task, TaskGraph};
 
 /// Store "layer index" namespace for PerfOpt per-layer heads: head of FF
 /// layer `l` is published under slot `HEAD_SLOT_BASE + l`. Keeps the store
@@ -41,10 +70,16 @@ pub fn head_slot(l: usize) -> usize {
     HEAD_SLOT_BASE + l
 }
 
-/// What a scheduler intends to do with a (validated) configuration —
-/// node→chapter and node→layer assignments plus data placement. The
-/// coordinator uses [`SchedulePlan::shard_data`] for data placement;
-/// harnesses and dashboards can render the rest.
+/// [`crate::coordinator::node::OptBank`] slot for the full-network softmax
+/// classifier head (inline-head training). Distinct from every FF layer
+/// slot and every PerfOpt [`head_slot`].
+pub const CLS_HEAD_SLOT: usize = usize::MAX;
+
+/// A scheduler's node→work mapping rendered as the static assignment
+/// tables the paper draws — since the TaskGraph redesign a *derived*,
+/// read-only view (see [`SchedulePlan::from_graph`]) consumed by
+/// harnesses, dashboards and `sim::gantt`. The coordinator itself
+/// schedules from the graph.
 #[derive(Clone, Debug)]
 pub struct SchedulePlan {
     /// Scheduler name (matches [`Scheduler::name`]).
@@ -61,6 +96,34 @@ pub struct SchedulePlan {
 }
 
 impl SchedulePlan {
+    /// Render a [`TaskGraph`] as per-home assignment tables: node `i`'s
+    /// chapters/layers are the distinct chapters/layers among the tasks
+    /// homed on `i`, sorted ascending.
+    pub fn from_graph(name: &str, g: &TaskGraph) -> Self {
+        let n = g.nodes();
+        let mut chapters: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut layers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for t in g.tasks() {
+            chapters[t.home].push(t.chapter);
+            layers[t.home].push(t.layer);
+        }
+        for v in &mut chapters {
+            v.sort_unstable();
+            v.dedup();
+        }
+        for v in &mut layers {
+            v.sort_unstable();
+            v.dedup();
+        }
+        SchedulePlan {
+            scheduler: name.into(),
+            nodes: n,
+            chapters,
+            layers,
+            shard_data: g.shard_data(),
+        }
+    }
+
     /// Round-robin whole-network plan (Sequential / All-Layers /
     /// Federated): node `i` runs chapters `i, i+N, …`, training every
     /// layer. Reusable by custom schedulers with the same shape.
@@ -97,7 +160,8 @@ impl SchedulePlan {
     }
 }
 
-/// One PFF scheduling strategy: what a single node does for the whole run.
+/// One PFF scheduling strategy: the dependency graph of a run plus the
+/// hermetic body of one `(chapter, layer)` task.
 ///
 /// Object-safe by design — the coordinator, the CLI and the cluster
 /// worker all drive `Arc<dyn Scheduler>`, and new strategies plug in
@@ -108,19 +172,43 @@ pub trait Scheduler: Send + Sync {
     /// Canonical (registry) name, e.g. `"all-layers"`.
     fn name(&self) -> &str;
 
-    /// The node→work mapping this scheduler will execute for `cfg`.
-    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan;
+    /// The dependency graph this scheduler will execute for `cfg`: one
+    /// task per `(chapter, layer)` cell, edges encoding every
+    /// publish-before-consume constraint the task bodies rely on.
+    fn graph(&self, cfg: &ExperimentConfig) -> Result<TaskGraph>;
 
-    /// Run one node's full script. Blocks until the node has finished all
-    /// its chapters (or fails / is cancelled).
-    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()>;
+    /// The node→work mapping as static assignment tables — derived from
+    /// [`Scheduler::graph`] by default; only override to customize the
+    /// rendering.
+    fn plan(&self, cfg: &ExperimentConfig) -> Result<SchedulePlan> {
+        Ok(SchedulePlan::from_graph(self.name(), &self.graph(cfg)?))
+    }
 
-    /// Whether everything node `node` publishes for `chapter` is already
-    /// in `store` — the resume/fast-forward probe. Checkpoint cursors and
-    /// (re)joining workers skip the longest complete prefix of a node's
-    /// chapter assignment using this. The conservative default answers
+    /// Execute one task hermetically on the calling worker: fetch
+    /// predecessors (store / `ctx.scratch`), train, publish, and return
+    /// the task's mean loss. `ctx.node_id` is the task's *home* when this
+    /// is called, so `ctx.take_opt*`/`ctx.put_opt` and data sharding see
+    /// exactly the static plan's per-node state.
+    fn run_task(&self, ctx: &mut NodeCtx, task: Task) -> Result<f32>;
+
+    /// Whether everything `task` publishes is already in `store` — the
+    /// per-cell resume/fast-forward probe. The resume scan walks the
+    /// graph in dependency order and pre-completes the longest fully
+    /// published prefix using this. The conservative default answers
     /// `false` ("never skip"), so custom schedulers that don't implement
     /// it redo work instead of losing it.
+    fn task_done(
+        &self,
+        _store: &dyn ParamStore,
+        _cfg: &ExperimentConfig,
+        _task: Task,
+    ) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Whether everything node `node` publishes for `chapter` is already
+    /// in `store` — the chapter-granular probe checkpoint cursors use.
+    /// Same conservative default as [`Scheduler::task_done`].
     fn chapter_complete(
         &self,
         _store: &dyn ParamStore,
@@ -140,11 +228,19 @@ impl Scheduler for Sequential {
     fn name(&self) -> &str {
         "sequential"
     }
-    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
-        SchedulePlan::round_robin(self.name(), cfg, false)
+    fn graph(&self, cfg: &ExperimentConfig) -> Result<TaskGraph> {
+        all_layers::graph(cfg, false)
     }
-    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
-        all_layers::run_node(ctx)
+    fn run_task(&self, ctx: &mut NodeCtx, task: Task) -> Result<f32> {
+        all_layers::run_task(ctx, task)
+    }
+    fn task_done(
+        &self,
+        store: &dyn ParamStore,
+        cfg: &ExperimentConfig,
+        task: Task,
+    ) -> Result<bool> {
+        all_layers::task_done(store, cfg, task)
     }
     fn chapter_complete(
         &self,
@@ -164,11 +260,19 @@ impl Scheduler for SingleLayer {
     fn name(&self) -> &str {
         "single-layer"
     }
-    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
-        SchedulePlan::layer_owner(self.name(), cfg)
+    fn graph(&self, cfg: &ExperimentConfig) -> Result<TaskGraph> {
+        single_layer::graph(cfg)
     }
-    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
-        single_layer::run_node(ctx)
+    fn run_task(&self, ctx: &mut NodeCtx, task: Task) -> Result<f32> {
+        single_layer::run_task(ctx, task)
+    }
+    fn task_done(
+        &self,
+        store: &dyn ParamStore,
+        cfg: &ExperimentConfig,
+        task: Task,
+    ) -> Result<bool> {
+        single_layer::task_done(store, cfg, task)
     }
     fn chapter_complete(
         &self,
@@ -188,11 +292,19 @@ impl Scheduler for AllLayers {
     fn name(&self) -> &str {
         "all-layers"
     }
-    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
-        SchedulePlan::round_robin(self.name(), cfg, false)
+    fn graph(&self, cfg: &ExperimentConfig) -> Result<TaskGraph> {
+        all_layers::graph(cfg, false)
     }
-    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
-        all_layers::run_node(ctx)
+    fn run_task(&self, ctx: &mut NodeCtx, task: Task) -> Result<f32> {
+        all_layers::run_task(ctx, task)
+    }
+    fn task_done(
+        &self,
+        store: &dyn ParamStore,
+        cfg: &ExperimentConfig,
+        task: Task,
+    ) -> Result<bool> {
+        all_layers::task_done(store, cfg, task)
     }
     fn chapter_complete(
         &self,
@@ -213,11 +325,19 @@ impl Scheduler for Federated {
     fn name(&self) -> &str {
         "federated"
     }
-    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
-        SchedulePlan::round_robin(self.name(), cfg, true)
+    fn graph(&self, cfg: &ExperimentConfig) -> Result<TaskGraph> {
+        all_layers::graph(cfg, true)
     }
-    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
-        all_layers::run_node(ctx)
+    fn run_task(&self, ctx: &mut NodeCtx, task: Task) -> Result<f32> {
+        all_layers::run_task(ctx, task)
+    }
+    fn task_done(
+        &self,
+        store: &dyn ParamStore,
+        cfg: &ExperimentConfig,
+        task: Task,
+    ) -> Result<bool> {
+        all_layers::task_done(store, cfg, task)
     }
     fn chapter_complete(
         &self,
@@ -293,7 +413,7 @@ impl SchedulerRegistry {
         }
         let mut known: Vec<&str> = g.keys().map(String::as_str).collect();
         known.sort_unstable();
-        bail!("unknown scheduler '{name}' (registered: {})", known.join(", "))
+        bail!("unknown scheduler '{name}' (known names: {})", known.join(", "))
     }
 
     /// Registered names, sorted.
@@ -322,7 +442,7 @@ mod tests {
         }
         assert_eq!(reg.resolve("all_layers").unwrap().name(), "all-layers");
         let err = reg.resolve("no-such-strategy").unwrap_err();
-        assert!(err.to_string().contains("registered:"), "{err}");
+        assert!(err.to_string().contains("known names:"), "{err}");
     }
 
     #[test]
@@ -338,14 +458,14 @@ mod tests {
         cfg.scheduler = SchedulerKind::AllLayers;
         cfg.nodes = 2;
         let cfg = cfg.validated().unwrap();
-        let plan = AllLayers.plan(&cfg);
+        let plan = AllLayers.plan(&cfg).unwrap();
         assert_eq!(plan.nodes, 2);
         assert_eq!(plan.chapters[0], vec![0, 2, 4, 6]);
         assert_eq!(plan.chapters[1], vec![1, 3, 5, 7]);
         assert_eq!(plan.total_chapters() as u32, cfg.splits);
         assert_eq!(plan.layers[0], vec![0, 1, 2]);
         assert!(!plan.shard_data);
-        assert!(Federated.plan(&cfg).shard_data);
+        assert!(Federated.plan(&cfg).unwrap().shard_data);
     }
 
     #[test]
@@ -354,9 +474,27 @@ mod tests {
         cfg.scheduler = SchedulerKind::SingleLayer;
         cfg.nodes = 3;
         let cfg = cfg.validated().unwrap();
-        let plan = SingleLayer.plan(&cfg);
+        let plan = SingleLayer.plan(&cfg).unwrap();
         assert_eq!(plan.layers, vec![vec![0], vec![1], vec![2]]);
         assert!(plan.chapters.iter().all(|c| c.len() == cfg.splits as usize));
+    }
+
+    #[test]
+    fn derived_plan_matches_legacy_static_shapes() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.nodes = 2;
+        let cfg = cfg.validated().unwrap();
+        let derived = AllLayers.plan(&cfg).unwrap();
+        let legacy = SchedulePlan::round_robin("all-layers", &cfg, false);
+        assert_eq!(derived.chapters, legacy.chapters);
+        assert_eq!(derived.layers, legacy.layers);
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.nodes = 3;
+        let cfg = cfg.validated().unwrap();
+        let derived = SingleLayer.plan(&cfg).unwrap();
+        let legacy = SchedulePlan::layer_owner("single-layer", &cfg);
+        assert_eq!(derived.layers, legacy.layers);
+        assert_eq!(derived.chapters, legacy.chapters);
     }
 
     #[test]

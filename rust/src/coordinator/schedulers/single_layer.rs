@@ -1,32 +1,49 @@
 //! Single-Layer PFF (§4.1, Algorithm 1, Figure 4).
 //!
-//! Node *i* permanently owns layer *i*. Every chapter it re-fetches layers
-//! `0..i` as published *this chapter* by its predecessors, forwards the
-//! dataset through them, trains its own layer for `C` epochs and
-//! publishes. The last node additionally produces the AdaptiveNEG labels
-//! for the next chapter ("the last node generates and publishes the
-//! generated labels", §5.2) and — in Softmax mode — trains the classifier
-//! head as an extra pipeline stage (§5.4's "only adds a small delay").
+//! The task for `(c, l)` homes on node `l` — the layer's permanent owner
+//! in the paper's static mapping. It re-fetches layers `0..l` as
+//! published *this chapter* by its predecessors, forwards the dataset
+//! through them, trains the owned layer for `C` epochs and publishes.
+//! The last layer's task additionally produces the AdaptiveNEG labels
+//! two chapters ahead ("the last node generates and publishes the
+//! generated labels", §5.2) — an extra graph edge `(c−2, L−1) → (c, 0)`
+//! — and, in Softmax mode, trains the classifier head as an extra
+//! pipeline stage (§5.4's "only adds a small delay").
 //!
-//! Progress surfaces as [`RunEvent`]s on `ctx.bus` with `layer` set to the
-//! node's owned layer.
+//! Task bodies are hermetic (store + per-worker caches only), so the
+//! dispatcher may run them on any worker; optimizer moments persist in
+//! the shared `OptBank` under the task's home.
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::events::RunEvent;
-use crate::coordinator::node::NodeCtx;
-use crate::coordinator::schedulers::head_slot;
+use crate::coordinator::node::{FfActCache, NodeCtx};
+use crate::coordinator::schedulers::{all_layers, head_slot};
 use crate::coordinator::store::ParamStore;
-use crate::ff::classifier::head_features;
-use crate::ff::{ClassifierMode, FFLayer, FFNetwork, LinearHead, NegStrategy};
+use crate::coordinator::taskgraph::{Task, TaskGraph};
+use crate::ff::{ClassifierMode, FFNetwork, NegStrategy};
 use crate::metrics::SpanKind;
-use crate::tensor::AdamState;
+
+/// The Single-Layer dependency graph: the pipeline lattice with
+/// `home(c, l) = l`, plus — under AdaptiveNEG — the label-production
+/// edges `(c−2, L−1) → (c, 0)` (the last layer's task at chapter `c−2`
+/// publishes the labels chapter `c` consumes; the two-chapter lag keeps
+/// the wavefront full, §5.2).
+pub fn graph(cfg: &ExperimentConfig) -> Result<TaskGraph> {
+    let mut b = TaskGraph::pipeline(cfg, false, |_, l| l);
+    if !cfg.perfopt && cfg.neg == NegStrategy::Adaptive {
+        let last = cfg.num_layers() - 1;
+        for c in 2..cfg.splits {
+            b.edge((c - 2, last), (c, 0))?;
+        }
+    }
+    b.build()
+}
 
 /// Everything node `node` (owner of layer `node`) publishes for `chapter`
-/// is already in `store` — the Single-Layer resume/fast-forward probe.
-/// The last node also publishes the AdaptiveNEG labels (two chapters
-/// ahead) and, in inline-Softmax mode, the classifier head.
+/// is already in `store` — the Single-Layer chapter-granular resume
+/// probe. The last node also publishes the AdaptiveNEG labels (two
+/// chapters ahead) and, in inline-Softmax mode, the classifier head.
 pub fn chapter_complete(
     store: &dyn ParamStore,
     cfg: &ExperimentConfig,
@@ -55,161 +72,66 @@ pub fn chapter_complete(
     Ok(true)
 }
 
-/// Run one Single-Layer node (owning layer `ctx.node_id`) to completion.
-///
-/// Resume-aware: the node skips chapters whose outputs it already finds
-/// published (rehydrated checkpoint / surviving leader store) and
-/// rehydrates its working state — the owned layer, its PerfOpt head and,
-/// on the last node, the classifier head — from the last completed
-/// chapter's published version. Adam moments come back exactly when
-/// `ship_opt_state` is on (making resume bitwise); otherwise they restart
-/// from the published weights.
-pub fn run_node(ctx: &mut NodeCtx) -> Result<()> {
-    let my_layer = ctx.node_id;
-    let n_layers = ctx.cfg.num_layers();
-    let is_last = my_layer == n_layers - 1;
-    let splits = ctx.cfg.splits;
-
-    let mut layer = ctx.fresh_layer(my_layer);
-    let mut opt = AdamState::new(ctx.cfg.dims[my_layer], ctx.cfg.dims[my_layer + 1]);
-
-    // PerfOpt: this node also owns layer my_layer's head.
-    let mut po_head = if ctx.cfg.perfopt { Some(ctx.fresh_layer_head(my_layer)) } else { None };
-    let mut po_head_opt = po_head
-        .as_ref()
-        .map(|h| AdamState::new(h.w.rows, h.w.cols));
-
-    // Last node in Softmax mode owns the classifier head.
-    let mut cls_head: Option<LinearHead> = None;
-    let mut cls_opt: Option<AdamState> = None;
-
-    // --- resume fast-forward -----------------------------------------------
-    let mut start = 0u32;
-    while start < splits
-        && chapter_complete(ctx.store.as_ref(), &ctx.cfg, my_layer, start)?
-    {
-        start += 1;
+/// Everything `task` publishes is already in `store` — the per-cell
+/// resume probe (same duties as [`chapter_complete`], one cell at a
+/// time).
+pub fn task_done(store: &dyn ParamStore, cfg: &ExperimentConfig, task: Task) -> Result<bool> {
+    let (c, l) = (task.chapter, task.layer);
+    if !store.has_layer(l, c)? {
+        return Ok(false);
     }
-    if start > 0 {
-        let last = start - 1;
-        let (l2, shipped) = ctx.fetch_layer(my_layer, last)?.into_layer();
-        layer = l2;
-        if ctx.cfg.ship_opt_state {
-            if let Some(s) = shipped {
-                opt = s;
-            }
+    if cfg.perfopt && !store.has_layer(head_slot(l), c)? {
+        return Ok(false);
+    }
+    if l == cfg.num_layers() - 1 && !cfg.perfopt {
+        if cfg.neg == NegStrategy::Adaptive && c + 2 < cfg.splits && !store.has_neg(c + 2)? {
+            return Ok(false);
         }
-        if let Some(h) = po_head.as_mut() {
-            let (hl, hopt) = ctx.fetch_layer(head_slot(my_layer), last)?.into_layer();
-            *h = LinearHead { w: hl.w, b: hl.b };
-            if ctx.cfg.ship_opt_state {
-                if let Some(s) = hopt {
-                    po_head_opt = Some(s);
-                }
-            }
-        }
-        if is_last
-            && !ctx.cfg.perfopt
-            && ctx.cfg.head_inline
-            && ctx.cfg.classifier == ClassifierMode::Softmax
-        {
-            let store = ctx.store.clone();
-            let to = ctx.timeout();
-            let (h, hopt) = store.get_head(last, to)?.into_head();
-            cls_head = Some(h);
-            cls_opt = if ctx.cfg.ship_opt_state { hopt } else { None };
+        if cfg.head_inline && cfg.classifier == ClassifierMode::Softmax && !store.has_head(c)? {
+            return Ok(false);
         }
     }
-
-    for chapter in start..splits {
-        ctx.ensure_live()?;
-        ctx.emit(RunEvent::ChapterStarted { node: ctx.node_id, layer: Some(my_layer), chapter });
-        let mark = ctx.rec.mark();
-        let loss = if ctx.cfg.perfopt {
-            run_chapter_perfopt(
-                ctx,
-                chapter,
-                my_layer,
-                &mut layer,
-                &mut opt,
-                po_head.as_mut().unwrap(),
-                po_head_opt.as_mut().unwrap(),
-            )?
-        } else {
-            run_chapter_ff(
-                ctx,
-                chapter,
-                my_layer,
-                is_last,
-                &mut layer,
-                &mut opt,
-                &mut cls_head,
-                &mut cls_opt,
-            )?
-        };
-        let (busy_s, wait_s) = ctx.rec.split_since(mark);
-        ctx.emit(RunEvent::ChapterFinished {
-            node: ctx.node_id,
-            layer: Some(my_layer),
-            chapter,
-            loss,
-            busy_s,
-            wait_s,
-        });
-    }
-    Ok(())
+    Ok(true)
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_chapter_ff(
-    ctx: &mut NodeCtx,
-    chapter: u32,
-    my_layer: usize,
-    is_last: bool,
-    layer: &mut FFLayer,
-    opt: &mut AdamState,
-    cls_head: &mut Option<LinearHead>,
-    cls_opt: &mut Option<AdamState>,
-) -> Result<f32> {
-    // --- negative labels ---------------------------------------------------
-    // AdaptiveNEG: published by the last node with a TWO-chapter lag
-    // (labels for chapter c are generated after chapter c-2 finishes).
-    // Waiting on chapter c-1's labels would serialize the entire
-    // wavefront — the §5.2 bottleneck; the lag keeps the pipeline full at
-    // the cost of one chapter of staleness. Chapters 0-1 fall back to the
-    // derived random labels (every node derives identically).
-    let neg_labels = match ctx.cfg.neg {
-        NegStrategy::Adaptive if chapter > 1 => {
-            let store = ctx.store.clone();
-            let to = ctx.timeout();
-            ctx.rec
-                .time(SpanKind::WaitNeg, usize::MAX, chapter, || store.get_neg(chapter, to))?
-        }
-        NegStrategy::Adaptive => ctx.derived_neg_labels(0),
-        _ => ctx.local_neg_labels(chapter, None)?,
+/// Execute one Single-Layer `(chapter, layer)` task hermetically.
+pub fn run_task(ctx: &mut NodeCtx, task: Task) -> Result<f32> {
+    if ctx.cfg.perfopt {
+        // PerfOpt bodies are mapping-independent — share All-Layers'.
+        return all_layers::run_task_perfopt(ctx, task);
+    }
+    let chapter = task.chapter;
+    let my_layer = task.layer;
+    let n_layers = ctx.cfg.num_layers();
+    let is_last = my_layer == n_layers - 1;
+
+    // --- chapter activations at the owned layer -----------------------------
+    let hit = ctx
+        .scratch
+        .ff
+        .as_ref()
+        .is_some_and(|c| c.chapter == chapter && c.next_layer == my_layer);
+    let (x_pos, x_neg, below) = if hit {
+        let c = ctx.scratch.ff.take().expect("checked above");
+        (c.x_pos, c.x_neg, c.layers)
+    } else {
+        let neg_labels = neg_labels_for(ctx, chapter)?;
+        all_layers::rebuild_ff_inputs(ctx, chapter, my_layer, &neg_labels)?
     };
 
-    let mut x_pos = ctx.positive_inputs();
-    let mut x_neg = ctx.negative_inputs(&neg_labels);
+    // --- own layer at the previous chapter ----------------------------------
+    let (mut layer, shipped) = if chapter == 0 {
+        (ctx.fresh_layer(my_layer), None)
+    } else {
+        ctx.fetch_layer(my_layer, chapter - 1)?.into_layer()
+    };
+    let mut opt = ctx.take_opt(my_layer, shipped);
+    let loss = ctx.train_ff_layer_chapter(&mut layer, &mut opt, my_layer, chapter, &x_pos, &x_neg)?;
+    ctx.publish_layer(my_layer, chapter, &layer, Some(&opt))?;
 
-    // --- fetch predecessors at THIS chapter and forward --------------------
-    let mut fetched: Vec<FFLayer> = Vec::with_capacity(my_layer);
-    for l in 0..my_layer {
-        let params = ctx.fetch_layer(l, chapter)?;
-        let (pl, _) = params.into_layer();
-        let (np, nn) = ctx.forward_pair(&pl, l, chapter, x_pos, x_neg)?;
-        x_pos = np;
-        x_neg = nn;
-        fetched.push(pl);
-    }
-
-    // --- train + publish own layer -----------------------------------------
-    let loss = ctx.train_ff_layer_chapter(layer, opt, my_layer, chapter, &x_pos, &x_neg)?;
-    ctx.publish_layer(my_layer, chapter, layer, Some(opt))?;
-
-    // --- last-node duties ----------------------------------------------------
     if is_last {
-        let mut layers = fetched;
+        ctx.scratch.ff = None;
+        let mut layers = below;
         layers.push(layer.clone());
         let net = FFNetwork { layers, classes: ctx.cfg.classes };
 
@@ -222,51 +144,40 @@ fn run_chapter_ff(
         }
 
         if ctx.cfg.head_inline && ctx.cfg.classifier == ClassifierMode::Softmax {
-            let head = cls_head.get_or_insert_with(|| ctx.fresh_full_head());
-            let opt_h = cls_opt
-                .get_or_insert_with(|| AdamState::new(head.w.rows, head.w.cols));
-            let eng = ctx.engine.as_mut();
-            let data_x = ctx.data.x.clone();
-            let feats = ctx.rec.time(SpanKind::Forward, usize::MAX, chapter, || {
-                head_features(eng, &net, &data_x)
-            })?;
-            let labels = ctx.data.y.clone();
-            // NOTE: can't call ctx.train_head_chapter with head borrowed
-            // from cls_head (both need ctx fields) — take/put instead.
-            let mut head_owned = head.clone();
-            let mut opt_owned = opt_h.clone();
-            ctx.train_head_chapter(&mut head_owned, &mut opt_owned, chapter, &feats, &labels)?;
-            ctx.publish_head(chapter, &head_owned, Some(&opt_owned))?;
-            *cls_head = Some(head_owned);
-            *cls_opt = Some(opt_owned);
+            all_layers::train_and_publish_head(ctx, chapter, &net)?;
         }
+    } else {
+        let (np, nn) = ctx.forward_pair(&layer, my_layer, chapter, x_pos, x_neg)?;
+        let mut layers = below;
+        layers.push(layer);
+        ctx.scratch.ff =
+            Some(FfActCache { chapter, next_layer: my_layer + 1, x_pos: np, x_neg: nn, layers });
     }
+    ctx.put_opt(my_layer, opt);
     Ok(loss)
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_chapter_perfopt(
-    ctx: &mut NodeCtx,
-    chapter: u32,
-    my_layer: usize,
-    layer: &mut FFLayer,
-    opt: &mut AdamState,
-    head: &mut LinearHead,
-    head_opt: &mut AdamState,
-) -> Result<f32> {
-    let mut x = ctx.neutral_inputs();
-    for l in 0..my_layer {
-        let params = ctx.fetch_layer(l, chapter)?;
-        let (pl, _) = params.into_layer();
-        let eng = ctx.engine.as_mut();
-        x = ctx.rec.time(SpanKind::Forward, l, chapter, || eng.layer_forward(&pl, &x))?;
+/// Negative labels for `chapter`, memoized per worker. AdaptiveNEG:
+/// published by the last layer's task with a TWO-chapter lag (labels for
+/// chapter `c` are generated after chapter `c−2` finishes). Waiting on
+/// chapter `c−1`'s labels would serialize the entire wavefront — the
+/// §5.2 bottleneck; the lag keeps the pipeline full at the cost of one
+/// chapter of staleness. Chapters 0-1 fall back to the derived random
+/// labels (every home derives identically).
+fn neg_labels_for(ctx: &mut NodeCtx, chapter: u32) -> Result<Vec<u8>> {
+    if let Some(v) = ctx.scratch.neg.get(&chapter) {
+        return Ok(v.clone());
     }
-    let labels = ctx.data.y.clone();
-    let loss = ctx
-        .train_perfopt_layer_chapter(layer, head, opt, head_opt, my_layer, chapter, &x, &labels)?;
-    ctx.publish_layer(my_layer, chapter, layer, Some(opt))?;
-    let head_as_layer =
-        FFLayer { w: head.w.clone(), b: head.b.clone(), normalize_input: false };
-    ctx.publish_layer(head_slot(my_layer), chapter, &head_as_layer, Some(head_opt))?;
-    Ok(loss)
+    let labels = match ctx.cfg.neg {
+        NegStrategy::Adaptive if chapter > 1 => {
+            let store = ctx.store.clone();
+            let to = ctx.timeout();
+            ctx.rec
+                .time(SpanKind::WaitNeg, usize::MAX, chapter, || store.get_neg(chapter, to))?
+        }
+        NegStrategy::Adaptive => ctx.derived_neg_labels(0),
+        _ => ctx.local_neg_labels(chapter, None)?,
+    };
+    ctx.scratch.neg.insert(chapter, labels.clone());
+    Ok(labels)
 }

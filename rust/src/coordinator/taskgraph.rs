@@ -1,0 +1,360 @@
+//! The dependency graph of `(chapter, layer)` work items — the scheduling
+//! currency of the coordinator since the TaskGraph redesign.
+//!
+//! The paper's §4.1/§4.2 publish dependencies make each chapter/layer cell
+//! an independently schedulable unit: training layer *l* of chapter *c*
+//! needs (a) the activations of layer *l−1* at the SAME chapter and (b)
+//! the weights of layer *l* as published at the PREVIOUS chapter. Encoded
+//! as edges, that is the pipeline lattice
+//!
+//! ```text
+//!   (c, l-1) ──► (c, l)        forwarded activations (same chapter)
+//!   (c-1, l) ──► (c, l)        layer weights (previous chapter)
+//! ```
+//!
+//! plus strategy-specific extras (AdaptiveNEG label production). Each
+//! task carries a *home* node — the logical node of the static plan — so
+//! the derived [`SchedulePlan`] rendering, data sharding (Federated) and
+//! optimizer-state continuity (`OptBank`) stay exactly as the paper's
+//! static mapping describes, while the dispatcher is free to run a ready
+//! task on any live worker.
+//!
+//! The blocker-count execution model (one atomic in-degree per task,
+//! decremented as dependencies publish) follows the dynec snippet in
+//! SNIPPETS.md; the ready-queue/bucket structure around it lives in
+//! [`crate::coordinator::dispatch`].
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::ExperimentConfig;
+
+/// One schedulable unit of work: train layer `layer` for chapter
+/// `chapter`'s `C = E/S` epochs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Task {
+    /// Index into [`TaskGraph::tasks`] (assigned by the builder).
+    pub id: usize,
+    /// Chapter (data split) index.
+    pub chapter: u32,
+    /// Layer index within the network.
+    pub layer: usize,
+    /// The static plan's owner node — used for data sharding, optimizer
+    /// continuity and worker affinity (not a placement constraint).
+    pub home: usize,
+}
+
+impl Task {
+    /// The `(chapter, layer)` cell this task trains.
+    pub fn cell(&self) -> (u32, usize) {
+        (self.chapter, self.layer)
+    }
+}
+
+/// An immutable dependency graph over every `(chapter, layer)` cell of a
+/// run — acyclic and covering the grid exactly once, by construction.
+#[derive(Clone, Debug)]
+pub struct TaskGraph {
+    tasks: Vec<Task>,
+    /// Outgoing edges: `dependents[id]` are unblocked when `id` completes.
+    dependents: Vec<Vec<usize>>,
+    /// Incoming edge count per task (the blocker count at rest).
+    in_degree: Vec<u32>,
+    index: HashMap<(u32, usize), usize>,
+    nodes: usize,
+    n_layers: usize,
+    splits: u32,
+    shard_data: bool,
+}
+
+impl TaskGraph {
+    /// Start a builder over the standard pipeline lattice for `cfg`:
+    /// one task per `(chapter, layer)` cell with `home = home_of(c, l)`,
+    /// edges `(c, l-1) → (c, l)` and `(c-1, l) → (c, l)`. Schedulers add
+    /// their extra edges (AdaptiveNEG label production) and `build()`.
+    pub fn pipeline(
+        cfg: &ExperimentConfig,
+        shard_data: bool,
+        home_of: impl Fn(u32, usize) -> usize,
+    ) -> TaskGraphBuilder {
+        let mut b =
+            TaskGraphBuilder::new(cfg.nodes.max(1), cfg.num_layers(), cfg.splits, shard_data);
+        for c in 0..cfg.splits {
+            for l in 0..cfg.num_layers() {
+                b.task(c, l, home_of(c, l)).expect("pipeline grid cells are unique");
+            }
+        }
+        for c in 0..cfg.splits {
+            for l in 0..cfg.num_layers() {
+                if l > 0 {
+                    b.edge((c, l - 1), (c, l)).expect("lattice edge endpoints exist");
+                }
+                if c > 0 {
+                    b.edge((c - 1, l), (c, l)).expect("lattice edge endpoints exist");
+                }
+            }
+        }
+        b
+    }
+
+    /// Number of tasks (= `splits × layers`).
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Whether the graph has no tasks.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Logical node count the homes span.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Layers per chapter.
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Chapter count.
+    pub fn splits(&self) -> u32 {
+        self.splits
+    }
+
+    /// Whether homes train on private data shards (Federated).
+    pub fn shard_data(&self) -> bool {
+        self.shard_data
+    }
+
+    /// Task by id.
+    pub fn task(&self, id: usize) -> Task {
+        self.tasks[id]
+    }
+
+    /// All tasks, id order.
+    pub fn tasks(&self) -> &[Task] {
+        &self.tasks
+    }
+
+    /// Id of the task training `(chapter, layer)`, if present.
+    pub fn id_of(&self, chapter: u32, layer: usize) -> Option<usize> {
+        self.index.get(&(chapter, layer)).copied()
+    }
+
+    /// Tasks unblocked by `id`'s completion.
+    pub fn dependents(&self, id: usize) -> &[usize] {
+        &self.dependents[id]
+    }
+
+    /// Incoming-edge (blocker) count of `id`.
+    pub fn in_degree(&self, id: usize) -> u32 {
+        self.in_degree[id]
+    }
+
+    /// The canonical single-worker execution order: a deterministic
+    /// topological sort that always runs the smallest ready
+    /// `(chapter, layer)` next. With the lattice edges this is exactly
+    /// the chapter-major order the static `SchedulePlan` interleaved
+    /// across nodes — the property the graph-vs-plan tests pin.
+    pub fn serial_order(&self) -> Vec<usize> {
+        let mut in_deg = self.in_degree.clone();
+        let mut heap: BinaryHeap<Reverse<(u32, usize, usize)>> = self
+            .tasks
+            .iter()
+            .filter(|t| in_deg[t.id] == 0)
+            .map(|t| Reverse((t.chapter, t.layer, t.id)))
+            .collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(Reverse((_, _, id))) = heap.pop() {
+            order.push(id);
+            for &d in &self.dependents[id] {
+                in_deg[d] -= 1;
+                if in_deg[d] == 0 {
+                    let t = self.tasks[d];
+                    heap.push(Reverse((t.chapter, t.layer, t.id)));
+                }
+            }
+        }
+        debug_assert_eq!(order.len(), self.len(), "build() guarantees acyclicity");
+        order
+    }
+}
+
+/// Builder for [`TaskGraph`] — collects tasks and edges, then validates
+/// grid coverage and acyclicity in [`TaskGraphBuilder::build`].
+pub struct TaskGraphBuilder {
+    nodes: usize,
+    n_layers: usize,
+    splits: u32,
+    shard_data: bool,
+    tasks: Vec<Task>,
+    index: HashMap<(u32, usize), usize>,
+    edges: Vec<(usize, usize)>,
+}
+
+impl TaskGraphBuilder {
+    /// Empty builder for a `splits × n_layers` grid over `nodes` homes.
+    pub fn new(nodes: usize, n_layers: usize, splits: u32, shard_data: bool) -> Self {
+        TaskGraphBuilder {
+            nodes: nodes.max(1),
+            n_layers,
+            splits,
+            shard_data,
+            tasks: Vec::with_capacity(splits as usize * n_layers),
+            index: HashMap::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    /// Add the task for `(chapter, layer)` with home `home`. Errors on a
+    /// duplicate cell or out-of-range coordinates.
+    pub fn task(&mut self, chapter: u32, layer: usize, home: usize) -> Result<usize> {
+        ensure!(
+            chapter < self.splits && layer < self.n_layers,
+            "task ({chapter}, {layer}) outside the {}x{} grid",
+            self.splits,
+            self.n_layers
+        );
+        ensure!(home < self.nodes, "task ({chapter}, {layer}) home {home} >= nodes {}", self.nodes);
+        let id = self.tasks.len();
+        ensure!(
+            self.index.insert((chapter, layer), id).is_none(),
+            "duplicate task for cell ({chapter}, {layer})"
+        );
+        self.tasks.push(Task { id, chapter, layer, home });
+        Ok(id)
+    }
+
+    /// Add a dependency edge `from → to` (`to` cannot start before `from`
+    /// completes). Both cells must already exist.
+    pub fn edge(&mut self, from: (u32, usize), to: (u32, usize)) -> Result<()> {
+        let f = *self
+            .index
+            .get(&from)
+            .with_context(|| format!("edge source ({}, {}) is not a task", from.0, from.1))?;
+        let t = *self
+            .index
+            .get(&to)
+            .with_context(|| format!("edge target ({}, {}) is not a task", to.0, to.1))?;
+        ensure!(f != t, "self-edge on cell ({}, {})", from.0, from.1);
+        self.edges.push((f, t));
+        Ok(())
+    }
+
+    /// Validate (full grid coverage, acyclicity) and freeze the graph.
+    pub fn build(self) -> Result<TaskGraph> {
+        let want = self.splits as usize * self.n_layers;
+        ensure!(
+            self.tasks.len() == want,
+            "task graph covers {} of {} (chapter, layer) cells",
+            self.tasks.len(),
+            want
+        );
+        let mut dependents = vec![Vec::new(); self.tasks.len()];
+        let mut in_degree = vec![0u32; self.tasks.len()];
+        for &(f, t) in &self.edges {
+            dependents[f].push(t);
+            in_degree[t] += 1;
+        }
+        // Deterministic unblock order (and stable serial_order ties).
+        for d in &mut dependents {
+            d.sort_unstable();
+            d.dedup();
+        }
+        // Recount after dedup so duplicate edges don't deadlock a task.
+        in_degree.iter_mut().for_each(|d| *d = 0);
+        for d in dependents.iter().flatten() {
+            in_degree[*d] += 1;
+        }
+        let g = TaskGraph {
+            tasks: self.tasks,
+            dependents,
+            in_degree,
+            index: self.index,
+            nodes: self.nodes,
+            n_layers: self.n_layers,
+            splits: self.splits,
+            shard_data: self.shard_data,
+        };
+        if g.serial_order().len() != g.len() {
+            bail!("task graph contains a dependency cycle");
+        }
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(nodes: usize, splits: u32) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.nodes = nodes;
+        cfg.splits = splits;
+        cfg.epochs = splits;
+        cfg
+    }
+
+    #[test]
+    fn pipeline_lattice_has_expected_shape() {
+        let cfg = cfg(2, 4);
+        let g = TaskGraph::pipeline(&cfg, false, |c, _| c as usize % 2).build().unwrap();
+        assert_eq!(g.len(), 4 * cfg.num_layers());
+        // (0,0) has no blockers, (1,1) has two: (1,0) and (0,1).
+        assert_eq!(g.in_degree(g.id_of(0, 0).unwrap()), 0);
+        assert_eq!(g.in_degree(g.id_of(1, 1).unwrap()), 2);
+        // (0,0) unblocks (0,1) and (1,0).
+        let deps: Vec<(u32, usize)> = g
+            .dependents(g.id_of(0, 0).unwrap())
+            .iter()
+            .map(|&d| g.task(d).cell())
+            .collect();
+        assert_eq!(deps, vec![(0, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn serial_order_is_chapter_major() {
+        let cfg = cfg(2, 3);
+        let g = TaskGraph::pipeline(&cfg, false, |c, _| c as usize % 2).build().unwrap();
+        let cells: Vec<(u32, usize)> =
+            g.serial_order().into_iter().map(|id| g.task(id).cell()).collect();
+        let mut want = Vec::new();
+        for c in 0..3u32 {
+            for l in 0..cfg.num_layers() {
+                want.push((c, l));
+            }
+        }
+        assert_eq!(cells, want);
+    }
+
+    #[test]
+    fn duplicate_cell_and_cycle_are_rejected() {
+        let mut b = TaskGraphBuilder::new(1, 1, 2, false);
+        b.task(0, 0, 0).unwrap();
+        assert!(b.task(0, 0, 0).is_err(), "duplicate cell must be rejected");
+        b.task(1, 0, 0).unwrap();
+        b.edge((0, 0), (1, 0)).unwrap();
+        b.edge((1, 0), (0, 0)).unwrap();
+        let err = b.build().unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn partial_grid_is_rejected() {
+        let mut b = TaskGraphBuilder::new(1, 2, 2, false);
+        b.task(0, 0, 0).unwrap();
+        let err = b.build().unwrap_err();
+        assert!(err.to_string().contains("covers"), "{err}");
+    }
+
+    #[test]
+    fn unknown_edge_endpoint_is_rejected() {
+        let mut b = TaskGraphBuilder::new(1, 1, 1, false);
+        b.task(0, 0, 0).unwrap();
+        assert!(b.edge((0, 0), (5, 0)).is_err());
+        assert!(b.edge((5, 0), (0, 0)).is_err());
+    }
+}

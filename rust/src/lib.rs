@@ -85,5 +85,3 @@ pub mod transport;
 
 pub use config::ExperimentConfig;
 pub use coordinator::{Experiment, ExperimentReport, RunHandle};
-#[allow(deprecated)]
-pub use coordinator::run_experiment;

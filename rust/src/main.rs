@@ -17,8 +17,11 @@
 //! additionally records every [`pff::coordinator::RunEvent`] to a CSV.
 //!
 //! Cluster mode: the leader runs `pff train --transport tcp --cluster true
-//! --tcp_port P --nodes N ...` and parks until `N` `pff worker` processes
-//! (same config flags, plus `--connect`) register, train, and report DONE.
+//! --tcp_port P --nodes N ...` and opens the task graph once
+//! `min_workers` (default: `N`) `pff worker` processes (same config
+//! flags, plus `--connect`) have registered; more workers may join
+//! mid-run, and a departed worker's task leases are requeued to the
+//! survivors.
 
 use std::sync::Arc;
 
@@ -89,6 +92,11 @@ fn print_help() {
          \u{20}  nodes, batch, dataset, engine, transport, seed, theta, lr_ff, lr_head,\n\
          \u{20}  threads (kernel worker threads; 0 = auto via PFF_THREADS env or all cores;\n\
          \u{20}  results are bit-identical at any value),\n\
+         \u{20}  workers (in-proc task-graph worker threads; 0 = one per logical node;\n\
+         \u{20}  results are bit-identical at any value),\n\
+         \u{20}  min_workers (cluster admission: open the task graph at this many\n\
+         \u{20}  registered workers instead of parking for exactly `nodes`; 0 = nodes;\n\
+         \u{20}  late joiners are admitted mid-run and crashed workers' leases requeued),\n\
          \u{20}  checkpoint_dir (durable RunCheckpoint dir; empty = off),\n\
          \u{20}  checkpoint_every (chapters between checkpoint writes), ...\n"
     );
@@ -176,10 +184,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
     };
     cfg.apply_cli(&cfg_args)?;
     if cfg.cluster {
+        let min = if cfg.min_workers == 0 { cfg.nodes } else { cfg.min_workers };
         eprintln!(
-            "[leader] hosting store on 127.0.0.1:{}, waiting for {} worker(s) \
-             (pff worker --connect 127.0.0.1:{})",
-            cfg.tcp_port, cfg.nodes, cfg.tcp_port
+            "[leader] hosting store on 127.0.0.1:{}, opening the task graph at {} \
+             worker(s) — more may join mid-run (pff worker --connect 127.0.0.1:{})",
+            cfg.tcp_port, min, cfg.tcp_port
         );
     }
 

@@ -13,6 +13,8 @@ pub enum SpanKind {
     WaitLayer,
     /// Blocked waiting for negative labels.
     WaitNeg,
+    /// Blocked waiting for a task lease from the dispatcher.
+    WaitTask,
     /// Generating negative labels (AdaptiveNEG sweep).
     NegGen,
     /// Publishing parameters to the store.
@@ -26,7 +28,7 @@ pub enum SpanKind {
 impl SpanKind {
     /// Does this span count as useful work (vs waiting)?
     pub fn is_busy(self) -> bool {
-        !matches!(self, SpanKind::WaitLayer | SpanKind::WaitNeg)
+        !matches!(self, SpanKind::WaitLayer | SpanKind::WaitNeg | SpanKind::WaitTask)
     }
 
     /// Short label for Gantt rendering.
@@ -36,6 +38,7 @@ impl SpanKind {
             SpanKind::Forward => "F",
             SpanKind::WaitLayer => ".",
             SpanKind::WaitNeg => ",",
+            SpanKind::WaitTask => "w",
             SpanKind::NegGen => "N",
             SpanKind::Publish => "P",
             SpanKind::HeadTrain => "H",

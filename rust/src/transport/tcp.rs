@@ -20,6 +20,11 @@
 //!   (protocol version + role); workers are assigned node ids through the
 //!   leader's [`NodeRegistry`] and report `DONE` when their chapters are
 //!   finished, which is how multi-process cluster mode joins.
+//! * **Task leases** — when the leader runs the graph dispatcher
+//!   ([`StoreServer::start_full`]), workers pull `(chapter, layer)` work
+//!   items with `TASK_NEXT` (server-side blocking, like the waits) and
+//!   report them with `TASK_DONE`; a worker disconnect requeues its
+//!   leases, which is how elastic membership survives crashes.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
@@ -30,8 +35,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::dispatch::{Dispatcher, Poll};
 use crate::coordinator::registry::{NodeInfo, NodeRegistry};
 use crate::coordinator::store::{HeadParams, LayerParams, MemStore, ParamStore};
+use crate::coordinator::taskgraph::Task;
 use crate::metrics::CommStats;
 use crate::transport::codec::{read_frame, write_frame, Dec, Enc};
 
@@ -69,6 +76,8 @@ mod op {
     pub const LIST_NODES: u8 = 0x20;
     pub const WAIT_NODES: u8 = 0x21;
     pub const DONE: u8 = 0x22;
+    pub const TASK_NEXT: u8 = 0x23;
+    pub const TASK_DONE: u8 = 0x24;
 }
 
 const ST_OK: u8 = 0;
@@ -114,6 +123,19 @@ impl StoreServer {
         registry: Arc<NodeRegistry>,
         port: u16,
     ) -> Result<StoreServer> {
+        StoreServer::start_full(store, registry, None, port)
+    }
+
+    /// [`StoreServer::start_with`] plus a task [`Dispatcher`]: worker
+    /// connections join the dispatcher at `HELLO`, lease work through
+    /// `TASK_NEXT`/`TASK_DONE`, and have their outstanding leases
+    /// requeued when the connection drops (elastic cluster mode).
+    pub fn start_full(
+        store: Arc<MemStore>,
+        registry: Arc<NodeRegistry>,
+        dispatcher: Option<Arc<Dispatcher>>,
+        port: u16,
+    ) -> Result<StoreServer> {
         let listener = TcpListener::bind(("127.0.0.1", port)).context("binding store server")?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -135,11 +157,12 @@ impl StoreServer {
                             sock.set_nodelay(true).ok();
                             let store = store.clone();
                             let registry = reg2.clone();
+                            let dispatcher = dispatcher.clone();
                             // Detached: a conn thread exits when its client
                             // disconnects. Joining here would deadlock
                             // shutdown against still-connected clients.
                             std::thread::spawn(move || {
-                                let _ = serve_conn(sock, &store, &registry);
+                                let _ = serve_conn(sock, &store, &registry, dispatcher.as_ref());
                             });
                         }
                         Err(e) => {
@@ -207,7 +230,12 @@ impl ConnWriter {
     }
 }
 
-fn serve_conn(sock: TcpStream, store: &Arc<MemStore>, registry: &Arc<NodeRegistry>) -> Result<()> {
+fn serve_conn(
+    sock: TcpStream,
+    store: &Arc<MemStore>,
+    registry: &Arc<NodeRegistry>,
+    dispatcher: Option<&Arc<Dispatcher>>,
+) -> Result<()> {
     let mut reader = BufReader::new(sock.try_clone()?);
     let writer = Arc::new(ConnWriter { w: Mutex::new(BufWriter::new(sock)) });
 
@@ -252,16 +280,25 @@ fn serve_conn(sock: TcpStream, store: &Arc<MemStore>, registry: &Arc<NodeRegistr
     } else {
         u32::MAX
     };
+    if node_id != u32::MAX {
+        if let Some(d) = dispatcher {
+            d.worker_joined(node_id, &name);
+        }
+    }
     let mut e = Enc::new();
     e.u8(PROTOCOL_VERSION);
     e.u32(node_id);
     let result = writer
         .reply(req_id, Ok(e.finish()))
-        .and_then(|()| conn_loop(&mut reader, &writer, store, registry, node_id));
+        .and_then(|()| conn_loop(&mut reader, &writer, store, registry, dispatcher, node_id));
     // A worker that drops before DONE is deregistered so a restarted
     // process can reclaim its node id; finished workers stay counted.
+    // Its outstanding task leases (if any) go back to the dispatcher's
+    // ready queue, and the registry records which cells were orphaned so
+    // a lease-expiry error can name them.
     if node_id != u32::MAX {
-        registry.disconnect(node_id);
+        let cells = dispatcher.map(|d| d.worker_left(node_id)).unwrap_or_default();
+        registry.disconnect_with_tasks(node_id, cells);
     }
     result
 }
@@ -272,6 +309,7 @@ fn conn_loop(
     writer: &Arc<ConnWriter>,
     store: &Arc<MemStore>,
     registry: &Arc<NodeRegistry>,
+    dispatcher: Option<&Arc<Dispatcher>>,
     conn_node: u32,
 ) -> Result<()> {
     loop {
@@ -361,12 +399,90 @@ fn conn_loop(
                     let _ = writer.reply(req_id, res);
                 })?;
             }
+            op::TASK_NEXT => {
+                let timeout = Duration::from_millis(d.u64()?);
+                if conn_node == u32::MAX {
+                    writer.reply(
+                        req_id,
+                        Err(anyhow::anyhow!(
+                            "TASK_NEXT from a connection that did not register as a worker"
+                        )),
+                    )?;
+                    continue;
+                }
+                let Some(disp) = dispatcher else {
+                    writer.reply(
+                        req_id,
+                        Err(anyhow::anyhow!(
+                            "TASK_NEXT: this leader does not run a task dispatcher"
+                        )),
+                    )?;
+                    continue;
+                };
+                // Same inline-try + parked-thread split as WAIT_LAYER: a
+                // ready (or finished) graph answers on the hot path, an
+                // empty ready queue parks off-loop so the connection keeps
+                // multiplexing store traffic while the worker waits.
+                match disp.poll_task(conn_node) {
+                    Ok(Poll::Task(t)) => {
+                        writer.reply(req_id, Ok(encode_task(Some(&t))))?;
+                    }
+                    Ok(Poll::Complete) => {
+                        writer.reply(req_id, Ok(encode_task(None)))?;
+                    }
+                    Ok(Poll::Pending) => {
+                        let (disp, writer) = (disp.clone(), writer.clone());
+                        std::thread::Builder::new().name("pff-wait-task".into()).spawn(
+                            move || {
+                                let res = disp
+                                    .next_task(conn_node, timeout)
+                                    .map(|t| encode_task(t.as_ref()));
+                                let _ = writer.reply(req_id, res);
+                            },
+                        )?;
+                    }
+                    Err(e) => writer.reply(req_id, Err(e))?,
+                }
+            }
+            op::TASK_DONE => {
+                let id = d.u64()? as usize;
+                let loss = f32::from_bits(d.u32()?);
+                let busy_s = f64::from_bits(d.u64()?);
+                let wait_s = f64::from_bits(d.u64()?);
+                let res = if conn_node == u32::MAX {
+                    Err(anyhow::anyhow!(
+                        "TASK_DONE from a connection that did not register as a worker"
+                    ))
+                } else if let Some(disp) = dispatcher {
+                    disp.complete(conn_node, id, loss, busy_s, wait_s).map(|()| Vec::new())
+                } else {
+                    Err(anyhow::anyhow!("TASK_DONE: this leader does not run a task dispatcher"))
+                };
+                writer.reply(req_id, res)?;
+            }
             _ => {
                 let res = handle_immediate(opcode, &mut d, store, registry, conn_node);
                 writer.reply(req_id, res)?;
             }
         }
     }
+}
+
+/// `TASK_NEXT` response body: flag byte 1 + task fields, or 0 when the
+/// graph has fully drained (the worker should send `DONE` and exit).
+fn encode_task(task: Option<&Task>) -> Vec<u8> {
+    let mut e = Enc::new();
+    match task {
+        Some(t) => {
+            e.u8(1);
+            e.u64(t.id as u64);
+            e.u32(t.chapter);
+            e.u32(t.layer as u32);
+            e.u32(t.home as u32);
+        }
+        None => e.u8(0),
+    }
+    e.finish()
 }
 
 fn encode_nodes(nodes: &[NodeInfo]) -> Vec<u8> {
@@ -788,6 +904,39 @@ impl TcpStoreClient {
             .node_id()
             .context("done(): this connection did not register as a worker")?;
         self.shared.request(op::DONE, None, |e| e.u32(id)).map(|_| ())
+    }
+
+    /// Lease the next ready task from the leader's dispatcher, parking
+    /// server-side up to `timeout`. `Ok(None)` means the graph drained —
+    /// the worker should send [`TcpStoreClient::done`] and exit.
+    pub fn next_task(&self, timeout: Duration) -> Result<Option<Task>> {
+        let body = self
+            .shared
+            .request(op::TASK_NEXT, Some(timeout), |e| e.u64(timeout.as_millis() as u64))?;
+        let mut d = Dec::new(body.body());
+        if d.u8()? == 0 {
+            return Ok(None);
+        }
+        Ok(Some(Task {
+            id: d.u64()? as usize,
+            chapter: d.u32()?,
+            layer: d.u32()? as usize,
+            home: d.u32()? as usize,
+        }))
+    }
+
+    /// Release a task lease with its result metrics. Floats cross the
+    /// wire as raw bits so the leader's records match the worker's
+    /// bitwise.
+    pub fn task_done(&self, id: u64, loss: f32, busy_s: f64, wait_s: f64) -> Result<()> {
+        self.shared
+            .request(op::TASK_DONE, None, |e| {
+                e.u64(id);
+                e.u32(loss.to_bits());
+                e.u64(busy_s.to_bits());
+                e.u64(wait_s.to_bits());
+            })
+            .map(|_| ())
     }
 }
 

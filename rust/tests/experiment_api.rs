@@ -10,7 +10,7 @@ use anyhow::Result;
 use pff::config::{ExperimentConfig, Scheduler as SchedulerKind, TransportKind};
 use pff::coordinator::store::{MemStore, ParamStore};
 use pff::coordinator::{
-    schedulers, Experiment, NodeCtx, RunEvent, SchedulePlan, Scheduler, SchedulerRegistry,
+    schedulers, Experiment, NodeCtx, RunEvent, Scheduler, SchedulerRegistry, Task, TaskGraph,
 };
 use pff::ff::NegStrategy;
 
@@ -60,7 +60,7 @@ fn unknown_scheduler_name_fails_at_launch() {
         .scheduler_named("definitely-not-registered")
         .launch()
         .unwrap_err();
-    assert!(err.to_string().contains("registered:"), "{err}");
+    assert!(err.to_string().contains("known names:"), "{err}");
 }
 
 #[test]
@@ -157,12 +157,12 @@ impl Scheduler for Blocker {
     fn name(&self) -> &str {
         "blocker"
     }
-    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
-        SchedulePlan::round_robin(self.name(), cfg, false)
+    fn graph(&self, cfg: &ExperimentConfig) -> Result<TaskGraph> {
+        schedulers::all_layers::graph(cfg, false)
     }
-    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
+    fn run_task(&self, ctx: &mut NodeCtx, _task: Task) -> Result<f32> {
         ctx.store.get_layer(999, 999, Duration::from_secs(600))?;
-        Ok(())
+        Ok(0.0)
     }
 }
 
@@ -227,19 +227,19 @@ fn injected_store_receives_the_published_model() {
 // --- scheduler registry -----------------------------------------------------
 
 /// A custom strategy registered by name: delegates to the stock
-/// All-Layers node script but reports its own identity — the "new
-/// scheduler as an addition" path of the redesign.
+/// All-Layers graph and task body but reports its own identity — the
+/// "new scheduler as an addition" path of the redesign.
 struct EchoAllLayers;
 
 impl Scheduler for EchoAllLayers {
     fn name(&self) -> &str {
         "echo-all-layers"
     }
-    fn plan(&self, cfg: &ExperimentConfig) -> SchedulePlan {
-        SchedulePlan::round_robin(self.name(), cfg, false)
+    fn graph(&self, cfg: &ExperimentConfig) -> Result<TaskGraph> {
+        schedulers::all_layers::graph(cfg, false)
     }
-    fn run_node(&self, ctx: &mut NodeCtx) -> Result<()> {
-        schedulers::all_layers::run_node(ctx)
+    fn run_task(&self, ctx: &mut NodeCtx, task: Task) -> Result<f32> {
+        schedulers::all_layers::run_task(ctx, task)
     }
 }
 
@@ -271,6 +271,6 @@ fn scheduler_instance_overrides_the_config_enum() {
     cfg.scheduler = SchedulerKind::Sequential; // enum says sequential...
     let rep = Experiment::builder().config(cfg).scheduler(EchoAllLayers).run().unwrap();
     // ...but the instance wins (Sequential validation pins nodes = 1, so
-    // the round-robin plan degenerates to the same chapter order).
+    // the All-Layers graph degenerates to the same chapter order).
     assert_eq!(rep.scheduler, "echo-all-layers");
 }

@@ -97,6 +97,50 @@ fn all_layers_bitwise_identical_across_thread_counts() {
     assert_eq!(serial.test_accuracy, threaded.test_accuracy);
 }
 
+/// The elastic dispatcher must be invisible to training semantics: the
+/// same task graph lands on bit-identical weights whether one worker
+/// drains it serially or four race (with stealing) — optimizer state is
+/// keyed by the task's *home* slot, not by which worker ran it, and
+/// tasks sharing a slot are totally ordered by the graph's edges.
+#[test]
+fn all_layers_bitwise_identical_across_worker_counts() {
+    for ship in [true, false] {
+        let mut cfg = mech_cfg();
+        cfg.ship_opt_state = ship;
+        cfg.scheduler = Scheduler::AllLayers;
+        cfg.nodes = 2;
+        cfg.workers = 1;
+        let one = run_experiment(&cfg).unwrap();
+        cfg.workers = 4;
+        let four = run_experiment(&cfg).unwrap();
+        for (i, (a, b)) in one.model.net.layers.iter().zip(&four.model.net.layers).enumerate() {
+            assert_eq!(
+                a.w.data, b.w.data,
+                "layer {i} weights differ between workers=1 and workers=4 (ship={ship})"
+            );
+            assert_eq!(a.b, b.b, "layer {i} bias differs (ship={ship})");
+        }
+        assert_eq!(one.test_accuracy, four.test_accuracy);
+    }
+}
+
+/// Same guarantee for the layer-owner placement: Single-Layer's graph
+/// drained by 1 or 4 workers is bitwise identical.
+#[test]
+fn single_layer_bitwise_identical_across_worker_counts() {
+    let mut cfg = mech_cfg();
+    cfg.scheduler = Scheduler::SingleLayer;
+    cfg.nodes = 3;
+    cfg.workers = 1;
+    let one = run_experiment(&cfg).unwrap();
+    cfg.workers = 4;
+    let four = run_experiment(&cfg).unwrap();
+    for (i, (a, b)) in one.model.net.layers.iter().zip(&four.model.net.layers).enumerate() {
+        assert_eq!(a.w.data, b.w.data, "layer {i} weights differ between workers=1 and workers=4");
+    }
+    assert_eq!(one.test_accuracy, four.test_accuracy);
+}
+
 /// Without shipping optimizer state (the paper's wire format), pipelined
 /// training still reaches equivalent accuracy.
 #[test]

@@ -1,0 +1,164 @@
+//! Structural properties of every scheduler's [`TaskGraph`]: acyclic,
+//! covers the `(chapter, layer)` grid exactly once, edges are honored by
+//! the canonical serial order, the derived [`SchedulePlan`] matches the
+//! paper's static tables, and a single worker draining the dispatcher
+//! reproduces the static execution order exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pff::config::{ExperimentConfig, Scheduler as SchedulerKind};
+use pff::coordinator::schedulers::{self, SchedulePlan, Scheduler};
+use pff::coordinator::{Dispatcher, EventBus, TaskGraph};
+use pff::ff::NegStrategy;
+
+/// The built-in strategies with a node count each can legally run at.
+fn strategies() -> Vec<(SchedulerKind, usize)> {
+    vec![
+        (SchedulerKind::Sequential, 1),
+        (SchedulerKind::AllLayers, 2),
+        (SchedulerKind::SingleLayer, 3),
+        (SchedulerKind::Federated, 2),
+    ]
+}
+
+fn cfg_for(kind: SchedulerKind, nodes: usize, neg: NegStrategy) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.scheduler = kind;
+    cfg.nodes = nodes;
+    cfg.splits = 8;
+    cfg.epochs = 8;
+    cfg.neg = neg;
+    cfg
+}
+
+fn resolve(cfg: &ExperimentConfig) -> Arc<dyn Scheduler> {
+    schedulers::for_config(cfg).unwrap()
+}
+
+/// Acyclicity + exact grid coverage, for every strategy and for both the
+/// plain lattice and the AdaptiveNEG variant (which adds label edges).
+#[test]
+fn every_strategy_graph_is_acyclic_and_covers_the_grid_once() {
+    for neg in [NegStrategy::Random, NegStrategy::Adaptive] {
+        for (kind, nodes) in strategies() {
+            let cfg = cfg_for(kind, nodes, neg);
+            let g = resolve(&cfg).graph(&cfg).unwrap();
+            let want = cfg.splits as usize * cfg.num_layers();
+            assert_eq!(g.len(), want, "{kind:?}/{neg:?}: task count");
+            // Every cell present exactly once (id_of is injective over the grid).
+            let mut seen = vec![false; g.len()];
+            for c in 0..cfg.splits {
+                for l in 0..cfg.num_layers() {
+                    let id = g
+                        .id_of(c, l)
+                        .unwrap_or_else(|| panic!("{kind:?}/{neg:?}: cell ({c}, {l}) missing"));
+                    assert!(!seen[id], "{kind:?}/{neg:?}: cell ({c}, {l}) duplicated");
+                    seen[id] = true;
+                    assert_eq!(g.task(id).cell(), (c, l));
+                    assert!(g.task(id).home < g.nodes());
+                }
+            }
+            // Kahn completes ⇒ acyclic; and it is a permutation of the ids.
+            let order = g.serial_order();
+            assert_eq!(order.len(), g.len(), "{kind:?}/{neg:?}: graph has a cycle");
+            let mut pos = vec![usize::MAX; g.len()];
+            for (i, &id) in order.iter().enumerate() {
+                assert_eq!(pos[id], usize::MAX, "{kind:?}/{neg:?}: id {id} ordered twice");
+                pos[id] = i;
+            }
+            // Every edge is respected by the serial order.
+            for id in 0..g.len() {
+                for &d in g.dependents(id) {
+                    assert!(
+                        pos[id] < pos[d],
+                        "{kind:?}/{neg:?}: edge {:?} -> {:?} violated",
+                        g.task(id).cell(),
+                        g.task(d).cell()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The serial order of the lattice is chapter-major — exactly the order
+/// the sequential baseline trains in.
+#[test]
+fn serial_order_is_chapter_major_for_whole_network_strategies() {
+    for kind in [SchedulerKind::Sequential, SchedulerKind::AllLayers, SchedulerKind::Federated] {
+        let nodes = if kind == SchedulerKind::Sequential { 1 } else { 2 };
+        let cfg = cfg_for(kind, nodes, NegStrategy::Random);
+        let g = resolve(&cfg).graph(&cfg).unwrap();
+        let cells: Vec<(u32, usize)> =
+            g.serial_order().into_iter().map(|id| g.task(id).cell()).collect();
+        let mut want = Vec::new();
+        for c in 0..cfg.splits {
+            for l in 0..cfg.num_layers() {
+                want.push((c, l));
+            }
+        }
+        assert_eq!(cells, want, "{kind:?}");
+    }
+}
+
+/// The derived plan renders the same static tables the paper draws:
+/// round-robin chapters for whole-network strategies, layer ownership for
+/// Single-Layer.
+#[test]
+fn derived_plan_matches_the_static_tables() {
+    for (kind, nodes) in strategies() {
+        let cfg = cfg_for(kind, nodes, NegStrategy::Random);
+        let sched = resolve(&cfg);
+        let plan = sched.plan(&cfg).unwrap();
+        assert_eq!(plan.nodes, nodes.max(1));
+        let want_chapters =
+            cfg.splits * if kind == SchedulerKind::SingleLayer { nodes as u32 } else { 1 };
+        assert_eq!(plan.total_chapters() as u32, want_chapters, "{kind:?}: chapter count");
+        let want = match kind {
+            SchedulerKind::SingleLayer => SchedulePlan::layer_owner(sched.name(), &cfg),
+            _ => SchedulePlan::round_robin(sched.name(), &cfg, kind == SchedulerKind::Federated),
+        };
+        assert_eq!(plan.chapters, want.chapters, "{kind:?}: chapter tables");
+        assert_eq!(plan.layers, want.layers, "{kind:?}: layer tables");
+        assert_eq!(plan.shard_data, want.shard_data, "{kind:?}: shard flag");
+    }
+}
+
+/// A single worker draining the dispatcher leases tasks in EXACTLY the
+/// canonical serial order — the graph scheduler degenerates to the
+/// static plan when there is no parallelism (the bitwise-equivalence
+/// tests build on this).
+#[test]
+fn single_worker_drain_reproduces_the_serial_order() {
+    for (kind, nodes) in strategies() {
+        let cfg = cfg_for(kind, nodes, NegStrategy::Random);
+        let g = resolve(&cfg).graph(&cfg).unwrap();
+        let serial = g.serial_order();
+        let bus = EventBus::new();
+        let disp = Dispatcher::new(g, bus, true, false);
+        disp.worker_joined(0, "solo");
+        disp.open();
+        let mut leased = Vec::new();
+        while let Some(t) = disp.next_task(0, Duration::from_secs(5)).unwrap() {
+            leased.push(t.id);
+            disp.complete(0, t.id, 0.0, 0.0, 0.0).unwrap();
+        }
+        assert_eq!(leased, serial, "{kind:?}: single-worker lease order");
+        disp.wait_complete(Duration::from_secs(1)).unwrap();
+    }
+}
+
+/// The pipeline builder rejects malformed graphs loudly (the invariants
+/// the dispatcher relies on are checked at build time, not at runtime).
+#[test]
+fn builder_invariants_guard_the_dispatcher() {
+    let cfg = cfg_for(SchedulerKind::AllLayers, 2, NegStrategy::Random);
+    // Full lattice builds fine.
+    TaskGraph::pipeline(&cfg, false, |c, _| c as usize % 2).build().unwrap();
+    // A cycle introduced on top of the lattice is caught.
+    let mut b = TaskGraph::pipeline(&cfg, false, |c, _| c as usize % 2);
+    b.edge((1, 0), (0, 0)).unwrap();
+    let err = b.build().unwrap_err();
+    assert!(err.to_string().contains("cycle"), "{err}");
+}
