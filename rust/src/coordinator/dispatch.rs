@@ -231,6 +231,13 @@ impl Dispatcher {
             if g.done == self.graph.len() {
                 return Ok(None);
             }
+            // A waiter can be parked here on behalf of a connection that
+            // dropped (worker_left already ran): never lease to a worker
+            // outside the membership, or the grant is orphaned — its
+            // requeue scan has already happened.
+            if !g.workers.contains(&worker) {
+                bail!("worker {worker} is not registered with the dispatcher (departed?)");
+            }
             if g.open {
                 if let Some((id, stolen_from)) = pick(&self.graph, &mut g, worker, self.allow_steal)
                 {
@@ -261,6 +268,9 @@ impl Dispatcher {
         if g.done == self.graph.len() {
             return Ok(Poll::Complete);
         }
+        if !g.workers.contains(&worker) {
+            bail!("worker {worker} is not registered with the dispatcher (departed?)");
+        }
         if g.open {
             if let Some((id, stolen_from)) = pick(&self.graph, &mut g, worker, self.allow_steal) {
                 let (task, events) = lease(&self.graph, &mut g, worker, id, stolen_from);
@@ -286,6 +296,14 @@ impl Dispatcher {
         wait_s: f64,
     ) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
+        // Bounds-check before indexing: `id` comes straight off the wire
+        // (TASK_DONE), and a panic here would poison the dispatcher mutex
+        // and kill the whole run on one malformed frame.
+        ensure!(
+            id < g.state.len(),
+            "task id {id} out of range (graph has {} tasks)",
+            g.state.len()
+        );
         ensure!(
             g.state[id] == TaskState::Leased(worker),
             "task {id} is not leased to worker {worker}"
@@ -322,12 +340,33 @@ impl Dispatcher {
         Ok(())
     }
 
+    /// Return a leased task to the ready queue without completing it —
+    /// the grant never reached its worker (the reply write failed), so
+    /// someone else must run it. No-op when `worker` no longer holds the
+    /// lease (e.g. `worker_left` already requeued it).
+    pub fn release(&self, worker: u32, id: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if id >= g.state.len() || g.state[id] != TaskState::Leased(worker) {
+            return;
+        }
+        g.state[id] = TaskState::Ready;
+        g.busy.remove(&worker);
+        enqueue_ready(&mut g, self.graph.task(id));
+        drop(g);
+        self.cond.notify_all();
+    }
+
     /// Mark task `id` done without executing it (resume fast-forward).
     /// Only legal while its blockers are already cleared — the scan walks
     /// the graph in dependency order, so a pre-completable task is always
     /// Ready. Emits nothing.
     pub fn precomplete(&self, id: usize) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
+        ensure!(
+            id < g.state.len(),
+            "precomplete: task id {id} out of range (graph has {} tasks)",
+            g.state.len()
+        );
         ensure!(
             g.state[id] == TaskState::Ready,
             "precomplete: task {id} has unfinished dependencies"
@@ -567,6 +606,59 @@ mod tests {
         assert_eq!(cells, vec![t.cell()]);
         // The survivor can retake and finish everything.
         assert_eq!(drain_single(&d, 1).len(), d.graph().len());
+    }
+
+    #[test]
+    fn departed_worker_cannot_lease() {
+        use std::sync::Arc;
+        let d = Arc::new(Dispatcher::new(graph(1, 4), EventBus::new(), true, false));
+        d.worker_joined(0, "w0");
+        d.worker_joined(1, "w1");
+        d.open();
+        // Worker 0 takes the only ready task; worker 1's fetch parks.
+        let t = d.next_task(0, Duration::from_secs(1)).unwrap().unwrap();
+        let d2 = d.clone();
+        let parked = std::thread::spawn(move || d2.next_task(1, Duration::from_secs(5)));
+        // Worker 1's connection drops while the waiter is parked: the
+        // waiter must bail, not lease a survivor's task later.
+        d.worker_left(1);
+        let err = parked.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("not registered"), "{err}");
+        // A poll for the departed worker errors too.
+        assert!(d.poll_task(1).is_err());
+        d.complete(0, t.id, 0.0, 0.0, 0.0).unwrap();
+        // The survivor drains the rest.
+        assert_eq!(drain_single(&d, 0).len(), d.graph().len() - 1);
+    }
+
+    #[test]
+    fn complete_rejects_out_of_range_id_without_poisoning() {
+        let d = Dispatcher::new(graph(1, 2), EventBus::new(), true, false);
+        d.worker_joined(0, "w0");
+        d.open();
+        let t = d.next_task(0, Duration::from_secs(1)).unwrap().unwrap();
+        let err = d.complete(0, usize::MAX, 0.0, 0.0, 0.0).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert!(d.precomplete(usize::MAX).is_err());
+        // The mutex is not poisoned: the run continues normally.
+        d.complete(0, t.id, 0.0, 0.0, 0.0).unwrap();
+        assert_eq!(d.completed(), 1);
+    }
+
+    #[test]
+    fn release_requeues_an_unnotified_lease() {
+        let d = Dispatcher::new(graph(1, 2), EventBus::new(), true, false);
+        d.worker_joined(0, "w0");
+        d.open();
+        let t = d.next_task(0, Duration::from_secs(1)).unwrap().unwrap();
+        d.release(0, t.id);
+        // The same task leases again.
+        let t2 = d.next_task(0, Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!(t.id, t2.id);
+        // Releasing a lease the worker no longer holds is a no-op.
+        d.release(1, t2.id);
+        d.release(0, usize::MAX);
+        d.complete(0, t2.id, 0.0, 0.0, 0.0).unwrap();
     }
 
     #[test]

@@ -434,10 +434,20 @@ fn conn_loop(
                         let (disp, writer) = (disp.clone(), writer.clone());
                         std::thread::Builder::new().name("pff-wait-task".into()).spawn(
                             move || {
-                                let res = disp
-                                    .next_task(conn_node, timeout)
-                                    .map(|t| encode_task(t.as_ref()));
-                                let _ = writer.reply(req_id, res);
+                                let res = disp.next_task(conn_node, timeout);
+                                let leased = match &res {
+                                    Ok(Some(t)) => Some(t.id),
+                                    _ => None,
+                                };
+                                let sent =
+                                    writer.reply(req_id, res.map(|t| encode_task(t.as_ref())));
+                                // The grant never reached the worker (client
+                                // gone mid-write): put the task back so it
+                                // isn't stuck Leased until the read loop
+                                // notices the drop.
+                                if let (Err(_), Some(id)) = (sent, leased) {
+                                    disp.release(conn_node, id);
+                                }
                             },
                         )?;
                     }
