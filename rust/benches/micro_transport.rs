@@ -14,7 +14,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use pff::bench_util::{bench, BenchStats, JsonReport};
-use pff::coordinator::store::{LayerParams, MemStore, ParamStore};
+use pff::coordinator::store::{LayerDelta, LayerParams, MemStore, ParamStore};
 use pff::tensor::{Matrix, Rng};
 use pff::transport::tcp::{StoreServer, TcpStoreClient};
 
@@ -161,7 +161,68 @@ fn main() {
             client.get_layer(0, 0, Duration::from_secs(5)).unwrap();
         });
         report.add(format!("[tcp]    put+get {label}  ({:.0} MB/s)", 2.0 * mb / s.min_s), s);
+
+        // delta vs full publish (PR 7): 8 changed rows against a base
+        // chapter already on the server — the wire carries only those rows,
+        // and the label reports the delta's fraction of the full frame.
+        let mut next = p.clone();
+        let step = (next.w.rows / 8).max(1);
+        for r in (0..next.w.rows).step_by(step).take(8) {
+            next.w.data[r * next.w.cols] += 1.0;
+        }
+        let delta_bytes = LayerDelta::diff(&p, &next).unwrap().wire_bytes();
+        client.put_layer(0, 0, p.clone()).unwrap();
+        let mut chapter = 0u32;
+        let s = bench(warmup, iters.min(10), || {
+            chapter += 1;
+            let d = LayerDelta::diff(&p, &next).unwrap();
+            client.put_layer_delta(0, chapter, 0, d).unwrap();
+        });
+        report.add(
+            format!(
+                "[tcp]    delta publish 8-row {label}  ({:.1}% of full wire)",
+                100.0 * delta_bytes as f64 / p.wire_bytes() as f64
+            ),
+            s,
+        );
         server.shutdown();
+    }
+
+    // COW store (PR 7): dump() of a store holding multi-MB entries is
+    // O(entries) refcount bumps, not an O(bytes) deep copy...
+    let (din, dout) = if opts.quick { (256, 256) } else { (1000, 1000) };
+    let store = Arc::new(MemStore::new());
+    for l in 0..12usize {
+        store.put_layer(l, 0, params(din, dout)).unwrap();
+    }
+    let s = bench(warmup, iters, || {
+        std::hint::black_box(store.dump());
+    });
+    report.add(format!("[store]  dump of 12-entry multi-MB store  ({:.1} us)", s.min_s * 1e6), s);
+
+    // ...and therefore publishes stay fast while a dumper hot-loops (the
+    // checkpoint-writer-stalls-the-pipeline regression, as a number).
+    {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let stop = Arc::new(AtomicBool::new(false));
+        let (s2, stop2) = (store.clone(), stop.clone());
+        let dumper = std::thread::spawn(move || {
+            let mut n = 0u64;
+            while !stop2.load(Ordering::Relaxed) {
+                std::hint::black_box(s2.dump());
+                n += 1;
+            }
+            n
+        });
+        let p = params(din, dout);
+        let mut chapter = 0u32;
+        let s = bench(warmup, iters, || {
+            chapter += 1;
+            store.put_layer(0, chapter, p.clone()).unwrap();
+        });
+        stop.store(true, Ordering::Relaxed);
+        let dumps = dumper.join().unwrap();
+        report.add(format!("[store]  publish under hot dump loop  ({dumps} dumps raced)"), s);
     }
 
     // blocking-wait wake latency (the v2 acceptance number: p50 < 1 ms,

@@ -211,6 +211,16 @@ pub struct ExperimentConfig {
     /// Completed chapters between checkpoint writes (`--checkpoint_every`,
     /// ≥ 1). Only meaningful when `checkpoint_dir` is set.
     pub checkpoint_every: u32,
+    /// Checkpoint rotations to keep (`--checkpoint_keep`, ≥ 1). 1 keeps
+    /// only `latest.ckpt`; K > 1 additionally keeps the previous K−1
+    /// writes as `latest.ckpt.1` (newest) … `latest.ckpt.K-1` (oldest).
+    pub checkpoint_keep: u32,
+    /// Publish bitwise row deltas against the previous chapter when the
+    /// store supports them (`--delta_publish`). Deployment-only: the
+    /// reconstruction is bit-exact, so trained weights are identical
+    /// either way — only `wire_bytes` changes. Ignored (full frames) when
+    /// `ship_opt_state` is on or the transport predates protocol v3.
+    pub delta_publish: bool,
     /// Print per-chapter progress lines.
     pub verbose: bool,
 }
@@ -252,6 +262,8 @@ impl Default for ExperimentConfig {
             threads: 0,
             checkpoint_dir: PathBuf::new(),
             checkpoint_every: 1,
+            checkpoint_keep: 1,
+            delta_publish: true,
             verbose: false,
         }
     }
@@ -352,6 +364,9 @@ impl ExperimentConfig {
         if self.checkpoint_every == 0 {
             bail!("checkpoint_every must be ≥1 (completed chapters between checkpoint writes)");
         }
+        if self.checkpoint_keep == 0 {
+            bail!("checkpoint_keep must be ≥1 (1 keeps only latest.ckpt)");
+        }
         if self.cluster {
             if self.transport != TransportKind::Tcp {
                 bail!("cluster mode needs transport = tcp (workers are separate processes)");
@@ -425,6 +440,8 @@ impl ExperimentConfig {
             "threads" => self.threads = v.parse()?,
             "checkpoint_dir" => self.checkpoint_dir = PathBuf::from(v),
             "checkpoint_every" => self.checkpoint_every = v.parse()?,
+            "checkpoint_keep" => self.checkpoint_keep = v.parse()?,
+            "delta_publish" => self.delta_publish = parse_bool(v)?,
             "verbose" => self.verbose = parse_bool(v)?,
             other => bail!("unknown config key '{other}'"),
         }
@@ -507,6 +524,8 @@ impl ExperimentConfig {
         kv(&mut out, "threads", self.threads);
         kv(&mut out, "checkpoint_dir", self.checkpoint_dir.display());
         kv(&mut out, "checkpoint_every", self.checkpoint_every);
+        kv(&mut out, "checkpoint_keep", self.checkpoint_keep);
+        kv(&mut out, "delta_publish", self.delta_publish);
         kv(&mut out, "verbose", self.verbose);
         out
     }
@@ -620,6 +639,8 @@ mod tests {
         cfg.threads = 6;
         cfg.checkpoint_dir = PathBuf::from("ckpts/run1");
         cfg.checkpoint_every = 3;
+        cfg.checkpoint_keep = 4;
+        cfg.delta_publish = false;
         cfg.verbose = true;
 
         let mut parsed = ExperimentConfig::default();
@@ -649,8 +670,12 @@ mod tests {
         assert_eq!(cfg.checkpoint_every, 4);
         cfg.clone().validated().unwrap();
         cfg.checkpoint_every = 0;
-        let err = cfg.validated().unwrap_err();
+        let err = cfg.clone().validated().unwrap_err();
         assert!(err.to_string().contains("checkpoint_every"), "{err}");
+        cfg.checkpoint_every = 1;
+        cfg.checkpoint_keep = 0;
+        let err = cfg.validated().unwrap_err();
+        assert!(err.to_string().contains("checkpoint_keep"), "{err}");
         // An empty dir (checkpointing off) round-trips through the kv form.
         let off = ExperimentConfig::default();
         let mut parsed = ExperimentConfig::default();

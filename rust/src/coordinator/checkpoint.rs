@@ -25,7 +25,12 @@
 //! The [`CheckpointWriter`] runs on its own thread, parked on the store's
 //! change counter ([`MemStore::wait_version_change`]) — change-driven
 //! like everything else in the control plane, no poll interval — and
-//! emits a [`RunEvent::CheckpointWritten`] per landed file.
+//! emits a [`RunEvent::CheckpointWritten`] per landed file. Capturing is
+//! cheap: [`MemStore::dump`] hands back `Arc` refcounts, not tensor
+//! copies, so the store lock is held O(entries) and serialization runs
+//! entirely on this thread. With `checkpoint_keep > 1` each write first
+//! rotates `latest.ckpt` → `latest.ckpt.1` → … so the last K snapshots
+//! survive (e.g. to step back past a run that went bad late).
 
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
@@ -233,19 +238,20 @@ impl RunCheckpoint {
         for _ in 0..n {
             let slot = d.u32()? as usize;
             let chapter = d.u32()?;
-            layers.push((slot, chapter, d.layer_params().context("checkpoint layer entry")?));
+            let p = d.layer_params().context("checkpoint layer entry")?;
+            layers.push((slot, chapter, Arc::new(p)));
         }
         let n = d.u32()? as usize;
         let mut heads = Vec::with_capacity(n);
         for _ in 0..n {
             let chapter = d.u32()?;
-            heads.push((chapter, d.head_params().context("checkpoint head entry")?));
+            heads.push((chapter, Arc::new(d.head_params().context("checkpoint head entry")?)));
         }
         let n = d.u32()? as usize;
         let mut negs = Vec::with_capacity(n);
         for _ in 0..n {
             let chapter = d.u32()?;
-            negs.push((chapter, d.bytes()?));
+            negs.push((chapter, Arc::new(d.bytes()?)));
         }
         if d.remaining() != 0 {
             bail!("checkpoint has {} trailing bytes (corrupt or mismatched format)", d.remaining());
@@ -347,13 +353,13 @@ impl ParamStore for DumpView {
     fn put_layer(&self, _layer: usize, _chapter: u32, _params: LayerParams) -> Result<()> {
         bail!("checkpoint dump view is presence-probe-only")
     }
-    fn get_layer(&self, _layer: usize, _chapter: u32, _t: Duration) -> Result<LayerParams> {
+    fn get_layer(&self, _layer: usize, _chapter: u32, _t: Duration) -> Result<Arc<LayerParams>> {
         bail!("checkpoint dump view is presence-probe-only")
     }
     fn put_head(&self, _chapter: u32, _params: HeadParams) -> Result<()> {
         bail!("checkpoint dump view is presence-probe-only")
     }
-    fn get_head(&self, _chapter: u32, _t: Duration) -> Result<HeadParams> {
+    fn get_head(&self, _chapter: u32, _t: Duration) -> Result<Arc<HeadParams>> {
         bail!("checkpoint dump view is presence-probe-only")
     }
     fn put_neg(&self, _chapter: u32, _labels: Vec<u8>) -> Result<()> {
@@ -362,10 +368,10 @@ impl ParamStore for DumpView {
     fn get_neg(&self, _chapter: u32, _t: Duration) -> Result<Vec<u8>> {
         bail!("checkpoint dump view is presence-probe-only")
     }
-    fn latest_layer(&self, _layer: usize) -> Result<Option<(u32, LayerParams)>> {
+    fn latest_layer(&self, _layer: usize) -> Result<Option<(u32, Arc<LayerParams>)>> {
         bail!("checkpoint dump view is presence-probe-only")
     }
-    fn latest_head(&self) -> Result<Option<(u32, HeadParams)>> {
+    fn latest_head(&self) -> Result<Option<(u32, Arc<HeadParams>)>> {
         bail!("checkpoint dump view is presence-probe-only")
     }
     fn comm_stats(&self) -> CommStats {
@@ -382,6 +388,34 @@ impl ParamStore for DumpView {
     }
 }
 
+/// Shift older checkpoint rotations up one slot before `path` is
+/// overwritten, keeping `keep` files total (the imminent write included):
+/// `path` → `path.1` (newest rotation) → … → `path.{keep-1}` (oldest),
+/// dropping anything past that. `keep == 1` preserves the classic
+/// single-file overwrite. Every step is a whole-file rename of an
+/// already-atomically-written checkpoint, so a kill mid-rotation leaves
+/// every surviving file complete and loadable.
+fn rotate_history(path: &Path, keep: u32) -> Result<()> {
+    if keep <= 1 || !path.exists() {
+        return Ok(());
+    }
+    let slot = |i: u32| PathBuf::from(format!("{}.{i}", path.display()));
+    std::fs::remove_file(slot(keep - 1)).ok();
+    for i in (1..keep - 1).rev() {
+        let from = slot(i);
+        if from.exists() {
+            let to = slot(i + 1);
+            std::fs::rename(&from, &to).with_context(|| {
+                format!("rotating checkpoint {} → {}", from.display(), to.display())
+            })?;
+        }
+    }
+    let to = slot(1);
+    std::fs::rename(path, &to)
+        .with_context(|| format!("rotating checkpoint {} → {}", path.display(), to.display()))?;
+    Ok(())
+}
+
 /// Everything one checkpoint write needs; shared between the writer
 /// thread (periodic) and `finish` (final snapshot).
 struct WriterCtx {
@@ -391,14 +425,16 @@ struct WriterCtx {
     bus: EventBus,
     path: PathBuf,
     every: u32,
+    keep: u32,
 }
 
 impl WriterCtx {
-    /// Capture + save + announce. Returns the total completed-chapter
-    /// count the snapshot recorded.
+    /// Capture + rotate + save + announce. Returns the total
+    /// completed-chapter count the snapshot recorded.
     fn write_now(&self) -> Result<u32> {
         let ck = RunCheckpoint::capture(&self.cfg, self.scheduler.as_ref(), &self.store)?;
         let total = ck.total_completed();
+        rotate_history(&self.path, self.keep)?;
         let wire_bytes = ck.save(&self.path)?;
         self.bus.emit(RunEvent::CheckpointWritten {
             path: self.path.display().to_string(),
@@ -453,6 +489,7 @@ impl CheckpointWriter {
         let ctx = Arc::new(WriterCtx {
             path,
             every: cfg.checkpoint_every.max(1),
+            keep: cfg.checkpoint_keep.max(1),
             cfg: cfg.clone(),
             scheduler,
             store: store.clone(),
@@ -556,38 +593,38 @@ mod tests {
             rng: RngState { state: 0xDEAD_BEEF, spare_normal: Some(-0.75) },
             store: StoreDump {
                 layers: vec![
-                    (0, 0, layer_with_opt(1)),
+                    (0, 0, Arc::new(layer_with_opt(1))),
                     (
                         0,
                         1,
-                        LayerParams {
+                        Arc::new(LayerParams {
                             // NaN payload and a 0×N shape must survive bitwise.
                             w: Matrix::from_vec(1, 3, vec![f32::NAN, f32::INFINITY, -0.0]),
                             b: vec![f32::NAN],
                             normalize_input: false,
                             opt: None,
-                        },
+                        }),
                     ),
                     (
                         head_slot(1),
                         2,
-                        LayerParams {
+                        Arc::new(LayerParams {
                             w: Matrix::from_vec(0, 4, vec![]),
                             b: vec![],
                             normalize_input: false,
                             opt: None,
-                        },
+                        }),
                     ),
                 ],
                 heads: vec![(
                     1,
-                    HeadParams {
+                    Arc::new(HeadParams {
                         w: Matrix::randn_scaled(2, 4, &mut rng),
                         b: vec![0.0; 4],
                         opt: None,
-                    },
+                    }),
                 )],
-                negs: vec![(2, vec![1, 2, 3]), (4, vec![])],
+                negs: vec![(2, Arc::new(vec![1, 2, 3])), (4, Arc::new(vec![]))],
             },
         }
     }
@@ -610,7 +647,8 @@ mod tests {
         assert_eq!(nan_layer.w.data[2].to_bits(), (-0.0f32).to_bits());
         let (_, _, empty) = &got.store.layers[2];
         assert_eq!((empty.w.rows, empty.w.cols), (0, 4));
-        assert_eq!(got.store.negs[1], (4, vec![]));
+        assert_eq!(got.store.negs[1].0, 4);
+        assert!(got.store.negs[1].1.is_empty());
     }
 
     #[test]
@@ -729,11 +767,36 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_rotation_keeps_bounded_history() {
+        let dir = std::env::temp_dir().join(format!("pff_ckpt_rot_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join(CHECKPOINT_FILE);
+        let ck = sample_checkpoint();
+        // keep = 3: latest + two rotations; older writes fall off the end.
+        for _ in 0..5 {
+            rotate_history(&path, 3).unwrap();
+            ck.save(&path).unwrap();
+        }
+        assert!(path.exists());
+        assert!(dir.join("latest.ckpt.1").exists());
+        assert!(dir.join("latest.ckpt.2").exists());
+        assert!(!dir.join("latest.ckpt.3").exists(), "history must stay bounded at keep");
+        // Every surviving rotation is a complete, loadable checkpoint.
+        let old = RunCheckpoint::load(dir.join("latest.ckpt.2")).unwrap();
+        assert_eq!(old.encode(), ck.encode());
+        // keep = 1 rotates nothing: the single-file overwrite behavior.
+        rotate_history(&path, 1).unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn writer_emits_initial_checkpoint_and_final_snapshot() {
         let dir = std::env::temp_dir().join(format!("pff_ckpt_writer_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
         let mut cfg = ExperimentConfig::tiny();
         cfg.checkpoint_dir = dir.clone();
+        cfg.checkpoint_keep = 2;
         let cfg = cfg.validated().unwrap();
         let store = Arc::new(MemStore::new());
         let bus = EventBus::new();
@@ -764,6 +827,9 @@ mod tests {
         writer.finish(true).unwrap();
         let ck = RunCheckpoint::load(dir.join(CHECKPOINT_FILE)).unwrap();
         assert_eq!(ck.store.layers.len(), 1, "final snapshot must include late publishes");
+        // keep = 2: the final write rotated the initial one into slot .1.
+        let rotated = RunCheckpoint::load(dir.join("latest.ckpt.1")).unwrap();
+        assert_eq!(rotated.store.layers.len(), 0, "slot .1 holds the previous (initial) write");
 
         // A fresh (non-resume) writer aimed at this directory must refuse
         // to clobber the existing resume point; a resuming one may.

@@ -31,12 +31,12 @@ pub fn assemble(store: &dyn ParamStore, cfg: &ExperimentConfig) -> Result<Traine
         let (_, params) = store
             .latest_layer(l)?
             .with_context(|| format!("no published version of layer {l}"))?;
-        let (layer, _) = params.into_layer();
+        let (layer, _) = params.to_layer();
         layers.push(layer);
     }
     let net = FFNetwork { layers, classes: cfg.classes };
 
-    let head = store.latest_head()?.map(|(_, p)| p.into_head().0);
+    let head = store.latest_head()?.map(|(_, p)| p.to_head().0);
 
     let mut layer_heads = Vec::new();
     if cfg.perfopt {
@@ -44,7 +44,7 @@ pub fn assemble(store: &dyn ParamStore, cfg: &ExperimentConfig) -> Result<Traine
             let (_, params) = store
                 .latest_layer(head_slot(l))?
                 .with_context(|| format!("no published PerfOpt head for layer {l}"))?;
-            let (hl, _) = params.into_layer();
+            let (hl, _) = params.to_layer();
             layer_heads.push(LinearHead { w: hl.w, b: hl.b });
         }
     }

@@ -24,7 +24,7 @@ use crate::coordinator::events::{EventBus, RunEvent};
 use crate::coordinator::experiment::CancelToken;
 use crate::coordinator::lr::cooldown;
 use crate::coordinator::schedulers::Scheduler;
-use crate::coordinator::store::{HeadParams, LayerParams, ParamStore};
+use crate::coordinator::store::{HeadParams, LayerDelta, LayerParams, ParamStore};
 use crate::coordinator::taskgraph::Task;
 use crate::data::{load_dataset, Dataset};
 use crate::engine::{factory_for, Engine};
@@ -115,6 +115,11 @@ pub struct TaskScratch {
     pub ff: Option<FfActCache>,
     /// PerfOpt activation hand-off between consecutive tasks.
     pub po: Option<PoActCache>,
+    /// Last layer params this worker published, keyed `(home, slot)` with
+    /// the chapter they were published at — the diff base for delta
+    /// publishes. Bit-exact copies of store entries, so a miss (the task
+    /// was stolen by another worker) just falls back to a full publish.
+    pub last_pub: HashMap<(usize, usize), (u32, Arc<LayerParams>)>,
 }
 
 /// Everything one worker needs to run tasks of an experiment.
@@ -413,8 +418,10 @@ impl NodeCtx {
     }
 
     /// Fetch `(layer, chapter)` from the store (timed as WaitLayer — the
-    /// blocking read is the pipeline dependency).
-    pub fn fetch_layer(&mut self, layer: usize, chapter: u32) -> Result<LayerParams> {
+    /// blocking read is the pipeline dependency). The returned `Arc` is
+    /// the store's own copy-on-write entry; call
+    /// [`LayerParams::to_layer`] to materialize a trainable copy.
+    pub fn fetch_layer(&mut self, layer: usize, chapter: u32) -> Result<Arc<LayerParams>> {
         let store = self.store.clone();
         let to = self.timeout();
         self.rec
@@ -422,7 +429,14 @@ impl NodeCtx {
     }
 
     /// Publish a layer (timed as Publish; emits
-    /// [`RunEvent::LayerPublished`] with the wire size).
+    /// [`RunEvent::LayerPublished`] with the wire size actually shipped).
+    ///
+    /// When `cfg.delta_publish` is on, the transport negotiated delta
+    /// support, no optimizer snapshot travels, and this worker published
+    /// the base itself (see [`TaskScratch::last_pub`]), only the changed
+    /// rows go over the wire — and only when that is actually smaller
+    /// than the full layer. Every fallback ships the full layer, and
+    /// reconstruction is bitwise, so weights are identical either way.
     pub fn publish_layer(
         &mut self,
         layer_idx: usize,
@@ -430,11 +444,43 @@ impl NodeCtx {
         layer: &FFLayer,
         opt: Option<&AdamState>,
     ) -> Result<()> {
-        let params = LayerParams::from_layer(layer, if self.cfg.ship_opt_state { opt } else { None });
-        let wire_bytes = params.wire_bytes();
+        let ship_opt = self.cfg.ship_opt_state;
+        let params = LayerParams::from_layer(layer, if ship_opt { opt } else { None });
+        let full_bytes = params.wire_bytes();
         let store = self.store.clone();
-        self.rec
-            .time(SpanKind::Publish, layer_idx, chapter, || store.put_layer(layer_idx, chapter, params))?;
+        let key = (self.node_id, layer_idx);
+        let wire_bytes = if self.cfg.delta_publish && !ship_opt && store.supports_deltas() {
+            let params = Arc::new(params);
+            let delta = self
+                .scratch
+                .last_pub
+                .get(&key)
+                .and_then(|(bc, base)| LayerDelta::diff(base, &params).map(|d| (*bc, d)))
+                .filter(|(_, d)| d.wire_bytes() < full_bytes);
+            let shipped = match delta {
+                Some((base_chapter, d)) => {
+                    let bytes = d.wire_bytes();
+                    self.rec.time(SpanKind::Publish, layer_idx, chapter, || {
+                        store.put_layer_delta(layer_idx, chapter, base_chapter, d)
+                    })?;
+                    bytes
+                }
+                None => {
+                    let p = params.as_ref().clone();
+                    self.rec.time(SpanKind::Publish, layer_idx, chapter, || {
+                        store.put_layer(layer_idx, chapter, p)
+                    })?;
+                    full_bytes
+                }
+            };
+            self.scratch.last_pub.insert(key, (chapter, params));
+            shipped
+        } else {
+            self.rec.time(SpanKind::Publish, layer_idx, chapter, || {
+                store.put_layer(layer_idx, chapter, params)
+            })?;
+            full_bytes
+        };
         self.emit(RunEvent::LayerPublished {
             node: self.node_id,
             layer: layer_idx,

@@ -131,7 +131,7 @@ fn run_task_ff(ctx: &mut NodeCtx, task: Task) -> Result<f32> {
     let (mut layer, shipped) = if chapter == 0 {
         (ctx.fresh_layer(l), None)
     } else {
-        ctx.fetch_layer(l, chapter - 1)?.into_layer()
+        ctx.fetch_layer(l, chapter - 1)?.to_layer()
     };
     let mut opt = ctx.take_opt(l, shipped);
     let loss = ctx.train_ff_layer_chapter(&mut layer, &mut opt, l, chapter, &x_pos, &x_neg)?;
@@ -177,7 +177,7 @@ pub(crate) fn neg_labels_for(ctx: &mut NodeCtx, chapter: u32) -> Result<Vec<u8>>
                 let n_layers = ctx.cfg.num_layers();
                 let mut layers = Vec::with_capacity(n_layers);
                 for l in 0..n_layers {
-                    let (layer, _) = ctx.fetch_layer(l, src)?.into_layer();
+                    let (layer, _) = ctx.fetch_layer(l, src)?.to_layer();
                     layers.push(layer);
                 }
                 let net = FFNetwork { layers, classes: ctx.cfg.classes };
@@ -204,7 +204,7 @@ pub(crate) fn rebuild_ff_inputs(
     let mut x_neg = ctx.negative_inputs(neg_labels);
     let mut below = Vec::with_capacity(layer);
     for l in 0..layer {
-        let (pl, _) = ctx.fetch_layer(l, chapter)?.into_layer();
+        let (pl, _) = ctx.fetch_layer(l, chapter)?.to_layer();
         let (np, nn) = ctx.forward_pair(&pl, l, chapter, x_pos, x_neg)?;
         x_pos = np;
         x_neg = nn;
@@ -229,7 +229,7 @@ pub(crate) fn train_and_publish_head(
         let params = ctx
             .rec
             .time(SpanKind::WaitLayer, usize::MAX, chapter, || store.get_head(chapter - 1, to))?;
-        params.into_head()
+        params.to_head()
     };
     let mut opt = ctx.take_opt_sized(CLS_HEAD_SLOT, shipped_opt, head.w.rows, head.w.cols);
 
@@ -261,12 +261,12 @@ pub(crate) fn run_task_perfopt(ctx: &mut NodeCtx, task: Task) -> Result<f32> {
     let (mut layer, shipped) = if chapter == 0 {
         (ctx.fresh_layer(l), None)
     } else {
-        ctx.fetch_layer(l, chapter - 1)?.into_layer()
+        ctx.fetch_layer(l, chapter - 1)?.to_layer()
     };
     let (mut head, head_shipped) = if chapter == 0 {
         (ctx.fresh_layer_head(l), None)
     } else {
-        let (hl, opt) = ctx.fetch_layer(head_slot(l), chapter - 1)?.into_layer();
+        let (hl, opt) = ctx.fetch_layer(head_slot(l), chapter - 1)?.to_layer();
         (LinearHead { w: hl.w, b: hl.b }, opt)
     };
     let mut opt_layer = ctx.take_opt(l, shipped);
@@ -306,7 +306,7 @@ pub(crate) fn po_inputs_at(ctx: &mut NodeCtx, chapter: u32, layer: usize) -> Res
     }
     let mut x = ctx.neutral_inputs();
     for l in 0..layer {
-        let (pl, _) = ctx.fetch_layer(l, chapter)?.into_layer();
+        let (pl, _) = ctx.fetch_layer(l, chapter)?.to_layer();
         let eng = ctx.engine.as_mut();
         x = ctx.rec.time(SpanKind::Forward, l, chapter, || eng.layer_forward(&pl, &x))?;
     }

@@ -123,7 +123,7 @@ pub fn run_task(ctx: &mut NodeCtx, task: Task) -> Result<f32> {
     let (mut layer, shipped) = if chapter == 0 {
         (ctx.fresh_layer(my_layer), None)
     } else {
-        ctx.fetch_layer(my_layer, chapter - 1)?.into_layer()
+        ctx.fetch_layer(my_layer, chapter - 1)?.to_layer()
     };
     let mut opt = ctx.take_opt(my_layer, shipped);
     let loss = ctx.train_ff_layer_chapter(&mut layer, &mut opt, my_layer, chapter, &x_pos, &x_neg)?;

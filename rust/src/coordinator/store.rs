@@ -9,19 +9,27 @@
 //! dependency: Single-Layer PFF's node `i` blocking on `(i−1, c)` is
 //! precisely the arrow in the paper's Figure 4.
 //!
+//! Entries are **copy-on-write**: the store holds `Arc`s, so snapshots
+//! (`dump`), fetches, and the TCP server's reply paths clone refcounts,
+//! never tensors. The lock hold of a full-store [`MemStore::dump`] is
+//! O(entries), which is what keeps the checkpoint writer from stalling
+//! publishers mid-run. Published values are immutable; an overwrite at the
+//! same key swaps the `Arc`, it never mutates in place.
+//!
 //! Two deployments (selected by [`crate::config::TransportKind`]):
 //! in-process ([`MemStore`], threads share one instance) and remote
 //! (leader hosts a [`MemStore`] behind the TCP server in
 //! [`crate::transport::tcp`], workers use `TcpStoreClient`).
 
 use std::collections::HashMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::ff::{FFLayer, LinearHead};
 use crate::metrics::CommStats;
+use crate::tensor::adam::AdamConfig;
 use crate::tensor::{AdamState, Matrix};
 
 /// Published form of one FF layer: weights + bias, optionally with Adam
@@ -60,15 +68,19 @@ impl OptSnapshot {
         OptSnapshot { m_w: s.m_w.clone(), v_w: s.v_w.clone(), m_b: s.m_b.clone(), v_b: s.v_b.clone(), t: s.t }
     }
 
-    /// Restore into an [`AdamState`].
+    /// Restore into an [`AdamState`]. Constructs the state directly from
+    /// the snapshot's matrices — this sits on the every-get
+    /// deserialization path of `ship_opt_state` runs, so it must not
+    /// allocate throwaway zeroed moments first.
     pub fn restore(&self) -> AdamState {
-        let mut st = AdamState::new(self.m_w.rows, self.m_w.cols);
-        st.m_w = self.m_w.clone();
-        st.v_w = self.v_w.clone();
-        st.m_b = self.m_b.clone();
-        st.v_b = self.v_b.clone();
-        st.t = self.t;
-        st
+        AdamState {
+            m_w: self.m_w.clone(),
+            v_w: self.v_w.clone(),
+            m_b: self.m_b.clone(),
+            v_b: self.v_b.clone(),
+            t: self.t,
+            cfg: AdamConfig::default(),
+        }
     }
 }
 
@@ -83,10 +95,21 @@ impl LayerParams {
         }
     }
 
-    /// Materialize as a live layer.
+    /// Materialize as a live layer, consuming the params (no tensor copy).
     pub fn into_layer(self) -> (FFLayer, Option<AdamState>) {
         let opt = self.opt.as_ref().map(OptSnapshot::restore);
         (FFLayer { w: self.w, b: self.b, normalize_input: self.normalize_input }, opt)
+    }
+
+    /// Materialize a live layer by cloning. This is the fetch path for
+    /// shared (`Arc`-held) store entries: the store's copy stays immutable
+    /// while the node trains its own.
+    pub fn to_layer(&self) -> (FFLayer, Option<AdamState>) {
+        let opt = self.opt.as_ref().map(OptSnapshot::restore);
+        (
+            FFLayer { w: self.w.clone(), b: self.b.clone(), normalize_input: self.normalize_input },
+            opt,
+        )
     }
 
     /// Approximate wire size (the communication-volume metric of §6).
@@ -116,10 +139,16 @@ impl HeadParams {
         HeadParams { w: h.w.clone(), b: h.b.clone(), opt: opt.map(OptSnapshot::from_state) }
     }
 
-    /// Materialize as a live head.
+    /// Materialize as a live head, consuming the params.
     pub fn into_head(self) -> (LinearHead, Option<AdamState>) {
         let opt = self.opt.as_ref().map(OptSnapshot::restore);
         (LinearHead { w: self.w, b: self.b }, opt)
+    }
+
+    /// Materialize a live head by cloning (fetch path for shared entries).
+    pub fn to_head(&self) -> (LinearHead, Option<AdamState>) {
+        let opt = self.opt.as_ref().map(OptSnapshot::restore);
+        (LinearHead { w: self.w.clone(), b: self.b.clone() }, opt)
     }
 
     /// Approximate wire size.
@@ -128,26 +157,141 @@ impl HeadParams {
     }
 }
 
-/// The store interface the schedulers program against.
+/// A sparse row-level update of one published layer against a base chapter
+/// already in the store: only the rows whose bits changed travel, plus the
+/// (cheap) full bias and the normalize flag. Reconstruction
+/// ([`LayerDelta::apply`]) is bitwise — unchanged rows come from the base,
+/// changed rows carry the exact new bits — so delta publishes preserve the
+/// repo's bitwise-identical-weights invariant.
+///
+/// Deltas never carry optimizer snapshots: `ship_opt_state` runs always
+/// publish full layers ([`LayerDelta::diff`] returns `None`).
+#[derive(Clone, Debug)]
+pub struct LayerDelta {
+    /// Ascending indices of the changed rows of `w`.
+    pub rows: Vec<u32>,
+    /// Replacement rows, `(rows.len(), w.cols)` row-major.
+    pub data: Matrix,
+    /// Full bias of the new layer.
+    pub b: Vec<f32>,
+    /// Normalize-input flag of the new layer.
+    pub normalize_input: bool,
+}
+
+impl LayerDelta {
+    /// Diff `new` against `base`, bit-exactly (`f32::to_bits` compare).
+    /// Returns `None` when a delta cannot represent the update: shape
+    /// change, or either side ships an optimizer snapshot.
+    pub fn diff(base: &LayerParams, new: &LayerParams) -> Option<LayerDelta> {
+        if base.opt.is_some() || new.opt.is_some() {
+            return None;
+        }
+        if base.w.rows != new.w.rows || base.w.cols != new.w.cols || base.b.len() != new.b.len()
+        {
+            return None;
+        }
+        let cols = new.w.cols;
+        let mut rows: Vec<u32> = Vec::new();
+        for r in 0..new.w.rows {
+            let a = &base.w.data[r * cols..(r + 1) * cols];
+            let b = &new.w.data[r * cols..(r + 1) * cols];
+            if a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                rows.push(r as u32);
+            }
+        }
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for &r in &rows {
+            let r = r as usize;
+            data.extend_from_slice(&new.w.data[r * cols..(r + 1) * cols]);
+        }
+        Some(LayerDelta {
+            data: Matrix { rows: rows.len(), cols, data },
+            rows,
+            b: new.b.clone(),
+            normalize_input: new.normalize_input,
+        })
+    }
+
+    /// Rebuild the full layer this delta encodes, against `base`. Bitwise:
+    /// `apply(diff(base, new), base) == new` for every representable pair.
+    pub fn apply(&self, base: &LayerParams) -> Result<LayerParams> {
+        let cols = base.w.cols;
+        if self.data.cols != cols || self.data.rows != self.rows.len() {
+            bail!(
+                "layer delta shape mismatch: {} rows × {} cols of data for {} row indices against a {}×{} base",
+                self.data.rows,
+                self.data.cols,
+                self.rows.len(),
+                base.w.rows,
+                cols
+            );
+        }
+        if self.b.len() != base.b.len() {
+            bail!("layer delta bias length {} != base bias length {}", self.b.len(), base.b.len());
+        }
+        let mut w = base.w.clone();
+        for (i, &r) in self.rows.iter().enumerate() {
+            let r = r as usize;
+            if r >= w.rows {
+                bail!("layer delta row {r} out of range for a {}-row base", w.rows);
+            }
+            w.data[r * cols..(r + 1) * cols]
+                .copy_from_slice(&self.data.data[i * cols..(i + 1) * cols]);
+        }
+        Ok(LayerParams { w, b: self.b.clone(), normalize_input: self.normalize_input, opt: None })
+    }
+
+    /// Approximate wire size (what `CommStats` and
+    /// `RunEvent::LayerPublished` report for a delta publish).
+    pub fn wire_bytes(&self) -> u64 {
+        ((self.data.data.len() + self.b.len()) * 4 + self.rows.len() * 4 + 32) as u64
+    }
+}
+
+/// The store interface the schedulers program against. Fetches hand back
+/// shared `Arc`s — the store's entry and the caller's handle are the same
+/// immutable allocation; call [`LayerParams::to_layer`] /
+/// [`HeadParams::to_head`] to materialize a private trainable copy.
 pub trait ParamStore: Send + Sync {
     /// Publish layer `l` as of `chapter`.
     fn put_layer(&self, layer: usize, chapter: u32, params: LayerParams) -> Result<()>;
     /// Block until `(layer, chapter)` is available (or `timeout`).
-    fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<LayerParams>;
+    fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<Arc<LayerParams>>;
     /// Publish the softmax head as of `chapter`.
     fn put_head(&self, chapter: u32, params: HeadParams) -> Result<()>;
     /// Block until the head at `chapter` is available.
-    fn get_head(&self, chapter: u32, timeout: Duration) -> Result<HeadParams>;
+    fn get_head(&self, chapter: u32, timeout: Duration) -> Result<Arc<HeadParams>>;
     /// Publish negative labels computed after `chapter`.
     fn put_neg(&self, chapter: u32, labels: Vec<u8>) -> Result<()>;
     /// Block until negative labels for `chapter` are available.
     fn get_neg(&self, chapter: u32, timeout: Duration) -> Result<Vec<u8>>;
     /// Most recent chapter of `layer`, if any (final model assembly).
-    fn latest_layer(&self, layer: usize) -> Result<Option<(u32, LayerParams)>>;
+    fn latest_layer(&self, layer: usize) -> Result<Option<(u32, Arc<LayerParams>)>>;
     /// Most recent head, if any.
-    fn latest_head(&self) -> Result<Option<(u32, HeadParams)>>;
+    fn latest_head(&self) -> Result<Option<(u32, Arc<HeadParams>)>>;
     /// Communication counters.
     fn comm_stats(&self) -> CommStats;
+
+    /// Publish layer `l` at `chapter` as a row [`LayerDelta`] against
+    /// `base_chapter`, which the caller guarantees is already published.
+    /// Only stores that answer `true` from [`ParamStore::supports_deltas`]
+    /// accept this; publishers fall back to [`ParamStore::put_layer`]
+    /// otherwise (see `NodeCtx::publish_layer`).
+    fn put_layer_delta(
+        &self,
+        _layer: usize,
+        _chapter: u32,
+        _base_chapter: u32,
+        _delta: LayerDelta,
+    ) -> Result<()> {
+        bail!("delta publish not supported by this store")
+    }
+
+    /// Whether [`ParamStore::put_layer_delta`] is available (e.g. a TCP
+    /// client only after the server negotiated protocol v3).
+    fn supports_deltas(&self) -> bool {
+        false
+    }
 
     /// Non-blocking presence probe: is `(layer, chapter)` published?
     /// Resume fast-forward uses this to skip chapters whose outputs are
@@ -176,22 +320,26 @@ pub trait ParamStore: Send + Sync {
 /// `(slot, chapter)`, heads/negs by chapter), so identical store contents
 /// always serialize to identical bytes and "resumed run matches
 /// uninterrupted run" can be checked with a plain file compare.
+///
+/// The snapshot shares the store's allocations (`Arc`s): taking it costs
+/// O(entries) refcount bumps, and serializing it happens entirely outside
+/// the store lock.
 #[derive(Clone, Debug, Default)]
 pub struct StoreDump {
     /// `(slot, chapter, params)` for every published layer (PerfOpt heads
     /// ride in the high-slot namespace, see `schedulers::head_slot`).
-    pub layers: Vec<(usize, u32, LayerParams)>,
+    pub layers: Vec<(usize, u32, Arc<LayerParams>)>,
     /// `(chapter, params)` for every published full-network head.
-    pub heads: Vec<(u32, HeadParams)>,
+    pub heads: Vec<(u32, Arc<HeadParams>)>,
     /// `(chapter, labels)` for every published negative-label set.
-    pub negs: Vec<(u32, Vec<u8>)>,
+    pub negs: Vec<(u32, Arc<Vec<u8>>)>,
 }
 
 #[derive(Default)]
 struct MemInner {
-    layers: HashMap<(usize, u32), LayerParams>,
-    heads: HashMap<u32, HeadParams>,
-    negs: HashMap<u32, Vec<u8>>,
+    layers: HashMap<(usize, u32), Arc<LayerParams>>,
+    heads: HashMap<u32, Arc<HeadParams>>,
+    negs: HashMap<u32, Arc<Vec<u8>>>,
     stats: CommStats,
     /// Threads currently parked inside [`MemStore::wait_for`]. Lets tests
     /// and benchmarks synchronize on "the reader is actually blocked"
@@ -207,7 +355,8 @@ struct MemInner {
     version: u64,
 }
 
-/// In-process [`ParamStore`] (Mutex + Condvar).
+/// In-process [`ParamStore`] (Mutex + Condvar, `Arc` copy-on-write
+/// entries).
 #[derive(Default)]
 pub struct MemStore {
     inner: Mutex<MemInner>,
@@ -314,6 +463,11 @@ impl MemStore {
     /// [`MemStore::touch`]), the store closes (error), or `timeout`
     /// elapses (returns the unchanged counter). This is the checkpoint
     /// writer's wait primitive: strictly change-driven, no poll interval.
+    ///
+    /// An advance that raced a close is still an advance: the method
+    /// reports it (`Ok`) so the caller can act on the publishes it missed
+    /// — the checkpoint writer's final dump depends on this. "Closed" is
+    /// only an error when nothing changed since `seen`.
     pub fn wait_version_change(&self, seen: u64, timeout: Duration) -> Result<u64> {
         let mut guard = self.inner.lock().unwrap();
         let deadline = std::time::Instant::now() + timeout;
@@ -325,25 +479,28 @@ impl MemStore {
             let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
             guard = g;
         }
-        if guard.closed {
-            bail!("store closed while waiting for a version change");
+        if guard.version != seen {
+            return Ok(guard.version);
         }
-        Ok(guard.version)
+        bail!("store closed while waiting for a version change");
     }
 
     /// Consistent snapshot of the full store contents, sorted (see
     /// [`StoreDump`]). Taken under one lock, so a dump never interleaves
-    /// with a publish. Does not count toward [`CommStats`].
+    /// with a publish — but the lock hold is O(entries): each entry costs
+    /// one `Arc` refcount bump, tensors are never copied. Serialization of
+    /// the returned dump happens with no lock held at all. Does not count
+    /// toward [`CommStats`].
     pub fn dump(&self) -> StoreDump {
         let g = self.inner.lock().unwrap();
-        let mut layers: Vec<(usize, u32, LayerParams)> =
-            g.layers.iter().map(|(&(l, c), p)| (l, c, p.clone())).collect();
+        let mut layers: Vec<(usize, u32, Arc<LayerParams>)> =
+            g.layers.iter().map(|(&(l, c), p)| (l, c, Arc::clone(p))).collect();
         layers.sort_by_key(|&(l, c, _)| (l, c));
-        let mut heads: Vec<(u32, HeadParams)> =
-            g.heads.iter().map(|(&c, p)| (c, p.clone())).collect();
+        let mut heads: Vec<(u32, Arc<HeadParams>)> =
+            g.heads.iter().map(|(&c, p)| (c, Arc::clone(p))).collect();
         heads.sort_by_key(|&(c, _)| c);
-        let mut negs: Vec<(u32, Vec<u8>)> =
-            g.negs.iter().map(|(&c, v)| (c, v.clone())).collect();
+        let mut negs: Vec<(u32, Arc<Vec<u8>>)> =
+            g.negs.iter().map(|(&c, v)| (c, Arc::clone(v))).collect();
         negs.sort_by_key(|&(c, _)| c);
         StoreDump { layers, heads, negs }
     }
@@ -370,9 +527,9 @@ impl MemStore {
 
     /// Non-blocking fetch: `(layer, chapter)` if already published (a hit
     /// counts as a get in [`CommStats`], exactly like the blocking path).
-    /// Backs the v2 wire protocol's immediate `GET_LAYER` and the
+    /// Backs the v2+ wire protocol's immediate `GET_LAYER` and the
     /// `WAIT_LAYER` fast path (see `transport/PROTOCOL.md`).
-    pub fn try_layer(&self, layer: usize, chapter: u32) -> Option<LayerParams> {
+    pub fn try_layer(&self, layer: usize, chapter: u32) -> Option<Arc<LayerParams>> {
         let mut g = self.inner.lock().unwrap();
         let p = g.layers.get(&(layer, chapter)).cloned()?;
         g.stats.gets += 1;
@@ -381,7 +538,7 @@ impl MemStore {
     }
 
     /// Non-blocking fetch: the head at `chapter` if already published.
-    pub fn try_head(&self, chapter: u32) -> Option<HeadParams> {
+    pub fn try_head(&self, chapter: u32) -> Option<Arc<HeadParams>> {
         let mut g = self.inner.lock().unwrap();
         let p = g.heads.get(&chapter).cloned()?;
         g.stats.gets += 1;
@@ -390,7 +547,7 @@ impl MemStore {
     }
 
     /// Non-blocking fetch: negative labels at `chapter` if published.
-    pub fn try_neg(&self, chapter: u32) -> Option<Vec<u8>> {
+    pub fn try_neg(&self, chapter: u32) -> Option<Arc<Vec<u8>>> {
         let mut g = self.inner.lock().unwrap();
         let p = g.negs.get(&chapter).cloned()?;
         g.stats.gets += 1;
@@ -401,6 +558,7 @@ impl MemStore {
 
 impl ParamStore for MemStore {
     fn put_layer(&self, layer: usize, chapter: u32, params: LayerParams) -> Result<()> {
+        let params = Arc::new(params);
         let mut g = self.inner.lock().unwrap();
         g.stats.puts += 1;
         g.stats.bytes_put += params.wire_bytes();
@@ -411,17 +569,20 @@ impl ParamStore for MemStore {
         Ok(())
     }
 
-    fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<LayerParams> {
-        let p = self.wait_for(timeout, &format!("layer {layer} @ chapter {chapter}"), |g| {
-            g.layers.get(&(layer, chapter)).cloned()
-        })?;
-        let mut g = self.inner.lock().unwrap();
-        g.stats.gets += 1;
-        g.stats.bytes_get += p.wire_bytes();
-        Ok(p)
+    fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<Arc<LayerParams>> {
+        // Fetch + stats accounting in ONE critical section: the probe runs
+        // under the store lock, so no dump()/close() can interleave
+        // between handing out the entry and counting it.
+        self.wait_for(timeout, &format!("layer {layer} @ chapter {chapter}"), |g| {
+            let p = g.layers.get(&(layer, chapter)).cloned()?;
+            g.stats.gets += 1;
+            g.stats.bytes_get += p.wire_bytes();
+            Some(p)
+        })
     }
 
     fn put_head(&self, chapter: u32, params: HeadParams) -> Result<()> {
+        let params = Arc::new(params);
         let mut g = self.inner.lock().unwrap();
         g.stats.puts += 1;
         g.stats.bytes_put += params.wire_bytes();
@@ -432,17 +593,17 @@ impl ParamStore for MemStore {
         Ok(())
     }
 
-    fn get_head(&self, chapter: u32, timeout: Duration) -> Result<HeadParams> {
-        let p = self.wait_for(timeout, &format!("head @ chapter {chapter}"), |g| {
-            g.heads.get(&chapter).cloned()
-        })?;
-        let mut g = self.inner.lock().unwrap();
-        g.stats.gets += 1;
-        g.stats.bytes_get += p.wire_bytes();
-        Ok(p)
+    fn get_head(&self, chapter: u32, timeout: Duration) -> Result<Arc<HeadParams>> {
+        self.wait_for(timeout, &format!("head @ chapter {chapter}"), |g| {
+            let p = g.heads.get(&chapter).cloned()?;
+            g.stats.gets += 1;
+            g.stats.bytes_get += p.wire_bytes();
+            Some(p)
+        })
     }
 
     fn put_neg(&self, chapter: u32, labels: Vec<u8>) -> Result<()> {
+        let labels = Arc::new(labels);
         let mut g = self.inner.lock().unwrap();
         g.stats.puts += 1;
         g.stats.bytes_put += labels.len() as u64;
@@ -454,31 +615,64 @@ impl ParamStore for MemStore {
     }
 
     fn get_neg(&self, chapter: u32, timeout: Duration) -> Result<Vec<u8>> {
-        let p = self.wait_for(timeout, &format!("neg labels @ chapter {chapter}"), |g| {
-            g.negs.get(&chapter).cloned()
-        })?;
-        let mut g = self.inner.lock().unwrap();
-        g.stats.gets += 1;
-        g.stats.bytes_get += p.len() as u64;
-        Ok(p)
+        self.wait_for(timeout, &format!("neg labels @ chapter {chapter}"), |g| {
+            let v = g.negs.get(&chapter).cloned()?;
+            g.stats.gets += 1;
+            g.stats.bytes_get += v.len() as u64;
+            Some(v.as_ref().clone())
+        })
     }
 
-    fn latest_layer(&self, layer: usize) -> Result<Option<(u32, LayerParams)>> {
+    fn latest_layer(&self, layer: usize) -> Result<Option<(u32, Arc<LayerParams>)>> {
         let g = self.inner.lock().unwrap();
         Ok(g.layers
             .iter()
             .filter(|((l, _), _)| *l == layer)
             .max_by_key(|((_, c), _)| *c)
-            .map(|((_, c), p)| (*c, p.clone())))
+            .map(|((_, c), p)| (*c, Arc::clone(p))))
     }
 
-    fn latest_head(&self) -> Result<Option<(u32, HeadParams)>> {
+    fn latest_head(&self) -> Result<Option<(u32, Arc<HeadParams>)>> {
         let g = self.inner.lock().unwrap();
-        Ok(g.heads.iter().max_by_key(|(c, _)| **c).map(|(c, p)| (*c, p.clone())))
+        Ok(g.heads.iter().max_by_key(|(c, _)| **c).map(|(c, p)| (*c, Arc::clone(p))))
     }
 
     fn comm_stats(&self) -> CommStats {
         self.inner.lock().unwrap().stats
+    }
+
+    fn put_layer_delta(
+        &self,
+        layer: usize,
+        chapter: u32,
+        base_chapter: u32,
+        delta: LayerDelta,
+    ) -> Result<()> {
+        // Grab the base's refcount (O(1) under the lock), reconstruct the
+        // full layer with NO lock held, then insert. CommStats counts the
+        // delta's wire size — that is what actually shipped.
+        let base = {
+            let g = self.inner.lock().unwrap();
+            match g.layers.get(&(layer, base_chapter)) {
+                Some(p) => Arc::clone(p),
+                None => bail!(
+                    "delta publish for layer {layer} @ chapter {chapter}: base chapter {base_chapter} is not in the store"
+                ),
+            }
+        };
+        let full = Arc::new(delta.apply(&base)?);
+        let mut g = self.inner.lock().unwrap();
+        g.stats.puts += 1;
+        g.stats.bytes_put += delta.wire_bytes();
+        g.layers.insert((layer, chapter), full);
+        g.version += 1;
+        drop(g);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn supports_deltas(&self) -> bool {
+        true
     }
 
     // Exact presence probes (no clone, no stats — nothing ships).
@@ -499,7 +693,6 @@ impl ParamStore for MemStore {
 mod tests {
     use super::*;
     use crate::tensor::Rng;
-    use std::sync::Arc;
 
     fn params(seed: u64) -> LayerParams {
         let mut rng = Rng::new(seed);
@@ -575,7 +768,7 @@ mod tests {
         s.put_layer(0, 0, params(1)).unwrap();
         s.put_neg(2, vec![7]).unwrap();
         assert_eq!(s.try_layer(0, 0).unwrap().w.rows, 4);
-        assert_eq!(s.try_neg(2).unwrap(), vec![7]);
+        assert_eq!(*s.try_neg(2).unwrap(), vec![7]);
     }
 
     #[test]
@@ -649,6 +842,27 @@ mod tests {
     }
 
     #[test]
+    fn dump_shares_storage_with_entries() {
+        // The copy-on-write contract, structurally: a dump entry and the
+        // live store entry are the SAME allocation. If dump() ever goes
+        // back to deep-copying tensors under the lock, this fails.
+        let s = MemStore::new();
+        s.put_layer(0, 0, params(1)).unwrap();
+        s.put_neg(3, vec![1, 2, 4]).unwrap();
+        let dump = s.dump();
+        let live = s.try_layer(0, 0).unwrap();
+        assert!(
+            Arc::ptr_eq(&dump.layers[0].2, &live),
+            "dump must clone refcounts, not tensors"
+        );
+        let live_neg = s.try_neg(3).unwrap();
+        assert!(Arc::ptr_eq(&dump.negs[0].1, &live_neg));
+        // Fetches share too: two gets hand out the same allocation.
+        let again = s.try_layer(0, 0).unwrap();
+        assert!(Arc::ptr_eq(&live, &again));
+    }
+
+    #[test]
     fn version_changes_wake_waiters_and_touch_counts() {
         let s = Arc::new(MemStore::new());
         let v0 = s.version();
@@ -670,6 +884,21 @@ mod tests {
     }
 
     #[test]
+    fn wait_version_change_reports_advance_that_raced_a_close() {
+        let s = MemStore::new();
+        let v0 = s.version();
+        s.put_layer(0, 0, params(1)).unwrap();
+        s.close();
+        // The version moved before the close: the checkpoint writer must
+        // see the advance (and capture those publishes), not "run over".
+        let v = s.wait_version_change(v0, Duration::from_secs(5)).unwrap();
+        assert!(v > v0);
+        // With nothing new to report, a closed store is an error.
+        let err = s.wait_version_change(v, Duration::from_secs(5)).unwrap_err();
+        assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    #[test]
     fn opt_snapshot_roundtrip() {
         let mut rng = Rng::new(3);
         let layer = FFLayer::new(3, 2, false, &mut rng);
@@ -682,5 +911,80 @@ mod tests {
         let opt2 = opt2.unwrap();
         assert_eq!(opt2.t, 17);
         assert_eq!(opt2.m_w.data[0], 0.5);
+    }
+
+    #[test]
+    fn to_layer_matches_into_layer_bitwise() {
+        let p = params(7);
+        let (borrowed, _) = p.to_layer();
+        let (owned, _) = p.into_layer();
+        assert_eq!(borrowed.w, owned.w);
+        assert_eq!(borrowed.b, owned.b);
+        assert_eq!(borrowed.normalize_input, owned.normalize_input);
+    }
+
+    #[test]
+    fn layer_delta_roundtrip_and_guards() {
+        let base = params(1);
+        let mut new = base.clone();
+        new.w.data[0] += 1.0; // row 0
+        new.w.data[2 * new.w.cols] = -3.5; // row 2
+        new.b[1] = 9.0;
+        let d = LayerDelta::diff(&base, &new).unwrap();
+        assert_eq!(d.rows, vec![0, 2]);
+        assert_eq!(d.data.rows, 2);
+        assert!(d.wire_bytes() < new.wire_bytes());
+        let rebuilt = d.apply(&base).unwrap();
+        assert_eq!(rebuilt.w, new.w);
+        assert_eq!(rebuilt.b, new.b);
+        assert_eq!(rebuilt.normalize_input, new.normalize_input);
+
+        // identical params → empty (but valid) delta
+        let empty = LayerDelta::diff(&base, &base).unwrap();
+        assert!(empty.rows.is_empty());
+        assert_eq!(empty.apply(&base).unwrap().w, base.w);
+
+        // opt snapshots and shape changes are not representable
+        let mut with_opt = new.clone();
+        with_opt.opt = Some(OptSnapshot {
+            m_w: base.w.clone(),
+            v_w: base.w.clone(),
+            m_b: vec![0.0; 3],
+            v_b: vec![0.0; 3],
+            t: 1,
+        });
+        assert!(LayerDelta::diff(&base, &with_opt).is_none());
+        let mut rng = Rng::new(5);
+        let other_shape = LayerParams {
+            w: Matrix::randn_scaled(5, 3, &mut rng),
+            b: vec![0.0; 3],
+            normalize_input: true,
+            opt: None,
+        };
+        assert!(LayerDelta::diff(&base, &other_shape).is_none());
+        // applying against the wrong base is an error, not corruption
+        assert!(d.apply(&other_shape).is_err());
+    }
+
+    #[test]
+    fn put_layer_delta_reconstructs_bitwise_and_counts_delta_bytes() {
+        let s = MemStore::new();
+        let base = params(1);
+        s.put_layer(0, 0, base.clone()).unwrap();
+        let mut next = base.clone();
+        next.w.data[5] = 42.0;
+        let d = LayerDelta::diff(&base, &next).unwrap();
+        let d_bytes = d.wire_bytes();
+        let before = s.comm_stats().bytes_put;
+        s.put_layer_delta(0, 1, 0, d).unwrap();
+        let got = s.get_layer(0, 1, Duration::from_millis(10)).unwrap();
+        assert_eq!(got.w, next.w);
+        assert_eq!(got.b, next.b);
+        assert!(got.opt.is_none());
+        assert_eq!(s.comm_stats().bytes_put - before, d_bytes, "stats count the delta, not the full layer");
+        // a missing base is an immediate error, not a hang or a zero-fill
+        let d2 = LayerDelta::diff(&base, &next).unwrap();
+        assert!(s.put_layer_delta(3, 1, 0, d2).is_err());
+        assert!(s.supports_deltas());
     }
 }

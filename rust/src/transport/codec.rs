@@ -13,7 +13,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::store::{HeadParams, LayerParams, OptSnapshot};
+use crate::coordinator::store::{HeadParams, LayerDelta, LayerParams, OptSnapshot};
 use crate::tensor::Matrix;
 
 /// Incremental byte writer.
@@ -115,6 +115,18 @@ impl Enc {
         self.matrix(&p.w);
         self.f32s(&p.b);
         self.opt_snapshot(&p.opt);
+    }
+
+    /// Append a row-level layer delta (`PUT_LAYER_DELTA` body, v3):
+    /// `u32 n, n × u32 row, Matrix data, Vec<f32> b, u8 normalize`.
+    pub fn layer_delta(&mut self, d: &LayerDelta) {
+        self.u32(d.rows.len() as u32);
+        for &r in &d.rows {
+            self.u32(r);
+        }
+        self.matrix(&d.data);
+        self.f32s(&d.b);
+        self.u8(u8::from(d.normalize_input));
     }
 
     /// Append a v2 request header (`u64 req_id, u8 opcode`). The body
@@ -240,6 +252,20 @@ impl<'a> Dec<'a> {
         Ok(HeadParams { w: self.matrix()?, b: self.f32s()?, opt: self.opt_snapshot()? })
     }
 
+    /// Read a row-level layer delta (see [`Enc::layer_delta`]).
+    pub fn layer_delta(&mut self) -> Result<LayerDelta> {
+        let n = self.u32()? as usize;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            rows.push(self.u32()?);
+        }
+        let data = self.matrix()?;
+        if data.rows != n {
+            bail!("codec: layer delta carries {} data rows for {n} row indices", data.rows);
+        }
+        Ok(LayerDelta { rows, data, b: self.f32s()?, normalize_input: self.u8()? != 0 })
+    }
+
     fn opt_snapshot(&mut self) -> Result<Option<OptSnapshot>> {
         if self.u8()? == 0 {
             return Ok(None);
@@ -346,6 +372,36 @@ mod tests {
         let o = got.opt.unwrap();
         assert_eq!(o.t, 99);
         assert_eq!(o.v_b, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn layer_delta_roundtrip() {
+        let mut rng = Rng::new(4);
+        let d = LayerDelta {
+            rows: vec![0, 3, 7],
+            data: Matrix::randn_scaled(3, 5, &mut rng),
+            b: vec![0.5; 5],
+            normalize_input: true,
+        };
+        let mut e = Enc::new();
+        e.layer_delta(&d);
+        let buf = e.finish();
+        let got = Dec::new(&buf).layer_delta().unwrap();
+        assert_eq!(got.rows, d.rows);
+        assert_eq!(got.data, d.data);
+        assert_eq!(got.b, d.b);
+        assert!(got.normalize_input);
+
+        // row-count / data-row mismatch is rejected at decode
+        let mut e = Enc::new();
+        e.u32(2); // claims 2 rows
+        e.u32(0);
+        e.u32(1);
+        e.matrix(&Matrix::zeros(3, 5)); // but carries 3
+        e.f32s(&[0.0; 5]);
+        e.u8(0);
+        let buf = e.finish();
+        assert!(Dec::new(&buf).layer_delta().is_err());
     }
 
     #[test]

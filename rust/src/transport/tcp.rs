@@ -1,4 +1,4 @@
-//! TCP transport v2: the leader hosts the parameter store; workers speak a
+//! TCP transport v3: the leader hosts the parameter store; workers speak a
 //! multiplexed request/response protocol over length-prefixed frames.
 //!
 //! This is the socket setup of the paper's testbed (§6 "we used sockets to
@@ -16,6 +16,10 @@
 //!   behind it.
 //! * **Batched publish** — `PUT_LAYER` ships weights, bias, and the
 //!   optional Adam snapshot (`ship_opt_state`) as one frame.
+//! * **Delta publish (v3)** — `PUT_LAYER_DELTA` ships only the rows that
+//!   changed against a base chapter already in the store; the server
+//!   reconstructs the full layer bit-exactly. `HELLO` negotiates the
+//!   version down to v2 peers, which simply keep sending full frames.
 //! * **Membership** — the first frame on a connection must be `HELLO`
 //!   (protocol version + role); workers are assigned node ids through the
 //!   leader's [`NodeRegistry`] and report `DONE` when their chapters are
@@ -37,13 +41,18 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::dispatch::{Dispatcher, Poll};
 use crate::coordinator::registry::{NodeInfo, NodeRegistry};
-use crate::coordinator::store::{HeadParams, LayerParams, MemStore, ParamStore};
+use crate::coordinator::store::{HeadParams, LayerDelta, LayerParams, MemStore, ParamStore};
 use crate::coordinator::taskgraph::Task;
 use crate::metrics::CommStats;
 use crate::transport::codec::{read_frame, write_frame, Dec, Enc};
 
 /// Wire protocol major version, negotiated in `HELLO`.
-pub const PROTOCOL_VERSION: u8 = 2;
+pub const PROTOCOL_VERSION: u8 = 3;
+
+/// Oldest protocol version the server still speaks. `HELLO` settles on
+/// `min(client, server)` within this range; v3-only ops (delta publish)
+/// are refused client-side when the negotiated version predates them.
+pub const MIN_PROTOCOL_VERSION: u8 = 2;
 
 /// Max frame size (1 GiB — a [3072,4000] f32 layer is ~49 MB).
 const MAX_FRAME: usize = 1 << 30;
@@ -55,7 +64,7 @@ const WAIT_GRACE: Duration = Duration::from_secs(10);
 /// Client-side response deadline for immediate (non-waiting) ops.
 const RPC_TIMEOUT: Duration = Duration::from_secs(60);
 
-/// v2 opcodes (see `transport/PROTOCOL.md` for bodies and responses).
+/// Opcodes (see `transport/PROTOCOL.md` for bodies and responses).
 mod op {
     pub const HELLO: u8 = 0x01;
     pub const PUT_LAYER: u8 = 0x10;
@@ -78,6 +87,8 @@ mod op {
     pub const DONE: u8 = 0x22;
     pub const TASK_NEXT: u8 = 0x23;
     pub const TASK_DONE: u8 = 0x24;
+    /// v3+ only: changed rows against a base chapter already in the store.
+    pub const PUT_LAYER_DELTA: u8 = 0x25;
 }
 
 const ST_OK: u8 = 0;
@@ -256,11 +267,12 @@ fn serve_conn(
         return Ok(());
     }
     let version = d.u8()?;
-    if version != PROTOCOL_VERSION {
+    if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
         writer.reply(
             req_id,
             Err(anyhow::anyhow!(
-                "protocol version mismatch: server speaks v{PROTOCOL_VERSION}, client sent v{version}"
+                "protocol version mismatch: server speaks \
+                 v{MIN_PROTOCOL_VERSION}..v{PROTOCOL_VERSION}, client sent v{version}"
             )),
         )?;
         return Ok(());
@@ -285,8 +297,10 @@ fn serve_conn(
             d.worker_joined(node_id, &name);
         }
     }
+    // Echo the negotiated version (the client's, which we just range-
+    // checked — `min(client, server)` since ours is the upper bound).
     let mut e = Enc::new();
-    e.u8(PROTOCOL_VERSION);
+    e.u8(version);
     e.u32(node_id);
     let result = writer
         .reply(req_id, Ok(e.finish()))
@@ -534,6 +548,13 @@ fn handle_immediate(
             let params = d.layer_params()?;
             store.put_layer(layer, chapter, params)?;
         }
+        op::PUT_LAYER_DELTA => {
+            let layer = d.u32()? as usize;
+            let chapter = d.u32()?;
+            let base_chapter = d.u32()?;
+            let delta = d.layer_delta()?;
+            store.put_layer_delta(layer, chapter, base_chapter, delta)?;
+        }
         op::GET_LAYER => {
             let layer = d.u32()? as usize;
             let chapter = d.u32()?;
@@ -757,7 +778,7 @@ fn fail_all(shared: &ClientShared, reason: String) {
     }
 }
 
-/// [`ParamStore`] client over TCP, protocol v2.
+/// [`ParamStore`] client over TCP, protocol v3 (v2 negotiated down).
 ///
 /// One connection carries any number of concurrent in-flight requests
 /// (requests are tagged with a `u64 req_id`; a demux thread routes the
@@ -766,6 +787,8 @@ fn fail_all(shared: &ClientShared, reason: String) {
 pub struct TcpStoreClient {
     shared: Arc<ClientShared>,
     node_id: u32,
+    /// Version settled in `HELLO`; gates v3-only ops (delta publish).
+    proto: u8,
     demux: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -856,16 +879,21 @@ impl TcpStoreClient {
             e.u32(requested.unwrap_or(u32::MAX));
             e.str(name);
         });
-        let node_id = hello.and_then(|body| {
+        let handshake = hello.and_then(|body| {
             let mut d = Dec::new(body.body());
             let version = d.u8()?;
-            if version != PROTOCOL_VERSION {
-                bail!("server replied with protocol v{version}, expected v{PROTOCOL_VERSION}");
+            if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
+                bail!(
+                    "server replied with protocol v{version}, expected \
+                     v{MIN_PROTOCOL_VERSION}..v{PROTOCOL_VERSION}"
+                );
             }
-            d.u32()
+            Ok((version, d.u32()?))
         });
-        match node_id {
-            Ok(node_id) => Ok(TcpStoreClient { shared, node_id, demux: Some(demux) }),
+        match handshake {
+            Ok((proto, node_id)) => {
+                Ok(TcpStoreClient { shared, node_id, proto, demux: Some(demux) })
+            }
             Err(e) => {
                 // Unwind the half-open connection so the demux thread exits.
                 let _ = shared.sock.shutdown(Shutdown::Both);
@@ -878,6 +906,11 @@ impl TcpStoreClient {
     /// The node id the leader assigned in `HELLO` (workers only).
     pub fn node_id(&self) -> Option<u32> {
         (self.node_id != u32::MAX).then_some(self.node_id)
+    }
+
+    /// The protocol version settled in `HELLO`.
+    pub fn protocol_version(&self) -> u8 {
+        self.proto
     }
 
     /// Non-blocking fetch of `(layer, chapter)` — `None` when not yet
@@ -970,13 +1003,37 @@ impl ParamStore for TcpStoreClient {
             .map(|_| ())
     }
 
-    fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<LayerParams> {
+    fn put_layer_delta(
+        &self,
+        layer: usize,
+        chapter: u32,
+        base_chapter: u32,
+        delta: LayerDelta,
+    ) -> Result<()> {
+        if self.proto < 3 {
+            bail!("delta publish needs protocol v3, but HELLO settled on v{}", self.proto);
+        }
+        self.shared
+            .request(op::PUT_LAYER_DELTA, None, |e| {
+                e.u32(layer as u32);
+                e.u32(chapter);
+                e.u32(base_chapter);
+                e.layer_delta(&delta);
+            })
+            .map(|_| ())
+    }
+
+    fn supports_deltas(&self) -> bool {
+        self.proto >= 3
+    }
+
+    fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<Arc<LayerParams>> {
         let body = self.shared.request(op::WAIT_LAYER, Some(timeout), |e| {
             e.u32(layer as u32);
             e.u32(chapter);
             e.u64(timeout.as_millis() as u64);
         })?;
-        Dec::new(body.body()).layer_params()
+        Ok(Arc::new(Dec::new(body.body()).layer_params()?))
     }
 
     fn put_head(&self, chapter: u32, params: HeadParams) -> Result<()> {
@@ -988,12 +1045,12 @@ impl ParamStore for TcpStoreClient {
             .map(|_| ())
     }
 
-    fn get_head(&self, chapter: u32, timeout: Duration) -> Result<HeadParams> {
+    fn get_head(&self, chapter: u32, timeout: Duration) -> Result<Arc<HeadParams>> {
         let body = self.shared.request(op::WAIT_HEAD, Some(timeout), |e| {
             e.u32(chapter);
             e.u64(timeout.as_millis() as u64);
         })?;
-        Dec::new(body.body()).head_params()
+        Ok(Arc::new(Dec::new(body.body()).head_params()?))
     }
 
     fn put_neg(&self, chapter: u32, labels: Vec<u8>) -> Result<()> {
@@ -1013,22 +1070,22 @@ impl ParamStore for TcpStoreClient {
         Dec::new(body.body()).bytes()
     }
 
-    fn latest_layer(&self, layer: usize) -> Result<Option<(u32, LayerParams)>> {
+    fn latest_layer(&self, layer: usize) -> Result<Option<(u32, Arc<LayerParams>)>> {
         let body = self.shared.request(op::LATEST_LAYER, None, |e| e.u32(layer as u32))?;
         let mut d = Dec::new(body.body());
         if d.u8()? == 0 {
             return Ok(None);
         }
-        Ok(Some((d.u32()?, d.layer_params()?)))
+        Ok(Some((d.u32()?, Arc::new(d.layer_params()?))))
     }
 
-    fn latest_head(&self) -> Result<Option<(u32, HeadParams)>> {
+    fn latest_head(&self) -> Result<Option<(u32, Arc<HeadParams>)>> {
         let body = self.shared.request(op::LATEST_HEAD, None, |_| {})?;
         let mut d = Dec::new(body.body());
         if d.u8()? == 0 {
             return Ok(None);
         }
-        Ok(Some((d.u32()?, d.head_params()?)))
+        Ok(Some((d.u32()?, Arc::new(d.head_params()?))))
     }
 
     fn has_layer(&self, layer: usize, chapter: u32) -> Result<bool> {
@@ -1237,6 +1294,57 @@ mod tests {
         assert_eq!(req_id, 0);
         assert_eq!(status, ST_ERR);
         assert!(d.str().unwrap().contains("HELLO"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn v2_client_negotiates_down() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        // Speak raw v2: the server must accept and echo the OLDER version.
+        let sock = TcpStream::connect(server.addr).unwrap();
+        let mut w = BufWriter::new(sock.try_clone().unwrap());
+        let mut e = Enc::new();
+        e.req_header(3, super::op::HELLO);
+        e.u8(2);
+        e.u8(ROLE_CLIENT);
+        e.u32(u32::MAX);
+        e.str("legacy");
+        write_frame(&mut w, &e.finish()).unwrap();
+        let mut r = BufReader::new(sock);
+        let resp = read_frame(&mut r, MAX_FRAME).unwrap();
+        let mut d = Dec::new(&resp);
+        let (req_id, status) = d.header().unwrap();
+        assert_eq!((req_id, status), (3, ST_OK));
+        assert_eq!(d.u8().unwrap(), 2, "HELLO must settle on min(client, server)");
+        server.shutdown();
+    }
+
+    #[test]
+    fn delta_publish_reconstructs_across_the_wire() {
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store, 0).unwrap();
+        let client = TcpStoreClient::connect(server.addr).unwrap();
+        assert!(client.supports_deltas());
+        assert_eq!(client.protocol_version(), PROTOCOL_VERSION);
+
+        let base = params();
+        client.put_layer(1, 0, base.clone()).unwrap();
+        let mut next = base.clone();
+        next.b[2] = -3.5;
+        for c in 0..next.w.cols {
+            next.w.data[next.w.cols + c] += 1.0; // row 1
+        }
+        let delta = LayerDelta::diff(&base, &next).unwrap();
+        client.put_layer_delta(1, 1, 0, delta).unwrap();
+        let got = client.get_layer(1, 1, Duration::from_millis(200)).unwrap();
+        assert_eq!(got.w, next.w);
+        assert_eq!(got.b, next.b);
+
+        // A delta against a base the store never saw is refused.
+        let orphan = LayerDelta::diff(&base, &next).unwrap();
+        let err = client.put_layer_delta(1, 5, 9, orphan).unwrap_err();
+        assert!(err.to_string().contains("base chapter"), "{err}");
         server.shutdown();
     }
 

@@ -220,7 +220,7 @@ fn injected_store_receives_the_published_model() {
     // The injected store is the one the run wrote through.
     let (chapter, params) = store.latest_layer(0).unwrap().unwrap();
     assert_eq!(chapter, cfg.splits - 1);
-    assert_eq!(params.into_layer().0.w.data, rep.model.net.layers[0].w.data);
+    assert_eq!(params.to_layer().0.w.data, rep.model.net.layers[0].w.data);
     assert!(store.comm_stats().puts > 0);
 }
 

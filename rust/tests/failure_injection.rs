@@ -111,7 +111,7 @@ fn wrong_shape_layer_fails_cleanly() {
     let (layer, _) = store
         .get_layer(0, 0, Duration::from_millis(50))
         .unwrap()
-        .into_layer();
+        .to_layer();
     // feeding 784-dim data through the 13-in layer must error via shape
     // asserts, not silently mangle
     let mut eng = NativeEngine::new();

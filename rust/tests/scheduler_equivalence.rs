@@ -259,6 +259,58 @@ fn softmax_inline_vs_posthoc() {
     );
 }
 
+/// Delta publishes are a deployment knob, not a training-semantics knob:
+/// the row-delta reconstruction is bit-exact, so the trained model is
+/// identical with `delta_publish` on or off — only the wire accounting
+/// may change. (Publishers ship a delta only when it is strictly smaller
+/// than the full frame, so `bytes_put` can never grow; with dense FF
+/// gradients most chapters change every row and fall back to full
+/// frames, which is why the strict-reduction claim lives in the
+/// `micro_transport` bench where the sparsity is controlled.)
+#[test]
+fn delta_publish_is_bitwise_invisible() {
+    let mut cfg = mech_cfg();
+    cfg.scheduler = Scheduler::AllLayers;
+    cfg.nodes = 2;
+    cfg.ship_opt_state = false; // deltas only apply to lean frames
+    cfg.delta_publish = false;
+    let full = run_experiment(&cfg).unwrap();
+    cfg.delta_publish = true;
+    let delta = run_experiment(&cfg).unwrap();
+    assert_eq!(full.model.net.layers.len(), delta.model.net.layers.len());
+    for (i, (a, b)) in full.model.net.layers.iter().zip(&delta.model.net.layers).enumerate() {
+        assert_eq!(a.w.data, b.w.data, "layer {i} weights differ with delta publishes on");
+        assert_eq!(a.b, b.b, "layer {i} bias differs with delta publishes on");
+    }
+    assert_eq!(full.test_accuracy, delta.test_accuracy);
+    assert!(
+        delta.comm.bytes_put <= full.comm.bytes_put,
+        "delta publishes must never grow wire bytes: {} vs {}",
+        delta.comm.bytes_put,
+        full.comm.bytes_put
+    );
+}
+
+/// Same invisibility over real sockets: TCP with protocol-v3 delta
+/// publishes lands on the same bits as the in-proc run.
+#[test]
+fn tcp_delta_publish_bitwise_matches_inproc() {
+    let mut cfg = mech_cfg();
+    cfg.scheduler = Scheduler::AllLayers;
+    cfg.nodes = 2;
+    cfg.ship_opt_state = false;
+    cfg.delta_publish = true;
+    cfg.transport = TransportKind::InProc;
+    let inproc = run_experiment(&cfg).unwrap();
+    cfg.transport = TransportKind::Tcp;
+    let tcp = run_experiment(&cfg).unwrap();
+    for (i, (a, b)) in inproc.model.net.layers.iter().zip(&tcp.model.net.layers).enumerate() {
+        assert_eq!(a.w.data, b.w.data, "layer {i} weights differ across transports with deltas");
+        assert_eq!(a.b, b.b, "layer {i} bias differs across transports with deltas");
+    }
+    assert_eq!(inproc.test_accuracy, tcp.test_accuracy);
+}
+
 /// The ship-opt-state ablation changes the wire bytes accordingly.
 #[test]
 fn ship_opt_state_triples_wire_bytes() {

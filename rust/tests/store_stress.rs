@@ -106,6 +106,92 @@ fn memstore_timeouts_stay_clean_while_writers_hammer() {
     assert_eq!(store.get_layer(0, 7, Duration::from_millis(10)).unwrap().b[0], 7.0);
 }
 
+/// PR 7 stall regression: `dump()` of a multi-MB store must not park
+/// publishers behind an O(model-size) deep copy. Two teeth: a structural
+/// proof that dumps share storage with the store (`Arc::ptr_eq` — a deep
+/// copy can never pass this), and a latency bound on publishes racing a
+/// thread that dumps in a hot loop.
+#[test]
+fn dump_of_multi_mb_store_does_not_stall_publishers() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Instant;
+
+    let store = Arc::new(MemStore::new());
+    // ~48 MB resident: 12 × (1000×1000) f32 layers.
+    for l in 0..12usize {
+        let p = LayerParams {
+            w: Matrix::full(1000, 1000, l as f32),
+            b: vec![0.0; 1000],
+            normalize_input: false,
+            opt: None,
+        };
+        store.put_layer(l, 0, p).unwrap();
+    }
+
+    // Copy-on-write: a dump entry IS the store entry, refcounted.
+    let dump = store.dump();
+    let entry = store.try_layer(0, 0).unwrap();
+    assert!(
+        Arc::ptr_eq(&dump.layers[0].2, &entry),
+        "dump must share storage with the store, not deep-copy it"
+    );
+    drop(dump);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (s2, stop2) = (store.clone(), stop.clone());
+    let dumper = std::thread::spawn(move || {
+        let mut n = 0u64;
+        while !stop2.load(Ordering::Relaxed) {
+            let d = s2.dump();
+            assert!(d.layers.len() >= 12);
+            n += 1;
+        }
+        n
+    });
+
+    let mut worst = Duration::ZERO;
+    for c in 1..=200u32 {
+        let t0 = Instant::now();
+        store.put_layer(0, c, tagged(c)).unwrap();
+        worst = worst.max(t0.elapsed());
+    }
+    stop.store(true, Ordering::Relaxed);
+    let dumps = dumper.join().unwrap();
+    assert!(dumps > 0, "the dumper must actually have raced the publisher");
+    // The COW lock hold is a handful of refcount bumps; 250 ms of slack
+    // absorbs scheduler noise while still flagging a publisher parked
+    // behind in-flight multi-MB copies.
+    assert!(worst < Duration::from_millis(250), "publish stalled {worst:?} behind dump()");
+}
+
+/// Dumps interleaved with a live publisher must each be a consistent
+/// snapshot: a gapless sorted chapter prefix whose every entry carries
+/// its own payload — never a torn or half-copied view.
+#[test]
+fn dump_publish_interleave_yields_consistent_snapshots() {
+    let store = Arc::new(MemStore::new());
+    store.put_layer(0, 0, tagged(0)).unwrap();
+    let s2 = store.clone();
+    let publisher = std::thread::spawn(move || {
+        for c in 1..=300u32 {
+            s2.put_layer(0, c, tagged(c)).unwrap();
+        }
+    });
+    let mut last_len = 1;
+    for _ in 0..100 {
+        let d = store.dump();
+        assert!(d.layers.len() >= last_len, "a later dump saw fewer entries");
+        last_len = d.layers.len();
+        for (i, (l, c, p)) in d.layers.iter().enumerate() {
+            assert_eq!(*l, 0);
+            assert_eq!(*c, i as u32, "chapters must form a gapless sorted prefix");
+            assert_eq!(p.b[0], *c as f32, "entry carries a foreign payload");
+        }
+    }
+    publisher.join().unwrap();
+    assert_eq!(store.dump().layers.len(), 301);
+}
+
 #[test]
 fn live_server_multiplexed_waiters_route_correctly() {
     const WAITERS: usize = 12;
