@@ -1,0 +1,387 @@
+//! `pff analyze` — offline, std-only static analysis over the repo tree.
+//!
+//! The analyzer enforces *repo invariants*: cross-file consistency rules
+//! the compiler cannot see (wire opcodes vs `PROTOCOL.md`, config keys vs
+//! the README table) and project discipline the type system does not
+//! encode (no `thread::sleep` synchronization, no printing from library
+//! code, ranked locks only in the coordinator/transport). It is purely
+//! lexical/structural — no rustc, no network, no dependencies — so it
+//! runs identically on a laptop and in the blocking `analyze` CI job.
+//!
+//! A finding can be silenced at the site with an inline pragma, always
+//! with a reason:
+//!
+//! ```text
+//! // pff-allow(no-sleep-sync): error-path backoff, not synchronization.
+//! std::thread::sleep(delay);
+//! ```
+//!
+//! The pragma may sit on the offending line or anywhere in the block of
+//! `//` comment lines immediately above it.
+
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// How bad a finding is. Every current rule reports [`Severity::Error`];
+/// the distinction exists so future advisory rules don't need a schema
+/// change (JSON consumers already see a `severity` field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Advisory: reported, still fails the run (exit is on any finding).
+    Warning,
+    /// A violated repo invariant.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One finding: a rule, a place, a message.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Rule id, e.g. `lock-discipline` (also the `pff-allow(..)` key).
+    pub rule: &'static str,
+    /// File the finding is in (normalized to forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Finding severity.
+    pub severity: Severity,
+    /// Human explanation of the violated invariant.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: {}:{}: [{}] {}",
+            self.severity, self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// One file of the analyzed tree, held entirely in memory.
+pub struct SourceFile {
+    /// Path as given (used for display and scope decisions).
+    pub path: PathBuf,
+    /// Normalized path string: forward slashes only.
+    pub key: String,
+    /// Full file contents.
+    pub text: String,
+    /// Line starts are implicit; rules index by line via `lines()`.
+    lines: Vec<String>,
+}
+
+impl SourceFile {
+    /// Build a file from a path and its contents (tests use literals).
+    pub fn new(path: impl Into<PathBuf>, text: impl Into<String>) -> Self {
+        let path = path.into();
+        let text = text.into();
+        let key = path.to_string_lossy().replace('\\', "/");
+        let lines = text.lines().map(str::to_owned).collect();
+        SourceFile { path, key, text, lines }
+    }
+
+    /// The file's lines, without terminators.
+    pub fn lines(&self) -> &[String] {
+        &self.lines
+    }
+
+    /// Does the normalized path end with `suffix` (component-aligned)?
+    pub fn ends_with(&self, suffix: &str) -> bool {
+        self.key == suffix
+            || self
+                .key
+                .strip_suffix(suffix)
+                .map(|pre| pre.ends_with('/'))
+                .unwrap_or(false)
+    }
+}
+
+/// The set of files under analysis, in deterministic (sorted) order.
+pub struct Tree {
+    files: Vec<SourceFile>,
+}
+
+impl Tree {
+    /// Build a tree from in-memory files (fixture tests).
+    pub fn from_files(mut files: Vec<SourceFile>) -> Self {
+        files.sort_by(|a, b| a.key.cmp(&b.key));
+        Tree { files }
+    }
+
+    /// Load every `.rs` / `.md` file under `roots` (files are taken
+    /// as-is; directories are walked recursively, skipping hidden
+    /// entries and `target/`).
+    pub fn load(roots: &[PathBuf]) -> Result<Self> {
+        let mut files = Vec::new();
+        for root in roots {
+            if root.is_file() {
+                files.push(read_source(root)?);
+            } else if root.is_dir() {
+                walk(root, &mut files)?;
+            } else {
+                bail!("analyze: path '{}' does not exist", root.display());
+            }
+        }
+        Ok(Tree::from_files(files))
+    }
+
+    /// All files, sorted by normalized path.
+    pub fn files(&self) -> &[SourceFile] {
+        &self.files
+    }
+
+    /// First file whose path ends with `suffix` (component-aligned).
+    pub fn find(&self, suffix: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.ends_with(suffix))
+    }
+}
+
+fn read_source(path: &Path) -> Result<SourceFile> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("analyze: reading {}", path.display()))?;
+    Ok(SourceFile::new(path, text))
+}
+
+fn walk(dir: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("analyze: listing {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with('.') || name == "target" {
+            continue;
+        }
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if matches!(p.extension().and_then(|e| e.to_str()), Some("rs" | "md")) {
+            out.push(read_source(&p)?);
+        }
+    }
+    Ok(())
+}
+
+/// The roots `pff analyze` scans when given no paths: the crate sources,
+/// the integration tests, the examples, and the README — resolved
+/// relative to the current directory, which may be the repo root or
+/// `rust/`.
+pub fn default_roots() -> Result<Vec<PathBuf>> {
+    let cwd = std::env::current_dir().context("analyze: no working directory")?;
+    let base = if cwd.join("rust/src").is_dir() {
+        cwd
+    } else if cwd.join("src").is_dir() && cwd.join("../examples").is_dir() {
+        cwd.join("..")
+    } else {
+        bail!(
+            "analyze: run from the repo root (or rust/), or pass explicit PATHS; \
+             '{}' holds neither rust/src nor src",
+            cwd.display()
+        );
+    };
+    let mut roots = vec![base.join("rust/src"), base.join("rust/tests"), base.join("examples")];
+    let readme = base.join("README.md");
+    if readme.is_file() {
+        roots.push(readme);
+    }
+    Ok(roots)
+}
+
+/// Is a finding of `rule` at 0-based line `idx` suppressed by a
+/// `pff-allow(rule)` pragma — on the line itself, or anywhere in the
+/// contiguous block of `//` comment lines immediately above it?
+pub fn is_suppressed(file: &SourceFile, idx: usize, rule: &str) -> bool {
+    let needle = format!("pff-allow({rule})");
+    let lines = file.lines();
+    if lines.get(idx).map(|l| l.contains(&needle)).unwrap_or(false) {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = lines[i].trim_start();
+        if !t.starts_with("//") {
+            break;
+        }
+        if t.contains(&needle) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Record a finding unless an inline pragma suppresses it.
+/// `idx` is 0-based; the stored line is 1-based.
+pub(crate) fn emit(
+    out: &mut Vec<Diagnostic>,
+    file: &SourceFile,
+    idx: usize,
+    rule: &'static str,
+    message: String,
+) {
+    if is_suppressed(file, idx, rule) {
+        return;
+    }
+    out.push(Diagnostic {
+        rule,
+        file: file.key.clone(),
+        line: idx + 1,
+        severity: Severity::Error,
+        message,
+    });
+}
+
+/// Run every rule over the tree; findings come back sorted by
+/// `(file, line, rule)` so output is deterministic.
+pub fn analyze(tree: &Tree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for rule in rules::ALL {
+        (rule.check)(tree, &mut out);
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}
+
+/// Human-readable report: one line per finding.
+pub fn render_human(diags: &[Diagnostic]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    for d in diags {
+        let _ = writeln!(s, "{d}");
+    }
+    s
+}
+
+/// Machine-readable report (hand-rolled JSON; the crate is std-only).
+pub fn render_json(diags: &[Diagnostic]) -> String {
+    use std::fmt::Write;
+    let mut s = String::from("{\"findings\":[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"rule\":{},\"file\":{},\"line\":{},\"severity\":{},\"message\":{}}}",
+            json_str(d.rule),
+            json_str(&d.file),
+            d.line,
+            json_str(&d.severity.to_string()),
+            json_str(&d.message),
+        );
+    }
+    let _ = write!(s, "],\"count\":{}}}", diags.len());
+    s
+}
+
+fn json_str(v: &str) -> String {
+    let mut s = String::with_capacity(v.len() + 2);
+    s.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => s.push_str("\\\""),
+            '\\' => s.push_str("\\\\"),
+            '\n' => s.push_str("\\n"),
+            '\r' => s.push_str("\\r"),
+            '\t' => s.push_str("\\t"),
+            c if (c as u32) < 0x20 => s.push_str(&format!("\\u{:04x}", c as u32)),
+            c => s.push(c),
+        }
+    }
+    s.push('"');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(text: &str) -> SourceFile {
+        SourceFile::new("x/y.rs", text)
+    }
+
+    #[test]
+    fn pragma_on_the_line_suppresses() {
+        let f = file("std::thread::sleep(d); // pff-allow(no-sleep-sync): backoff\n");
+        assert!(is_suppressed(&f, 0, "no-sleep-sync"));
+        assert!(!is_suppressed(&f, 0, "lock-discipline"), "wrong rule must not match");
+    }
+
+    #[test]
+    fn pragma_in_the_comment_block_above_suppresses() {
+        let f = file(
+            "// pff-allow(no-sleep-sync): connection backoff against a\n\
+             // leader that has not bound its listener yet — three lines\n\
+             // of justification, pragma on the first.\n\
+             std::thread::sleep(d);\n",
+        );
+        assert!(is_suppressed(&f, 3, "no-sleep-sync"));
+    }
+
+    #[test]
+    fn pragma_does_not_leak_past_code() {
+        let f = file(
+            "// pff-allow(no-sleep-sync): covers only the next statement\n\
+             std::thread::sleep(a);\n\
+             std::thread::sleep(b);\n",
+        );
+        assert!(is_suppressed(&f, 1, "no-sleep-sync"));
+        assert!(!is_suppressed(&f, 2, "no-sleep-sync"), "code line breaks the block");
+    }
+
+    #[test]
+    fn ends_with_is_component_aligned() {
+        let f = SourceFile::new("rust/src/transport/tcp.rs", "");
+        assert!(f.ends_with("transport/tcp.rs"));
+        assert!(f.ends_with("tcp.rs"));
+        assert!(!f.ends_with("ansport/tcp.rs"), "partial component must not match");
+    }
+
+    #[test]
+    fn json_escapes_and_counts() {
+        let d = Diagnostic {
+            rule: "config-keys",
+            file: "a\"b.rs".into(),
+            line: 3,
+            severity: Severity::Error,
+            message: "tab\there".into(),
+        };
+        let j = render_json(&[d]);
+        assert!(j.contains("\"count\":1"), "{j}");
+        assert!(j.contains("a\\\"b.rs"), "{j}");
+        assert!(j.contains("tab\\there"), "{j}");
+        assert_eq!(render_json(&[]), "{\"findings\":[],\"count\":0}");
+    }
+
+    #[test]
+    fn findings_sort_deterministically() {
+        let mk = |file: &str, line| Diagnostic {
+            rule: "no-sleep-sync",
+            file: file.into(),
+            line,
+            severity: Severity::Error,
+            message: String::new(),
+        };
+        let t = Tree::from_files(vec![]);
+        assert!(analyze(&t).is_empty(), "empty tree is clean");
+        let mut v = vec![mk("b.rs", 1), mk("a.rs", 9), mk("a.rs", 2)];
+        v.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+        assert_eq!(v[0].file, "a.rs");
+        assert_eq!(v[0].line, 2);
+    }
+}

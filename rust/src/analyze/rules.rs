@@ -1,0 +1,1053 @@
+//! The repo-invariant rules behind `pff analyze`.
+//!
+//! Each rule is a plain `fn(&Tree, &mut Vec<Diagnostic>)` registered in
+//! [`ALL`]. Rules come in two shapes:
+//!
+//! * **structural** — cross-file consistency the compiler cannot check:
+//!   [`wire_opcodes`] (tcp.rs ↔ PROTOCOL.md), [`config_keys`]
+//!   (`ExperimentConfig::set` ↔ `to_kv_string` ↔ README table),
+//!   [`event_csv_exhaustive`] (`RunEvent` ↔ Display ↔ CSV projection);
+//! * **lexical** — per-line discipline: [`no_sleep_sync`],
+//!   [`no_print_in_lib`], [`lock_discipline`].
+//!
+//! A rule that cannot find its anchor file (e.g. `pff analyze src/ff.rs`
+//! loads no `PROTOCOL.md`) reports nothing: scoped runs check what they
+//! can see, the full default-root run checks everything.
+
+use super::{emit, Diagnostic, SourceFile, Tree};
+
+/// One registered rule.
+pub struct Rule {
+    /// Rule id — also the `pff-allow(id)` suppression key.
+    pub id: &'static str,
+    /// One-line description for docs and `--help`.
+    pub summary: &'static str,
+    /// The check itself.
+    pub check: fn(&Tree, &mut Vec<Diagnostic>),
+}
+
+/// Every rule, in documentation order.
+pub const ALL: &[Rule] = &[
+    Rule {
+        id: "wire-opcodes",
+        summary: "wire opcode consts are unique, version-gated consistently, \
+                  and documented in PROTOCOL.md",
+        check: wire_opcodes,
+    },
+    Rule {
+        id: "config-keys",
+        summary: "every ExperimentConfig::set key round-trips through \
+                  to_kv_string and appears in the README config table",
+        check: config_keys,
+    },
+    Rule {
+        id: "no-sleep-sync",
+        summary: "no thread::sleep synchronization in library or test code",
+        check: no_sleep_sync,
+    },
+    Rule {
+        id: "no-print-in-lib",
+        summary: "library modules emit RunEvents, they do not print",
+        check: no_print_in_lib,
+    },
+    Rule {
+        id: "event-csv-exhaustive",
+        summary: "every RunEvent variant is rendered by Display and \
+                  projected by event_csv_row",
+        check: event_csv_exhaustive,
+    },
+    Rule {
+        id: "lock-discipline",
+        summary: "coordinator/transport code takes ranked locks \
+                  (sync::OrderedMutex), never raw std primitives",
+        check: lock_discipline,
+    },
+];
+
+// --- shared lexical helpers -------------------------------------------------
+
+/// Is the line comment-only (`//`, `///`, `//!`)?
+fn is_comment(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// The code portion of a line: everything before a trailing `//` comment.
+/// (`://` is kept — URLs in strings are not comments.)
+fn code_part(line: &str) -> &str {
+    let b = line.as_bytes();
+    for i in 0..b.len().saturating_sub(1) {
+        if b[i] == b'/' && b[i + 1] == b'/' && (i == 0 || b[i - 1] != b':') {
+            return &line[..i];
+        }
+    }
+    line
+}
+
+/// Net brace depth change of a code fragment. Format-string braces are
+/// always balanced, so counting raw characters is exact enough here.
+fn net_braces(code: &str) -> i32 {
+    let mut n = 0;
+    for c in code.chars() {
+        match c {
+            '{' => n += 1,
+            '}' => n -= 1,
+            _ => {}
+        }
+    }
+    n
+}
+
+/// `(start, end)` line indices of the brace block opened on `start`
+/// (inclusive of the closing line).
+fn block_range(lines: &[String], start: usize) -> (usize, usize) {
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (i, l) in lines.iter().enumerate().skip(start) {
+        if is_comment(l) {
+            continue;
+        }
+        let code = code_part(l);
+        if code.contains('{') {
+            opened = true;
+        }
+        depth += net_braces(code);
+        if opened && depth <= 0 {
+            return (start, i);
+        }
+    }
+    (start, lines.len().saturating_sub(1))
+}
+
+/// Line ranges covered by `#[cfg(test)]` items (test mods and helpers).
+fn test_regions(lines: &[String]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].trim_start().starts_with("#[cfg(test)]") {
+            // The guarded item's opening brace is on this or a nearby line
+            // (attributes and signatures are short in this codebase).
+            let open = (i..lines.len().min(i + 5))
+                .find(|&j| code_part(&lines[j]).contains('{'));
+            if let Some(j) = open {
+                let (_, end) = block_range(lines, j);
+                regions.push((i, end));
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    regions
+}
+
+fn in_regions(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+/// Does `code` contain `tok` as a token (previous char not `[A-Za-z0-9_]`)?
+/// `OrderedMutex` therefore does not count as a `Mutex` hit.
+fn has_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(tok) {
+        let i = from + pos;
+        let pre_ident =
+            i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_');
+        if !pre_ident {
+            return true;
+        }
+        from = i + tok.len();
+    }
+    false
+}
+
+/// Scan the contiguous `//` comment block above `idx` for `v<N>+`
+/// (a version-gate marker like "v3+ only").
+fn version_gate_above(lines: &[String], idx: usize) -> Option<u32> {
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = lines[i].trim_start();
+        if !t.starts_with("//") {
+            return None;
+        }
+        if let Some(v) = find_version_gate(t) {
+            return Some(v);
+        }
+    }
+    None
+}
+
+/// Find `v<digits>+` in a string.
+fn find_version_gate(s: &str) -> Option<u32> {
+    let b = s.as_bytes();
+    for i in 0..b.len() {
+        if b[i] == b'v' && i + 1 < b.len() && b[i + 1].is_ascii_digit() {
+            let mut j = i + 1;
+            while j < b.len() && b[j].is_ascii_digit() {
+                j += 1;
+            }
+            if j < b.len() && b[j] == b'+' {
+                return s[i + 1..j].parse().ok();
+            }
+        }
+    }
+    None
+}
+
+// --- rule: wire-opcodes -----------------------------------------------------
+
+/// Parse `pub const NAME: u8 = 0xHH;` lines of `mod op` in tcp.rs, plus
+/// the two protocol version consts; cross-check against PROTOCOL.md.
+fn wire_opcodes(tree: &Tree, out: &mut Vec<Diagnostic>) {
+    const RULE: &str = "wire-opcodes";
+    let Some(tcp) = tree.find("transport/tcp.rs") else { return };
+    let lines = tcp.lines();
+
+    let parse_u8_const = |name: &str| -> Option<(usize, u32)> {
+        let pat = format!("pub const {name}: u8 =");
+        lines.iter().enumerate().find_map(|(i, l)| {
+            let code = code_part(l);
+            let rest = code.split(&pat as &str).nth(1)?;
+            let v = rest.trim().trim_end_matches(';').trim();
+            let parsed = v
+                .strip_prefix("0x")
+                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                .or_else(|| v.parse().ok())?;
+            Some((i, parsed))
+        })
+    };
+
+    let Some(start) = lines
+        .iter()
+        .position(|l| !is_comment(l) && code_part(l).contains("mod op"))
+    else {
+        return;
+    };
+    let (_, end) = block_range(lines, start);
+
+    // (line, NAME, value, version gate from the comment above)
+    let mut ops: Vec<(usize, String, u32, Option<u32>)> = Vec::new();
+    for i in start..=end.min(lines.len() - 1) {
+        let t = lines[i].trim_start();
+        if !t.starts_with("pub const ") {
+            continue;
+        }
+        let Some(rest) = t.strip_prefix("pub const ") else { continue };
+        let Some((name, tail)) = rest.split_once(':') else { continue };
+        if !tail.contains("u8") {
+            continue;
+        }
+        let Some(val) = tail.split('=').nth(1) else { continue };
+        let val = val.trim().trim_end_matches(';').trim();
+        let Some(v) =
+            val.strip_prefix("0x").and_then(|h| u32::from_str_radix(h, 16).ok())
+        else {
+            emit(
+                out,
+                tcp,
+                i,
+                RULE,
+                format!("opcode {name} is not written as a hex literal ({val})"),
+            );
+            continue;
+        };
+        ops.push((i, name.trim().to_string(), v, version_gate_above(lines, i)));
+    }
+
+    // Uniqueness.
+    for (k, (i, name, v, _)) in ops.iter().enumerate() {
+        if let Some((_, first, _, _)) = ops[..k].iter().find(|(_, _, pv, _)| pv == v) {
+            emit(
+                out,
+                tcp,
+                *i,
+                RULE,
+                format!("duplicate wire opcode {v:#04x}: {name} collides with {first}"),
+            );
+        }
+    }
+
+    let cur = parse_u8_const("PROTOCOL_VERSION");
+    let min = parse_u8_const("MIN_PROTOCOL_VERSION");
+
+    let Some(proto) = tree.find("PROTOCOL.md") else { return };
+    let ptext = &proto.text;
+
+    if let (Some((cur_i, cur_v)), Some((min_i, min_v))) = (cur, min) {
+        if !ptext.contains(&format!("[{min_v}, {cur_v}]")) {
+            emit(
+                out,
+                tcp,
+                min_i,
+                RULE,
+                format!(
+                    "HELLO negotiation range [{min_v}, {cur_v}] is not stated in \
+                     PROTOCOL.md (the handshake section must quote the range)"
+                ),
+            );
+        }
+        if !proto.lines().first().map(|l| l.contains(&format!("v{cur_v}"))).unwrap_or(false)
+        {
+            emit(
+                out,
+                tcp,
+                cur_i,
+                RULE,
+                format!("PROTOCOL.md's title does not name protocol v{cur_v}"),
+            );
+        }
+        for (i, name, v, gate) in &ops {
+            if let Some(g) = gate {
+                if *g > cur_v {
+                    emit(
+                        out,
+                        tcp,
+                        *i,
+                        RULE,
+                        format!(
+                            "{name} is gated at v{g}+ but PROTOCOL_VERSION is {cur_v}"
+                        ),
+                    );
+                }
+            }
+            let row = proto
+                .lines()
+                .iter()
+                .enumerate()
+                .find(|(_, l)| l.trim_start().starts_with(&format!("| {v:#04x}")));
+            match row {
+                None => emit(
+                    out,
+                    tcp,
+                    *i,
+                    RULE,
+                    format!(
+                        "opcode {v:#04x} ({name}) is missing from the PROTOCOL.md \
+                         opcode table"
+                    ),
+                ),
+                Some((_, l)) => {
+                    if !has_token(l, name) {
+                        emit(
+                            out,
+                            tcp,
+                            *i,
+                            RULE,
+                            format!(
+                                "PROTOCOL.md documents {v:#04x} under a different \
+                                 name than {name}"
+                            ),
+                        );
+                    }
+                    match gate {
+                        Some(g) if !l.contains(&format!("(v{g}+)")) => emit(
+                            out,
+                            tcp,
+                            *i,
+                            RULE,
+                            format!(
+                                "{name} is version-gated (v{g}+ in its comment) but \
+                                 its PROTOCOL.md row is not marked (v{g}+)"
+                            ),
+                        ),
+                        None if l.contains("(v") => emit(
+                            out,
+                            tcp,
+                            *i,
+                            RULE,
+                            format!(
+                                "PROTOCOL.md marks {v:#04x} version-gated but \
+                                 {name}'s comment carries no v<N>+ gate"
+                            ),
+                        ),
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+
+    // Reverse direction: no documented opcode without a const.
+    for (i, l) in proto.lines().iter().enumerate() {
+        let t = l.trim_start();
+        let Some(rest) = t.strip_prefix("| 0x") else { continue };
+        let hex: String = rest.chars().take_while(|c| c.is_ascii_hexdigit()).collect();
+        let Ok(v) = u32::from_str_radix(&hex, 16) else { continue };
+        if !ops.iter().any(|(_, _, ov, _)| *ov == v) {
+            emit(
+                out,
+                proto,
+                i,
+                RULE,
+                format!(
+                    "PROTOCOL.md documents opcode {v:#04x} which transport/tcp.rs \
+                     does not define"
+                ),
+            );
+        }
+    }
+}
+
+// --- rule: config-keys ------------------------------------------------------
+
+/// Extract the key literals of `ExperimentConfig::set`'s top-level match
+/// and require each to (a) appear quoted outside `set` — which in this
+/// crate means the `to_kv_string` emitter the round-trip test diffs —
+/// and (b) appear backticked in the README configuration table.
+fn config_keys(tree: &Tree, out: &mut Vec<Diagnostic>) {
+    const RULE: &str = "config-keys";
+    let Some(cfg) = tree.find("config/mod.rs") else { return };
+    let lines = cfg.lines();
+
+    let Some(set_start) = lines.iter().position(|l| code_part(l).contains("pub fn set("))
+    else {
+        return;
+    };
+    let Some(match_line) = (set_start..lines.len().min(set_start + 6))
+        .find(|&i| code_part(&lines[i]).contains("match key"))
+    else {
+        return;
+    };
+
+    // (line, key) arms at depth 1 of the match.
+    let mut keys: Vec<(usize, String)> = Vec::new();
+    let mut depth = 0i32;
+    let mut match_end = match_line;
+    for (i, l) in lines.iter().enumerate().skip(match_line) {
+        if is_comment(l) {
+            continue;
+        }
+        let code = code_part(l);
+        if depth == 1 {
+            let t = code.trim_start();
+            if let Some(rest) = t.strip_prefix('"') {
+                if let Some((key, tail)) = rest.split_once('"') {
+                    if tail.contains("=>") {
+                        keys.push((i, key.to_string()));
+                    }
+                }
+            }
+        }
+        depth += net_braces(code);
+        if i > match_line && depth <= 0 {
+            match_end = i;
+            break;
+        }
+    }
+
+    let readme = tree.find("README.md");
+    for (i, key) in &keys {
+        let quoted = format!("\"{key}\"");
+        let outside = lines
+            .iter()
+            .enumerate()
+            .any(|(j, l)| (j < set_start || j > match_end) && l.contains(&quoted));
+        if !outside {
+            emit(
+                out,
+                cfg,
+                *i,
+                RULE,
+                format!(
+                    "config key '{key}' is set-only: it never appears quoted outside \
+                     ExperimentConfig::set, so to_kv_string (and the kv round-trip \
+                     test) cannot be covering it"
+                ),
+            );
+        }
+        if let Some(rd) = readme {
+            if !rd.text.contains(&format!("`{key}`")) {
+                emit(
+                    out,
+                    cfg,
+                    *i,
+                    RULE,
+                    format!(
+                        "config key '{key}' is missing from the README configuration \
+                         table (expected a backticked `{key}` entry)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// --- rule: no-sleep-sync ----------------------------------------------------
+
+/// `thread::sleep` in `src/` or `tests/` is a poll where a Condvar (or a
+/// store/event wait) belongs. Genuine backoffs carry a pragma.
+fn no_sleep_sync(tree: &Tree, out: &mut Vec<Diagnostic>) {
+    const RULE: &str = "no-sleep-sync";
+    for f in tree.files() {
+        let in_scope = f.key.ends_with(".rs")
+            && (f.key.contains("src/") || f.key.contains("tests/"))
+            && !f.key.contains("src/analyze/");
+        if !in_scope {
+            continue;
+        }
+        for (i, l) in f.lines().iter().enumerate() {
+            if is_comment(l) {
+                continue;
+            }
+            if code_part(l).contains("thread::sleep") {
+                emit(
+                    out,
+                    f,
+                    i,
+                    RULE,
+                    "thread::sleep used as synchronization — park on a Condvar or \
+                     an event (sync::OrderedCondvar, store waits, wait_for_waiters) \
+                     instead; pff-allow(no-sleep-sync) only for genuine backoff or \
+                     measured workloads"
+                        .into(),
+                );
+            }
+        }
+    }
+}
+
+// --- rule: no-print-in-lib --------------------------------------------------
+
+/// Library modules report through the `RunEvent` bus; printing belongs
+/// to the binary (`main.rs`, `src/bin/`) and to tests.
+fn no_print_in_lib(tree: &Tree, out: &mut Vec<Diagnostic>) {
+    const RULE: &str = "no-print-in-lib";
+    const TOKENS: &[&str] = &["println!", "eprintln!", "print!", "eprint!"];
+    for f in tree.files() {
+        let in_scope = f.key.ends_with(".rs")
+            && f.key.contains("src/")
+            && !f.key.ends_with("main.rs")
+            && !f.key.contains("/bin/")
+            && !f.key.contains("src/analyze/")
+            && !f.key.ends_with("bench_util.rs");
+        if !in_scope {
+            continue;
+        }
+        let tests = test_regions(f.lines());
+        for (i, l) in f.lines().iter().enumerate() {
+            if is_comment(l) || in_regions(&tests, i) {
+                continue;
+            }
+            let code = code_part(l);
+            if TOKENS.iter().any(|t| has_token(code, t)) {
+                emit(
+                    out,
+                    f,
+                    i,
+                    RULE,
+                    "library code must not print — emit a RunEvent on the bus and \
+                     let the binary's observer decide what reaches stderr"
+                        .into(),
+                );
+            }
+        }
+    }
+}
+
+// --- rule: event-csv-exhaustive ---------------------------------------------
+
+/// Every `RunEvent` variant must be rendered by the Display impl and
+/// projected by `metrics::csv::event_csv_row`, and the projection must
+/// not hide behind a wildcard arm.
+fn event_csv_exhaustive(tree: &Tree, out: &mut Vec<Diagnostic>) {
+    const RULE: &str = "event-csv-exhaustive";
+    let Some(ev) = tree.find("coordinator/events.rs") else { return };
+    let lines = ev.lines();
+
+    let Some(enum_start) =
+        lines.iter().position(|l| code_part(l).contains("pub enum RunEvent"))
+    else {
+        return;
+    };
+
+    // (line, Variant) at depth 1 of the enum body.
+    let mut variants: Vec<(usize, String)> = Vec::new();
+    let mut depth = 0i32;
+    for (i, l) in lines.iter().enumerate().skip(enum_start) {
+        if is_comment(l) {
+            continue;
+        }
+        let code = code_part(l);
+        if depth == 1 {
+            let t = code.trim_start();
+            if t.starts_with(|c: char| c.is_ascii_uppercase()) {
+                let name: String = t
+                    .chars()
+                    .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .collect();
+                let tail = t[name.len()..].trim_start();
+                if tail.is_empty() || tail.starts_with(['{', '(', ',']) {
+                    variants.push((i, name));
+                }
+            }
+        }
+        depth += net_braces(code);
+        if i > enum_start && depth <= 0 {
+            break;
+        }
+    }
+
+    let region_text = |file: &SourceFile, start: usize| -> String {
+        let (_, end) = block_range(file.lines(), start);
+        file.lines()[start..=end].join("\n")
+    };
+
+    let display = lines
+        .iter()
+        .position(|l| {
+            let c = code_part(l);
+            c.contains("impl") && c.contains("Display for RunEvent")
+        })
+        .map(|start| region_text(ev, start));
+
+    let csv = tree.find("metrics/csv.rs");
+    let csv_region = csv.and_then(|f| {
+        f.lines()
+            .iter()
+            .position(|l| code_part(l).contains("fn event_csv_row"))
+            .map(|start| (f, start, region_text(f, start)))
+    });
+
+    for (i, name) in &variants {
+        let qualified = format!("RunEvent::{name}");
+        if let Some(d) = &display {
+            if !d.contains(&qualified) {
+                emit(
+                    out,
+                    ev,
+                    *i,
+                    RULE,
+                    format!("{qualified} is not rendered by the Display impl"),
+                );
+            }
+        }
+        if let Some((_, _, text)) = &csv_region {
+            if !text.contains(&qualified) {
+                emit(
+                    out,
+                    ev,
+                    *i,
+                    RULE,
+                    format!(
+                        "{qualified} has no event_csv_row projection in \
+                         metrics/csv.rs"
+                    ),
+                );
+            }
+        }
+    }
+    if let Some((csv_file, start, _)) = &csv_region {
+        let (_, end) = block_range(csv_file.lines(), *start);
+        for i in *start..=end {
+            if is_comment(&csv_file.lines()[i]) {
+                continue;
+            }
+            if code_part(&csv_file.lines()[i]).trim_start().starts_with("_ =>") {
+                emit(
+                    out,
+                    csv_file,
+                    i,
+                    RULE,
+                    "wildcard arm in event_csv_row defeats the exhaustiveness \
+                     guarantee — name every RunEvent variant"
+                        .into(),
+                );
+            }
+        }
+    }
+}
+
+// --- rule: lock-discipline --------------------------------------------------
+
+/// Coordinator/transport modules (and the tensor pool) take locks only
+/// through `sync::OrderedMutex` / `sync::OrderedCondvar`, whose static
+/// `LockRank`s make acquisition order a debug-mode assertion instead of
+/// a code-review hope. Raw std primitives — and the `.lock().unwrap()`
+/// idiom the wrappers make impossible — are findings.
+fn lock_discipline(tree: &Tree, out: &mut Vec<Diagnostic>) {
+    const RULE: &str = "lock-discipline";
+    const RAW: &[&str] = &["Mutex", "Condvar", "RwLock"];
+    for f in tree.files() {
+        let in_scope = f.key.ends_with(".rs")
+            && (f.key.contains("coordinator/")
+                || f.key.contains("transport/")
+                || f.ends_with("tensor/pool.rs"));
+        if !in_scope {
+            continue;
+        }
+        for (i, l) in f.lines().iter().enumerate() {
+            if is_comment(l) {
+                continue;
+            }
+            let code = code_part(l);
+            if let Some(tok) = RAW.iter().find(|t| has_token(code, t)) {
+                emit(
+                    out,
+                    f,
+                    i,
+                    RULE,
+                    format!(
+                        "raw std {tok} in a ranked-lock module — use \
+                         sync::OrderedMutex / sync::OrderedCondvar with a LockRank"
+                    ),
+                );
+            } else if code.contains(".lock().unwrap()") {
+                emit(
+                    out,
+                    f,
+                    i,
+                    RULE,
+                    ".lock().unwrap() — OrderedMutex::lock is infallible (it \
+                     recovers poisoning); this call site is holding a raw lock"
+                        .into(),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::analyze;
+
+    fn run_rule(id: &str, files: Vec<SourceFile>) -> Vec<Diagnostic> {
+        let tree = Tree::from_files(files);
+        let rule = ALL.iter().find(|r| r.id == id).expect("known rule id");
+        let mut out = Vec::new();
+        (rule.check)(&tree, &mut out);
+        out
+    }
+
+    fn f(path: &str, text: &str) -> SourceFile {
+        SourceFile::new(path, text)
+    }
+
+    #[test]
+    fn rule_ids_are_unique_and_complete() {
+        let mut ids: Vec<&str> = ALL.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate rule ids");
+        assert_eq!(n, 6, "six rules ship with this analyzer");
+    }
+
+    // -- wire-opcodes fixtures --
+
+    const TCP_OK: &str = "pub const PROTOCOL_VERSION: u8 = 3;\n\
+        pub const MIN_PROTOCOL_VERSION: u8 = 2;\n\
+        mod op {\n\
+        \u{20}   pub const HELLO: u8 = 0x01;\n\
+        \u{20}   pub const PUT: u8 = 0x10;\n\
+        \u{20}   /// v3+ only: delta publish.\n\
+        \u{20}   pub const PUT_DELTA: u8 = 0x25;\n\
+        }\n";
+
+    const PROTO_OK: &str = "# wire protocol, v3\n\
+        HELLO accepts `[2, 3]` and settles on min(client, server).\n\
+        | op | name | body |\n\
+        | 0x01 | HELLO | - |\n\
+        | 0x10 | PUT | - |\n\
+        | 0x25 | PUT_DELTA (v3+) | - |\n";
+
+    #[test]
+    fn wire_opcodes_clean_tree_passes() {
+        let out = run_rule(
+            "wire-opcodes",
+            vec![
+                f("rust/src/transport/tcp.rs", TCP_OK),
+                f("rust/src/transport/PROTOCOL.md", PROTO_OK),
+            ],
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn wire_opcodes_flags_duplicate_values() {
+        let tcp = TCP_OK.replace("pub const PUT: u8 = 0x10;", "pub const PUT: u8 = 0x01;");
+        let out = run_rule("wire-opcodes", vec![f("rust/src/transport/tcp.rs", &tcp)]);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].message.contains("duplicate"), "{}", out[0].message);
+        assert_eq!(out[0].line, 5);
+    }
+
+    #[test]
+    fn wire_opcodes_flags_undocumented_and_phantom_opcodes() {
+        let proto = PROTO_OK.replace("| 0x10 | PUT | - |", "| 0x30 | GHOST | - |");
+        let out = run_rule(
+            "wire-opcodes",
+            vec![
+                f("rust/src/transport/tcp.rs", TCP_OK),
+                f("rust/src/transport/PROTOCOL.md", &proto),
+            ],
+        );
+        assert!(
+            out.iter().any(|d| d.message.contains("missing from the PROTOCOL.md")),
+            "{out:?}"
+        );
+        assert!(
+            out.iter().any(|d| d.message.contains("does not define")),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn wire_opcodes_flags_gate_drift() {
+        // Code says v3+, doc row lost its (v3+) marker.
+        let proto = PROTO_OK.replace(" (v3+)", "");
+        let out = run_rule(
+            "wire-opcodes",
+            vec![
+                f("rust/src/transport/tcp.rs", TCP_OK),
+                f("rust/src/transport/PROTOCOL.md", &proto),
+            ],
+        );
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].message.contains("not marked (v3+)"), "{}", out[0].message);
+    }
+
+    #[test]
+    fn wire_opcodes_flags_missing_negotiation_range() {
+        let proto = PROTO_OK.replace("`[2, 3]`", "`some versions`");
+        let out = run_rule(
+            "wire-opcodes",
+            vec![
+                f("rust/src/transport/tcp.rs", TCP_OK),
+                f("rust/src/transport/PROTOCOL.md", &proto),
+            ],
+        );
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].message.contains("[2, 3]"), "{}", out[0].message);
+    }
+
+    // -- config-keys fixtures --
+
+    const CFG_OK: &str = "impl C {\n\
+        \u{20}   pub fn set(&mut self, key: &str, v: &str) -> Result<()> {\n\
+        \u{20}       match key {\n\
+        \u{20}           \"alpha\" => self.alpha = v.parse()?,\n\
+        \u{20}           \"beta\" => self.beta = v.parse()?,\n\
+        \u{20}           other => bail!(\"unknown config key\"),\n\
+        \u{20}       }\n\
+        \u{20}       Ok(())\n\
+        \u{20}   }\n\
+        \u{20}   pub fn to_kv_string(&self) -> String {\n\
+        \u{20}       kv(\"alpha\", 1) + &kv(\"beta\", 2)\n\
+        \u{20}   }\n\
+        }\n";
+
+    const README_OK: &str = "## Configuration\n| `alpha` | x |\n| `beta` | y |\n";
+
+    #[test]
+    fn config_keys_clean_tree_passes() {
+        let out = run_rule(
+            "config-keys",
+            vec![f("rust/src/config/mod.rs", CFG_OK), f("README.md", README_OK)],
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn config_keys_flags_set_only_and_undocumented_keys() {
+        let cfg = CFG_OK.replace(" + &kv(\"beta\", 2)", "");
+        let readme = README_OK.replace("| `beta` | y |\n", "");
+        let out = run_rule(
+            "config-keys",
+            vec![f("rust/src/config/mod.rs", &cfg), f("README.md", &readme)],
+        );
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out.iter().all(|d| d.message.contains("'beta'")), "{out:?}");
+        assert!(out.iter().any(|d| d.message.contains("set-only")), "{out:?}");
+        assert!(out.iter().any(|d| d.message.contains("README")), "{out:?}");
+    }
+
+    #[test]
+    fn config_keys_ignores_nested_value_matches() {
+        // A nested match inside an arm must not contribute phantom keys.
+        let cfg = CFG_OK.replace(
+            "\"beta\" => self.beta = v.parse()?,",
+            "\"beta\" => {\n            self.beta = match v {\n                \
+             \"fast\" => 1,\n                _ => 0,\n            };\n        }",
+        );
+        let out = run_rule(
+            "config-keys",
+            vec![f("rust/src/config/mod.rs", &cfg), f("README.md", README_OK)],
+        );
+        // "fast" is a value alias, not a key — it must not be reported.
+        assert!(out.iter().all(|d| !d.message.contains("'fast'")), "{out:?}");
+    }
+
+    // -- no-sleep-sync fixtures --
+
+    #[test]
+    fn no_sleep_sync_flags_library_sleeps_and_honors_pragmas() {
+        let bad = "fn wait() {\n    std::thread::sleep(d);\n}\n";
+        let out = run_rule("no-sleep-sync", vec![f("rust/src/coordinator/x.rs", bad)]);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 2);
+
+        let allowed = "fn backoff() {\n    \
+            // pff-allow(no-sleep-sync): connect backoff, not a wait.\n    \
+            std::thread::sleep(d);\n}\n";
+        let out = run_rule("no-sleep-sync", vec![f("rust/src/coordinator/x.rs", allowed)]);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn no_sleep_sync_skips_examples_and_comments() {
+        let text = "// thread::sleep in a comment is fine\nfn f() { std::thread::sleep(d); }\n";
+        assert!(run_rule("no-sleep-sync", vec![f("examples/demo.rs", text)]).is_empty());
+        let commented = "fn f() {\n    // std::thread::sleep(d);\n}\n";
+        assert!(run_rule(
+            "no-sleep-sync",
+            vec![f("rust/tests/t.rs", commented)]
+        )
+        .is_empty());
+    }
+
+    // -- no-print-in-lib fixtures --
+
+    #[test]
+    fn no_print_in_lib_flags_library_prints() {
+        let bad = "fn go() {\n    eprintln!(\"progress\");\n}\n";
+        let out = run_rule("no-print-in-lib", vec![f("rust/src/coordinator/x.rs", bad)]);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn no_print_in_lib_permits_binary_tests_and_pragmas() {
+        let text = "fn main() {\n    println!(\"cli output\");\n}\n";
+        assert!(run_rule("no-print-in-lib", vec![f("rust/src/main.rs", text)]).is_empty());
+        assert!(run_rule("no-print-in-lib", vec![f("rust/src/bin/gate.rs", text)]).is_empty());
+
+        let tests = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+            println!(\"debugging a test is fine\");\n    }\n}\n";
+        assert!(run_rule("no-print-in-lib", vec![f("rust/src/ff/x.rs", tests)]).is_empty());
+
+        let allowed = "fn go() {\n    \
+            // pff-allow(no-print-in-lib): no bus exists yet here.\n    \
+            eprintln!(\"listener dying\");\n}\n";
+        assert!(run_rule("no-print-in-lib", vec![f("rust/src/transport/x.rs", allowed)])
+            .is_empty());
+    }
+
+    // -- event-csv-exhaustive fixtures --
+
+    const EVENTS_OK: &str = "pub enum RunEvent {\n\
+        \u{20}   /// Something started.\n\
+        \u{20}   Started { node: usize },\n\
+        \u{20}   Done { ok: bool },\n\
+        }\n\
+        impl std::fmt::Display for RunEvent {\n\
+        \u{20}   fn fmt(&self, f: &mut F) -> R {\n\
+        \u{20}       match self {\n\
+        \u{20}           RunEvent::Started { node } => write!(f, \"{node}\"),\n\
+        \u{20}           RunEvent::Done { ok } => write!(f, \"{ok}\"),\n\
+        \u{20}       }\n\
+        \u{20}   }\n\
+        }\n";
+
+    const CSV_OK: &str = "pub fn event_csv_row(ev: &RunEvent) -> Vec<String> {\n\
+        \u{20}   match ev {\n\
+        \u{20}       RunEvent::Started { .. } => vec![],\n\
+        \u{20}       RunEvent::Done { .. } => vec![],\n\
+        \u{20}   }\n\
+        }\n";
+
+    #[test]
+    fn event_csv_clean_tree_passes() {
+        let out = run_rule(
+            "event-csv-exhaustive",
+            vec![
+                f("rust/src/coordinator/events.rs", EVENTS_OK),
+                f("rust/src/metrics/csv.rs", CSV_OK),
+            ],
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn event_csv_flags_unprojected_variant_and_wildcard() {
+        let csv = CSV_OK.replace("RunEvent::Done { .. } => vec![],", "_ => vec![],");
+        let out = run_rule(
+            "event-csv-exhaustive",
+            vec![
+                f("rust/src/coordinator/events.rs", EVENTS_OK),
+                f("rust/src/metrics/csv.rs", &csv),
+            ],
+        );
+        assert!(
+            out.iter().any(|d| d.message.contains("RunEvent::Done")
+                && d.message.contains("event_csv_row")),
+            "{out:?}"
+        );
+        assert!(out.iter().any(|d| d.message.contains("wildcard")), "{out:?}");
+    }
+
+    #[test]
+    fn event_csv_flags_missing_display_arm() {
+        let ev = EVENTS_OK.replace(
+            "RunEvent::Done { ok } => write!(f, \"{ok}\"),",
+            "_ => unreachable!(),",
+        );
+        let out = run_rule(
+            "event-csv-exhaustive",
+            vec![f("rust/src/coordinator/events.rs", &ev)],
+        );
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].message.contains("Display"), "{}", out[0].message);
+    }
+
+    // -- lock-discipline fixtures --
+
+    #[test]
+    fn lock_discipline_flags_raw_primitives() {
+        let bad = "use std::sync::Mutex;\n\
+            fn f() {\n\
+            \u{20}   let m = Mutex::new(0);\n\
+            \u{20}   let c = Condvar::new();\n\
+            \u{20}   *m.lock().unwrap() += 1;\n\
+            }\n";
+        let out = run_rule("lock-discipline", vec![f("rust/src/coordinator/x.rs", bad)]);
+        // use + Mutex::new + Condvar::new + lock().unwrap() — 4 sites.
+        assert_eq!(out.len(), 4, "{out:?}");
+    }
+
+    #[test]
+    fn lock_discipline_accepts_ranked_wrappers_and_other_modules() {
+        let good = "use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};\n\
+            fn f() {\n\
+            \u{20}   let m = OrderedMutex::new(LockRank::Store, 0);\n\
+            \u{20}   let cv = OrderedCondvar::new();\n\
+            \u{20}   *m.lock() += 1;\n\
+            }\n";
+        assert!(run_rule("lock-discipline", vec![f("rust/src/coordinator/x.rs", good)])
+            .is_empty());
+
+        // Raw locks outside the ranked modules (e.g. tests/) are not this
+        // rule's business.
+        let elsewhere = "fn f() { let _ = std::sync::Mutex::new(0); }\n";
+        assert!(run_rule("lock-discipline", vec![f("rust/tests/t.rs", elsewhere)])
+            .is_empty());
+    }
+
+    // -- whole-pipeline smoke over fixtures --
+
+    #[test]
+    fn analyze_runs_all_rules_and_sorts_output() {
+        let tree = Tree::from_files(vec![
+            f(
+                "rust/src/coordinator/z.rs",
+                "fn f() {\n    std::thread::sleep(d);\n    println!(\"x\");\n}\n",
+            ),
+        ]);
+        let out = analyze(&tree);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out[0].line <= out[1].line, "sorted by line");
+        assert!(out.iter().any(|d| d.rule == "no-sleep-sync"));
+        assert!(out.iter().any(|d| d.rule == "no-print-in-lib"));
+    }
+}

@@ -532,9 +532,10 @@ impl CheckpointWriter {
                     if total >= last_total.saturating_add(ctx2.every) {
                         match ctx2.write_now() {
                             Ok(t) => last_total = t,
-                            // Disk trouble must not kill the run; the next
-                            // publish retries. (Printing is the accept-loop
-                            // precedent for unreportable background errors.)
+                            // pff-allow(no-print-in-lib): disk trouble must
+                            // not kill the run (the next publish retries),
+                            // and the background writer holds no EventBus —
+                            // stderr is the only reporting channel.
                             Err(e) => eprintln!("[pff-checkpoint] write failed: {e:#}"),
                         }
                     }

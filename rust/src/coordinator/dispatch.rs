@@ -26,13 +26,13 @@
 //! thread).
 
 use std::collections::{BTreeSet, HashMap, HashSet};
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::events::{EventBus, RunEvent};
 use crate::coordinator::taskgraph::{Task, TaskGraph};
+use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum TaskState {
@@ -96,8 +96,8 @@ pub enum Poll {
 /// The shared task dispatcher — see the module docs.
 pub struct Dispatcher {
     graph: TaskGraph,
-    inner: Mutex<Inner>,
-    cond: Condvar,
+    inner: OrderedMutex<Inner>,
+    cond: OrderedCondvar,
     bus: EventBus,
     /// Whether idle workers may steal from peers' queues. Off for cluster
     /// runs without `ship_opt_state`: each worker process has a private
@@ -139,19 +139,22 @@ impl Dispatcher {
         }
         Dispatcher {
             graph,
-            inner: Mutex::new(Inner {
-                state,
-                blockers,
-                queues: HashMap::new(),
-                workers: Vec::new(),
-                busy: HashSet::new(),
-                groups,
-                limbo,
-                open: false,
-                closed: None,
-                done: 0,
-            }),
-            cond: Condvar::new(),
+            inner: OrderedMutex::new(
+                LockRank::Dispatcher,
+                Inner {
+                    state,
+                    blockers,
+                    queues: HashMap::new(),
+                    workers: Vec::new(),
+                    busy: HashSet::new(),
+                    groups,
+                    limbo,
+                    open: false,
+                    closed: None,
+                    done: 0,
+                },
+            ),
+            cond: OrderedCondvar::new(),
             bus,
             allow_steal,
             announce,
@@ -165,7 +168,7 @@ impl Dispatcher {
 
     /// Begin leasing tasks (admission gate satisfied).
     pub fn open(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.open = true;
         drop(g);
         self.cond.notify_all();
@@ -174,7 +177,7 @@ impl Dispatcher {
     /// Register a worker; its bucket of homed tasks becomes available and
     /// ready tasks rebalance across the new membership.
     pub fn worker_joined(&self, id: u32, name: &str) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let announce = if g.workers.contains(&id) {
             false
         } else {
@@ -194,7 +197,7 @@ impl Dispatcher {
     /// queues rebalance. Returns the `(chapter, layer)` cells that were
     /// requeued, for lease-expiry attribution.
     pub fn worker_left(&self, id: u32) -> Vec<(u32, usize)> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let was = g.workers.len();
         g.workers.retain(|w| *w != id);
         if g.workers.len() == was {
@@ -223,7 +226,7 @@ impl Dispatcher {
     /// `timeout` elapses (error).
     pub fn next_task(&self, worker: u32, timeout: Duration) -> Result<Option<Task>> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         loop {
             if let Some(reason) = &g.closed {
                 bail!("dispatcher closed: {reason}");
@@ -253,7 +256,7 @@ impl Dispatcher {
             if now >= deadline {
                 bail!("worker {worker}: no ready task within {timeout:?} (run stalled)");
             }
-            let (g2, _) = self.cond.wait_timeout(g, deadline - now).unwrap();
+            let (g2, _) = self.cond.wait_timeout(g, deadline - now);
             g = g2;
         }
     }
@@ -261,7 +264,7 @@ impl Dispatcher {
     /// Non-blocking task fetch (the TCP server's inline try before it
     /// parks a waiter thread).
     pub fn poll_task(&self, worker: u32) -> Result<Poll> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if let Some(reason) = &g.closed {
             bail!("dispatcher closed: {reason}");
         }
@@ -295,7 +298,7 @@ impl Dispatcher {
         busy_s: f64,
         wait_s: f64,
     ) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         // Bounds-check before indexing: `id` comes straight off the wire
         // (TASK_DONE), and a panic here would poison the dispatcher mutex
         // and kill the whole run on one malformed frame.
@@ -345,7 +348,7 @@ impl Dispatcher {
     /// someone else must run it. No-op when `worker` no longer holds the
     /// lease (e.g. `worker_left` already requeued it).
     pub fn release(&self, worker: u32, id: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if id >= g.state.len() || g.state[id] != TaskState::Leased(worker) {
             return;
         }
@@ -361,7 +364,7 @@ impl Dispatcher {
     /// the graph in dependency order, so a pre-completable task is always
     /// Ready. Emits nothing.
     pub fn precomplete(&self, id: usize) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         ensure!(
             id < g.state.len(),
             "precomplete: task id {id} out of range (graph has {} tasks)",
@@ -386,7 +389,7 @@ impl Dispatcher {
     /// or `timeout` elapses (error).
     pub fn wait_complete(&self, timeout: Duration) -> Result<()> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         loop {
             if let Some(reason) = &g.closed {
                 bail!("dispatcher closed: {reason}");
@@ -402,20 +405,20 @@ impl Dispatcher {
                     self.graph.len()
                 );
             }
-            let (g2, _) = self.cond.wait_timeout(g, deadline - now).unwrap();
+            let (g2, _) = self.cond.wait_timeout(g, deadline - now);
             g = g2;
         }
     }
 
     /// Tasks completed so far.
     pub fn completed(&self) -> usize {
-        self.inner.lock().unwrap().done
+        self.inner.lock().done
     }
 
     /// Abort the run: every parked and future call errors with `reason`
     /// (first close wins).
     pub fn close(&self, reason: &str) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if g.closed.is_none() {
             g.closed = Some(reason.to_string());
         }

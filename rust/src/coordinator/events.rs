@@ -16,12 +16,13 @@
 //! event exactly once.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::coordinator::registry::NodeInfo;
 use crate::metrics::LossCurve;
+use crate::sync::{LockRank, OrderedMutex};
 
 /// One typed progress event from a running experiment.
 #[derive(Clone, Debug)]
@@ -211,9 +212,15 @@ struct BusInner {
 
 /// Cheap-to-clone multi-consumer event bus (std `mpsc` fan-out plus
 /// callback observers). All clones share one stream.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct EventBus {
-    inner: Arc<Mutex<BusInner>>,
+    inner: Arc<OrderedMutex<BusInner>>,
+}
+
+impl Default for EventBus {
+    fn default() -> Self {
+        EventBus { inner: Arc::new(OrderedMutex::new(LockRank::Events, BusInner::default())) }
+    }
 }
 
 impl EventBus {
@@ -225,7 +232,7 @@ impl EventBus {
     /// Emit an event to every observer and subscriber.
     pub fn emit(&self, ev: RunEvent) {
         let observers: Vec<Observer> = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             g.history.push(ev.clone());
             // Channel sends happen under the lock so every subscriber sees
             // the exact global emission order; a dropped Receiver just
@@ -242,7 +249,7 @@ impl EventBus {
     /// subscribing after launch loses nothing.
     pub fn subscribe(&self) -> Receiver<RunEvent> {
         let (tx, rx) = channel();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         for ev in &g.history {
             let _ = tx.send(ev.clone());
         }
@@ -253,17 +260,17 @@ impl EventBus {
     /// Attach a callback observer (no replay — attach before launch to see
     /// everything).
     pub fn observe(&self, f: impl Fn(&RunEvent) + Send + Sync + 'static) {
-        self.inner.lock().unwrap().observers.push(Arc::new(f));
+        self.inner.lock().observers.push(Arc::new(f));
     }
 
     /// Snapshot of every event emitted so far (the replay history).
     pub fn history(&self) -> Vec<RunEvent> {
-        self.inner.lock().unwrap().history.clone()
+        self.inner.lock().history.clone()
     }
 
     /// Number of events emitted so far.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().history.len()
+        self.inner.lock().history.len()
     }
 
     /// True when nothing has been emitted yet.
@@ -290,9 +297,14 @@ impl EventBus {
 /// log.write_csv("metrics/events.csv")?;
 /// # Ok::<(), anyhow::Error>(())
 /// ```
-#[derive(Default)]
 pub struct EventLog {
-    events: Mutex<Vec<RunEvent>>,
+    events: OrderedMutex<Vec<RunEvent>>,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        EventLog { events: OrderedMutex::new(LockRank::Events, Vec::new()) }
+    }
 }
 
 impl EventLog {
@@ -303,19 +315,19 @@ impl EventLog {
 
     /// Record one event (observer body).
     pub fn record(&self, ev: &RunEvent) {
-        self.events.lock().unwrap().push(ev.clone());
+        self.events.lock().push(ev.clone());
     }
 
     /// Snapshot of everything recorded so far.
     pub fn snapshot(&self) -> Vec<RunEvent> {
-        self.events.lock().unwrap().clone()
+        self.events.lock().clone()
     }
 
     /// Fold the recorded `ChapterFinished` losses into a [`LossCurve`]
     /// (epoch-sorted; concurrent nodes emit out of order).
     pub fn chapter_curve(&self, epochs_per_chapter: u32) -> LossCurve {
         let mut curve = LossCurve::default();
-        for ev in self.events.lock().unwrap().iter() {
+        for ev in self.events.lock().iter() {
             if let RunEvent::ChapterFinished { chapter, loss, .. } = ev {
                 curve.push_chapter(*chapter, epochs_per_chapter, *loss);
             }
@@ -329,86 +341,10 @@ impl EventLog {
     /// compute/wait split so perf analyses can separate kernel time from
     /// store-wait time straight from `--event-csv` output.
     pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        let header = [
-            "event", "node", "layer", "chapter", "loss", "wire_bytes", "accuracy", "ok", "busy_s",
-            "wait_s",
-        ];
-        let rows: Vec<Vec<String>> = self.snapshot().iter().map(csv_row).collect();
-        crate::metrics::csv::write_csv(path, &header, &rows)
+        let rows: Vec<Vec<String>> =
+            self.snapshot().iter().map(crate::metrics::csv::event_csv_row).collect();
+        crate::metrics::csv::write_csv(path, crate::metrics::csv::EVENT_CSV_HEADER, &rows)
     }
-}
-
-fn csv_row(ev: &RunEvent) -> Vec<String> {
-    let mut row = vec![String::new(); 10];
-    match ev {
-        RunEvent::WorkersRegistered { workers } => {
-            row[0] = "workers_registered".into();
-            row[1] = workers.len().to_string();
-        }
-        RunEvent::ChapterStarted { node, layer, chapter } => {
-            row[0] = "chapter_started".into();
-            row[1] = node.to_string();
-            row[2] = layer.map(|l| l.to_string()).unwrap_or_default();
-            row[3] = chapter.to_string();
-        }
-        RunEvent::ChapterFinished { node, layer, chapter, loss, busy_s, wait_s } => {
-            row[0] = "chapter_finished".into();
-            row[1] = node.to_string();
-            row[2] = layer.map(|l| l.to_string()).unwrap_or_default();
-            row[3] = chapter.to_string();
-            row[4] = format!("{loss}");
-            row[8] = format!("{busy_s:.6}");
-            row[9] = format!("{wait_s:.6}");
-        }
-        RunEvent::LayerPublished { node, layer, chapter, wire_bytes } => {
-            row[0] = "layer_published".into();
-            row[1] = node.to_string();
-            row[2] = layer.to_string();
-            row[3] = chapter.to_string();
-            row[5] = wire_bytes.to_string();
-        }
-        RunEvent::HeadPublished { node, chapter, wire_bytes } => {
-            row[0] = "head_published".into();
-            row[1] = node.to_string();
-            row[3] = chapter.to_string();
-            row[5] = wire_bytes.to_string();
-        }
-        RunEvent::CheckpointWritten { wire_bytes, .. } => {
-            row[0] = "checkpoint_written".into();
-            row[5] = wire_bytes.to_string();
-        }
-        RunEvent::TaskStarted { worker, chapter, layer } => {
-            row[0] = "task_started".into();
-            row[1] = worker.to_string();
-            row[2] = layer.to_string();
-            row[3] = chapter.to_string();
-        }
-        RunEvent::TaskStolen { worker, from, chapter, layer } => {
-            row[0] = "task_stolen".into();
-            row[1] = worker.to_string();
-            row[2] = layer.to_string();
-            row[3] = chapter.to_string();
-            row[4] = from.to_string();
-        }
-        RunEvent::WorkerJoined { worker, .. } => {
-            row[0] = "worker_joined".into();
-            row[1] = worker.to_string();
-        }
-        RunEvent::WorkerLeft { worker, requeued } => {
-            row[0] = "worker_left".into();
-            row[1] = worker.to_string();
-            row[5] = requeued.to_string();
-        }
-        RunEvent::Eval { accuracy } => {
-            row[0] = "eval".into();
-            row[6] = format!("{accuracy}");
-        }
-        RunEvent::Done { ok } => {
-            row[0] = "done".into();
-            row[7] = ok.to_string();
-        }
-    }
-    row
 }
 
 #[cfg(test)]
@@ -452,12 +388,14 @@ mod tests {
     #[test]
     fn observers_see_every_event() {
         let bus = EventBus::new();
-        let n = Arc::new(Mutex::new(0usize));
+        // Observers run OUTSIDE the bus lock, so an observer may take an
+        // Events-ranked lock of its own without a rank violation.
+        let n = Arc::new(OrderedMutex::new(LockRank::Events, 0usize));
         let n2 = n.clone();
-        bus.observe(move |_| *n2.lock().unwrap() += 1);
+        bus.observe(move |_| *n2.lock() += 1);
         bus.emit(RunEvent::Eval { accuracy: 0.9 });
         bus.emit(RunEvent::Done { ok: true });
-        assert_eq!(*n.lock().unwrap(), 2);
+        assert_eq!(*n.lock(), 2);
     }
 
     #[test]
@@ -488,13 +426,14 @@ mod tests {
 
     #[test]
     fn task_and_membership_events_render() {
+        use crate::metrics::csv::event_csv_row;
         let s = RunEvent::TaskStolen { worker: 2, from: 0, chapter: 3, layer: 1 }.to_string();
         assert!(s.contains("worker 2") && s.contains("chapter 3") && s.contains("worker 0"), "{s}");
         assert_eq!(
-            csv_row(&RunEvent::TaskStarted { worker: 1, chapter: 4, layer: 2 })[..4],
+            event_csv_row(&RunEvent::TaskStarted { worker: 1, chapter: 4, layer: 2 })[..4],
             ["task_started".to_string(), "1".into(), "2".into(), "4".into()]
         );
-        let left = csv_row(&RunEvent::WorkerLeft { worker: 1, requeued: 3 });
+        let left = event_csv_row(&RunEvent::WorkerLeft { worker: 1, requeued: 3 });
         assert_eq!(left[0], "worker_left");
         assert_eq!(left[5], "3");
         let bus = EventBus::new();

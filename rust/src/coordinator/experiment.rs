@@ -18,7 +18,7 @@
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -38,14 +38,23 @@ use crate::data::{load_dataset, DataBundle, Dataset};
 use crate::engine::{factory_for, Engine};
 use crate::ff::ClassifierMode;
 use crate::metrics::{makespan, LossCurve, NodeReport, SpanRecorder};
+use crate::sync::{LockRank, OrderedMutex};
 use crate::transport::tcp::{StoreServer, TcpStoreClient};
 
 type CancelHook = Box<dyn Fn() + Send + Sync>;
 
-#[derive(Default)]
 struct CancelInner {
     flag: AtomicBool,
-    hooks: Mutex<Vec<CancelHook>>,
+    hooks: OrderedMutex<Vec<CancelHook>>,
+}
+
+impl Default for CancelInner {
+    fn default() -> Self {
+        CancelInner {
+            flag: AtomicBool::new(false),
+            hooks: OrderedMutex::new(LockRank::Cancel, Vec::new()),
+        }
+    }
 }
 
 /// Cooperative cancellation token shared between a [`RunHandle`] and the
@@ -62,7 +71,7 @@ impl CancelToken {
         if self.inner.flag.swap(true, Ordering::SeqCst) {
             return;
         }
-        let hooks = std::mem::take(&mut *self.inner.hooks.lock().unwrap());
+        let hooks = std::mem::take(&mut *self.inner.hooks.lock());
         for h in hooks {
             h();
         }
@@ -80,11 +89,11 @@ impl CancelToken {
             f();
             return;
         }
-        self.inner.hooks.lock().unwrap().push(Box::new(f));
+        self.inner.hooks.lock().push(Box::new(f));
         // Lost-wakeup guard: cancel() may have drained between the check
         // and the push — drain again under the tripped flag.
         if self.is_cancelled() {
-            let hooks = std::mem::take(&mut *self.inner.hooks.lock().unwrap());
+            let hooks = std::mem::take(&mut *self.inner.hooks.lock());
             for h in hooks {
                 h();
             }
@@ -372,8 +381,12 @@ fn run_session(
             (m.clone() as Arc<dyn ParamStore>, Some(m))
         }
     };
-    if let Some(m) = mem.clone() {
-        cancel.on_cancel(move || m.close());
+    {
+        // Every store — owned MemStore or injected test double — gets a
+        // close hook, so a cancelled run never sits out a parked blocking
+        // read's full timeout (ParamStore::close defaults to a no-op).
+        let s = store.clone();
+        cancel.on_cancel(move || s.close());
     }
     // Resume: rehydrate the store from the checkpoint BEFORE anything can
     // read it (nodes, workers, the checkpoint writer). The schedulers then

@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -32,6 +32,7 @@ use crate::ff::negative::{adaptive_neg_labels, random_wrong_labels};
 use crate::ff::overlay::{overlay_labels, overlay_neutral};
 use crate::ff::{FFLayer, FFNetwork, LinearHead, NegStrategy};
 use crate::metrics::{LossCurve, NodeReport, SpanKind, SpanRecorder};
+use crate::sync::{LockRank, OrderedMutex};
 use crate::tensor::{AdamState, Matrix, Rng};
 use crate::transport::tcp::TcpStoreClient;
 
@@ -53,9 +54,15 @@ mod stream {
 /// one bank; a cluster worker process has its own (the dispatcher only
 /// moves tasks across processes when `ship_opt_state` carries the moments
 /// on the wire).
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct OptBank {
-    inner: Arc<Mutex<HashMap<(usize, usize), AdamState>>>,
+    inner: Arc<OrderedMutex<HashMap<(usize, usize), AdamState>>>,
+}
+
+impl Default for OptBank {
+    fn default() -> Self {
+        OptBank { inner: Arc::new(OrderedMutex::new(LockRank::OptState, HashMap::new())) }
+    }
 }
 
 impl OptBank {
@@ -66,12 +73,12 @@ impl OptBank {
 
     /// Remove and return the state for `(home, slot)`, if present.
     pub fn take(&self, home: usize, slot: usize) -> Option<AdamState> {
-        self.inner.lock().unwrap().remove(&(home, slot))
+        self.inner.lock().remove(&(home, slot))
     }
 
     /// Store the state for `(home, slot)`.
     pub fn put(&self, home: usize, slot: usize, opt: AdamState) {
-        self.inner.lock().unwrap().insert((home, slot), opt);
+        self.inner.lock().insert((home, slot), opt);
     }
 }
 
@@ -692,6 +699,9 @@ pub fn run_worker(
 
     let bus = EventBus::new();
     if cfg.verbose {
+        // pff-allow(no-print-in-lib): this verbose-gated observer IS the
+        // bus consumer of a standalone worker process — there is no
+        // leader-side subscriber to forward these events to.
         bus.observe(|ev| eprintln!("[pff-worker] {ev}"));
     }
     let client = Arc::new(client);

@@ -17,10 +17,11 @@
 //! adopting, [`NodeRegistry::wait_for_done`] fails fast, naming the
 //! dropped node, instead of hanging the leader until the full timeout.
 
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};
 
 /// One registered worker.
 #[derive(Clone, Debug)]
@@ -61,8 +62,8 @@ struct RegistryInner {
 
 /// Membership + completion tracking for one training run.
 pub struct NodeRegistry {
-    inner: Mutex<RegistryInner>,
-    cv: Condvar,
+    inner: OrderedMutex<RegistryInner>,
+    cv: OrderedCondvar,
     /// `Some(n)`: node ids are bounded to `[0, n)` and at most `n`
     /// workers may hold a registration at once.
     capacity: Option<usize>,
@@ -77,7 +78,11 @@ impl Default for NodeRegistry {
 impl NodeRegistry {
     /// Fresh unbounded registry (tests, ad-hoc servers).
     pub fn new() -> Self {
-        NodeRegistry { inner: Mutex::default(), cv: Condvar::new(), capacity: None }
+        NodeRegistry {
+            inner: OrderedMutex::new(LockRank::Registry, RegistryInner::default()),
+            cv: OrderedCondvar::new(),
+            capacity: None,
+        }
     }
 
     /// Registry for an `n`-node cluster: requested ids must be `< n`, and
@@ -85,14 +90,18 @@ impl NodeRegistry {
     /// mis-launched `--node-id 7` fails fast at `HELLO` instead of
     /// satisfying the leader's membership count with a bogus node.
     pub fn with_capacity(n: usize) -> Self {
-        NodeRegistry { inner: Mutex::default(), cv: Condvar::new(), capacity: Some(n) }
+        NodeRegistry {
+            inner: OrderedMutex::new(LockRank::Registry, RegistryInner::default()),
+            cv: OrderedCondvar::new(),
+            capacity: Some(n),
+        }
     }
 
     /// Register a worker. `requested = Some(id)` claims a specific node
     /// index (rejected when already taken); `None` auto-assigns the
     /// smallest free index.
     pub fn register(&self, requested: Option<u32>, name: &str) -> Result<u32> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if g.closed {
             bail!("registry closed (run cancelled or finished)");
         }
@@ -132,20 +141,20 @@ impl NodeRegistry {
     /// stay vacant before [`NodeRegistry::wait_for_done`] gives up on the
     /// run. Unset, a dropped worker simply runs out the caller's timeout.
     pub fn set_lease(&self, lease: Duration) {
-        self.inner.lock().unwrap().lease = Some(lease);
+        self.inner.lock().lease = Some(lease);
         self.cv.notify_all();
     }
 
     /// Node ids currently vacated by mid-run disconnects (awaiting a
     /// replacement under the reconnect lease).
     pub fn vacancies(&self) -> Vec<NodeInfo> {
-        self.inner.lock().unwrap().vacancies.iter().map(|v| v.info.clone()).collect()
+        self.inner.lock().vacancies.iter().map(|v| v.info.clone()).collect()
     }
 
     /// Record node `id`'s `DONE`. Duplicate DONEs are an error — the
     /// completion count must never run ahead of actual worker completion.
     pub fn mark_done(&self, id: u32) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let Some(w) = g.workers.iter_mut().find(|w| w.info.id == id) else {
             bail!("DONE from unregistered node {id}");
         };
@@ -170,7 +179,7 @@ impl NodeRegistry {
     /// task cells the worker held dispatcher leases on at the drop —
     /// [`NodeRegistry::wait_for_done`]'s lease-expiry error names them.
     pub fn disconnect_with_tasks(&self, id: u32, tasks: Vec<(u32, usize)>) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if let Some(pos) = g.workers.iter().position(|w| w.info.id == id && !w.done) {
             let entry = g.workers.remove(pos);
             g.vacancies.push(Vacancy { info: entry.info, since: Instant::now(), tasks });
@@ -184,7 +193,7 @@ impl NodeRegistry {
     /// its last task finished (but before its `DONE` landed) must not
     /// fail the run's final completion park.
     pub fn settle_vacancies(&self) {
-        self.inner.lock().unwrap().vacancies.clear();
+        self.inner.lock().vacancies.clear();
         self.cv.notify_all();
     }
 
@@ -193,23 +202,23 @@ impl NodeRegistry {
     /// registrations are refused. Idempotent; `RunHandle::cancel` uses
     /// this to unpark a cluster leader promptly.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.inner.lock().closed = true;
         self.cv.notify_all();
     }
 
     /// Snapshot of the registered workers.
     pub fn workers(&self) -> Vec<NodeInfo> {
-        self.inner.lock().unwrap().workers.iter().map(|w| w.info.clone()).collect()
+        self.inner.lock().workers.iter().map(|w| w.info.clone()).collect()
     }
 
     /// Registered-worker count.
     pub fn worker_count(&self) -> usize {
-        self.inner.lock().unwrap().workers.len()
+        self.inner.lock().workers.len()
     }
 
     /// Count of workers that reported `DONE`.
     pub fn done_count(&self) -> usize {
-        self.inner.lock().unwrap().workers.iter().filter(|w| w.done).count()
+        self.inner.lock().workers.iter().filter(|w| w.done).count()
     }
 
     /// Park until at least `n` workers have registered.
@@ -227,7 +236,7 @@ impl NodeRegistry {
     /// node — the leader does not sit out the full timeout for a node
     /// that provably is not coming back.
     pub fn wait_for_done(&self, n: usize, timeout: Duration) -> Result<()> {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock();
         let deadline = Instant::now() + timeout;
         loop {
             if guard.closed {
@@ -270,7 +279,7 @@ impl NodeRegistry {
                 }
             }
             let dur = wake.saturating_duration_since(now).max(Duration::from_millis(1));
-            let (g, _) = self.cv.wait_timeout(guard, dur).unwrap();
+            let (g, _) = self.cv.wait_timeout(guard, dur);
             guard = g;
         }
     }
@@ -281,7 +290,7 @@ impl NodeRegistry {
         what: &str,
         mut probe: impl FnMut(&RegistryInner) -> Option<T>,
     ) -> Result<T> {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock();
         let deadline = Instant::now() + timeout;
         loop {
             if guard.closed {
@@ -294,7 +303,7 @@ impl NodeRegistry {
             if now >= deadline {
                 bail!("registry: timed out after {timeout:?} waiting for {what}");
             }
-            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now);
             guard = g;
         }
     }
@@ -415,9 +424,11 @@ mod tests {
         r.register(Some(1), "b").unwrap();
         r.mark_done(0).unwrap();
         // Pre-done disconnect opens a vacancy whose 1ms lease would fail
-        // the park below; settling clears it so completion succeeds.
+        // the park below; park on the Condvar until the lease provably
+        // expired (no sleep-based timing), then settle it.
         r.disconnect_with_tasks(1, vec![(0, 0)]);
-        std::thread::sleep(Duration::from_millis(5));
+        let err = r.wait_for_done(2, Duration::from_secs(60)).unwrap_err();
+        assert!(err.to_string().contains("reconnect lease"), "{err}");
         r.settle_vacancies();
         assert!(r.vacancies().is_empty());
         r.wait_for_done(1, Duration::from_millis(50)).unwrap();

@@ -51,7 +51,7 @@ pub mod all_layers;
 pub mod single_layer;
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Result};
 
@@ -59,6 +59,7 @@ use crate::config::{ExperimentConfig, Scheduler as SchedulerKind};
 use crate::coordinator::node::NodeCtx;
 use crate::coordinator::store::ParamStore;
 use crate::coordinator::taskgraph::{Task, TaskGraph};
+use crate::sync::{LockRank, OrderedMutex};
 
 /// Store "layer index" namespace for PerfOpt per-layer heads: head of FF
 /// layer `l` is published under slot `HEAD_SLOT_BASE + l`. Keeps the store
@@ -358,9 +359,14 @@ type SchedulerFactory = Box<dyn Fn() -> Arc<dyn Scheduler> + Send + Sync>;
 /// with the paper's four strategies; anything with access to the crate
 /// (binaries, benches, tests) can [`SchedulerRegistry::register`] more and
 /// select them via `Experiment::builder().scheduler_named(..)`.
-#[derive(Default)]
 pub struct SchedulerRegistry {
-    inner: Mutex<HashMap<String, SchedulerFactory>>,
+    inner: OrderedMutex<HashMap<String, SchedulerFactory>>,
+}
+
+impl Default for SchedulerRegistry {
+    fn default() -> Self {
+        SchedulerRegistry { inner: OrderedMutex::new(LockRank::SchedRegistry, HashMap::new()) }
+    }
 }
 
 impl SchedulerRegistry {
@@ -389,10 +395,7 @@ impl SchedulerRegistry {
     where
         F: Fn() -> Arc<dyn Scheduler> + Send + Sync + 'static,
     {
-        self.inner
-            .lock()
-            .unwrap()
-            .insert(name.to_ascii_lowercase(), Box::new(factory));
+        self.inner.lock().insert(name.to_ascii_lowercase(), Box::new(factory));
     }
 
     /// Construct the scheduler registered under `name`. An exact
@@ -402,7 +405,7 @@ impl SchedulerRegistry {
     /// so registering a custom scheduler under an alias is honored, not
     /// silently shadowed by the enum.
     pub fn resolve(&self, name: &str) -> Result<Arc<dyn Scheduler>> {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         if let Some(f) = g.get(&name.to_ascii_lowercase()) {
             return Ok(f());
         }
@@ -418,7 +421,7 @@ impl SchedulerRegistry {
 
     /// Registered names, sorted.
     pub fn names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.inner.lock().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = self.inner.lock().keys().cloned().collect();
         v.sort_unstable();
         v
     }

@@ -22,13 +22,14 @@
 //! [`crate::transport::tcp`], workers use `TcpStoreClient`).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::ff::{FFLayer, LinearHead};
 use crate::metrics::CommStats;
+use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};
 use crate::tensor::adam::AdamConfig;
 use crate::tensor::{AdamState, Matrix};
 
@@ -313,6 +314,13 @@ pub trait ParamStore: Send + Sync {
     fn has_neg(&self, _chapter: u32) -> Result<bool> {
         Ok(false)
     }
+
+    /// Unblock every parked blocking read (run cancellation). The session
+    /// driver registers this as a cancel hook for *every* store — injected
+    /// test doubles included — so a cancelled run never sits out a
+    /// parked `get_layer`'s full timeout. Stores without a close notion
+    /// may keep the no-op default.
+    fn close(&self) {}
 }
 
 /// A consistent snapshot of everything a [`MemStore`] holds — the store
@@ -355,12 +363,20 @@ struct MemInner {
     version: u64,
 }
 
-/// In-process [`ParamStore`] (Mutex + Condvar, `Arc` copy-on-write
-/// entries).
-#[derive(Default)]
+/// In-process [`ParamStore`] ([`OrderedMutex`] + [`OrderedCondvar`] at
+/// [`LockRank::Store`], `Arc` copy-on-write entries).
 pub struct MemStore {
-    inner: Mutex<MemInner>,
-    cv: Condvar,
+    inner: OrderedMutex<MemInner>,
+    cv: OrderedCondvar,
+}
+
+impl Default for MemStore {
+    fn default() -> Self {
+        MemStore {
+            inner: OrderedMutex::new(LockRank::Store, MemInner::default()),
+            cv: OrderedCondvar::new(),
+        }
+    }
 }
 
 impl MemStore {
@@ -374,13 +390,26 @@ impl MemStore {
     /// and non-blocking probes keep working (final assembly still reads
     /// whatever was published before the close).
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.inner.lock().closed = true;
         self.cv.notify_all();
+    }
+
+    /// Panic while holding the store lock, poisoning the underlying
+    /// `std::sync::Mutex`. Test-only: pins the [`OrderedMutex`] recovery
+    /// contract — a publisher crash must not cascade into every other
+    /// store user.
+    #[cfg(test)]
+    pub(crate) fn poison_for_test(&self) {
+        let s = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = self.inner.lock();
+            panic!("deliberate panic while holding the store lock");
+        }));
+        assert!(s.is_err());
     }
 
     /// Whether [`MemStore::close`] was called.
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        self.inner.lock().closed
     }
 
     fn wait_for<T>(
@@ -389,7 +418,7 @@ impl MemStore {
         what: &str,
         mut probe: impl FnMut(&mut MemInner) -> Option<T>,
     ) -> Result<T> {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock();
         if guard.closed {
             anyhow::bail!("store closed while waiting for {what}");
         }
@@ -405,7 +434,7 @@ impl MemStore {
             if now >= deadline {
                 break Err(anyhow::anyhow!("store: timed out after {timeout:?} waiting for {what}"));
             }
-            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now);
             guard = g;
             if guard.closed {
                 break Err(anyhow::anyhow!("store closed while waiting for {what}"));
@@ -425,7 +454,7 @@ impl MemStore {
     /// publisher waits on the same Condvar until the reader is provably
     /// parked, so there is no timing guesswork and no poll interval.
     pub fn wait_for_waiters(&self, n: usize, timeout: Duration) -> Result<()> {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock();
         let deadline = std::time::Instant::now() + timeout;
         while guard.waiting < n {
             let now = std::time::Instant::now();
@@ -435,7 +464,7 @@ impl MemStore {
                     guard.waiting
                 );
             }
-            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now);
             guard = g;
         }
         Ok(())
@@ -443,19 +472,19 @@ impl MemStore {
 
     /// Threads currently parked inside a blocking get.
     pub fn waiter_count(&self) -> usize {
-        self.inner.lock().unwrap().waiting
+        self.inner.lock().waiting
     }
 
     /// Current change-counter value (see [`MemStore::wait_version_change`]).
     pub fn version(&self) -> u64 {
-        self.inner.lock().unwrap().version
+        self.inner.lock().version
     }
 
     /// Bump the change counter without publishing anything — wakes
     /// [`MemStore::wait_version_change`] parkers. The checkpoint writer's
     /// `finish()` uses this to unpark its thread promptly.
     pub fn touch(&self) {
-        self.inner.lock().unwrap().version += 1;
+        self.inner.lock().version += 1;
         self.cv.notify_all();
     }
 
@@ -469,14 +498,14 @@ impl MemStore {
     /// — the checkpoint writer's final dump depends on this. "Closed" is
     /// only an error when nothing changed since `seen`.
     pub fn wait_version_change(&self, seen: u64, timeout: Duration) -> Result<u64> {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock();
         let deadline = std::time::Instant::now() + timeout;
         while guard.version == seen && !guard.closed {
             let now = std::time::Instant::now();
             if now >= deadline {
                 return Ok(guard.version);
             }
-            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now);
             guard = g;
         }
         if guard.version != seen {
@@ -492,7 +521,7 @@ impl MemStore {
     /// the returned dump happens with no lock held at all. Does not count
     /// toward [`CommStats`].
     pub fn dump(&self) -> StoreDump {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         let mut layers: Vec<(usize, u32, Arc<LayerParams>)> =
             g.layers.iter().map(|(&(l, c), p)| (l, c, Arc::clone(p))).collect();
         layers.sort_by_key(|&(l, c, _)| (l, c));
@@ -510,7 +539,7 @@ impl MemStore {
     /// parameters were never on the wire in this run. Wakes every waiter,
     /// exactly like a publish.
     pub fn restore(&self, dump: StoreDump) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         for (l, c, p) in dump.layers {
             g.layers.insert((l, c), p);
         }
@@ -530,7 +559,7 @@ impl MemStore {
     /// Backs the v2+ wire protocol's immediate `GET_LAYER` and the
     /// `WAIT_LAYER` fast path (see `transport/PROTOCOL.md`).
     pub fn try_layer(&self, layer: usize, chapter: u32) -> Option<Arc<LayerParams>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let p = g.layers.get(&(layer, chapter)).cloned()?;
         g.stats.gets += 1;
         g.stats.bytes_get += p.wire_bytes();
@@ -539,7 +568,7 @@ impl MemStore {
 
     /// Non-blocking fetch: the head at `chapter` if already published.
     pub fn try_head(&self, chapter: u32) -> Option<Arc<HeadParams>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let p = g.heads.get(&chapter).cloned()?;
         g.stats.gets += 1;
         g.stats.bytes_get += p.wire_bytes();
@@ -548,7 +577,7 @@ impl MemStore {
 
     /// Non-blocking fetch: negative labels at `chapter` if published.
     pub fn try_neg(&self, chapter: u32) -> Option<Arc<Vec<u8>>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let p = g.negs.get(&chapter).cloned()?;
         g.stats.gets += 1;
         g.stats.bytes_get += p.len() as u64;
@@ -559,7 +588,7 @@ impl MemStore {
 impl ParamStore for MemStore {
     fn put_layer(&self, layer: usize, chapter: u32, params: LayerParams) -> Result<()> {
         let params = Arc::new(params);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.stats.puts += 1;
         g.stats.bytes_put += params.wire_bytes();
         g.layers.insert((layer, chapter), params);
@@ -583,7 +612,7 @@ impl ParamStore for MemStore {
 
     fn put_head(&self, chapter: u32, params: HeadParams) -> Result<()> {
         let params = Arc::new(params);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.stats.puts += 1;
         g.stats.bytes_put += params.wire_bytes();
         g.heads.insert(chapter, params);
@@ -604,7 +633,7 @@ impl ParamStore for MemStore {
 
     fn put_neg(&self, chapter: u32, labels: Vec<u8>) -> Result<()> {
         let labels = Arc::new(labels);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.stats.puts += 1;
         g.stats.bytes_put += labels.len() as u64;
         g.negs.insert(chapter, labels);
@@ -624,7 +653,7 @@ impl ParamStore for MemStore {
     }
 
     fn latest_layer(&self, layer: usize) -> Result<Option<(u32, Arc<LayerParams>)>> {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         Ok(g.layers
             .iter()
             .filter(|((l, _), _)| *l == layer)
@@ -633,12 +662,12 @@ impl ParamStore for MemStore {
     }
 
     fn latest_head(&self) -> Result<Option<(u32, Arc<HeadParams>)>> {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         Ok(g.heads.iter().max_by_key(|(c, _)| **c).map(|(c, p)| (*c, Arc::clone(p))))
     }
 
     fn comm_stats(&self) -> CommStats {
-        self.inner.lock().unwrap().stats
+        self.inner.lock().stats
     }
 
     fn put_layer_delta(
@@ -652,7 +681,7 @@ impl ParamStore for MemStore {
         // full layer with NO lock held, then insert. CommStats counts the
         // delta's wire size — that is what actually shipped.
         let base = {
-            let g = self.inner.lock().unwrap();
+            let g = self.inner.lock();
             match g.layers.get(&(layer, base_chapter)) {
                 Some(p) => Arc::clone(p),
                 None => bail!(
@@ -661,7 +690,7 @@ impl ParamStore for MemStore {
             }
         };
         let full = Arc::new(delta.apply(&base)?);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.stats.puts += 1;
         g.stats.bytes_put += delta.wire_bytes();
         g.layers.insert((layer, chapter), full);
@@ -677,15 +706,19 @@ impl ParamStore for MemStore {
 
     // Exact presence probes (no clone, no stats — nothing ships).
     fn has_layer(&self, layer: usize, chapter: u32) -> Result<bool> {
-        Ok(self.inner.lock().unwrap().layers.contains_key(&(layer, chapter)))
+        Ok(self.inner.lock().layers.contains_key(&(layer, chapter)))
     }
 
     fn has_head(&self, chapter: u32) -> Result<bool> {
-        Ok(self.inner.lock().unwrap().heads.contains_key(&chapter))
+        Ok(self.inner.lock().heads.contains_key(&chapter))
     }
 
     fn has_neg(&self, chapter: u32) -> Result<bool> {
-        Ok(self.inner.lock().unwrap().negs.contains_key(&chapter))
+        Ok(self.inner.lock().negs.contains_key(&chapter))
+    }
+
+    fn close(&self) {
+        MemStore::close(self)
     }
 }
 
@@ -986,5 +1019,24 @@ mod tests {
         let d2 = LayerDelta::diff(&base, &next).unwrap();
         assert!(s.put_layer_delta(3, 1, 0, d2).is_err());
         assert!(s.supports_deltas());
+    }
+
+    #[test]
+    fn poisoned_store_lock_recovers_for_publishers_and_dumpers() {
+        // A thread panicking while holding the store lock must not
+        // cascade: OrderedMutex recovers the poisoned guard, so later
+        // publishers, probes, and the checkpoint dumper all keep working
+        // (the PR 6 review found exactly this poisoning failure mode).
+        let s = Arc::new(MemStore::new());
+        s.put_layer(0, 0, params(1)).unwrap();
+        let s2 = s.clone();
+        std::thread::spawn(move || s2.poison_for_test()).join().unwrap();
+
+        s.put_layer(1, 0, params(2)).unwrap(); // publisher continues
+        assert!(s.has_layer(1, 0).unwrap());
+        assert_eq!(s.dump().layers.len(), 2); // dumper continues
+        let got = s.get_layer(0, 0, Duration::from_millis(10)).unwrap();
+        assert_eq!(got.w, params(1).w);
+        assert_eq!(s.comm_stats().puts, 2);
     }
 }

@@ -67,6 +67,7 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+pub mod analyze;
 pub mod bench_util;
 pub mod baselines;
 pub mod config;
@@ -79,6 +80,7 @@ pub mod metrics;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sim;
+pub mod sync;
 pub mod tensor;
 pub mod testing;
 pub mod transport;

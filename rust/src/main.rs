@@ -8,6 +8,7 @@
 //! pff fig3    [--scale quick|reduced]             split-count study
 //! pff simulate --variant all-layers [--nodes N]   DES at paper scale
 //! pff inspect-artifacts [--artifact_dir DIR]      list AOT artifacts
+//! pff analyze [--json] [PATHS]                    repo-invariant static analysis
 //! pff help
 //! ```
 //!
@@ -63,6 +64,7 @@ fn run(args: &[String]) -> Result<()> {
         "fig3" => cmd_fig3(rest),
         "simulate" => cmd_simulate(rest),
         "inspect-artifacts" => cmd_inspect(rest),
+        "analyze" => cmd_analyze(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -87,7 +89,10 @@ fn print_help() {
          \u{20}  figures            render Figures 1/2/4/5/6 (DES Gantt charts)\n\
          \u{20}  fig3               split-count accuracy study (Figure 3)\n\
          \u{20}  simulate           DES one schedule at paper scale (--variant, --nodes, --neg)\n\
-         \u{20}  inspect-artifacts  list AOT artifacts and compile them\n\n\
+         \u{20}  inspect-artifacts  list AOT artifacts and compile them\n\
+         \u{20}  analyze            repo-invariant static analysis (--json for machine output;\n\
+         \u{20}                     optional PATHS override the default src/tests/examples roots;\n\
+         \u{20}                     exits nonzero on any finding — see README \"Static analysis\")\n\n\
          config keys (train): scheduler, neg, classifier, perfopt, dims, epochs, splits,\n\
          \u{20}  nodes, batch, dataset, engine, transport, seed, theta, lr_ff, lr_head,\n\
          \u{20}  threads (kernel worker threads; 0 = auto via PFF_THREADS env or all cores;\n\
@@ -437,4 +442,56 @@ fn cmd_inspect(_args: &[String]) -> Result<()> {
         "inspect-artifacts needs the PJRT runtime — rebuild with \
          `cargo build --features xla` (see README \"Build matrix\")"
     )
+}
+
+/// `pff analyze [--json] [PATHS]` — run the repo-invariant analyzer.
+///
+/// With no PATHS the default roots (`rust/src`, `rust/tests`,
+/// `examples/`, `README.md`) are scanned; explicit PATHS (files or
+/// directories) narrow the tree, and rules whose anchor files fall
+/// outside it simply report nothing. Exits nonzero on any finding, so
+/// the CI job is just this command.
+fn cmd_analyze(args: &[String]) -> Result<()> {
+    let mut json = false;
+    let mut paths: Vec<std::path::PathBuf> = Vec::new();
+    for a in args {
+        match a.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("pff analyze [--json] [PATHS]\n\nrules:");
+                for r in pff::analyze::rules::ALL {
+                    println!("  {:<22} {}", r.id, r.summary);
+                }
+                println!(
+                    "\nsuppress a finding at the site with\n  \
+                     // pff-allow(rule-id): reason\non the line or in the \
+                     comment block directly above it."
+                );
+                return Ok(());
+            }
+            other if other.starts_with("--") => {
+                bail!("analyze: unknown flag '{other}' (try `pff analyze --help`)")
+            }
+            other => paths.push(other.into()),
+        }
+    }
+    let roots = if paths.is_empty() { pff::analyze::default_roots()? } else { paths };
+    let tree = pff::analyze::Tree::load(&roots)?;
+    let findings = pff::analyze::analyze(&tree);
+    if json {
+        println!("{}", pff::analyze::render_json(&findings));
+    } else {
+        print!("{}", pff::analyze::render_human(&findings));
+        println!(
+            "analyze: {} finding(s) over {} file(s), {} rule(s)",
+            findings.len(),
+            tree.files().len(),
+            pff::analyze::rules::ALL.len()
+        );
+    }
+    if findings.is_empty() {
+        Ok(())
+    } else {
+        bail!("analyze: {} finding(s)", findings.len())
+    }
 }

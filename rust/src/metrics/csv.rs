@@ -1,9 +1,13 @@
-//! Tiny CSV writer for experiment outputs (no serde offline).
+//! Tiny CSV writer for experiment outputs (no serde offline), plus the
+//! canonical [`RunEvent`] → CSV row projection consumed by
+//! `EventLog::write_csv` / `pff train --event-csv`.
 
 use std::io::Write;
 use std::path::Path;
 
 use anyhow::{Context, Result};
+
+use crate::coordinator::events::RunEvent;
 
 /// Write rows of stringifiable cells to `path`, with a header.
 pub fn write_csv(
@@ -34,6 +38,92 @@ pub fn write_csv(
         writeln!(f, "{}", escaped.join(","))?;
     }
     Ok(())
+}
+
+/// Column order of the event CSV. Every [`event_csv_row`] fills exactly
+/// these ten cells (empty where a column does not apply).
+pub const EVENT_CSV_HEADER: &[&str] = &[
+    "event", "node", "layer", "chapter", "loss", "wire_bytes", "accuracy", "ok", "busy_s",
+    "wait_s",
+];
+
+/// Project one [`RunEvent`] onto the [`EVENT_CSV_HEADER`] columns.
+///
+/// Exhaustive over the `RunEvent` enum by construction (no `_` arm), and
+/// checked against the variant list by the `event-csv-exhaustive` rule of
+/// `pff analyze` — adding a variant without a row here is a CI failure,
+/// not a silently-empty CSV column.
+pub fn event_csv_row(ev: &RunEvent) -> Vec<String> {
+    let mut row = vec![String::new(); EVENT_CSV_HEADER.len()];
+    match ev {
+        RunEvent::WorkersRegistered { workers } => {
+            row[0] = "workers_registered".into();
+            row[1] = workers.len().to_string();
+        }
+        RunEvent::ChapterStarted { node, layer, chapter } => {
+            row[0] = "chapter_started".into();
+            row[1] = node.to_string();
+            row[2] = layer.map(|l| l.to_string()).unwrap_or_default();
+            row[3] = chapter.to_string();
+        }
+        RunEvent::ChapterFinished { node, layer, chapter, loss, busy_s, wait_s } => {
+            row[0] = "chapter_finished".into();
+            row[1] = node.to_string();
+            row[2] = layer.map(|l| l.to_string()).unwrap_or_default();
+            row[3] = chapter.to_string();
+            row[4] = format!("{loss}");
+            row[8] = format!("{busy_s:.6}");
+            row[9] = format!("{wait_s:.6}");
+        }
+        RunEvent::LayerPublished { node, layer, chapter, wire_bytes } => {
+            row[0] = "layer_published".into();
+            row[1] = node.to_string();
+            row[2] = layer.to_string();
+            row[3] = chapter.to_string();
+            row[5] = wire_bytes.to_string();
+        }
+        RunEvent::HeadPublished { node, chapter, wire_bytes } => {
+            row[0] = "head_published".into();
+            row[1] = node.to_string();
+            row[3] = chapter.to_string();
+            row[5] = wire_bytes.to_string();
+        }
+        RunEvent::CheckpointWritten { wire_bytes, .. } => {
+            row[0] = "checkpoint_written".into();
+            row[5] = wire_bytes.to_string();
+        }
+        RunEvent::TaskStarted { worker, chapter, layer } => {
+            row[0] = "task_started".into();
+            row[1] = worker.to_string();
+            row[2] = layer.to_string();
+            row[3] = chapter.to_string();
+        }
+        RunEvent::TaskStolen { worker, from, chapter, layer } => {
+            row[0] = "task_stolen".into();
+            row[1] = worker.to_string();
+            row[2] = layer.to_string();
+            row[3] = chapter.to_string();
+            row[4] = from.to_string();
+        }
+        RunEvent::WorkerJoined { worker, .. } => {
+            row[0] = "worker_joined".into();
+            row[1] = worker.to_string();
+        }
+        RunEvent::WorkerLeft { worker, requeued } => {
+            row[0] = "worker_left".into();
+            row[1] = worker.to_string();
+            row[5] = requeued.to_string();
+        }
+        RunEvent::Eval { accuracy } => {
+            row[0] = "eval".into();
+            row[6] = format!("{accuracy}");
+        }
+        RunEvent::Done { ok } => {
+            row[0] = "done".into();
+            row[7] = ok.to_string();
+        }
+    }
+    row
 }
 
 #[cfg(test)]

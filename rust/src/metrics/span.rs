@@ -226,6 +226,8 @@ mod tests {
         let mut rec = SpanRecorder::new(Instant::now(), 0);
         rec.time(SpanKind::Train, 0, 0, || {});
         let mark = rec.mark();
+        // pff-allow(no-sleep-sync): the sleep IS the measured workload
+        // here (a span must have nonzero duration), not a wait.
         let nap = || std::thread::sleep(std::time::Duration::from_millis(2));
         rec.time(SpanKind::Train, 0, 1, nap);
         rec.time(SpanKind::WaitLayer, 0, 1, nap);
@@ -240,6 +242,7 @@ mod tests {
     #[test]
     fn recorder_orders_spans() {
         let mut rec = SpanRecorder::new(Instant::now(), 3);
+        // pff-allow(no-sleep-sync): the sleep is the measured workload.
         rec.time(SpanKind::Train, 0, 0, || std::thread::sleep(std::time::Duration::from_millis(2)));
         rec.time(SpanKind::Publish, 0, 0, || {});
         let rep = rec.finish();

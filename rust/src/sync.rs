@@ -1,0 +1,400 @@
+//! Ranked synchronization primitives: [`OrderedMutex`] / [`OrderedCondvar`].
+//!
+//! Every lock in the coordinator/transport layer carries a static
+//! [`LockRank`]; a thread may only acquire a lock of *strictly greater*
+//! rank than every lock it already holds. Under `debug_assertions` a
+//! thread-local stack of held ranks asserts this on every acquisition —
+//! a cheap runtime deadlock detector that rides along in every existing
+//! test. Release builds compile the checks out entirely.
+//!
+//! The wrappers also absorb lock poisoning: a thread that panics while
+//! holding a guard poisons the underlying `std` lock, and the historical
+//! `.lock().unwrap()` idiom then cascades that one panic through every
+//! other thread touching the lock (publishers, checkpoint dumpers, the
+//! event bus). [`OrderedMutex::lock`] instead recovers the inner guard
+//! with a one-time warning — the protected state is still structurally
+//! sound (every mutation in this codebase is a single insert/remove),
+//! so the run degrades to "one worker died" instead of a panic storm.
+//!
+//! The `lock-discipline` rule of `pff analyze` keeps raw
+//! `Mutex`/`Condvar` out of the coordinator/transport modules, so new
+//! lock sites are forced through this file and into the rank table.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// The global lock-acquisition order, smallest first (e.g.
+/// `Registry < Dispatcher < Store < Events < Pool`). Holding rank R, a
+/// thread may only acquire ranks strictly greater than R — so any cycle
+/// between two threads requires one of them to acquire downward, which
+/// the debug checker catches on the spot.
+///
+/// The discriminants are spaced so a new subsystem can slot between two
+/// existing ranks without renumbering the table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum LockRank {
+    /// [`crate::coordinator::experiment::CancelToken`] hook list. Hooks
+    /// run *after* the guard drops, so this rank never pins another.
+    Cancel = 0,
+    /// Cluster membership — `coordinator/registry.rs`. Held while
+    /// requeueing a dead worker's leases into the dispatcher.
+    Registry = 10,
+    /// Task-graph work buckets — `coordinator/dispatch.rs`.
+    Dispatcher = 20,
+    /// The parameter store — `coordinator/store.rs`.
+    Store = 30,
+    /// Event bus + event log — `coordinator/events.rs`. Observers run
+    /// outside the bus lock, so emission nests under nothing.
+    Events = 40,
+    /// The scheduler name registry — `coordinator/schedulers/mod.rs`.
+    SchedRegistry = 50,
+    /// Per-home Adam-state bank — `coordinator/node.rs`.
+    OptState = 60,
+    /// TCP client death flag; held (via `if let`) while draining the
+    /// pending map, so it ranks below [`LockRank::ConnPending`].
+    ConnDead = 70,
+    /// TCP connection write half (server replies, client requests);
+    /// held while unwinding a failed write from the pending map.
+    ConnWriter = 71,
+    /// TCP client pending-response map — the innermost transport lock.
+    ConnPending = 72,
+    /// Kernel worker-pool internals — `tensor/pool.rs`. The pool's
+    /// queue/latch/bookkeeping locks are never held simultaneously, so
+    /// one terminal rank covers all three.
+    Pool = 90,
+}
+
+impl fmt::Display for LockRank {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+#[cfg(debug_assertions)]
+mod rank_check {
+    use super::LockRank;
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// Ranks this thread currently holds, in acquisition order.
+        /// Guards may drop out of order, so violation checks compare
+        /// against the *maximum* held rank, not the top of the stack.
+        static HELD: RefCell<Vec<LockRank>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Assert `rank` may be acquired now, and record it. Called *before*
+    /// the underlying acquisition, so a violation panics cleanly instead
+    /// of deadlocking first.
+    pub(super) fn acquire(rank: LockRank) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(&top) = held.iter().max() {
+                assert!(
+                    rank > top,
+                    "lock-rank violation: acquiring {rank:?} while holding {top:?} \
+                     — the global order is declared in sync.rs (LockRank)"
+                );
+            }
+            held.push(rank);
+        });
+    }
+
+    /// Forget one held instance of `rank` (guard dropped or parked in a
+    /// condvar wait).
+    pub(super) fn release(rank: LockRank) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(i) = held.iter().rposition(|&r| r == rank) {
+                held.remove(i);
+            }
+        });
+    }
+}
+
+/// Recover the guard from a poisoned lock instead of propagating the
+/// original panic into every other thread (warns once per process).
+fn recover<G>(res: Result<G, PoisonError<G>>) -> G {
+    match res {
+        Ok(g) => g,
+        Err(poisoned) => {
+            static WARNED: AtomicBool = AtomicBool::new(false);
+            if !WARNED.swap(true, Ordering::Relaxed) {
+                // pff-allow(no-print-in-lib): poison recovery has no bus
+                // handle (it fires inside arbitrary lock wrappers); this
+                // one-time stderr warning is the only reporting channel.
+                eprintln!(
+                    "[pff-sync] recovered a poisoned lock (a thread panicked while \
+                     holding it); continuing with the inner state"
+                );
+            }
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// A [`Mutex`] carrying a static [`LockRank`]. See the module docs.
+pub struct OrderedMutex<T> {
+    rank: LockRank,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    /// Wrap `value` at `rank`.
+    pub const fn new(rank: LockRank, value: T) -> Self {
+        OrderedMutex { rank, inner: Mutex::new(value) }
+    }
+
+    /// This lock's rank.
+    pub fn rank(&self) -> LockRank {
+        self.rank
+    }
+
+    /// Acquire, asserting rank order (debug builds) and recovering from
+    /// poisoning. Infallible by design: the historical
+    /// `.lock().unwrap()` sites become plain `.lock()`.
+    pub fn lock(&self) -> OrderedGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        rank_check::acquire(self.rank);
+        let guard = recover(self.inner.lock());
+        OrderedGuard { rank: self.rank, guard: Some(guard) }
+    }
+
+    /// Consume the mutex and return the inner value.
+    pub fn into_inner(self) -> T {
+        recover(self.inner.into_inner())
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrderedMutex").field("rank", &self.rank).finish_non_exhaustive()
+    }
+}
+
+/// RAII guard returned by [`OrderedMutex::lock`]. The inner `std` guard
+/// lives in an `Option` so [`OrderedCondvar`] can take it across a park
+/// (the rank is released while parked — the mutex genuinely isn't held).
+pub struct OrderedGuard<'a, T> {
+    rank: LockRank,
+    guard: Option<MutexGuard<'a, T>>,
+}
+
+impl<T> OrderedGuard<'_, T> {
+    /// The rank of the lock this guard holds.
+    pub fn rank(&self) -> LockRank {
+        self.rank
+    }
+}
+
+impl<T> std::ops::Deref for OrderedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard present outside a condvar park")
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard present outside a condvar park")
+    }
+}
+
+impl<T> Drop for OrderedGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.guard.take().is_some() {
+            #[cfg(debug_assertions)]
+            rank_check::release(self.rank);
+        }
+    }
+}
+
+/// [`Condvar`] companion to [`OrderedMutex`]: waits return the guard
+/// directly (poisoning on reacquisition is recovered, so there is no
+/// `Result` to unwrap), and the held-rank stack tracks the park.
+pub struct OrderedCondvar {
+    inner: Condvar,
+}
+
+impl OrderedCondvar {
+    /// Fresh condition variable.
+    pub const fn new() -> Self {
+        OrderedCondvar { inner: Condvar::new() }
+    }
+
+    /// Park until notified. The lock is released for the duration of the
+    /// park (and so is its rank).
+    pub fn wait<'a, T>(&self, mut guard: OrderedGuard<'a, T>) -> OrderedGuard<'a, T> {
+        let inner = guard.guard.take().expect("guard present entering wait");
+        #[cfg(debug_assertions)]
+        rank_check::release(guard.rank);
+        let inner = recover(self.inner.wait(inner));
+        #[cfg(debug_assertions)]
+        rank_check::acquire(guard.rank);
+        guard.guard = Some(inner);
+        guard
+    }
+
+    /// Park until notified or `dur` elapses.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: OrderedGuard<'a, T>,
+        dur: Duration,
+    ) -> (OrderedGuard<'a, T>, WaitTimeoutResult) {
+        let inner = guard.guard.take().expect("guard present entering wait");
+        #[cfg(debug_assertions)]
+        rank_check::release(guard.rank);
+        let (inner, timed_out) = recover(self.inner.wait_timeout(inner, dur));
+        #[cfg(debug_assertions)]
+        rank_check::acquire(guard.rank);
+        guard.guard = Some(inner);
+        (guard, timed_out)
+    }
+
+    /// Wake one parked waiter.
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    /// Wake every parked waiter.
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+impl Default for OrderedCondvar {
+    fn default() -> Self {
+        OrderedCondvar::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn in_order_acquisition_is_clean() {
+        let reg = OrderedMutex::new(LockRank::Registry, 1);
+        let disp = OrderedMutex::new(LockRank::Dispatcher, 2);
+        let store = OrderedMutex::new(LockRank::Store, 3);
+        let a = reg.lock();
+        let b = disp.lock();
+        let c = store.lock();
+        assert_eq!(*a + *b + *c, 6);
+        // Out-of-order *release* is fine — only acquisition is ranked.
+        drop(b);
+        drop(a);
+        drop(c);
+        // The stack drained: a fresh low-rank acquisition still works.
+        assert_eq!(*reg.lock(), 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn out_of_order_acquisition_panics_in_debug() {
+        let hi = Arc::new(OrderedMutex::new(LockRank::Events, ()));
+        let lo = Arc::new(OrderedMutex::new(LockRank::Registry, ()));
+        let res = std::thread::Builder::new()
+            .name("rank-violator".into())
+            .spawn(move || {
+                let _e = hi.lock();
+                let _r = lo.lock(); // Registry under Events: violation
+            })
+            .unwrap()
+            .join();
+        assert!(res.is_err(), "acquiring a lower rank must panic in debug builds");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn same_rank_nesting_panics_in_debug() {
+        let a = Arc::new(OrderedMutex::new(LockRank::Store, ()));
+        let b = Arc::new(OrderedMutex::new(LockRank::Store, ()));
+        let res = std::thread::spawn(move || {
+            let _a = a.lock();
+            let _b = b.lock(); // equal rank is not *strictly* greater
+        })
+        .join();
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_inner_value() {
+        let m = Arc::new(OrderedMutex::new(LockRank::Store, 7usize));
+        let m2 = m.clone();
+        let res = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(res.is_err());
+        // The historical idiom would now cascade the panic; the wrapper
+        // recovers the guard and the state.
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 8);
+    }
+
+    #[test]
+    fn condvar_roundtrip_wakes_and_rank_survives() {
+        let pair = Arc::new((OrderedMutex::new(LockRank::Store, false), OrderedCondvar::new()));
+        let p2 = pair.clone();
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock();
+            while !*g {
+                g = cv.wait(g);
+            }
+            // Reacquisition restored the rank bookkeeping: acquiring a
+            // higher rank under it must still be legal.
+            let extra = OrderedMutex::new(LockRank::Events, 5);
+            *extra.lock()
+        });
+        {
+            let (m, cv) = &*pair;
+            *m.lock() = true;
+            cv.notify_all();
+        }
+        assert_eq!(t.join().unwrap(), 5);
+    }
+
+    #[test]
+    fn wait_timeout_times_out() {
+        let m = OrderedMutex::new(LockRank::Store, ());
+        let cv = OrderedCondvar::new();
+        let t0 = Instant::now();
+        let (_g, res) = cv.wait_timeout(m.lock(), Duration::from_millis(10));
+        assert!(res.timed_out());
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn condvar_wait_recovers_poisoned_reacquisition() {
+        // A waiter parked on a condvar reacquires a lock another thread
+        // poisoned; the wait returns the inner guard instead of panicking.
+        let pair = Arc::new((OrderedMutex::new(LockRank::Store, 0u32), OrderedCondvar::new()));
+        let p2 = pair.clone();
+        let waiter = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock();
+            while *g == 0 {
+                g = cv.wait(g);
+            }
+            *g
+        });
+        let p3 = pair.clone();
+        let res = std::thread::spawn(move || {
+            let (m, cv) = &*p3;
+            let mut g = m.lock();
+            *g = 9;
+            cv.notify_all();
+            panic!("poison while the waiter is being woken");
+        })
+        .join();
+        assert!(res.is_err());
+        assert_eq!(waiter.join().unwrap(), 9);
+    }
+}

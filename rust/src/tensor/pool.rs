@@ -1,7 +1,8 @@
 //! Scoped worker pool for the parallel tensor kernels.
 //!
-//! Dependency-free (std `thread` + `Mutex`/`Condvar`): persistent worker
-//! threads drain a shared job queue, and [`parallel_rows`] splits a row
+//! Dependency-free (std `thread` + the crate's ranked lock wrappers):
+//! persistent worker threads drain a shared job queue, and
+//! [`parallel_rows`] splits a row
 //! range into contiguous spans that borrow the caller's closure for the
 //! duration of the call — a completion latch guarantees every span
 //! finishes before the call returns, so the borrow is sound even though
@@ -22,8 +23,9 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
+use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};
 use crate::tensor::Matrix;
 
 // ---------------------------------------------------------------------------
@@ -38,20 +40,23 @@ struct LatchState {
 /// Counts outstanding spans of one `parallel_rows` call; the caller parks
 /// on it until every span has run (or panicked).
 struct Latch {
-    state: Mutex<LatchState>,
-    cv: Condvar,
+    state: OrderedMutex<LatchState>,
+    cv: OrderedCondvar,
 }
 
 impl Latch {
     fn new(count: usize) -> Self {
         Latch {
-            state: Mutex::new(LatchState { remaining: count, panicked: false }),
-            cv: Condvar::new(),
+            state: OrderedMutex::new(
+                LockRank::Pool,
+                LatchState { remaining: count, panicked: false },
+            ),
+            cv: OrderedCondvar::new(),
         }
     }
 
     fn count_down(&self, panicked: bool) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock();
         g.remaining -= 1;
         g.panicked |= panicked;
         if g.remaining == 0 {
@@ -61,9 +66,9 @@ impl Latch {
 
     /// Block until all spans completed; returns whether any panicked.
     fn wait(&self) -> bool {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock();
         while g.remaining > 0 {
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g);
         }
         g.panicked
     }
@@ -90,15 +95,15 @@ fn run_job(job: Job) {
 }
 
 struct Shared {
-    queue: Mutex<VecDeque<Job>>,
-    work: Condvar,
+    queue: OrderedMutex<VecDeque<Job>>,
+    work: OrderedCondvar,
     shutdown: AtomicBool,
 }
 
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = shared.queue.lock();
             loop {
                 if let Some(j) = q.pop_front() {
                     break Some(j);
@@ -106,7 +111,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 if shared.shutdown.load(Ordering::Acquire) {
                     break None;
                 }
-                q = shared.work.wait(q).unwrap();
+                q = shared.work.wait(q);
             }
         };
         match job {
@@ -128,7 +133,7 @@ pub struct WorkerPool {
     /// Target parallelism including the calling thread.
     threads: usize,
     /// Helper threads spawned so far (grown on demand, never shrunk).
-    spawned: Mutex<usize>,
+    spawned: OrderedMutex<usize>,
 }
 
 impl WorkerPool {
@@ -137,12 +142,12 @@ impl WorkerPool {
     pub fn new(threads: usize) -> Self {
         WorkerPool {
             shared: Arc::new(Shared {
-                queue: Mutex::new(VecDeque::new()),
-                work: Condvar::new(),
+                queue: OrderedMutex::new(LockRank::Pool, VecDeque::new()),
+                work: OrderedCondvar::new(),
                 shutdown: AtomicBool::new(false),
             }),
             threads: threads.max(1),
-            spawned: Mutex::new(0),
+            spawned: OrderedMutex::new(LockRank::Pool, 0),
         }
     }
 
@@ -152,7 +157,7 @@ impl WorkerPool {
     }
 
     fn ensure_workers(&self, helpers: usize) {
-        let mut n = self.spawned.lock().unwrap();
+        let mut n = self.spawned.lock();
         while *n < helpers {
             let shared = self.shared.clone();
             std::thread::Builder::new()
@@ -194,7 +199,7 @@ impl WorkerPool {
             >(f)
         };
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = self.shared.queue.lock();
             for j in 1..njobs {
                 q.push_back(Job {
                     lo: j * span,
@@ -210,7 +215,7 @@ impl WorkerPool {
         // then parks until its last span lands on a worker.
         let own_panic = catch_unwind(AssertUnwindSafe(|| f(0, span.min(m)))).is_err();
         loop {
-            let job = self.shared.queue.lock().unwrap().pop_front();
+            let job = self.shared.queue.lock().pop_front();
             match job {
                 Some(j) => run_job(j),
                 None => break,
@@ -228,7 +233,7 @@ impl Drop for WorkerPool {
         // Take the queue lock before notifying: a worker between its
         // shutdown check and its wait holds that lock, so this can't slip
         // into the gap and strand it.
-        let _g = self.shared.queue.lock().unwrap();
+        let _g = self.shared.queue.lock();
         self.shared.work.notify_all();
     }
 }

@@ -34,7 +34,7 @@ use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -44,6 +44,7 @@ use crate::coordinator::registry::{NodeInfo, NodeRegistry};
 use crate::coordinator::store::{HeadParams, LayerDelta, LayerParams, MemStore, ParamStore};
 use crate::coordinator::taskgraph::Task;
 use crate::metrics::CommStats;
+use crate::sync::{LockRank, OrderedMutex};
 use crate::transport::codec::{read_frame, write_frame, Dec, Enc};
 
 /// Wire protocol major version, negotiated in `HELLO`.
@@ -182,13 +183,17 @@ impl StoreServer {
                             }
                             consecutive_errs += 1;
                             if consecutive_errs > 100 {
+                                // pff-allow(no-print-in-lib): the accept
+                                // loop predates any run (and any EventBus);
+                                // a dying listener has no other channel.
                                 eprintln!(
                                     "[pff-store-server] accept failing repeatedly, \
                                      giving up: {e}"
                                 );
                                 return;
                             }
-                            // Error-path backoff only (fd pressure etc.);
+                            // pff-allow(no-sleep-sync): error-path backoff
+                            // only (fd pressure etc.) — not synchronization;
                             // the happy path is a plain blocking accept.
                             std::thread::sleep(Duration::from_millis(10));
                         }
@@ -219,7 +224,7 @@ impl StoreServer {
 /// loop and any wait threads parked on its behalf. Frames are written
 /// whole under the lock, so concurrent repliers never interleave.
 struct ConnWriter {
-    w: Mutex<BufWriter<TcpStream>>,
+    w: OrderedMutex<BufWriter<TcpStream>>,
 }
 
 impl ConnWriter {
@@ -236,7 +241,7 @@ impl ConnWriter {
             }
         }
         let payload = enc.finish();
-        let mut w = self.w.lock().unwrap();
+        let mut w = self.w.lock();
         write_frame(&mut *w, &payload)
     }
 }
@@ -248,7 +253,8 @@ fn serve_conn(
     dispatcher: Option<&Arc<Dispatcher>>,
 ) -> Result<()> {
     let mut reader = BufReader::new(sock.try_clone()?);
-    let writer = Arc::new(ConnWriter { w: Mutex::new(BufWriter::new(sock)) });
+    let writer =
+        Arc::new(ConnWriter { w: OrderedMutex::new(LockRank::ConnWriter, BufWriter::new(sock)) });
 
     // --- handshake: the first frame must be HELLO --------------------------
     let first = match read_frame(&mut reader, MAX_FRAME) {
@@ -670,16 +676,19 @@ impl Resp {
 }
 
 /// Pending-response routing table: req_id → the caller's reply channel.
-type PendingMap = Mutex<HashMap<u64, mpsc::Sender<Result<Resp, String>>>>;
+/// Ranked innermost ([`LockRank::ConnPending`]): it is taken while the
+/// writer lock (error unwind) or the dead flag (post-write race check)
+/// is still held.
+type PendingMap = OrderedMutex<HashMap<u64, mpsc::Sender<Result<Resp, String>>>>;
 
 struct ClientShared {
     sock: TcpStream,
-    writer: Mutex<BufWriter<TcpStream>>,
+    writer: OrderedMutex<BufWriter<TcpStream>>,
     pending: PendingMap,
     next_id: AtomicU64,
     /// Set by the demux thread when the connection dies; the reason every
     /// subsequent call fails with.
-    dead: Mutex<Option<String>>,
+    dead: OrderedMutex<Option<String>>,
 }
 
 impl ClientShared {
@@ -692,7 +701,7 @@ impl ClientShared {
         wait_timeout: Option<Duration>,
         build: impl FnOnce(&mut Enc),
     ) -> Result<Resp> {
-        if let Some(reason) = self.dead.lock().unwrap().clone() {
+        if let Some(reason) = self.dead.lock().clone() {
             bail!("store connection is down: {reason}");
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -701,19 +710,19 @@ impl ClientShared {
         build(&mut e);
         let payload = e.finish();
         let (tx, rx) = mpsc::channel();
-        self.pending.lock().unwrap().insert(id, tx);
+        self.pending.lock().insert(id, tx);
         {
-            let mut w = self.writer.lock().unwrap();
+            let mut w = self.writer.lock();
             if let Err(err) = write_frame(&mut *w, &payload) {
-                self.pending.lock().unwrap().remove(&id);
+                self.pending.lock().remove(&id);
                 return Err(err).context("writing request frame");
             }
         }
         // Close the race with fail_all: if the connection died between the
         // dead-check above and the pending insert, nobody drained our
         // entry — detect it now instead of stalling out the full deadline.
-        if let Some(reason) = self.dead.lock().unwrap().clone() {
-            if self.pending.lock().unwrap().remove(&id).is_some() {
+        if let Some(reason) = self.dead.lock().clone() {
+            if self.pending.lock().remove(&id).is_some() {
                 bail!("store connection is down: {reason}");
             }
             // else: fail_all drained us; the channel already holds the error.
@@ -723,7 +732,7 @@ impl ClientShared {
             Ok(Ok(resp)) => Ok(resp),
             Ok(Err(msg)) => bail!("{msg}"),
             Err(_) => {
-                self.pending.lock().unwrap().remove(&id);
+                self.pending.lock().remove(&id);
                 bail!("store server did not reply within {deadline:?} (opcode {opcode:#x})");
             }
         }
@@ -765,15 +774,15 @@ fn demux_loop(shared: &ClientShared) {
         };
         // Unknown req_id = response to a call that already timed out
         // client-side; drop it.
-        if let Some(tx) = shared.pending.lock().unwrap().remove(&req_id) {
+        if let Some(tx) = shared.pending.lock().remove(&req_id) {
             let _ = tx.send(res);
         }
     }
 }
 
 fn fail_all(shared: &ClientShared, reason: String) {
-    *shared.dead.lock().unwrap() = Some(reason.clone());
-    for (_, tx) in shared.pending.lock().unwrap().drain() {
+    *shared.dead.lock() = Some(reason.clone());
+    for (_, tx) in shared.pending.lock().drain() {
         let _ = tx.send(Err(reason.clone()));
     }
 }
@@ -832,6 +841,10 @@ impl TcpStoreClient {
                         return Err(e)
                             .with_context(|| format!("leader at {addr} unreachable for {wait:?}"));
                     }
+                    // pff-allow(no-sleep-sync): connection-establishment
+                    // backoff against a leader that has not bound its
+                    // listener yet — there is no event to park on across
+                    // processes; dependency waits stay server-side.
                     std::thread::sleep(delay);
                     delay = (delay * 2).min(Duration::from_millis(500));
                 }
@@ -860,10 +873,10 @@ impl TcpStoreClient {
         sock.set_nodelay(true).ok();
         let shared = Arc::new(ClientShared {
             sock: sock.try_clone()?,
-            writer: Mutex::new(BufWriter::new(sock)),
-            pending: Mutex::new(HashMap::new()),
+            writer: OrderedMutex::new(LockRank::ConnWriter, BufWriter::new(sock)),
+            pending: OrderedMutex::new(LockRank::ConnPending, HashMap::new()),
             next_id: AtomicU64::new(0),
-            dead: Mutex::new(None),
+            dead: OrderedMutex::new(LockRank::ConnDead, None),
         });
         let s2 = shared.clone();
         let demux = std::thread::Builder::new()

@@ -1,0 +1,60 @@
+//! Meta-test: the live source tree passes `pff analyze`.
+//!
+//! The CI `analyze` job runs the binary; this test pins the same
+//! invariant inside `cargo test`, so a violation fails tier-1 too —
+//! with the offending file:line in the assertion message.
+
+use std::path::PathBuf;
+
+use pff::analyze::{analyze, default_roots, render_human, Tree};
+
+fn repo_roots() -> Vec<PathBuf> {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut roots = vec![manifest.join("src"), manifest.join("tests")];
+    for extra in ["../examples", "../README.md"] {
+        let p = manifest.join(extra);
+        if p.exists() {
+            roots.push(p);
+        }
+    }
+    roots
+}
+
+#[test]
+fn live_tree_is_clean() {
+    let tree = Tree::load(&repo_roots()).expect("loading the source tree");
+    assert!(tree.files().len() > 20, "tree too small — roots misresolved?");
+    let findings = analyze(&tree);
+    assert!(
+        findings.is_empty(),
+        "pff analyze found violations in the live tree:\n{}",
+        render_human(&findings)
+    );
+}
+
+#[test]
+fn structural_rules_see_their_anchor_files() {
+    // Guard against the silent-pass failure mode: if an anchor file moves,
+    // its rule returns no findings forever. Pin that every anchor the
+    // structural rules look up actually resolves in the live tree.
+    let tree = Tree::load(&repo_roots()).expect("loading the source tree");
+    for anchor in [
+        "transport/tcp.rs",
+        "transport/PROTOCOL.md",
+        "config/mod.rs",
+        "coordinator/events.rs",
+        "metrics/csv.rs",
+        "README.md",
+    ] {
+        assert!(tree.find(anchor).is_some(), "anchor file {anchor} not in the tree");
+    }
+}
+
+#[test]
+fn default_roots_resolve_from_the_crate_dir() {
+    // `pff analyze` is run from the repo root (CI) or rust/ (developers);
+    // default_roots must cope with the crate dir too, since that is the
+    // cwd `cargo test` gives us.
+    let roots = default_roots().expect("default roots from the test cwd");
+    assert!(roots.iter().any(|r| r.ends_with("src") || r.ends_with("rust/src")), "{roots:?}");
+}

@@ -170,10 +170,12 @@ impl Scheduler for Blocker {
 fn cancel_unblocks_a_store_waiting_run_promptly() {
     let mut cfg = mech_cfg();
     cfg.store_timeout_s = 600; // cancellation, not the timeout, must end this
-    let mut builder = Experiment::builder().config(cfg).scheduler(Blocker);
+    let store = Arc::new(MemStore::new());
+    let mut builder = Experiment::builder().config(cfg).store(store.clone()).scheduler(Blocker);
     let handle = builder.launch().unwrap();
-    // Let the node actually park in the blocking get.
-    std::thread::sleep(Duration::from_millis(100));
+    // Condvar handoff: proceed only once the node is provably parked in
+    // the blocking get — no sleep, no timing guesswork.
+    store.wait_for_waiters(1, Duration::from_secs(30)).unwrap();
     assert!(!handle.is_finished(), "blocker must still be parked");
 
     let t0 = Instant::now();
@@ -192,9 +194,17 @@ fn cancel_unblocks_a_store_waiting_run_promptly() {
 fn cancelled_run_still_emits_terminal_done() {
     let mut cfg = mech_cfg();
     cfg.store_timeout_s = 600;
-    let handle = Experiment::builder().config(cfg).scheduler(Blocker).launch().unwrap();
+    let store = Arc::new(MemStore::new());
+    let handle = Experiment::builder()
+        .config(cfg)
+        .store(store.clone())
+        .scheduler(Blocker)
+        .launch()
+        .unwrap();
     let rx = handle.events();
-    std::thread::sleep(Duration::from_millis(50));
+    // Event-driven handoff: cancel only after the node is parked in the
+    // store, so the cancellation path (not a startup race) is what we test.
+    store.wait_for_waiters(1, Duration::from_secs(30)).unwrap();
     handle.cancel();
     handle.join().unwrap_err();
     let events: Vec<RunEvent> = rx.try_iter().collect();
