@@ -19,11 +19,17 @@
 //! replacement — its task leases are requeued to the survivors — and the
 //! run must still complete with the in-process accuracy.
 //!
+//! `--wire-codec bf16|i8` runs the cluster with quantized publishes
+//! (protocol v4 `PUT_LAYER_Q`/`PUT_HEAD_Q` frames) while the in-process
+//! reference stays full f32 — the closing accuracy gate then doubles as
+//! the lossy codec's accuracy-parity check (tolerance, not bitwise).
+//!
 //! ```bash
 //! cargo build --release                      # builds the pff binary
 //! cargo run --release --example tcp_cluster
 //! cargo run --release --example tcp_cluster -- --kill-one
 //! cargo run --release --example tcp_cluster -- --elastic
+//! cargo run --release --example tcp_cluster -- --wire-codec bf16
 //! ```
 
 use std::net::SocketAddr;
@@ -35,6 +41,7 @@ use pff::config::{ExperimentConfig, Scheduler, TransportKind};
 use pff::coordinator::node::run_worker;
 use pff::coordinator::{Experiment, ExperimentReport, RunEvent};
 use pff::ff::NegStrategy;
+use pff::transport::codec::WireCodec;
 use pff::transport::tcp::TcpStoreClient;
 
 /// One blocking run through the session API, printing cluster membership
@@ -268,9 +275,17 @@ fn run_threaded(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let kill_one = std::env::args().any(|a| a == "--kill-one");
-    let elastic = std::env::args().any(|a| a == "--elastic");
+    let args: Vec<String> = std::env::args().collect();
+    let kill_one = args.iter().any(|a| a == "--kill-one");
+    let elastic = args.iter().any(|a| a == "--elastic");
     anyhow::ensure!(!(kill_one && elastic), "--kill-one and --elastic are mutually exclusive");
+    let wire_codec: WireCodec = match args.iter().position(|a| a == "--wire-codec") {
+        Some(i) => args
+            .get(i + 1)
+            .ok_or_else(|| anyhow::anyhow!("--wire-codec needs a value (f32, bf16 or i8)"))?
+            .parse()?,
+        None => WireCodec::F32,
+    };
     let mut cfg = ExperimentConfig::default();
     cfg.name = "tcp-cluster".into();
     cfg.dims = vec![784, 96, 96, 96];
@@ -287,6 +302,10 @@ fn main() -> anyhow::Result<()> {
     // crash-recovery run reproduces the in-proc weights bitwise. (It also
     // licenses cross-worker task stealing in the elastic run.)
     cfg.ship_opt_state = true;
+    cfg.wire_codec = wire_codec;
+    if wire_codec != WireCodec::F32 {
+        println!("cluster publishes ride the {wire_codec} wire codec; reference stays f32");
+    }
 
     // --- cluster run: N OS processes (or threads, without the binary) -----
     let t0 = std::time::Instant::now();
@@ -317,6 +336,9 @@ fn main() -> anyhow::Result<()> {
     // --- reference: in-process transport ----------------------------------
     let mut mcfg = cfg.clone();
     mcfg.transport = TransportKind::InProc;
+    // The reference always trains in full f32, so with --wire-codec the
+    // closing accuracy gate doubles as the lossy codec's parity check.
+    mcfg.wire_codec = WireCodec::F32;
     mcfg.name = "inproc".into();
     let t1 = std::time::Instant::now();
     let mem = run(mcfg)?;

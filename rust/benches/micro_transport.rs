@@ -14,8 +14,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use pff::bench_util::{bench, BenchStats, JsonReport};
+use pff::config::ExperimentConfig;
 use pff::coordinator::store::{LayerDelta, LayerParams, MemStore, ParamStore};
+use pff::coordinator::RunCheckpoint;
 use pff::tensor::{Matrix, Rng};
+use pff::transport::codec::WireCodec;
 use pff::transport::tcp::{StoreServer, TcpStoreClient};
 
 fn params(din: usize, dout: usize) -> LayerParams {
@@ -185,7 +188,57 @@ fn main() {
             ),
             s,
         );
+
+        // quantized publish (PR 9): PUT_LAYER_Q ships a bf16/i8 frame;
+        // the label reports the frame's share of the f32 full frame.
+        for codec in [WireCodec::Bf16, WireCodec::I8] {
+            let q = codec.quantize_layer(&p);
+            let pct = 100.0 * q.wire_bytes() as f64 / p.wire_bytes() as f64;
+            let mut chapter = 1000u32; // clear of the delta bench's chapters
+            let s = bench(warmup, iters.min(10), || {
+                chapter += 1;
+                client.put_layer_q(0, chapter, codec.quantize_layer(&p)).unwrap();
+            });
+            report.add(
+                format!("[tcp]    {codec} quantized publish {label}  ({pct:.1}% of f32 wire)"),
+                s,
+            );
+        }
         server.shutdown();
+    }
+
+    // checkpoint encode with a quantized store section (PR 9, format v2):
+    // the file shrinks by the same codec ratio, because published params
+    // are codec fixed points and so keep their compact frames on disk.
+    {
+        let (din, dout) = if opts.quick { (256, 256) } else { (1000, 1000) };
+        for codec in [WireCodec::Bf16, WireCodec::I8] {
+            let store = MemStore::new();
+            for l in 0..6usize {
+                store.put_layer_q(l, 0, codec.quantize_layer(&params(din, dout))).unwrap();
+            }
+            let mut cfg = ExperimentConfig::tiny();
+            cfg.wire_codec = codec;
+            let ck = RunCheckpoint {
+                config_kv: cfg.to_kv_string(),
+                scheduler: "all_layers".into(),
+                completed: vec![],
+                rng: Rng::new(1).state(),
+                store: store.dump(),
+            };
+            let raw = ck.encode_with(WireCodec::F32).len();
+            let quant = ck.encode().len();
+            let s = bench(warmup, iters, || {
+                std::hint::black_box(ck.encode());
+            });
+            report.add(
+                format!(
+                    "[ckpt]   encode 6-entry {codec} store  ({:.1}% of f32 bytes)",
+                    100.0 * quant as f64 / raw as f64
+                ),
+                s,
+            );
+        }
     }
 
     // COW store (PR 7): dump() of a store holding multi-MB entries is

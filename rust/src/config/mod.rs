@@ -17,6 +17,7 @@ use anyhow::{bail, Context, Result};
 use crate::data::DatasetKind;
 use crate::ff::perfopt::PerfOptReadout;
 use crate::ff::{ClassifierMode, NegStrategy};
+use crate::transport::codec::WireCodec;
 
 /// Which PFF scheduler runs the experiment (paper §4).
 ///
@@ -221,6 +222,14 @@ pub struct ExperimentConfig {
     /// either way — only `wire_bytes` changes. Ignored (full frames) when
     /// `ship_opt_state` is on or the transport predates protocol v3.
     pub delta_publish: bool,
+    /// Lossy compression for published matrices and checkpoint payloads
+    /// (`--wire_codec`): `f32` (default, lossless), `bf16` (~50% of the
+    /// f32 matrix bytes) or `i8` (per-row affine, ~26%). Training-
+    /// relevant: the publisher rounds through the codec before every
+    /// store write, so the codec shapes the trained weights — but
+    /// identically on every transport (in-proc and TCP runs stay
+    /// bitwise equal, and `f32` is bitwise identical to pre-v4 runs).
+    pub wire_codec: WireCodec,
     /// Print per-chapter progress lines.
     pub verbose: bool,
 }
@@ -264,6 +273,7 @@ impl Default for ExperimentConfig {
             checkpoint_every: 1,
             checkpoint_keep: 1,
             delta_publish: true,
+            wire_codec: WireCodec::F32,
             verbose: false,
         }
     }
@@ -442,6 +452,7 @@ impl ExperimentConfig {
             "checkpoint_every" => self.checkpoint_every = v.parse()?,
             "checkpoint_keep" => self.checkpoint_keep = v.parse()?,
             "delta_publish" => self.delta_publish = parse_bool(v)?,
+            "wire_codec" => self.wire_codec = v.parse()?,
             "verbose" => self.verbose = parse_bool(v)?,
             other => bail!("unknown config key '{other}'"),
         }
@@ -526,6 +537,7 @@ impl ExperimentConfig {
         kv(&mut out, "checkpoint_every", self.checkpoint_every);
         kv(&mut out, "checkpoint_keep", self.checkpoint_keep);
         kv(&mut out, "delta_publish", self.delta_publish);
+        kv(&mut out, "wire_codec", self.wire_codec);
         kv(&mut out, "verbose", self.verbose);
         out
     }
@@ -641,6 +653,7 @@ mod tests {
         cfg.checkpoint_every = 3;
         cfg.checkpoint_keep = 4;
         cfg.delta_publish = false;
+        cfg.wire_codec = WireCodec::Bf16;
         cfg.verbose = true;
 
         let mut parsed = ExperimentConfig::default();

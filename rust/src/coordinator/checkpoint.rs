@@ -46,14 +46,18 @@ use crate::coordinator::schedulers::Scheduler;
 use crate::coordinator::store::{HeadParams, LayerParams, MemStore, ParamStore, StoreDump};
 use crate::metrics::CommStats;
 use crate::tensor::{Rng, RngState};
-use crate::transport::codec::{read_frame, write_frame, Dec, Enc};
+use crate::transport::codec::{
+    read_frame, write_frame, Dec, Enc, QuantHeadParams, QuantLayerParams, WireCodec,
+};
 
 /// File magic: the bytes `PFFC` (written little-endian as a `u32`).
 pub const CHECKPOINT_MAGIC: u32 = 0x4346_4650;
 
-/// On-disk format version. Bump on any layout change; readers refuse
-/// versions they do not speak with a clear error.
-pub const CHECKPOINT_VERSION: u32 = 1;
+/// On-disk format version. Bump on any layout change; readers accept
+/// `1..=CHECKPOINT_VERSION` and refuse anything newer with a clear
+/// error. v2 stores layer/head entries as self-describing quantized
+/// frames (`wire_codec`); v1 files (plain f32 frames) stay readable.
+pub const CHECKPOINT_VERSION: u32 = 2;
 
 /// Default checkpoint file name inside `checkpoint_dir`.
 pub const CHECKPOINT_FILE: &str = "latest.ckpt";
@@ -86,6 +90,9 @@ const STRICT_KEYS: &[&str] = &[
     "ship_opt_state",
     "head_inline",
     "neg_subsample",
+    // The publisher rounds every publish through the codec, so it shapes
+    // the stored bits (and thus the trajectory) like any training knob.
+    "wire_codec",
 ];
 
 /// A versioned, durable snapshot of one training run.
@@ -152,7 +159,11 @@ impl RunCheckpoint {
     /// under: every training-relevant key must match (see the module
     /// docs for which keys are deployment-only and may differ).
     pub fn check_compat(&self, cfg: &ExperimentConfig) -> Result<()> {
-        let theirs: HashMap<String, String> = parse_kv_str(&self.config_kv)?.into_iter().collect();
+        // Normalize the checkpoint's kv through a config round-trip so
+        // files predating a strict key (e.g. v1 files without
+        // `wire_codec`) compare against its default instead of <unset>.
+        let theirs: HashMap<String, String> =
+            parse_kv_str(&self.experiment_config()?.to_kv_string())?.into_iter().collect();
         let ours: HashMap<String, String> =
             parse_kv_str(&cfg.to_kv_string())?.into_iter().collect();
         for key in STRICT_KEYS {
@@ -169,8 +180,33 @@ impl RunCheckpoint {
         Ok(())
     }
 
-    /// Serialize to the versioned payload (no outer frame).
+    /// The `wire_codec` this checkpoint's embedded config declares — the
+    /// codec [`RunCheckpoint::encode`] compresses the store section with.
+    /// A missing or unparsable key means f32 (configs predating the key).
+    pub fn wire_codec(&self) -> WireCodec {
+        parse_kv_str(&self.config_kv)
+            .ok()
+            .and_then(|kvs| {
+                kvs.into_iter().find(|(k, _)| k == "wire_codec").and_then(|(_, v)| v.parse().ok())
+            })
+            .unwrap_or_default()
+    }
+
+    /// Serialize to the versioned payload (no outer frame), compressing
+    /// the store section with the embedded config's `wire_codec`.
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_with(self.wire_codec())
+    }
+
+    /// [`RunCheckpoint::encode`] with an explicit store-section codec.
+    ///
+    /// Decoding is ALWAYS bitwise lossless: a lossy codec is applied only
+    /// to entries it round-trips exactly (published params are codec
+    /// fixed points by quantize-at-publish, so in practice all of them);
+    /// anything else keeps a full f32 frame. The frames are
+    /// self-describing (per-matrix tag byte), so the reader never needs
+    /// to know which path an entry took.
+    pub fn encode_with(&self, codec: WireCodec) -> Vec<u8> {
         let mut e = Enc::new();
         e.u32(CHECKPOINT_MAGIC);
         e.u32(CHECKPOINT_VERSION);
@@ -192,12 +228,12 @@ impl RunCheckpoint {
         for (slot, chapter, p) in &self.store.layers {
             e.u32(*slot as u32);
             e.u32(*chapter);
-            e.layer_params(p);
+            e.quant_layer_params(&quant_layer_lossless(codec, p));
         }
         e.u32(self.store.heads.len() as u32);
         for (chapter, p) in &self.store.heads {
             e.u32(*chapter);
-            e.head_params(p);
+            e.quant_head_params(&quant_head_lossless(codec, p));
         }
         e.u32(self.store.negs.len() as u32);
         for (chapter, labels) in &self.store.negs {
@@ -217,10 +253,10 @@ impl RunCheckpoint {
             bail!("not a pff checkpoint (bad magic {magic:#010x}, want {CHECKPOINT_MAGIC:#010x})");
         }
         let version = d.u32()?;
-        if version != CHECKPOINT_VERSION {
+        if version == 0 || version > CHECKPOINT_VERSION {
             bail!(
                 "checkpoint format v{version} is not supported \
-                 (this build reads v{CHECKPOINT_VERSION})"
+                 (this build reads v1..v{CHECKPOINT_VERSION})"
             );
         }
         let config_kv = d.str().context("checkpoint config block")?;
@@ -238,14 +274,24 @@ impl RunCheckpoint {
         for _ in 0..n {
             let slot = d.u32()? as usize;
             let chapter = d.u32()?;
-            let p = d.layer_params().context("checkpoint layer entry")?;
+            // v1 stored bare f32 frames; v2 frames carry a codec tag.
+            let p = if version >= 2 {
+                d.quant_layer_params().context("checkpoint layer entry")?.dequantize()
+            } else {
+                d.layer_params().context("checkpoint layer entry")?
+            };
             layers.push((slot, chapter, Arc::new(p)));
         }
         let n = d.u32()? as usize;
         let mut heads = Vec::with_capacity(n);
         for _ in 0..n {
             let chapter = d.u32()?;
-            heads.push((chapter, Arc::new(d.head_params().context("checkpoint head entry")?)));
+            let p = if version >= 2 {
+                d.quant_head_params().context("checkpoint head entry")?.dequantize()
+            } else {
+                d.head_params().context("checkpoint head entry")?
+            };
+            heads.push((chapter, Arc::new(p)));
         }
         let n = d.u32()? as usize;
         let mut negs = Vec::with_capacity(n);
@@ -300,6 +346,39 @@ impl RunCheckpoint {
         RunCheckpoint::decode(&payload)
             .with_context(|| format!("decoding checkpoint {}", path.display()))
     }
+}
+
+/// Quantize one layer entry for the checkpoint's store section, keeping
+/// the f32 frame whenever the codec would not round-trip it bitwise (a
+/// published entry is a codec fixed point, so the fallback only fires on
+/// foreign data — e.g. entries injected by tests or older runs).
+fn quant_layer_lossless(codec: WireCodec, p: &LayerParams) -> QuantLayerParams {
+    let q = codec.quantize_layer(p);
+    if codec != WireCodec::F32 {
+        let mut a = Enc::new();
+        a.layer_params(&q.dequantize());
+        let mut b = Enc::new();
+        b.layer_params(p);
+        if a.finish() != b.finish() {
+            return WireCodec::F32.quantize_layer(p);
+        }
+    }
+    q
+}
+
+/// [`quant_layer_lossless`] for head entries.
+fn quant_head_lossless(codec: WireCodec, p: &HeadParams) -> QuantHeadParams {
+    let q = codec.quantize_head(p);
+    if codec != WireCodec::F32 {
+        let mut a = Enc::new();
+        a.head_params(&q.dequantize());
+        let mut b = Enc::new();
+        b.head_params(p);
+        if a.finish() != b.finish() {
+            return WireCodec::F32.quantize_head(p);
+        }
+    }
+    q
 }
 
 /// Per-node chapter cursor, derived from what the store actually holds:
@@ -436,9 +515,17 @@ impl WriterCtx {
         let total = ck.total_completed();
         rotate_history(&self.path, self.keep)?;
         let wire_bytes = ck.save(&self.path)?;
+        // f32-equivalent size (+4 for the file's frame-length prefix),
+        // so observers can read the compression ratio off the event.
+        let raw_bytes = if self.cfg.wire_codec == WireCodec::F32 {
+            wire_bytes
+        } else {
+            ck.encode_with(WireCodec::F32).len() as u64 + 4
+        };
         self.bus.emit(RunEvent::CheckpointWritten {
             path: self.path.display().to_string(),
             wire_bytes,
+            raw_bytes,
         });
         Ok(total)
     }
@@ -653,6 +740,112 @@ mod tests {
     }
 
     #[test]
+    fn v2_quantized_store_section_shrinks_and_roundtrips() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.wire_codec = WireCodec::Bf16;
+        let mut rng = Rng::new(3);
+        // A published entry: a bf16 fixed point by quantize-at-publish.
+        let rounded = WireCodec::Bf16
+            .quantize_layer(&LayerParams {
+                w: Matrix::randn_scaled(16, 16, &mut rng),
+                b: vec![0.25; 16],
+                normalize_input: true,
+                opt: None,
+            })
+            .dequantize();
+        let ck = RunCheckpoint {
+            config_kv: cfg.to_kv_string(),
+            scheduler: "all-layers".into(),
+            completed: vec![1],
+            rng: Rng::new(cfg.seed).state(),
+            store: StoreDump { layers: vec![(0, 0, Arc::new(rounded))], ..StoreDump::default() },
+        };
+        assert_eq!(ck.wire_codec(), WireCodec::Bf16);
+        let bytes = ck.encode();
+        let raw = ck.encode_with(WireCodec::F32);
+        assert!(
+            bytes.len() < raw.len(),
+            "bf16 store section must shrink ({} vs {} bytes)",
+            bytes.len(),
+            raw.len()
+        );
+        let got = RunCheckpoint::decode(&bytes).unwrap();
+        assert_eq!(got.encode(), bytes, "decode must be bitwise lossless");
+        // The uncompressed rendering decodes to the same checkpoint.
+        let got_raw = RunCheckpoint::decode(&raw).unwrap();
+        assert_eq!(got_raw.encode(), bytes);
+    }
+
+    #[test]
+    fn lossy_codec_never_corrupts_foreign_entries() {
+        // sample_checkpoint's entries are NOT i8 fixed points (random
+        // floats, NaN payloads): per-entry fallback must keep the encode
+        // bitwise lossless anyway.
+        let mut ck = sample_checkpoint();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.wire_codec = WireCodec::I8;
+        ck.config_kv = cfg.to_kv_string();
+        let bytes = ck.encode();
+        let got = RunCheckpoint::decode(&bytes).unwrap();
+        assert_eq!(got.encode(), bytes);
+        let (_, _, nan_layer) = &got.store.layers[1];
+        assert!(nan_layer.w.data[0].is_nan());
+        assert_eq!(nan_layer.w.data[2].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn v1_files_stay_readable() {
+        let mut ck = sample_checkpoint();
+        // A v1-era config predates the wire_codec key entirely.
+        ck.config_kv = ck
+            .config_kv
+            .lines()
+            .filter(|l| !l.trim_start().starts_with("wire_codec"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        // Hand-write the v1 layout (version 1, bare f32 frames) — what
+        // pre-v2 builds produced.
+        let mut e = Enc::new();
+        e.u32(CHECKPOINT_MAGIC);
+        e.u32(1);
+        e.str(&ck.config_kv);
+        e.str(&ck.scheduler);
+        e.u32(ck.completed.len() as u32);
+        for &c in &ck.completed {
+            e.u32(c);
+        }
+        e.u64(ck.rng.state);
+        match ck.rng.spare_normal {
+            None => e.u8(0),
+            Some(v) => {
+                e.u8(1);
+                e.f32(v);
+            }
+        }
+        e.u32(ck.store.layers.len() as u32);
+        for (slot, chapter, p) in &ck.store.layers {
+            e.u32(*slot as u32);
+            e.u32(*chapter);
+            e.layer_params(p);
+        }
+        e.u32(ck.store.heads.len() as u32);
+        for (chapter, p) in &ck.store.heads {
+            e.u32(*chapter);
+            e.head_params(p);
+        }
+        e.u32(ck.store.negs.len() as u32);
+        for (chapter, labels) in &ck.store.negs {
+            e.u32(*chapter);
+            e.bytes(labels);
+        }
+        let got = RunCheckpoint::decode(&e.finish()).unwrap();
+        assert_eq!(got.encode(), ck.encode(), "v1 payload must decode to the same checkpoint");
+        // check_compat normalizes the old config through a round-trip, so
+        // the absent wire_codec key compares as the f32 default.
+        got.check_compat(&ExperimentConfig::tiny()).unwrap();
+    }
+
+    #[test]
     fn decode_rejects_bad_magic_version_and_trailing_bytes() {
         let ck = sample_checkpoint();
         let bytes = ck.encode();
@@ -807,7 +1000,7 @@ mod tests {
                 .unwrap();
         // Initial write landed synchronously.
         let ev = rx.try_iter().next().expect("initial CheckpointWritten");
-        let RunEvent::CheckpointWritten { path, wire_bytes } = ev else {
+        let RunEvent::CheckpointWritten { path, wire_bytes, .. } = ev else {
             panic!("expected CheckpointWritten, got {ev}");
         };
         assert!(wire_bytes > 0);

@@ -73,6 +73,10 @@ pub enum RunEvent {
         chapter: u32,
         /// Approximate bytes on the wire (the §6 communication metric).
         wire_bytes: u64,
+        /// Bytes the same publish would cost as an uncompressed f32 full
+        /// frame — `wire_bytes / raw_bytes` is the observed compression
+        /// ratio of the active `wire_codec` (and of delta publishes).
+        raw_bytes: u64,
     },
     /// A node published the full-network softmax head.
     HeadPublished {
@@ -89,6 +93,9 @@ pub enum RunEvent {
         path: String,
         /// Serialized size in bytes (same codec as the wire format).
         wire_bytes: u64,
+        /// Bytes the same checkpoint would occupy at full f32 (format-v2
+        /// files shrink below this under `wire_codec=bf16`/`i8`).
+        raw_bytes: u64,
     },
     /// The dispatcher leased a `(chapter, layer)` task to a worker.
     TaskStarted {
@@ -165,15 +172,27 @@ impl std::fmt::Display for RunEvent {
                      busy {busy_s:.2}s, wait {wait_s:.2}s)"
                 )
             }
-            RunEvent::LayerPublished { node, layer, chapter, wire_bytes } => {
+            RunEvent::LayerPublished { node, layer, chapter, wire_bytes, raw_bytes } => {
                 let b = wire_bytes;
-                write!(f, "node {node}: published layer {layer} @ chapter {chapter} ({b} B)")
+                if raw_bytes == wire_bytes {
+                    write!(f, "node {node}: published layer {layer} @ chapter {chapter} ({b} B)")
+                } else {
+                    write!(
+                        f,
+                        "node {node}: published layer {layer} @ chapter {chapter} \
+                         ({b} of {raw_bytes} raw B)"
+                    )
+                }
             }
             RunEvent::HeadPublished { node, chapter, wire_bytes } => {
                 write!(f, "node {node}: published head @ chapter {chapter} ({wire_bytes} B)")
             }
-            RunEvent::CheckpointWritten { path, wire_bytes } => {
-                write!(f, "checkpoint written: {path} ({wire_bytes} B)")
+            RunEvent::CheckpointWritten { path, wire_bytes, raw_bytes } => {
+                if raw_bytes == wire_bytes {
+                    write!(f, "checkpoint written: {path} ({wire_bytes} B)")
+                } else {
+                    write!(f, "checkpoint written: {path} ({wire_bytes} of {raw_bytes} raw B)")
+                }
             }
             RunEvent::TaskStarted { worker, chapter, layer } => {
                 write!(f, "worker {worker}: task chapter {chapter} / layer {layer} started")
@@ -404,7 +423,13 @@ mod tests {
         // out-of-order chapters, as concurrent nodes produce them
         log.record(&finished(1, 1, 0.4));
         log.record(&finished(0, 0, 0.8));
-        log.record(&RunEvent::LayerPublished { node: 0, layer: 2, chapter: 0, wire_bytes: 64 });
+        log.record(&RunEvent::LayerPublished {
+            node: 0,
+            layer: 2,
+            chapter: 0,
+            wire_bytes: 64,
+            raw_bytes: 128,
+        });
         log.record(&RunEvent::Eval { accuracy: 0.75 });
         let curve = log.chapter_curve(4);
         let epochs: Vec<f32> = curve.points.iter().map(|p| p.epoch).collect();
@@ -415,11 +440,11 @@ mod tests {
         let path = dir.join("events.csv");
         log.write_csv(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(
-            text.starts_with("event,node,layer,chapter,loss,wire_bytes,accuracy,ok,busy_s,wait_s\n")
-        );
-        assert!(text.contains("layer_published,0,2,0,,64,,,,"));
-        assert!(text.contains("chapter_finished,0,,0,0.8,,,,0.250000,0.050000"));
+        assert!(text.starts_with(
+            "event,node,layer,chapter,loss,wire_bytes,accuracy,ok,busy_s,wait_s,raw_bytes\n"
+        ));
+        assert!(text.contains("layer_published,0,2,0,,64,,,,,128"));
+        assert!(text.contains("chapter_finished,0,,0,0.8,,,,0.250000,0.050000,"));
         assert!(text.contains("eval,"));
         std::fs::remove_dir_all(dir).ok();
     }

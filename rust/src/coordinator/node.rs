@@ -34,6 +34,7 @@ use crate::ff::{FFLayer, FFNetwork, LinearHead, NegStrategy};
 use crate::metrics::{LossCurve, NodeReport, SpanKind, SpanRecorder};
 use crate::sync::{LockRank, OrderedMutex};
 use crate::tensor::{AdamState, Matrix, Rng};
+use crate::transport::codec::WireCodec;
 use crate::transport::tcp::TcpStoreClient;
 
 /// RNG stream tags for deterministic, scheduler-independent derivations.
@@ -444,6 +445,15 @@ impl NodeCtx {
     /// rows go over the wire — and only when that is actually smaller
     /// than the full layer. Every fallback ships the full layer, and
     /// reconstruction is bitwise, so weights are identical either way.
+    ///
+    /// With `wire_codec != f32` the publisher rounds the params through
+    /// the codec *here*, before any store write (quantize-at-publish):
+    /// every transport then stores the same dequantized bits — an in-proc
+    /// store via [`ParamStore::put_layer_q`]'s local dequantize, a v4 TCP
+    /// peer by dequantizing the identical frame server-side — so runs
+    /// stay bitwise transport-independent. Deltas compose: they diff
+    /// rounded-vs-rounded params (bit-exact f32 rows) and ship only when
+    /// smaller than the quantized full frame.
     pub fn publish_layer(
         &mut self,
         layer_idx: usize,
@@ -456,14 +466,26 @@ impl NodeCtx {
         let full_bytes = params.wire_bytes();
         let store = self.store.clone();
         let key = (self.node_id, layer_idx);
+        let codec = self.cfg.wire_codec;
+
+        // Round through the codec up front; under f32 this is the
+        // identity and `frame_bytes == full_bytes`, keeping the default
+        // configuration bitwise identical to the pre-codec publish path.
+        let (params, q, frame_bytes) = if codec == WireCodec::F32 {
+            (Arc::new(params), None, full_bytes)
+        } else {
+            let q = codec.quantize_layer(&params);
+            let bytes = q.wire_bytes();
+            (Arc::new(q.dequantize()), Some(q), bytes)
+        };
+
         let wire_bytes = if self.cfg.delta_publish && !ship_opt && store.supports_deltas() {
-            let params = Arc::new(params);
             let delta = self
                 .scratch
                 .last_pub
                 .get(&key)
                 .and_then(|(bc, base)| LayerDelta::diff(base, &params).map(|d| (*bc, d)))
-                .filter(|(_, d)| d.wire_bytes() < full_bytes);
+                .filter(|(_, d)| d.wire_bytes() < frame_bytes);
             let shipped = match delta {
                 Some((base_chapter, d)) => {
                     let bytes = d.wire_bytes();
@@ -473,32 +495,40 @@ impl NodeCtx {
                     bytes
                 }
                 None => {
-                    let p = params.as_ref().clone();
-                    self.rec.time(SpanKind::Publish, layer_idx, chapter, || {
-                        store.put_layer(layer_idx, chapter, p)
+                    self.rec.time(SpanKind::Publish, layer_idx, chapter, || match q {
+                        Some(q) => store.put_layer_q(layer_idx, chapter, q),
+                        None => store.put_layer(layer_idx, chapter, params.as_ref().clone()),
                     })?;
-                    full_bytes
+                    frame_bytes
                 }
             };
             self.scratch.last_pub.insert(key, (chapter, params));
             shipped
         } else {
-            self.rec.time(SpanKind::Publish, layer_idx, chapter, || {
-                store.put_layer(layer_idx, chapter, params)
+            self.rec.time(SpanKind::Publish, layer_idx, chapter, || match q {
+                Some(q) => store.put_layer_q(layer_idx, chapter, q),
+                // Sole holder here, so this unwraps without copying tensors.
+                None => store.put_layer(
+                    layer_idx,
+                    chapter,
+                    Arc::try_unwrap(params).unwrap_or_else(|a| a.as_ref().clone()),
+                ),
             })?;
-            full_bytes
+            frame_bytes
         };
         self.emit(RunEvent::LayerPublished {
             node: self.node_id,
             layer: layer_idx,
             chapter,
             wire_bytes,
+            raw_bytes: full_bytes,
         });
         Ok(())
     }
 
     /// Publish the full-network softmax head (timed as Publish; emits
-    /// [`RunEvent::HeadPublished`]).
+    /// [`RunEvent::HeadPublished`]). Quantize-at-publish applies exactly
+    /// as in [`NodeCtx::publish_layer`].
     pub fn publish_head(
         &mut self,
         chapter: u32,
@@ -506,10 +536,20 @@ impl NodeCtx {
         opt: Option<&AdamState>,
     ) -> Result<()> {
         let params = HeadParams::from_head(head, if self.cfg.ship_opt_state { opt } else { None });
-        let wire_bytes = params.wire_bytes();
         let store = self.store.clone();
-        self.rec
-            .time(SpanKind::Publish, usize::MAX, chapter, || store.put_head(chapter, params))?;
+        let codec = self.cfg.wire_codec;
+        let wire_bytes = if codec == WireCodec::F32 {
+            let bytes = params.wire_bytes();
+            self.rec
+                .time(SpanKind::Publish, usize::MAX, chapter, || store.put_head(chapter, params))?;
+            bytes
+        } else {
+            let q = codec.quantize_head(&params);
+            let bytes = q.wire_bytes();
+            self.rec
+                .time(SpanKind::Publish, usize::MAX, chapter, || store.put_head_q(chapter, q))?;
+            bytes
+        };
         self.emit(RunEvent::HeadPublished { node: self.node_id, chapter, wire_bytes });
         Ok(())
     }

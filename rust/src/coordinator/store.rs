@@ -32,6 +32,7 @@ use crate::metrics::CommStats;
 use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};
 use crate::tensor::adam::AdamConfig;
 use crate::tensor::{AdamState, Matrix};
+use crate::transport::codec::{QuantHeadParams, QuantLayerParams};
 
 /// Published form of one FF layer: weights + bias, optionally with Adam
 /// moments (`ship_opt_state` ablation — the paper ships only w/b).
@@ -292,6 +293,22 @@ pub trait ParamStore: Send + Sync {
     /// client only after the server negotiated protocol v3).
     fn supports_deltas(&self) -> bool {
         false
+    }
+
+    /// Publish layer `l` at `chapter` from an already-quantized frame.
+    /// The default dequantizes locally and stores the rounded params —
+    /// exactly what the TCP server does with the same `q` bits on the
+    /// other side of a v4 `PUT_LAYER_Q`, so every transport writes
+    /// identical bytes into its store (tcp-vs-inproc bitwise equality).
+    /// A protocol-v4 TCP client overrides this to ship `q` itself.
+    fn put_layer_q(&self, layer: usize, chapter: u32, q: QuantLayerParams) -> Result<()> {
+        self.put_layer(layer, chapter, q.dequantize())
+    }
+
+    /// Quantized-frame variant of [`ParamStore::put_head`] (see
+    /// [`ParamStore::put_layer_q`] for the determinism contract).
+    fn put_head_q(&self, chapter: u32, q: QuantHeadParams) -> Result<()> {
+        self.put_head(chapter, q.dequantize())
     }
 
     /// Non-blocking presence probe: is `(layer, chapter)` published?

@@ -103,7 +103,9 @@ fn print_help() {
          \u{20}  registered workers instead of parking for exactly `nodes`; 0 = nodes;\n\
          \u{20}  late joiners are admitted mid-run and crashed workers' leases requeued),\n\
          \u{20}  checkpoint_dir (durable RunCheckpoint dir; empty = off),\n\
-         \u{20}  checkpoint_every (chapters between checkpoint writes), ...\n"
+         \u{20}  checkpoint_every (chapters between checkpoint writes),\n\
+         \u{20}  wire_codec (f32|bf16|i8: quantize published matrices and\n\
+         \u{20}  checkpoint payloads; deterministic across transports), ...\n"
     );
 }
 

@@ -41,10 +41,11 @@ pub fn write_csv(
 }
 
 /// Column order of the event CSV. Every [`event_csv_row`] fills exactly
-/// these ten cells (empty where a column does not apply).
+/// these eleven cells (empty where a column does not apply). `raw_bytes`
+/// rides at the end so pre-compression consumers' column indices hold.
 pub const EVENT_CSV_HEADER: &[&str] = &[
     "event", "node", "layer", "chapter", "loss", "wire_bytes", "accuracy", "ok", "busy_s",
-    "wait_s",
+    "wait_s", "raw_bytes",
 ];
 
 /// Project one [`RunEvent`] onto the [`EVENT_CSV_HEADER`] columns.
@@ -75,12 +76,13 @@ pub fn event_csv_row(ev: &RunEvent) -> Vec<String> {
             row[8] = format!("{busy_s:.6}");
             row[9] = format!("{wait_s:.6}");
         }
-        RunEvent::LayerPublished { node, layer, chapter, wire_bytes } => {
+        RunEvent::LayerPublished { node, layer, chapter, wire_bytes, raw_bytes } => {
             row[0] = "layer_published".into();
             row[1] = node.to_string();
             row[2] = layer.to_string();
             row[3] = chapter.to_string();
             row[5] = wire_bytes.to_string();
+            row[10] = raw_bytes.to_string();
         }
         RunEvent::HeadPublished { node, chapter, wire_bytes } => {
             row[0] = "head_published".into();
@@ -88,9 +90,10 @@ pub fn event_csv_row(ev: &RunEvent) -> Vec<String> {
             row[3] = chapter.to_string();
             row[5] = wire_bytes.to_string();
         }
-        RunEvent::CheckpointWritten { wire_bytes, .. } => {
+        RunEvent::CheckpointWritten { wire_bytes, raw_bytes, .. } => {
             row[0] = "checkpoint_written".into();
             row[5] = wire_bytes.to_string();
+            row[10] = raw_bytes.to_string();
         }
         RunEvent::TaskStarted { worker, chapter, layer } => {
             row[0] = "task_started".into();

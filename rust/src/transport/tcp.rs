@@ -1,4 +1,4 @@
-//! TCP transport v3: the leader hosts the parameter store; workers speak a
+//! TCP transport v4: the leader hosts the parameter store; workers speak a
 //! multiplexed request/response protocol over length-prefixed frames.
 //!
 //! This is the socket setup of the paper's testbed (§6 "we used sockets to
@@ -20,6 +20,11 @@
 //!   changed against a base chapter already in the store; the server
 //!   reconstructs the full layer bit-exactly. `HELLO` negotiates the
 //!   version down to v2 peers, which simply keep sending full frames.
+//! * **Quantized publish (v4)** — `PUT_LAYER_Q`/`PUT_HEAD_Q` carry
+//!   bf16/i8 frames under `wire_codec`; the server dequantizes the same
+//!   bits the publisher rounded through, so stored weights are identical
+//!   on every transport. Pre-v4 peers fall back to full f32 frames of
+//!   the already-rounded params — same stored bits, more bytes.
 //! * **Membership** — the first frame on a connection must be `HELLO`
 //!   (protocol version + role); workers are assigned node ids through the
 //!   leader's [`NodeRegistry`] and report `DONE` when their chapters are
@@ -45,14 +50,17 @@ use crate::coordinator::store::{HeadParams, LayerDelta, LayerParams, MemStore, P
 use crate::coordinator::taskgraph::Task;
 use crate::metrics::CommStats;
 use crate::sync::{LockRank, OrderedMutex};
-use crate::transport::codec::{read_frame, write_frame, Dec, Enc};
+use crate::transport::codec::{
+    read_frame, write_frame, Dec, Enc, QuantHeadParams, QuantLayerParams,
+};
 
 /// Wire protocol major version, negotiated in `HELLO`.
-pub const PROTOCOL_VERSION: u8 = 3;
+pub const PROTOCOL_VERSION: u8 = 4;
 
 /// Oldest protocol version the server still speaks. `HELLO` settles on
-/// `min(client, server)` within this range; v3-only ops (delta publish)
-/// are refused client-side when the negotiated version predates them.
+/// `min(client, server)` within this range; version-gated ops (v3 delta
+/// publish, v4 quantized publish) are refused or fallen back client-side
+/// when the negotiated version predates them.
 pub const MIN_PROTOCOL_VERSION: u8 = 2;
 
 /// Max frame size (1 GiB — a [3072,4000] f32 layer is ~49 MB).
@@ -90,6 +98,10 @@ mod op {
     pub const TASK_DONE: u8 = 0x24;
     /// v3+ only: changed rows against a base chapter already in the store.
     pub const PUT_LAYER_DELTA: u8 = 0x25;
+    /// v4+ only: layer params as a quantized frame (`wire_codec`).
+    pub const PUT_LAYER_Q: u8 = 0x26;
+    /// v4+ only: head params as a quantized frame (`wire_codec`).
+    pub const PUT_HEAD_Q: u8 = 0x27;
 }
 
 const ST_OK: u8 = 0;
@@ -561,6 +573,20 @@ fn handle_immediate(
             let delta = d.layer_delta()?;
             store.put_layer_delta(layer, chapter, base_chapter, delta)?;
         }
+        op::PUT_LAYER_Q => {
+            let layer = d.u32()? as usize;
+            let chapter = d.u32()?;
+            let q = d.quant_layer_params()?;
+            // The server-side dequantize of the client's q bits — the
+            // same computation an in-proc store's put_layer_q default
+            // runs, so both transports store identical bytes.
+            store.put_layer_q(layer, chapter, q)?;
+        }
+        op::PUT_HEAD_Q => {
+            let chapter = d.u32()?;
+            let q = d.quant_head_params()?;
+            store.put_head_q(chapter, q)?;
+        }
         op::GET_LAYER => {
             let layer = d.u32()? as usize;
             let chapter = d.u32()?;
@@ -787,7 +813,7 @@ fn fail_all(shared: &ClientShared, reason: String) {
     }
 }
 
-/// [`ParamStore`] client over TCP, protocol v3 (v2 negotiated down).
+/// [`ParamStore`] client over TCP, protocol v4 (v2/v3 negotiated down).
 ///
 /// One connection carries any number of concurrent in-flight requests
 /// (requests are tagged with a `u64 req_id`; a demux thread routes the
@@ -796,7 +822,8 @@ fn fail_all(shared: &ClientShared, reason: String) {
 pub struct TcpStoreClient {
     shared: Arc<ClientShared>,
     node_id: u32,
-    /// Version settled in `HELLO`; gates v3-only ops (delta publish).
+    /// Version settled in `HELLO`; gates version-dependent ops (v3 delta
+    /// publish, v4 quantized publish).
     proto: u8,
     demux: Option<std::thread::JoinHandle<()>>,
 }
@@ -1038,6 +1065,33 @@ impl ParamStore for TcpStoreClient {
 
     fn supports_deltas(&self) -> bool {
         self.proto >= 3
+    }
+
+    fn put_layer_q(&self, layer: usize, chapter: u32, q: QuantLayerParams) -> Result<()> {
+        if self.proto < 4 {
+            // v2/v3 peer: ship the rounded params as a plain f32 full
+            // frame — the exact bits a v4 server would store from `q`.
+            return self.put_layer(layer, chapter, q.dequantize());
+        }
+        self.shared
+            .request(op::PUT_LAYER_Q, None, |e| {
+                e.u32(layer as u32);
+                e.u32(chapter);
+                e.quant_layer_params(&q);
+            })
+            .map(|_| ())
+    }
+
+    fn put_head_q(&self, chapter: u32, q: QuantHeadParams) -> Result<()> {
+        if self.proto < 4 {
+            return self.put_head(chapter, q.dequantize());
+        }
+        self.shared
+            .request(op::PUT_HEAD_Q, None, |e| {
+                e.u32(chapter);
+                e.quant_head_params(&q);
+            })
+            .map(|_| ())
     }
 
     fn get_layer(&self, layer: usize, chapter: u32, timeout: Duration) -> Result<Arc<LayerParams>> {
@@ -1358,6 +1412,40 @@ mod tests {
         let orphan = LayerDelta::diff(&base, &next).unwrap();
         let err = client.put_layer_delta(1, 5, 9, orphan).unwrap_err();
         assert!(err.to_string().contains("base chapter"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn quantized_publish_reconstructs_across_the_wire() {
+        use crate::transport::codec::WireCodec;
+        let store = Arc::new(MemStore::new());
+        let server = StoreServer::start(store.clone(), 0).unwrap();
+        let client = TcpStoreClient::connect(server.addr).unwrap();
+        assert_eq!(client.protocol_version(), PROTOCOL_VERSION);
+
+        for codec in [WireCodec::F32, WireCodec::Bf16, WireCodec::I8] {
+            let chapter = codec.tag() as u32;
+            let p = params();
+            let q = codec.quantize_layer(&p);
+            // The canonical store value: what the publisher's local
+            // dequantize of the same q bits yields.
+            let rounded = q.dequantize();
+            client.put_layer_q(4, chapter, q).unwrap();
+            let got = client.get_layer(4, chapter, Duration::from_millis(500)).unwrap();
+            assert_eq!(got.w, rounded.w, "{codec}");
+            assert_eq!(got.b, rounded.b, "{codec}");
+
+            let hp = HeadParams {
+                w: Matrix::randn_scaled(4, 3, &mut Rng::new(11)),
+                b: vec![0.5; 3],
+                opt: None,
+            };
+            let hq = codec.quantize_head(&hp);
+            let hr = hq.dequantize();
+            client.put_head_q(chapter, hq).unwrap();
+            let got = client.get_head(chapter, Duration::from_millis(500)).unwrap();
+            assert_eq!(got.w, hr.w, "{codec}");
+        }
         server.shutdown();
     }
 

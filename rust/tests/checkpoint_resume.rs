@@ -194,6 +194,42 @@ fn single_layer_resume_is_bitwise() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Quantized runs checkpoint and resume bitwise too: a `wire_codec=bf16`
+/// run interrupted and resumed reproduces the uninterrupted quantized
+/// run exactly, including through a `checkpoint_keep > 1` rotation whose
+/// surviving generations are themselves v2 quantized files.
+#[test]
+fn quantized_resume_is_bitwise_through_rotation() {
+    use pff::transport::codec::WireCodec;
+
+    let dir = temp_dir("bf16");
+    let mut cfg = base_cfg(1);
+    cfg.wire_codec = WireCodec::Bf16;
+    cfg.checkpoint_keep = 3;
+    cfg.checkpoint_dir = dir.clone();
+    cfg.checkpoint_every = 1;
+
+    let (full, mid) = run_with_mid_snapshot(&cfg, 2).unwrap();
+
+    // With checkpoint_every = 1 over 8 chapters the rotation definitely
+    // ran: keep = 3 leaves latest.ckpt plus rotated generations, every
+    // one a loadable v2 quantized checkpoint.
+    assert!(dir.join("latest.ckpt.1").exists(), "keep=3 must leave rotation slot .1");
+    assert!(!dir.join("latest.ckpt.3").exists(), "history must stay bounded at keep");
+    let old = RunCheckpoint::load(dir.join("latest.ckpt.1")).unwrap();
+    assert_eq!(old.wire_codec(), WireCodec::Bf16, "rotated file must carry the codec");
+
+    let ck = RunCheckpoint::load(&mid).unwrap();
+    assert_eq!(ck.wire_codec(), WireCodec::Bf16, "mid-run file must carry the codec");
+    let mut rcfg = ck.experiment_config().unwrap();
+    assert_eq!(rcfg.wire_codec, WireCodec::Bf16, "codec must ride the embedded config");
+    rcfg.checkpoint_dir = PathBuf::new();
+    let resumed =
+        Experiment::builder().config(rcfg).resume_from(&mid).launch().unwrap().join().unwrap();
+    assert_models_bitwise(&full, &resumed, "bf16-rotation");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// A truncated checkpoint file (torn disk write without the atomic
 /// rename) is rejected at load with an actionable error, and the builder
 /// surfaces it from `.launch()`.

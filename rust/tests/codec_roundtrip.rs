@@ -7,7 +7,7 @@
 use pff::coordinator::store::{HeadParams, LayerParams, OptSnapshot};
 use pff::tensor::{Matrix, Rng};
 use pff::testing::{forall_r, gen_labels, gen_usize};
-use pff::transport::codec::{read_frame, write_frame, Dec, Enc};
+use pff::transport::codec::{read_frame, write_frame, Dec, Enc, WireCodec};
 
 /// Matrix with arbitrary f32 *bit patterns* (NaNs, infs, -0.0, denormals)
 /// and dims drawn from `[0, hi]` — degenerate 0×N / N×0 shapes included.
@@ -233,6 +233,169 @@ fn v2_request_headers_roundtrip() {
             (&got == body).then_some(()).ok_or_else(|| "body differs".into())
         },
     );
+}
+
+/// Lossy codecs settle in one pass: re-quantizing a dequantized frame is
+/// a bitwise no-op. This is the property quantize-at-publish leans on —
+/// once the publisher rounds through the codec, every transport stores
+/// the same bits and no further pass can drift them.
+#[test]
+fn lossy_quantize_is_idempotent() {
+    for codec in [WireCodec::Bf16, WireCodec::I8] {
+        forall_r(
+            &format!("{codec}-quantize-idempotent"),
+            31,
+            64,
+            gen_layer_params,
+            move |p| {
+                let r1 = codec.quantize_layer(p).dequantize();
+                let r2 = codec.quantize_layer(&r1).dequantize();
+                matrix_bits_eq(&r2.w, &r1.w)
+                    .map_err(|e| format!("second pass moved w: {e}"))?;
+                if !bits_eq(&r2.b, &r1.b) {
+                    return Err("second pass moved bias bits".into());
+                }
+                if !bits_eq(&r1.b, &p.b) {
+                    return Err("bias must stay f32-lossless".into());
+                }
+                opt_bits_eq(&r2.opt, &r1.opt)
+                    .map_err(|e| format!("second pass moved opt: {e}"))
+            },
+        );
+    }
+}
+
+/// Quantized frames round-trip through `Enc`/`Dec` bit-exactly under
+/// every codec, over arbitrary f32 bit patterns (NaNs, infs, ±0,
+/// subnormals) and degenerate 0×N shapes — and the advertised
+/// `wire_bytes()` matches the encoded length exactly.
+#[test]
+fn quant_frames_roundtrip_bit_exact() {
+    for codec in [WireCodec::F32, WireCodec::Bf16, WireCodec::I8] {
+        forall_r(
+            &format!("{codec}-quant-frame-roundtrip"),
+            37,
+            64,
+            gen_layer_params,
+            move |p| {
+                let q = codec.quantize_layer(p);
+                let want = q.dequantize();
+                if codec == WireCodec::F32 {
+                    matrix_bits_eq(&want.w, &p.w)
+                        .map_err(|e| format!("f32 codec must be lossless: {e}"))?;
+                }
+                let mut e = Enc::new();
+                e.quant_layer_params(&q);
+                let buf = e.finish();
+                if buf.len() as u64 != q.wire_bytes() {
+                    return Err(format!(
+                        "wire_bytes {} != encoded {}",
+                        q.wire_bytes(),
+                        buf.len()
+                    ));
+                }
+                let mut d = Dec::new(&buf);
+                let got = d.quant_layer_params().map_err(|e| format!("decode: {e:#}"))?;
+                if d.remaining() != 0 {
+                    return Err(format!("{} trailing bytes", d.remaining()));
+                }
+                let got = got.dequantize();
+                matrix_bits_eq(&got.w, &want.w)?;
+                if !bits_eq(&got.b, &want.b) {
+                    return Err("bias bits differ".into());
+                }
+                if got.normalize_input != want.normalize_input {
+                    return Err("normalize flag flipped".into());
+                }
+                opt_bits_eq(&got.opt, &want.opt)
+            },
+        );
+    }
+}
+
+/// Head frames get the same treatment as layers: quantize → encode →
+/// decode → dequantize is the identity on the once-rounded params.
+#[test]
+fn quant_head_frames_roundtrip_bit_exact() {
+    for codec in [WireCodec::F32, WireCodec::Bf16, WireCodec::I8] {
+        forall_r(
+            &format!("{codec}-quant-head-roundtrip"),
+            41,
+            48,
+            |rng| HeadParams { w: gen_bits_matrix(rng, 8), b: gen_f32s(rng, 8), opt: gen_opt(rng) },
+            move |p| {
+                let q = codec.quantize_head(p);
+                let want = q.dequantize();
+                let mut e = Enc::new();
+                e.quant_head_params(&q);
+                let buf = e.finish();
+                if buf.len() as u64 != q.wire_bytes() {
+                    return Err(format!(
+                        "wire_bytes {} != encoded {}",
+                        q.wire_bytes(),
+                        buf.len()
+                    ));
+                }
+                let got = Dec::new(&buf)
+                    .quant_head_params()
+                    .map_err(|e| format!("decode: {e:#}"))?
+                    .dequantize();
+                matrix_bits_eq(&got.w, &want.w)?;
+                if !bits_eq(&got.b, &want.b) {
+                    return Err("bias bits differ".into());
+                }
+                let r2 = codec.quantize_head(&want).dequantize();
+                matrix_bits_eq(&r2.w, &want.w)
+                    .map_err(|e| format!("second pass moved w: {e}"))?;
+                opt_bits_eq(&got.opt, &want.opt)
+            },
+        );
+    }
+}
+
+/// Hand-picked hostile payloads — NaN (both signs), ±0, ±inf, subnormals
+/// and f32 extremes — survive every codec without panicking, and the
+/// rounded result is a quantization fixed point.
+#[test]
+fn special_values_survive_every_codec() {
+    let specials = vec![
+        f32::NAN,
+        -f32::NAN,
+        0.0,
+        -0.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MIN_POSITIVE / 2.0, // subnormal
+        -f32::MIN_POSITIVE / 2.0,
+        f32::MAX,
+        f32::MIN,
+    ];
+    for codec in [WireCodec::F32, WireCodec::Bf16, WireCodec::I8] {
+        for (r, c) in [(2usize, 5usize), (1, 10), (10, 1), (0, 4), (4, 0)] {
+            let data = if r * c == 0 { vec![] } else { specials.clone() };
+            let p = LayerParams {
+                w: Matrix::from_vec(r, c, data),
+                b: vec![-0.0, f32::NAN],
+                normalize_input: true,
+                opt: None,
+            };
+            let q = codec.quantize_layer(&p);
+            let r1 = q.dequantize();
+            // ±0 must keep its sign bit through every codec.
+            if r * c != 0 {
+                assert_eq!(r1.w.data[2].to_bits(), 0.0f32.to_bits(), "{codec} lost +0");
+                assert_eq!(r1.w.data[3].to_bits(), (-0.0f32).to_bits(), "{codec} lost -0");
+                assert!(r1.w.data[0].is_nan(), "{codec} lost NaN");
+            }
+            let mut e = Enc::new();
+            e.quant_layer_params(&q);
+            let got = Dec::new(&e.finish()).quant_layer_params().unwrap().dequantize();
+            matrix_bits_eq(&got.w, &r1.w).unwrap();
+            assert!(bits_eq(&got.b, &p.b), "{codec} moved bias bits");
+            let r2 = codec.quantize_layer(&r1).dequantize();
+            matrix_bits_eq(&r2.w, &r1.w).unwrap();
+        }
+    }
 }
 
 #[test]

@@ -311,6 +311,39 @@ fn tcp_delta_publish_bitwise_matches_inproc() {
     assert_eq!(inproc.test_accuracy, tcp.test_accuracy);
 }
 
+/// Quantize-at-publish keeps the wire codec transport-invariant: under
+/// every `wire_codec`, TCP and in-proc runs land on bit-identical
+/// weights — the publisher rounds through the codec before the store
+/// write, so both transports store the same dequantized bits. (`f32` is
+/// covered by `tcp_all_layers_bitwise_matches_inproc`.) The third case
+/// composes the codec with protocol-v3 delta publishes: deltas diff
+/// rounded-vs-rounded params, so they stay bit-exact too.
+#[test]
+fn tcp_matches_inproc_bitwise_under_every_wire_codec() {
+    for (codec, ship) in [("bf16", true), ("i8", true), ("bf16", false)] {
+        let mut cfg = mech_cfg();
+        cfg.ship_opt_state = ship;
+        cfg.delta_publish = !ship;
+        cfg.scheduler = Scheduler::AllLayers;
+        cfg.nodes = 2;
+        cfg.wire_codec = codec.parse().unwrap();
+        cfg.transport = TransportKind::InProc;
+        let inproc = run_experiment(&cfg).unwrap();
+        cfg.transport = TransportKind::Tcp;
+        let tcp = run_experiment(&cfg).unwrap();
+        assert_eq!(inproc.model.net.layers.len(), tcp.model.net.layers.len());
+        for (i, (a, b)) in inproc.model.net.layers.iter().zip(&tcp.model.net.layers).enumerate() {
+            assert_eq!(
+                a.w.data, b.w.data,
+                "[{codec} ship={ship}] layer {i} weights differ across transports"
+            );
+            assert_eq!(a.b, b.b, "[{codec} ship={ship}] layer {i} bias differs across transports");
+        }
+        assert_eq!(inproc.test_accuracy, tcp.test_accuracy, "[{codec} ship={ship}]");
+        assert!(tcp.comm.bytes_put > 0);
+    }
+}
+
 /// The ship-opt-state ablation changes the wire bytes accordingly.
 #[test]
 fn ship_opt_state_triples_wire_bytes() {
