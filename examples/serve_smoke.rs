@@ -1,0 +1,164 @@
+//! Serve smoke: end-to-end proof that `pff serve` answers the v4
+//! CLASSIFY ops with predictions **bitwise identical** to offline eval
+//! of the same checkpoint, under concurrent load, and dies cleanly on
+//! SIGTERM.
+//!
+//! This process is the *client* side: it loads the checkpoint itself to
+//! compute the offline reference (goodness scoring stacks every class
+//! overlay into one tall batch, so labels are row-independent — batch
+//! composition on the server cannot change them), spawns a real
+//! `pff serve` OS process, fires N concurrent single-row CLASSIFY
+//! requests plus one whole-matrix CLASSIFY_BATCH, compares labels, then
+//! SIGTERMs the server and checks the shutdown was clean.
+//!
+//! ```bash
+//! cargo build --release
+//! cargo run --release --bin pff -- train --dims 784,32,32 --train_n 256 \
+//!     --epochs 8 --checkpoint_dir ckpt --checkpoint_every 1
+//! cargo run --release --example serve_smoke -- --checkpoint ckpt/latest.ckpt
+//! ```
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pff::coordinator::store::MemStore;
+use pff::coordinator::{eval, RunCheckpoint};
+use pff::engine::factory_for;
+use pff::ff::predict_goodness;
+use pff::tensor::{Matrix, Rng};
+use pff::transport::tcp::TcpStoreClient;
+
+/// Locate the `pff` binary next to this example (`target/<profile>/pff`),
+/// overridable via `PFF_BIN`.
+fn pff_binary() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("PFF_BIN") {
+        let p = PathBuf::from(p);
+        return p.exists().then_some(p);
+    }
+    let exe = std::env::current_exe().ok()?; // target/<profile>/examples/serve_smoke
+    let dir = exe.parent()?.parent()?;
+    let cand = dir.join(if cfg!(windows) { "pff.exe" } else { "pff" });
+    cand.exists().then_some(cand)
+}
+
+fn free_port() -> anyhow::Result<u16> {
+    let l = std::net::TcpListener::bind(("127.0.0.1", 0))?;
+    Ok(l.local_addr()?.port())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut checkpoint = None;
+    let mut requests = 64usize;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--checkpoint" => {
+                checkpoint = args.get(i + 1).cloned();
+                i += 2;
+            }
+            "--requests" => {
+                requests = args.get(i + 1).map(|v| v.parse()).transpose()?.unwrap_or(requests);
+                i += 2;
+            }
+            other => anyhow::bail!("unknown flag {other} (expected --checkpoint, --requests)"),
+        }
+    }
+    let checkpoint =
+        checkpoint.ok_or_else(|| anyhow::anyhow!("--checkpoint PATH is required"))?;
+    let bin = pff_binary().ok_or_else(|| {
+        anyhow::anyhow!("pff binary not found (run `cargo build --release` first, or set PFF_BIN)")
+    })?;
+
+    // --- offline reference from the same checkpoint -----------------------
+    let ck = RunCheckpoint::load(&checkpoint)?;
+    let cfg = ck.experiment_config()?.validated()?;
+    let store = MemStore::new();
+    store.restore(ck.store.clone());
+    let model = eval::assemble(&store, &cfg)?;
+    let in_dim = model.net.layers[0].w.rows;
+    let x = Matrix::rand_uniform(requests, in_dim, 0.0, 1.0, &mut Rng::new(4242));
+    let mut eng = factory_for(cfg.engine, &cfg.artifact_dir)?()?;
+    let offline = predict_goodness(eng.as_mut(), &model.net, &x)?;
+    println!("[smoke] offline reference: {requests} rows, in_dim {in_dim}");
+
+    // --- real `pff serve` process -----------------------------------------
+    let port = free_port()?;
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = Command::new(&bin)
+        .args(["serve", "--checkpoint", &checkpoint, "--addr", &addr])
+        .args(["--max-batch", "16", "--max-delay-us", "1000"])
+        .spawn()?;
+    let sock_addr: std::net::SocketAddr = addr.parse()?;
+    let client = {
+        let mut tries = 0;
+        loop {
+            match TcpStoreClient::connect(sock_addr) {
+                Ok(c) => break Arc::new(c),
+                Err(e) => {
+                    tries += 1;
+                    anyhow::ensure!(tries < 300, "serve process never came up: {e:#}");
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+    };
+
+    // --- N concurrent CLASSIFY requests, one multiplexed connection -------
+    let threads = 8.min(requests);
+    let handles: Vec<_> = (0..threads)
+        .map(|j| {
+            let c = client.clone();
+            let x = x.clone();
+            std::thread::spawn(move || -> anyhow::Result<Vec<(usize, u8)>> {
+                let mut got = Vec::new();
+                let mut k = j;
+                while k < x.rows {
+                    let row = x.rows_range(k, k + 1).data;
+                    got.push((k, c.classify(&row)?));
+                    k += threads;
+                }
+                Ok(got)
+            })
+        })
+        .collect();
+    let mut served = vec![0u8; requests];
+    for h in handles {
+        for (k, label) in h.join().expect("client thread panicked")? {
+            served[k] = label;
+        }
+    }
+    anyhow::ensure!(
+        served == offline,
+        "served CLASSIFY labels diverge from offline eval (first mismatch at row {:?})",
+        served.iter().zip(&offline).position(|(a, b)| a != b)
+    );
+    println!("[smoke] {requests} concurrent CLASSIFY replies match offline eval bitwise");
+
+    // --- whole-matrix CLASSIFY_BATCH --------------------------------------
+    let batch = client.classify_batch(&x)?;
+    anyhow::ensure!(batch == offline, "CLASSIFY_BATCH labels diverge from offline eval");
+    println!("[smoke] CLASSIFY_BATCH of {requests} rows matches offline eval bitwise");
+
+    // --- clean SIGTERM shutdown -------------------------------------------
+    drop(client);
+    let pid = server.id().to_string();
+    let killed = Command::new("kill").arg(&pid).status()?;
+    anyhow::ensure!(killed.success(), "kill -TERM {pid} failed");
+    let status = server.wait()?;
+    #[cfg(unix)]
+    {
+        use std::os::unix::process::ExitStatusExt;
+        // Exited, 143 from a shell wrapper, or terminated by SIGTERM (15)
+        // directly — all count as a prompt, clean death.
+        let clean =
+            status.success() || status.code() == Some(143) || status.signal() == Some(15);
+        anyhow::ensure!(clean, "serve process did not exit cleanly on SIGTERM: {status}");
+    }
+    #[cfg(not(unix))]
+    anyhow::ensure!(status.success(), "serve process did not exit cleanly: {status}");
+    println!("[smoke] serve process shut down cleanly on SIGTERM ({status})");
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! Load-test harness for `pff serve`: latency and throughput of the
+//! batched classify path, in-process and across the v4 wire protocol.
+//!
+//! The headline records are an open-loop arrival run (requests fired on
+//! a fixed RPS schedule regardless of completions, so queueing delay is
+//! measured honestly) with p50/p95/p99 latency, and a closed-loop
+//! saturation sweep over client counts to find peak throughput.
+//!
+//! ```bash
+//! cargo bench --bench micro_serve                       # full scale
+//! cargo bench --bench micro_serve -- --quick            # CI smoke
+//! cargo bench --bench micro_serve -- --json OUT.json    # perf artifact
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pff::bench_util::{bench, BenchStats, JsonReport};
+use pff::coordinator::eval::TrainedModel;
+use pff::coordinator::serve::{BatchServer, ServeOptions};
+use pff::coordinator::store::MemStore;
+use pff::coordinator::NodeRegistry;
+use pff::engine::native_factory;
+use pff::ff::FFNetwork;
+use pff::tensor::{Matrix, Rng};
+use pff::transport::tcp::{StoreServer, TcpStoreClient};
+
+struct Opts {
+    quick: bool,
+    json: Option<String>,
+}
+
+fn parse_opts() -> Opts {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut opts = Opts { quick: false, json: None };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => {
+                opts.quick = true;
+                i += 1;
+            }
+            "--json" => {
+                opts.json = args.get(i + 1).cloned();
+                i += 2;
+            }
+            // tolerate cargo-bench passthrough flags like --bench
+            _ => i += 1,
+        }
+    }
+    opts
+}
+
+/// Percentile (0..=100) of a pre-sorted sample vector.
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
+    sorted[idx]
+}
+
+/// Latency-record stats: `min_s`/`p50_s` carry the p50 (the gated
+/// number — far more stable run-to-run than the true minimum).
+fn latency_stats(mut samples: Vec<f64>) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        iters: samples.len() as u32,
+        min_s: pct(&samples, 50.0),
+        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_s: pct(&samples, 50.0),
+    }
+}
+
+fn serve_model(quick: bool) -> TrainedModel {
+    let mut rng = Rng::new(7);
+    let dims: &[usize] = if quick { &[784, 64, 64] } else { &[784, 128, 128, 128] };
+    TrainedModel {
+        net: FFNetwork::new(dims, 10, &mut rng),
+        head: None,
+        layer_heads: Vec::new(),
+    }
+}
+
+/// A pool of distinct single feature rows, cycled by request index.
+fn row_pool(n: usize, in_dim: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(11);
+    (0..n)
+        .map(|_| Matrix::rand_uniform(1, in_dim, 0.0, 1.0, &mut rng).data)
+        .collect()
+}
+
+fn start_stack(quick: bool) -> (Arc<BatchServer>, StoreServer, usize) {
+    let model = serve_model(quick);
+    let in_dim = model.net.layers[0].w.rows;
+    let srv = BatchServer::start(model, native_factory(), ServeOptions::default()).unwrap();
+    let server = StoreServer::start_serving(
+        Arc::new(MemStore::new()),
+        Arc::new(NodeRegistry::new()),
+        srv.clone(),
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    (srv, server, in_dim)
+}
+
+/// Open-loop arrival: `clients` sender threads share a fixed global RPS
+/// schedule (request k departs at k/rps seconds, threads take every
+/// `clients`-th slot). A sender never waits for a reply before the next
+/// slot comes due on its own schedule, so server-side queueing shows up
+/// as latency instead of silently throttling the offered load.
+fn open_loop(
+    client: &Arc<TcpStoreClient>,
+    rows: &[Vec<f32>],
+    clients: usize,
+    rps: f64,
+    total: usize,
+) -> Vec<f64> {
+    let start = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|j| {
+            let c = client.clone();
+            let rows = rows.to_vec();
+            std::thread::spawn(move || {
+                let mut lat = Vec::new();
+                let mut k = j;
+                while k < total {
+                    let due = Duration::from_secs_f64(k as f64 / rps);
+                    let now = start.elapsed();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    let t0 = Instant::now();
+                    c.classify(&rows[k % rows.len()]).unwrap();
+                    lat.push(t0.elapsed().as_secs_f64());
+                    k += clients;
+                }
+                lat
+            })
+        })
+        .collect();
+    handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+}
+
+/// Closed-loop hammer: every client keeps exactly one classify in
+/// flight. Returns aggregate requests per second.
+fn closed_loop_rate(client: &Arc<TcpStoreClient>, rows: &[Vec<f32>], clients: usize, per: u32) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|j| {
+            let c = client.clone();
+            let rows = rows.to_vec();
+            std::thread::spawn(move || {
+                for k in 0..per as usize {
+                    c.classify(&rows[(j + k) % rows.len()]).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (clients as u32 * per) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let opts = parse_opts();
+    let mut report = JsonReport::new("micro_serve");
+    let (warmup, iters) = if opts.quick { (1, 5) } else { (2, 20) };
+
+    // --- in-process admission queue, no wire ---------------------------
+    {
+        let model = serve_model(opts.quick);
+        let in_dim = model.net.layers[0].w.rows;
+        let srv =
+            BatchServer::start(model, native_factory(), ServeOptions::default()).unwrap();
+        let rows = row_pool(64, in_dim);
+
+        let n = if opts.quick { 200 } else { 1000 };
+        let mut samples = Vec::with_capacity(n);
+        for k in 0..n {
+            let x = Matrix { rows: 1, cols: in_dim, data: rows[k % rows.len()].clone() };
+            let t0 = Instant::now();
+            srv.classify_blocking(x).unwrap();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = pct(&samples, 99.0);
+        report.add(
+            format!("[inproc] single-row classify  (p99 {:.3} ms)", p99 * 1e3),
+            latency_stats(samples),
+        );
+
+        // 64-row frames through the same queue: amortized row throughput.
+        let frame = {
+            let mut rng = Rng::new(13);
+            Matrix::rand_uniform(64, in_dim, 0.0, 1.0, &mut rng)
+        };
+        let s = bench(warmup, iters, || {
+            srv.classify_blocking(frame.clone()).unwrap();
+        });
+        report.add(
+            format!("[inproc] 64-row batch classify  ({:.0} rows/s)", 64.0 / s.min_s),
+            s,
+        );
+        srv.shutdown();
+    }
+
+    // --- wire path: CLASSIFY over one multiplexed connection -----------
+    {
+        let (srv, server, in_dim) = start_stack(opts.quick);
+        let client = Arc::new(TcpStoreClient::connect(server.addr).unwrap());
+        let rows = row_pool(64, in_dim);
+
+        // closed-loop round-trip latency, single requester
+        let n = if opts.quick { 200 } else { 1000 };
+        let mut samples = Vec::with_capacity(n);
+        for k in 0..n {
+            let t0 = Instant::now();
+            client.classify(&rows[k % rows.len()]).unwrap();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = pct(&samples, 99.0);
+        report.add(
+            format!("[wire]   single-row classify round-trip  (p99 {:.3} ms)", p99 * 1e3),
+            latency_stats(samples),
+        );
+
+        // open-loop arrival at a fixed offered load
+        let (rps, total) = if opts.quick { (500.0, 1000) } else { (500.0, 5000) };
+        let mut lat = open_loop(&client, &rows, 4, rps, total);
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p95, p99) = (pct(&lat, 95.0), pct(&lat, 99.0));
+        report.add(
+            format!(
+                "[wire]   open-loop classify @ 500 rps, 4 clients  (p95 {:.3} ms, p99 {:.3} ms)",
+                p95 * 1e3,
+                p99 * 1e3
+            ),
+            latency_stats(lat),
+        );
+
+        // batch frames across the wire
+        let frame = {
+            let mut rng = Rng::new(17);
+            Matrix::rand_uniform(64, in_dim, 0.0, 1.0, &mut rng)
+        };
+        let s = bench(warmup, iters, || {
+            client.classify_batch(&frame).unwrap();
+        });
+        report.add(
+            format!("[wire]   classify_batch 64-row frames  ({:.0} rows/s)", 64.0 / s.min_s),
+            s,
+        );
+
+        // saturation sweep: closed-loop clients doubling until the peak
+        let per: u32 = if opts.quick { 100 } else { 400 };
+        let mut peak = (0usize, 0.0f64);
+        for clients in [1usize, 2, 4, 8] {
+            let rate = closed_loop_rate(&client, &rows, clients, per);
+            if rate > peak.1 {
+                peak = (clients, rate);
+            }
+        }
+        let s = BenchStats {
+            iters: 15 * per,
+            min_s: 1.0 / peak.1,
+            mean_s: 1.0 / peak.1,
+            p50_s: 1.0 / peak.1,
+        };
+        report.add(
+            format!(
+                "[wire]   saturation sweep, 1-8 clients  (peak {:.0}/s @ {} clients)",
+                peak.1, peak.0
+            ),
+            s,
+        );
+
+        drop(client);
+        server.shutdown();
+        srv.shutdown();
+    }
+
+    report.write(opts.json.as_deref());
+}

@@ -218,39 +218,55 @@ impl std::fmt::Display for RunEvent {
 
 /// Callback observer type (runs on the emitting thread; keep it cheap and
 /// never emit from inside one).
-type Observer = Arc<dyn Fn(&RunEvent) + Send + Sync>;
+type Observer<E> = Arc<dyn Fn(&E) + Send + Sync>;
 
-#[derive(Default)]
-struct BusInner {
+struct BusInner<E> {
     /// Every event emitted so far, replayed to late subscribers so
     /// `RunHandle::events()` never misses the start of a run.
-    history: Vec<RunEvent>,
-    senders: Vec<Sender<RunEvent>>,
-    observers: Vec<Observer>,
+    history: Vec<E>,
+    senders: Vec<Sender<E>>,
+    observers: Vec<Observer<E>>,
+}
+
+impl<E> Default for BusInner<E> {
+    fn default() -> Self {
+        BusInner { history: Vec::new(), senders: Vec::new(), observers: Vec::new() }
+    }
 }
 
 /// Cheap-to-clone multi-consumer event bus (std `mpsc` fan-out plus
-/// callback observers). All clones share one stream.
-#[derive(Clone)]
-pub struct EventBus {
-    inner: Arc<OrderedMutex<BusInner>>,
+/// callback observers), generic over the event type. All clones share one
+/// stream. Training emits [`RunEvent`] on the [`EventBus`] alias; the
+/// serve path emits `ServeEvent` on a `Bus<ServeEvent>` — same replay,
+/// ordering and observer semantics, one implementation.
+pub struct Bus<E> {
+    inner: Arc<OrderedMutex<BusInner<E>>>,
 }
 
-impl Default for EventBus {
-    fn default() -> Self {
-        EventBus { inner: Arc::new(OrderedMutex::new(LockRank::Events, BusInner::default())) }
+/// The training-run event bus (see [`Bus`]).
+pub type EventBus = Bus<RunEvent>;
+
+impl<E> Clone for Bus<E> {
+    fn clone(&self) -> Self {
+        Bus { inner: self.inner.clone() }
     }
 }
 
-impl EventBus {
+impl<E> Default for Bus<E> {
+    fn default() -> Self {
+        Bus { inner: Arc::new(OrderedMutex::new(LockRank::Events, BusInner::default())) }
+    }
+}
+
+impl<E: Clone + Send> Bus<E> {
     /// Fresh bus with no subscribers.
     pub fn new() -> Self {
-        EventBus::default()
+        Bus::default()
     }
 
     /// Emit an event to every observer and subscriber.
-    pub fn emit(&self, ev: RunEvent) {
-        let observers: Vec<Observer> = {
+    pub fn emit(&self, ev: E) {
+        let observers: Vec<Observer<E>> = {
             let mut g = self.inner.lock();
             g.history.push(ev.clone());
             // Channel sends happen under the lock so every subscriber sees
@@ -266,7 +282,7 @@ impl EventBus {
 
     /// Subscribe a channel. The full event history is replayed first, so
     /// subscribing after launch loses nothing.
-    pub fn subscribe(&self) -> Receiver<RunEvent> {
+    pub fn subscribe(&self) -> Receiver<E> {
         let (tx, rx) = channel();
         let mut g = self.inner.lock();
         for ev in &g.history {
@@ -278,12 +294,12 @@ impl EventBus {
 
     /// Attach a callback observer (no replay — attach before launch to see
     /// everything).
-    pub fn observe(&self, f: impl Fn(&RunEvent) + Send + Sync + 'static) {
+    pub fn observe(&self, f: impl Fn(&E) + Send + Sync + 'static) {
         self.inner.lock().observers.push(Arc::new(f));
     }
 
     /// Snapshot of every event emitted so far (the replay history).
-    pub fn history(&self) -> Vec<RunEvent> {
+    pub fn history(&self) -> Vec<E> {
         self.inner.lock().history.clone()
     }
 

@@ -32,17 +32,19 @@ pub mod lr;
 pub mod node;
 pub mod registry;
 pub mod schedulers;
+pub mod serve;
 pub mod store;
 pub mod taskgraph;
 
 pub use checkpoint::{CheckpointWriter, RunCheckpoint};
 pub use dispatch::Dispatcher;
 pub use eval::TrainedModel;
-pub use events::{EventBus, EventLog, RunEvent};
+pub use events::{Bus, EventBus, EventLog, RunEvent};
 pub use experiment::{CancelToken, Experiment, ExperimentBuilder, RunHandle};
 pub use node::NodeCtx;
 pub use registry::NodeRegistry;
 pub use schedulers::{SchedulePlan, Scheduler, SchedulerRegistry};
+pub use serve::{BatchServer, ServeEvent, ServeOptions};
 pub use taskgraph::{Task, TaskGraph, TaskGraphBuilder};
 
 use crate::metrics::{CommStats, LossCurve, MakespanModel, NodeReport};

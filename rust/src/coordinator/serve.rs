@@ -1,0 +1,477 @@
+//! Batched inference serving: the admission queue behind `pff serve`.
+//!
+//! A [`BatchServer`] keeps a [`TrainedModel`] resident next to a
+//! dedicated engine thread and coalesces concurrent classify requests
+//! into engine-sized batches: a flush happens when the queue holds
+//! [`ServeOptions::max_batch`] rows **or** the oldest queued request has
+//! waited [`ServeOptions::max_delay`], whichever comes first. Each flush
+//! concatenates the queued feature rows into one tall matrix and scores
+//! every label overlay through the existing
+//! [`predict_goodness`](crate::ff::predict_goodness) path — the same
+//! per-row bit-deterministic kernel offline `pff eval` uses, which is
+//! what lets the serve-smoke CI job demand bitwise equality between
+//! served and offline predictions.
+//!
+//! Completion is callback-based: [`BatchServer::submit`] hands the queue
+//! a feature matrix plus a `FnOnce(Result<Vec<u8>>)` invoked (outside
+//! every lock) with the predicted labels. The TCP layer captures its
+//! connection writer in that callback, so a parked request costs no
+//! thread; in-process callers use [`BatchServer::classify_blocking`].
+//!
+//! Progress is observable as a [`ServeEvent`] stream on a
+//! [`Bus<ServeEvent>`] — the same replay/observer machinery as the
+//! training [`RunEvent`](crate::coordinator::RunEvent) bus.
+//!
+//! Locking: the queue lock is [`LockRank::Serve`] — above the store
+//! (rehydration happens before the server starts; the batcher holds no
+//! store lock) and below the event bus, so emitting from either side of
+//! the queue is rank-clean.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::events::Bus;
+use crate::coordinator::eval::TrainedModel;
+use crate::engine::EngineFactory;
+use crate::ff::predict_goodness;
+use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};
+use crate::tensor::Matrix;
+
+/// Batching knobs for a [`BatchServer`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Flush as soon as the queue holds this many feature rows. A single
+    /// request larger than this still ships alone (requests are never
+    /// split across batches — a reply is one request's rows exactly).
+    pub max_batch: usize,
+    /// Flush when the oldest queued request has waited this long, even
+    /// if the batch is not full. This bounds p99 latency at low load;
+    /// raising it trades latency for larger (more efficient) batches.
+    pub max_delay: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_batch: 32, max_delay: Duration::from_micros(500) }
+    }
+}
+
+/// One typed progress event from a running [`BatchServer`].
+#[derive(Clone, Debug)]
+pub enum ServeEvent {
+    /// A request entered the queue.
+    Enqueued {
+        /// Rows in the request.
+        rows: usize,
+        /// Requests in the queue after admission (queue depth).
+        queue_requests: usize,
+        /// Feature rows in the queue after admission.
+        queue_rows: usize,
+    },
+    /// The batcher drained the queue head into one engine batch.
+    BatchFlushed {
+        /// Whole requests coalesced into the batch.
+        requests: usize,
+        /// Total feature rows scored.
+        rows: usize,
+        /// Queue wait of the oldest request in the batch, microseconds.
+        oldest_wait_us: u64,
+    },
+    /// One request completed (its slice of a flushed batch).
+    RequestDone {
+        /// Rows in the request.
+        rows: usize,
+        /// Enqueue-to-reply latency, microseconds.
+        latency_us: u64,
+    },
+    /// A flushed batch failed in the engine; every member request got
+    /// the error.
+    BatchFailed {
+        /// Requests that received the error.
+        requests: usize,
+        /// The engine error, stringified.
+        error: String,
+    },
+    /// The server shut down; queued-but-unflushed requests were failed.
+    ShutDown {
+        /// Requests failed by the shutdown drain.
+        dropped: usize,
+    },
+}
+
+impl std::fmt::Display for ServeEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeEvent::Enqueued { rows, queue_requests, queue_rows } => {
+                write!(f, "enqueued {rows} row(s) (queue: {queue_requests} req / {queue_rows} rows)")
+            }
+            ServeEvent::BatchFlushed { requests, rows, oldest_wait_us } => {
+                write!(f, "flushed {requests} req / {rows} rows (oldest waited {oldest_wait_us} us)")
+            }
+            ServeEvent::RequestDone { rows, latency_us } => {
+                write!(f, "request done: {rows} row(s) in {latency_us} us")
+            }
+            ServeEvent::BatchFailed { requests, error } => {
+                write!(f, "batch failed for {requests} req: {error}")
+            }
+            ServeEvent::ShutDown { dropped } => {
+                write!(f, "serve queue shut down ({dropped} queued request(s) dropped)")
+            }
+        }
+    }
+}
+
+/// One queued classify request.
+struct PendingReq {
+    x: Matrix,
+    done: Box<dyn FnOnce(Result<Vec<u8>>) + Send>,
+    t_enq: Instant,
+}
+
+struct QueueInner {
+    pending: VecDeque<PendingReq>,
+    /// Total feature rows across `pending` (the flush trigger).
+    queued_rows: usize,
+    /// `Some(reason)` once the server stops admitting requests.
+    closed: Option<String>,
+}
+
+/// The admission queue + resident-model batcher behind `pff serve`.
+/// Cheap to share (`Arc`); see the module docs for semantics.
+pub struct BatchServer {
+    inner: OrderedMutex<QueueInner>,
+    cv: OrderedCondvar,
+    events: Bus<ServeEvent>,
+    opts: ServeOptions,
+    /// Input dim the model expects (`layers[0].w` rows); requests with
+    /// any other width are rejected at admission.
+    in_dim: usize,
+    batcher: OrderedMutex<Option<JoinHandle<()>>>,
+}
+
+impl BatchServer {
+    /// Start the batcher thread around `model`. The engine is built from
+    /// `factory` *on* the batcher thread (engines are per-thread); a
+    /// factory failure closes the queue with the error as the reason, so
+    /// later submits fail fast instead of hanging.
+    pub fn start(
+        model: TrainedModel,
+        factory: EngineFactory,
+        opts: ServeOptions,
+    ) -> Result<Arc<BatchServer>> {
+        if opts.max_batch == 0 {
+            bail!("--max-batch must be at least 1");
+        }
+        let Some(first) = model.net.layers.first() else {
+            bail!("cannot serve an empty network");
+        };
+        let in_dim = first.w.rows;
+        if in_dim < model.net.classes {
+            bail!(
+                "model input dim {in_dim} is smaller than its class count {} — \
+                 goodness overlays need the first {} input dims",
+                model.net.classes,
+                model.net.classes
+            );
+        }
+        let srv = Arc::new(BatchServer {
+            inner: OrderedMutex::new(
+                LockRank::Serve,
+                QueueInner { pending: VecDeque::new(), queued_rows: 0, closed: None },
+            ),
+            cv: OrderedCondvar::new(),
+            events: Bus::new(),
+            opts,
+            in_dim,
+            batcher: OrderedMutex::new(LockRank::Serve, None),
+        });
+        let srv2 = srv.clone();
+        let handle = std::thread::Builder::new()
+            .name("pff-serve-batcher".into())
+            .spawn(move || srv2.batcher_loop(model, factory))
+            .map_err(|e| anyhow!("failed to spawn the serve batcher: {e}"))?;
+        *srv.batcher.lock() = Some(handle);
+        Ok(srv)
+    }
+
+    /// The server's [`ServeEvent`] bus (observe, subscribe or snapshot).
+    pub fn events(&self) -> &Bus<ServeEvent> {
+        &self.events
+    }
+
+    /// The batching knobs this server runs with.
+    pub fn options(&self) -> ServeOptions {
+        self.opts
+    }
+
+    /// Queue `x` (one feature row per prediction) and return immediately;
+    /// `done` runs with the predicted labels — one per row, in row order —
+    /// once the containing batch is scored. On `Err` the request was never
+    /// admitted and `done` was **not** (and will never be) invoked.
+    pub fn submit(
+        &self,
+        x: Matrix,
+        done: impl FnOnce(Result<Vec<u8>>) + Send + 'static,
+    ) -> Result<()> {
+        if x.rows == 0 {
+            bail!("classify request has no rows");
+        }
+        if x.cols != self.in_dim {
+            bail!(
+                "classify request has {} feature column(s) but the served model \
+                 expects {}",
+                x.cols,
+                self.in_dim
+            );
+        }
+        let (queue_requests, queue_rows, rows) = {
+            let mut g = self.inner.lock();
+            if let Some(reason) = &g.closed {
+                bail!("serve queue is closed: {reason}");
+            }
+            let rows = x.rows;
+            g.queued_rows += rows;
+            g.pending.push_back(PendingReq {
+                x,
+                done: Box::new(done),
+                t_enq: Instant::now(),
+            });
+            (g.pending.len(), g.queued_rows, rows)
+        };
+        self.cv.notify_all();
+        self.events.emit(ServeEvent::Enqueued { rows, queue_requests, queue_rows });
+        Ok(())
+    }
+
+    /// Convenience wrapper for in-process callers (tests, benches): queue
+    /// `x` and block until its labels arrive.
+    pub fn classify_blocking(&self, x: Matrix) -> Result<Vec<u8>> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(x, move |r| {
+            let _ = tx.send(r);
+        })?;
+        rx.recv().map_err(|_| anyhow!("serve queue dropped the request reply"))?
+    }
+
+    /// Stop admitting requests, fail everything still queued with a clean
+    /// error, and join the batcher thread. Idempotent. Must not be called
+    /// from inside a completion callback (it would join its own thread).
+    pub fn shutdown(&self) {
+        let drained = {
+            let mut g = self.inner.lock();
+            if g.closed.is_some() {
+                None
+            } else {
+                g.closed = Some("server shut down".into());
+                g.queued_rows = 0;
+                Some(std::mem::take(&mut g.pending))
+            }
+        };
+        self.cv.notify_all();
+        if let Some(drained) = drained {
+            let dropped = drained.len();
+            for req in drained {
+                (req.done)(Err(anyhow!(
+                    "serve queue shut down before the request was scored"
+                )));
+            }
+            self.events.emit(ServeEvent::ShutDown { dropped });
+        }
+        let handle = self.batcher.lock().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    /// Close the queue with `reason` and fail everything queued (engine
+    /// startup failure path — runs on the batcher thread itself).
+    fn close_with(&self, reason: String) {
+        let drained = {
+            let mut g = self.inner.lock();
+            if g.closed.is_none() {
+                g.closed = Some(reason);
+            }
+            g.queued_rows = 0;
+            std::mem::take(&mut g.pending)
+        };
+        let dropped = drained.len();
+        for req in drained {
+            (req.done)(Err(anyhow!("serve queue closed before the request was scored")));
+        }
+        if dropped > 0 {
+            self.events.emit(ServeEvent::ShutDown { dropped });
+        }
+    }
+
+    /// The batcher thread: park until the flush condition holds, drain
+    /// whole requests into one tall matrix, score it, slice the labels
+    /// back per request. Compute and callbacks run with no lock held.
+    fn batcher_loop(&self, model: TrainedModel, factory: EngineFactory) {
+        let mut eng = match factory() {
+            Ok(e) => e,
+            Err(e) => {
+                self.close_with(format!("serve engine failed to start: {e}"));
+                return;
+            }
+        };
+        loop {
+            let batch = {
+                let mut g = self.inner.lock();
+                loop {
+                    if g.closed.is_some() {
+                        // shutdown() already drained and failed the queue
+                        return;
+                    }
+                    let Some(oldest) = g.pending.front() else {
+                        g = self.cv.wait(g);
+                        continue;
+                    };
+                    let waited = oldest.t_enq.elapsed();
+                    if g.queued_rows >= self.opts.max_batch || waited >= self.opts.max_delay {
+                        break;
+                    }
+                    let (g2, _) = self.cv.wait_timeout(g, self.opts.max_delay - waited);
+                    g = g2;
+                }
+                // Drain whole requests while the batch stays under
+                // max_batch rows; an oversized request still goes alone.
+                let mut batch: Vec<PendingReq> = Vec::new();
+                let mut rows = 0usize;
+                while let Some(front) = g.pending.front() {
+                    if !batch.is_empty() && rows + front.x.rows > self.opts.max_batch {
+                        break;
+                    }
+                    rows += front.x.rows;
+                    let req = g.pending.pop_front().expect("front just observed");
+                    g.queued_rows -= req.x.rows;
+                    batch.push(req);
+                }
+                batch
+            };
+            let rows: usize = batch.iter().map(|r| r.x.rows).sum();
+            let oldest_wait_us = batch
+                .first()
+                .map(|r| r.t_enq.elapsed().as_micros() as u64)
+                .unwrap_or(0);
+            let mut data = Vec::with_capacity(rows * self.in_dim);
+            for req in &batch {
+                data.extend_from_slice(&req.x.data);
+            }
+            let x = Matrix { rows, cols: self.in_dim, data };
+            // goodness_scores stacks all class overlays into one tall
+            // batch and scores each row independently — served labels are
+            // bitwise the offline-eval labels for the same rows.
+            let result = predict_goodness(eng.as_mut(), &model.net, &x);
+            self.events.emit(ServeEvent::BatchFlushed {
+                requests: batch.len(),
+                rows,
+                oldest_wait_us,
+            });
+            match result {
+                Ok(labels) => {
+                    let mut off = 0usize;
+                    for req in batch {
+                        let n = req.x.rows;
+                        let slice = labels[off..off + n].to_vec();
+                        off += n;
+                        let latency_us = req.t_enq.elapsed().as_micros() as u64;
+                        (req.done)(Ok(slice));
+                        self.events.emit(ServeEvent::RequestDone { rows: n, latency_us });
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let requests = batch.len();
+                    for req in batch {
+                        (req.done)(Err(anyhow!("batch scoring failed: {msg}")));
+                    }
+                    self.events.emit(ServeEvent::BatchFailed { requests, error: msg });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::native_factory;
+    use crate::ff::FFNetwork;
+    use crate::tensor::Rng;
+
+    fn tiny_model() -> TrainedModel {
+        let mut rng = Rng::new(7);
+        TrainedModel {
+            net: FFNetwork::new(&[8, 16, 16], 4, &mut rng),
+            head: None,
+            layer_heads: Vec::new(),
+        }
+    }
+
+    fn rows(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::rand_uniform(n, 8, 0.0, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn serves_bitwise_offline_predictions() {
+        let model = tiny_model();
+        let x = rows(6, 11);
+        let mut eng = native_factory()().unwrap();
+        let offline = predict_goodness(eng.as_mut(), &model.net, &x).unwrap();
+        let srv = BatchServer::start(
+            model,
+            native_factory(),
+            ServeOptions { max_batch: 4, max_delay: Duration::from_millis(5) },
+        )
+        .unwrap();
+        let served = srv.classify_blocking(x).unwrap();
+        assert_eq!(served, offline, "served labels must match offline eval bitwise");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_width_and_empty_requests() {
+        let srv =
+            BatchServer::start(tiny_model(), native_factory(), ServeOptions::default()).unwrap();
+        assert!(srv.submit(Matrix::zeros(0, 8), |_| {}).is_err(), "zero rows");
+        let err = srv.submit(Matrix::zeros(1, 5), |_| {}).unwrap_err().to_string();
+        assert!(err.contains("expects 8"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_ships_alone() {
+        let srv = BatchServer::start(
+            tiny_model(),
+            native_factory(),
+            ServeOptions { max_batch: 2, max_delay: Duration::from_secs(5) },
+        )
+        .unwrap();
+        // 5 rows > max_batch=2: still one reply with 5 labels.
+        let labels = srv.classify_blocking(rows(5, 3)).unwrap();
+        assert_eq!(labels.len(), 5);
+        let flushed = srv
+            .events()
+            .history()
+            .iter()
+            .any(|ev| matches!(ev, ServeEvent::BatchFlushed { requests: 1, rows: 5, .. }));
+        assert!(flushed, "oversized request must flush as one batch");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_closes_submits() {
+        let srv =
+            BatchServer::start(tiny_model(), native_factory(), ServeOptions::default()).unwrap();
+        srv.shutdown();
+        srv.shutdown();
+        let err = srv.submit(rows(1, 1), |_| {}).unwrap_err().to_string();
+        assert!(err.contains("closed"), "{err}");
+    }
+}

@@ -3,6 +3,7 @@
 //! ```text
 //! pff train   [--config FILE] [--follow] [--event-csv PATH] [--resume CKPT] [--key value ...]
 //! pff worker  --connect HOST:PORT [--node-id K]   join a cluster leader
+//! pff serve   --checkpoint PATH [--addr HOST:PORT] [--max-batch N] [--max-delay-us D]
 //! pff table1..table5 [--scale quick|reduced] [--engine native|xla]
 //! pff figures                                     render Figures 1–6
 //! pff fig3    [--scale quick|reduced]             split-count study
@@ -52,6 +53,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "worker" => cmd_worker(rest),
+        "serve" => cmd_serve(rest),
         "table1" => cmd_table(rest, 1),
         "table2" => cmd_table(rest, 2),
         "table3" => cmd_table(rest, 3),
@@ -85,6 +87,10 @@ fn print_help() {
          \u{20}                     --cluster true parks the leader for external workers)\n\
          \u{20}  worker             join a cluster leader (--connect HOST:PORT, optional --node-id K,\n\
          \u{20}                     --connect-wait-s S, plus the same config flags as train)\n\
+         \u{20}  serve              batched inference from a checkpoint (--checkpoint PATH;\n\
+         \u{20}                     --addr HOST:PORT bind address, --max-batch N rows per flush,\n\
+         \u{20}                     --max-delay-us D queue deadline, --follow streams serve events;\n\
+         \u{20}                     answers CLASSIFY/CLASSIFY_BATCH frames — see PROTOCOL.md)\n\
          \u{20}  table1..table5     reproduce a paper table (--scale quick|reduced, --engine native|xla)\n\
          \u{20}  figures            render Figures 1/2/4/5/6 (DES Gantt charts)\n\
          \u{20}  fig3               split-count accuracy study (Figure 3)\n\
@@ -227,6 +233,91 @@ fn cmd_train(args: &[String]) -> Result<()> {
         report.comm.bytes_put as f64 / 1e6
     );
     Ok(())
+}
+
+/// `pff serve`: load a checkpoint, keep the network resident behind a
+/// batching admission queue, and answer `CLASSIFY`/`CLASSIFY_BATCH`
+/// frames on the store protocol until killed (SIGTERM/Ctrl-C — the
+/// process holds no durable state, so default signal teardown is clean).
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use pff::coordinator::store::MemStore;
+    use pff::coordinator::{BatchServer, NodeRegistry, SchedulerRegistry, ServeOptions};
+    use pff::transport::tcp::StoreServer;
+
+    let mut checkpoint: Option<String> = None;
+    let mut addr = "127.0.0.1:7447".to_string();
+    let mut max_batch: usize = 32;
+    let mut max_delay_us: u64 = 500;
+    let mut follow = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--checkpoint" => {
+                checkpoint =
+                    Some(args.get(i + 1).context("--checkpoint needs a path")?.clone());
+                i += 2;
+            }
+            "--addr" => {
+                addr = args.get(i + 1).context("--addr needs HOST:PORT")?.clone();
+                i += 2;
+            }
+            "--max-batch" => {
+                max_batch = args.get(i + 1).context("--max-batch needs a value")?.parse()?;
+                i += 2;
+            }
+            "--max-delay-us" => {
+                max_delay_us =
+                    args.get(i + 1).context("--max-delay-us needs a value")?.parse()?;
+                i += 2;
+            }
+            "--follow" => {
+                follow = true;
+                i += 1;
+            }
+            other => bail!("serve: unknown flag '{other}' (try `pff help`)"),
+        }
+    }
+    let checkpoint = checkpoint.context(
+        "serve needs --checkpoint PATH (write one with `pff train --checkpoint_dir DIR`)",
+    )?;
+    let ck = RunCheckpoint::load(&checkpoint)?;
+    let cfg = ck.experiment_config()?.validated()?;
+    // The --resume registry guard, reused: a checkpoint records the
+    // *registry* name of whatever scheduler ran, and a file from a binary
+    // with custom registrations must fail here with the known names —
+    // not panic deep inside rehydration/assembly.
+    SchedulerRegistry::global().resolve(&ck.scheduler).with_context(|| {
+        format!(
+            "checkpoint '{checkpoint}' records scheduler '{}', which this binary \
+             cannot serve",
+            ck.scheduler
+        )
+    })?;
+
+    let store = Arc::new(MemStore::new());
+    store.restore(ck.store);
+    let model = pff::coordinator::eval::assemble(store.as_ref(), &cfg)
+        .context("assembling the served model from the checkpoint store")?;
+    let factory = pff::engine::factory_for(cfg.engine, &cfg.artifact_dir)?;
+    let opts = ServeOptions {
+        max_batch,
+        max_delay: std::time::Duration::from_micros(max_delay_us),
+    };
+    let serve = BatchServer::start(model, factory, opts)?;
+    if follow {
+        serve.events().observe(|ev| eprintln!("[pff-serve] {ev}"));
+    }
+    let server = StoreServer::start_serving(store, Arc::new(NodeRegistry::new()), serve, &addr)?;
+    eprintln!(
+        "[pff-serve] serving '{checkpoint}' on {} (max_batch {max_batch} rows, \
+         max_delay {max_delay_us} us)",
+        server.addr
+    );
+    // Serve until killed. Park instead of joining anything: every live
+    // thread (accept loop, conn loops, the batcher) is self-sufficient.
+    loop {
+        std::thread::park();
+    }
 }
 
 fn cmd_worker(args: &[String]) -> Result<()> {

@@ -46,6 +46,10 @@ pub enum LockRank {
     Dispatcher = 20,
     /// The parameter store — `coordinator/store.rs`.
     Store = 30,
+    /// Inference admission queue — `coordinator/serve.rs`. Ranks above
+    /// the store (the batcher reads resident parameters) and below the
+    /// event bus (flushes emit `ServeEvent`s after the queue lock drops).
+    Serve = 35,
     /// Event bus + event log — `coordinator/events.rs`. Observers run
     /// outside the bus lock, so emission nests under nothing.
     Events = 40,

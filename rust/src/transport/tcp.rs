@@ -46,10 +46,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::dispatch::{Dispatcher, Poll};
 use crate::coordinator::registry::{NodeInfo, NodeRegistry};
+use crate::coordinator::serve::BatchServer;
 use crate::coordinator::store::{HeadParams, LayerDelta, LayerParams, MemStore, ParamStore};
 use crate::coordinator::taskgraph::Task;
 use crate::metrics::CommStats;
 use crate::sync::{LockRank, OrderedMutex};
+use crate::tensor::Matrix;
 use crate::transport::codec::{
     read_frame, write_frame, Dec, Enc, QuantHeadParams, QuantLayerParams,
 };
@@ -102,6 +104,10 @@ mod op {
     pub const PUT_LAYER_Q: u8 = 0x26;
     /// v4+ only: head params as a quantized frame (`wire_codec`).
     pub const PUT_HEAD_Q: u8 = 0x27;
+    /// v4+ only: score one feature row on a serving peer (`pff serve`).
+    pub const CLASSIFY: u8 = 0x28;
+    /// v4+ only: score a feature matrix on a serving peer (`pff serve`).
+    pub const CLASSIFY_BATCH: u8 = 0x29;
 }
 
 const ST_OK: u8 = 0;
@@ -161,6 +167,32 @@ impl StoreServer {
         port: u16,
     ) -> Result<StoreServer> {
         let listener = TcpListener::bind(("127.0.0.1", port)).context("binding store server")?;
+        StoreServer::start_listening(listener, store, registry, dispatcher, None)
+    }
+
+    /// [`StoreServer::start_with`] plus a serve engine: `CLASSIFY` /
+    /// `CLASSIFY_BATCH` frames are admitted into `serve`'s batching queue
+    /// and answered (possibly out of request order) when their batch is
+    /// scored. Binds `addr` verbatim — `pff serve --addr` exposes the
+    /// listener beyond loopback.
+    pub fn start_serving(
+        store: Arc<MemStore>,
+        registry: Arc<NodeRegistry>,
+        serve: Arc<BatchServer>,
+        addr: &str,
+    ) -> Result<StoreServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding serve listener on {addr}"))?;
+        StoreServer::start_listening(listener, store, registry, None, Some(serve))
+    }
+
+    fn start_listening(
+        listener: TcpListener,
+        store: Arc<MemStore>,
+        registry: Arc<NodeRegistry>,
+        dispatcher: Option<Arc<Dispatcher>>,
+        serve: Option<Arc<BatchServer>>,
+    ) -> Result<StoreServer> {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
@@ -182,11 +214,18 @@ impl StoreServer {
                             let store = store.clone();
                             let registry = reg2.clone();
                             let dispatcher = dispatcher.clone();
+                            let serve = serve.clone();
                             // Detached: a conn thread exits when its client
                             // disconnects. Joining here would deadlock
                             // shutdown against still-connected clients.
                             std::thread::spawn(move || {
-                                let _ = serve_conn(sock, &store, &registry, dispatcher.as_ref());
+                                let _ = serve_conn(
+                                    sock,
+                                    &store,
+                                    &registry,
+                                    dispatcher.as_ref(),
+                                    serve.as_ref(),
+                                );
                             });
                         }
                         Err(e) => {
@@ -263,6 +302,7 @@ fn serve_conn(
     store: &Arc<MemStore>,
     registry: &Arc<NodeRegistry>,
     dispatcher: Option<&Arc<Dispatcher>>,
+    serve: Option<&Arc<BatchServer>>,
 ) -> Result<()> {
     let mut reader = BufReader::new(sock.try_clone()?);
     let writer =
@@ -320,9 +360,9 @@ fn serve_conn(
     let mut e = Enc::new();
     e.u8(version);
     e.u32(node_id);
-    let result = writer
-        .reply(req_id, Ok(e.finish()))
-        .and_then(|()| conn_loop(&mut reader, &writer, store, registry, dispatcher, node_id));
+    let result = writer.reply(req_id, Ok(e.finish())).and_then(|()| {
+        conn_loop(&mut reader, &writer, store, registry, dispatcher, serve, node_id)
+    });
     // A worker that drops before DONE is deregistered so a restarted
     // process can reclaim its node id; finished workers stay counted.
     // Its outstanding task leases (if any) go back to the dispatcher's
@@ -342,6 +382,7 @@ fn conn_loop(
     store: &Arc<MemStore>,
     registry: &Arc<NodeRegistry>,
     dispatcher: Option<&Arc<Dispatcher>>,
+    serve: Option<&Arc<BatchServer>>,
     conn_node: u32,
 ) -> Result<()> {
     loop {
@@ -501,6 +542,46 @@ fn conn_loop(
                     Err(anyhow::anyhow!("TASK_DONE: this leader does not run a task dispatcher"))
                 };
                 writer.reply(req_id, res)?;
+            }
+            // Classify ops complete from the serve batcher's callback —
+            // like WAIT_* replies they may land out of request order, but
+            // a parked request costs a queue slot, not a thread.
+            op::CLASSIFY | op::CLASSIFY_BATCH => {
+                let Some(srv) = serve else {
+                    writer.reply(
+                        req_id,
+                        Err(anyhow::anyhow!(
+                            "this server does not run a classify engine \
+                             (start one with `pff serve`)"
+                        )),
+                    )?;
+                    continue;
+                };
+                let single = opcode == op::CLASSIFY;
+                let x = if single {
+                    let features = d.f32s()?;
+                    Matrix { rows: 1, cols: features.len(), data: features }
+                } else {
+                    d.matrix()?
+                };
+                let reply_writer = writer.clone();
+                let admitted = srv.submit(x, move |labels| {
+                    let res = labels.map(|labels| {
+                        let mut e = Enc::new();
+                        if single {
+                            e.u8(labels[0]);
+                        } else {
+                            e.bytes(&labels);
+                        }
+                        e.finish()
+                    });
+                    let _ = reply_writer.reply(req_id, res);
+                });
+                // Rejected at admission (closed queue / bad width): the
+                // callback never fires, so reply inline.
+                if let Err(e) = admitted {
+                    writer.reply(req_id, Err(e))?;
+                }
             }
             _ => {
                 let res = handle_immediate(opcode, &mut d, store, registry, conn_node);
@@ -1020,6 +1101,29 @@ impl TcpStoreClient {
                 e.u64(wait_s.to_bits());
             })
             .map(|_| ())
+    }
+
+    /// Score one feature row on a serving peer (`pff serve`) and return
+    /// its predicted label. The reply may arrive out of request order —
+    /// the connection keeps multiplexing while the row sits in the
+    /// server's batching queue.
+    pub fn classify(&self, features: &[f32]) -> Result<u8> {
+        if self.proto < 4 {
+            bail!("CLASSIFY needs protocol v4, but HELLO settled on v{}", self.proto);
+        }
+        let body = self.shared.request(op::CLASSIFY, None, |e| e.f32s(features))?;
+        Dec::new(body.body()).u8()
+    }
+
+    /// Score a feature matrix (one prediction per row) on a serving peer.
+    /// Labels come back in row order, bitwise what offline eval computes
+    /// for the same rows.
+    pub fn classify_batch(&self, x: &Matrix) -> Result<Vec<u8>> {
+        if self.proto < 4 {
+            bail!("CLASSIFY_BATCH needs protocol v4, but HELLO settled on v{}", self.proto);
+        }
+        let body = self.shared.request(op::CLASSIFY_BATCH, None, |e| e.matrix(x))?;
+        Dec::new(body.body()).bytes()
     }
 }
 

@@ -1,0 +1,247 @@
+//! Admission-queue contract of the serve path (`coordinator/serve.rs` +
+//! the CLASSIFY wire ops): burst coalescing, the max-delay flush, clean
+//! shutdown errors, and out-of-order reply demux on one connection.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pff::coordinator::eval::TrainedModel;
+use pff::coordinator::store::MemStore;
+use pff::coordinator::{BatchServer, NodeRegistry, ServeEvent, ServeOptions};
+use pff::engine::native_factory;
+use pff::ff::{predict_goodness, FFNetwork};
+use pff::tensor::{Matrix, Rng};
+use pff::transport::tcp::{StoreServer, TcpStoreClient};
+
+const IN_DIM: usize = 12;
+const CLASSES: usize = 10;
+
+fn tiny_model(seed: u64) -> TrainedModel {
+    let mut rng = Rng::new(seed);
+    TrainedModel {
+        net: FFNetwork::new(&[IN_DIM, 24, 24], CLASSES, &mut rng),
+        head: None,
+        layer_heads: Vec::new(),
+    }
+}
+
+fn feature_rows(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::rand_uniform(n, IN_DIM, 0.0, 1.0, &mut rng)
+}
+
+fn offline_labels(model: &TrainedModel, x: &Matrix) -> Vec<u8> {
+    let mut eng = native_factory()().unwrap();
+    predict_goodness(eng.as_mut(), &model.net, x).unwrap()
+}
+
+/// A burst of K concurrent single-row requests against `max_batch = K`
+/// coalesces into exactly ONE K-row engine batch (the huge max-delay
+/// means only the row-count trigger can flush), and every caller gets
+/// the offline-eval label for its row.
+#[test]
+fn burst_coalesces_into_one_batch() {
+    const K: usize = 6;
+    let model = tiny_model(3);
+    let x = feature_rows(K, 17);
+    let offline = offline_labels(&model, &x);
+    let srv = BatchServer::start(
+        model,
+        native_factory(),
+        ServeOptions { max_batch: K, max_delay: Duration::from_secs(10) },
+    )
+    .unwrap();
+
+    let threads: Vec<_> = (0..K)
+        .map(|i| {
+            let srv = srv.clone();
+            let row = x.rows_range(i, i + 1);
+            std::thread::spawn(move || srv.classify_blocking(row).unwrap())
+        })
+        .collect();
+    for (i, t) in threads.into_iter().enumerate() {
+        let labels = t.join().unwrap();
+        assert_eq!(labels, vec![offline[i]], "row {i} must score like offline eval");
+    }
+
+    let history = srv.events().history();
+    let flushes: Vec<(usize, usize)> = history
+        .iter()
+        .filter_map(|ev| match ev {
+            ServeEvent::BatchFlushed { requests, rows, .. } => Some((*requests, *rows)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(flushes, vec![(K, K)], "the burst must flush as one {K}-row batch");
+    let done = history
+        .iter()
+        .filter(|ev| matches!(ev, ServeEvent::RequestDone { .. }))
+        .count();
+    assert_eq!(done, K);
+    srv.shutdown();
+}
+
+/// A lone request in an otherwise idle queue flushes on the max-delay
+/// deadline — not never, and not before the deadline.
+#[test]
+fn max_delay_flushes_a_single_waiter() {
+    let delay = Duration::from_millis(30);
+    let srv = BatchServer::start(
+        tiny_model(4),
+        native_factory(),
+        ServeOptions { max_batch: 64, max_delay: delay },
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let labels = srv.classify_blocking(feature_rows(1, 5)).unwrap();
+    assert_eq!(labels.len(), 1);
+    assert!(
+        t0.elapsed() >= delay,
+        "a single waiter must sit out the max-delay deadline ({:?} < {delay:?})",
+        t0.elapsed()
+    );
+    let flushed_single = srv.events().history().iter().any(|ev| {
+        matches!(
+            ev,
+            ServeEvent::BatchFlushed { requests: 1, rows: 1, oldest_wait_us }
+                if *oldest_wait_us >= delay.as_micros() as u64
+        )
+    });
+    assert!(flushed_single, "expected a 1-request flush at or after the deadline");
+    srv.shutdown();
+}
+
+/// Shutdown fails queued requests with a clean error and makes later
+/// submits error immediately — nothing hangs, nothing panics.
+#[test]
+fn shutdown_fails_pending_and_rejects_new_requests() {
+    let srv = BatchServer::start(
+        tiny_model(5),
+        native_factory(),
+        // Neither trigger can fire on its own: the request sits queued
+        // until shutdown drains it.
+        ServeOptions { max_batch: 1000, max_delay: Duration::from_secs(600) },
+    )
+    .unwrap();
+    let (tx, rx) = mpsc::channel();
+    srv.submit(feature_rows(1, 6), move |res| {
+        let _ = tx.send(res);
+    })
+    .unwrap();
+    srv.shutdown();
+
+    let queued = rx.recv_timeout(Duration::from_secs(10)).expect("callback must fire");
+    let err = queued.expect_err("a drained request must fail, not succeed").to_string();
+    assert!(err.contains("shut down"), "unexpected error: {err}");
+
+    let late = srv.classify_blocking(feature_rows(1, 7));
+    let err = late.expect_err("post-shutdown submit must fail immediately").to_string();
+    assert!(err.contains("closed"), "unexpected error: {err}");
+
+    let dropped = srv
+        .events()
+        .history()
+        .iter()
+        .any(|ev| matches!(ev, ServeEvent::ShutDown { dropped: 1 }));
+    assert!(dropped, "shutdown must report the drained request");
+}
+
+/// One TCP connection, interleaved req_ids: a CLASSIFY parked in the
+/// batching queue does not block later requests — an immediate op issued
+/// *after* it completes *before* it (out-of-order demux), and the parked
+/// reply still arrives correct once a second request fills the batch.
+#[test]
+fn classify_replies_demux_out_of_order() {
+    let model = tiny_model(8);
+    let x = feature_rows(2, 21);
+    let offline = offline_labels(&model, &x);
+
+    let srv = BatchServer::start(
+        model,
+        native_factory(),
+        // Flush only at 2 rows: the first CLASSIFY must park.
+        ServeOptions { max_batch: 2, max_delay: Duration::from_secs(10) },
+    )
+    .unwrap();
+    let events = srv.events().subscribe();
+    let server = StoreServer::start_serving(
+        Arc::new(MemStore::new()),
+        Arc::new(NodeRegistry::new()),
+        srv.clone(),
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let client = Arc::new(TcpStoreClient::connect(server.addr).unwrap());
+
+    let row0: Vec<f32> = x.rows_range(0, 1).data;
+    let c2 = client.clone();
+    let parked = std::thread::spawn(move || c2.classify(&row0).unwrap());
+
+    // Park until the server admits the first request, then prove the
+    // connection still answers immediate ops while it waits.
+    loop {
+        match events.recv_timeout(Duration::from_secs(10)).expect("serve event") {
+            ServeEvent::Enqueued { .. } => break,
+            _ => continue,
+        }
+    }
+    assert!(
+        !pff::coordinator::store::ParamStore::has_layer(&*client, 0, 0).unwrap(),
+        "immediate op issued after the parked CLASSIFY must complete before it"
+    );
+
+    // Second row fills the batch; both replies land.
+    let row1: Vec<f32> = x.rows_range(1, 2).data;
+    assert_eq!(client.classify(&row1).unwrap(), offline[1]);
+    assert_eq!(parked.join().unwrap(), offline[0]);
+
+    drop(client);
+    server.shutdown();
+    srv.shutdown();
+}
+
+/// CLASSIFY against a plain training leader (no serve engine) is a
+/// per-request error; the connection stays usable afterwards.
+#[test]
+fn classify_without_serve_engine_is_clean_error() {
+    let server = StoreServer::start(Arc::new(MemStore::new()), 0).unwrap();
+    let client = TcpStoreClient::connect(server.addr).unwrap();
+    let zeros = vec![0.0f32; IN_DIM];
+    let err = client.classify(&zeros).unwrap_err().to_string();
+    assert!(err.contains("classify engine"), "unexpected error: {err}");
+    // The ERR was per-request: the same connection keeps working.
+    assert!(!pff::coordinator::store::ParamStore::has_layer(&client, 0, 0).unwrap());
+    server.shutdown();
+}
+
+/// CLASSIFY_BATCH round-trips a whole matrix and returns labels bitwise
+/// equal to offline eval, in row order.
+#[test]
+fn classify_batch_matches_offline_eval_bitwise() {
+    let model = tiny_model(9);
+    let x = feature_rows(16, 33);
+    let offline = offline_labels(&model, &x);
+
+    let srv = BatchServer::start(
+        model,
+        native_factory(),
+        ServeOptions { max_batch: 8, max_delay: Duration::from_millis(2) },
+    )
+    .unwrap();
+    let server = StoreServer::start_serving(
+        Arc::new(MemStore::new()),
+        Arc::new(NodeRegistry::new()),
+        srv.clone(),
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let client = TcpStoreClient::connect(server.addr).unwrap();
+    assert_eq!(client.classify_batch(&x).unwrap(), offline);
+    // Width mismatch is a per-request ERR, not a connection error.
+    let err = client.classify_batch(&Matrix::zeros(1, IN_DIM + 1)).unwrap_err().to_string();
+    assert!(err.contains("expects"), "unexpected error: {err}");
+    drop(client);
+    server.shutdown();
+    srv.shutdown();
+}
